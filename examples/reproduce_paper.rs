@@ -1,0 +1,38 @@
+//! Regenerate every table and figure of the paper's evaluation.
+//!
+//! ```text
+//! cargo run --release --example reproduce_paper            # everything
+//! cargo run --release --example reproduce_paper fig7 fig8  # a subset
+//! CODAG_SCALE_MB=16 cargo run --release --example reproduce_paper
+//! ```
+//!
+//! The per-experiment index (which modules implement which figure) is
+//! in DESIGN.md; measured-vs-paper numbers are recorded in
+//! EXPERIMENTS.md.
+
+use codag::bench_harness::{all_workloads, report::Experiment, Scale};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let scale = Scale::default();
+    let experiments: Vec<Experiment> = if args.is_empty() {
+        Experiment::all()
+    } else {
+        args.iter()
+            .map(|a| Experiment::parse(a).ok_or_else(|| format!("unknown experiment '{a}'")))
+            .collect::<Result<_, _>>()?
+    };
+    eprintln!(
+        "scale: {} bytes/dataset, {} sim chunks (set CODAG_SCALE_MB to change)",
+        scale.dataset_bytes, scale.sim_chunks
+    );
+    let t0 = std::time::Instant::now();
+    let workloads = all_workloads(scale)?;
+    eprintln!("workloads built in {:.1}s", t0.elapsed().as_secs_f64());
+    for e in experiments {
+        let t = std::time::Instant::now();
+        println!("{}", e.run(&workloads, scale)?);
+        eprintln!("[{e:?} took {:.1}s]", t.elapsed().as_secs_f64());
+    }
+    Ok(())
+}

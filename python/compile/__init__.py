@@ -1,0 +1,9 @@
+"""Build-time compile package (never imported at request time).
+
+x64 must be enabled before any jax import downstream: the expand/delta
+kernels operate on i64 element bit patterns.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,72 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts for the Rust runtime.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Usage: python -m compile.aot --outdir ../artifacts
+Emits one .hlo.txt per bucket plus manifest.txt (the Rust runtime's
+index: name, kind, shapes per line).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_expand(n_runs, m_out) -> str:
+    fn = functools.partial(model.expand_chunk, m_out=m_out)
+    lowered = jax.jit(fn).lower(*model.expand_abstract(n_runs, m_out))
+    return to_hlo_text(lowered)
+
+
+def lower_delta(n) -> str:
+    lowered = jax.jit(model.delta_chunk).lower(*model.delta_abstract(n))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+    manifest = []
+    for n, m in model.BUCKETS:
+        name = f"expand_n{n}_m{m}"
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        text = lower_expand(n, m)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"expand {n} {m} {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    for n in model.DELTA_BUCKETS:
+        name = f"delta_n{n}"
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        text = lower_delta(n)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"delta {n} 0 {name}.hlo.txt")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} entries")
+
+
+if __name__ == "__main__":
+    main()

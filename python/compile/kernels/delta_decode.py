@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: delta-sequence reconstruction.
+
+RLE v2's DELTA sub-encoding stores a base value and a train of deltas;
+reconstruction is ``out[i] = base + cumsum(deltas)[:i]`` — an inclusive
+scan. On the GPU the paper's `write_run` handles only the fixed-delta
+case; variable-delta groups decode element-wise. Offloading them as a
+scan is the natural TPU re-expression: the kernel computes per-tile
+local scans plus a carried prefix, tiled by a BlockSpec grid.
+
+interpret=True (see rle_expand.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Elements per grid step.
+TILE = 1024
+
+
+def _delta_kernel(base_ref, deltas_ref, out_ref, *, n_total):
+    """Grid-stepped inclusive scan with carry.
+
+    The carry between tiles is recomputed from the full delta array's
+    prefix (deltas stay VMEM-resident), trading a little recompute for
+    zero cross-step state — the rematerialization-vs-memory point in
+    DESIGN.md §Perf L2.
+    """
+    i = pl.program_id(0)
+    j0 = i * TILE
+    deltas = deltas_ref[...]
+    # Carry = sum of all deltas before this tile.
+    pos = jnp.arange(n_total, dtype=jnp.int32)
+    carry = jnp.sum(jnp.where(pos < j0, deltas, 0))
+    tile = jax.lax.dynamic_slice(deltas, (j0,), (TILE,))
+    out_ref[...] = base_ref[0] + carry + jnp.cumsum(tile)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def delta_decode(base, deltas):
+    """Reconstruct ``base + inclusive_cumsum(deltas)``.
+
+    Args:
+      base: i64[1] starting value (element 0 of the output is
+        ``base + deltas[0]`` — pass ``deltas[0] = 0`` to emit the base
+        itself first, which is how the Rust side frames groups).
+      deltas: i64[N] increments, N a multiple of TILE (padded with 0).
+
+    Returns:
+      i64[N] reconstructed values.
+    """
+    n = deltas.shape[0]
+    assert n % TILE == 0, f"n={n} must be a multiple of {TILE}"
+    grid = (n // TILE,)
+    kernel = functools.partial(_delta_kernel, n_total=n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int64),
+        interpret=True,
+    )(base, deltas)

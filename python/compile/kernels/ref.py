@@ -1,0 +1,54 @@
+"""Pure-numpy oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest checks every kernel and
+the exported HLO against these on randomized inputs (see
+python/tests/). They are deliberately written in the most obvious way
+possible — loop/np.repeat-based expansion — so a reviewer can audit
+them at a glance.
+"""
+
+import numpy as np
+
+
+def expand_runs_ref(starts, values, deltas, total, m_out):
+    """Oracle for rle_expand.
+
+    Args:
+      starts: i32[N] exclusive prefix sums (padding slots hold i32 max
+        and are ignored).
+      values/deltas: i64[N].
+      total: true number of output elements.
+      m_out: padded output size.
+
+    Returns:
+      i64[m_out] with positions >= total zero-filled (callers compare
+      only the first `total` elements).
+    """
+    starts = np.asarray(starts, dtype=np.int64)
+    values = np.asarray(values, dtype=np.int64)
+    deltas = np.asarray(deltas, dtype=np.int64)
+    out = np.zeros(m_out, dtype=np.int64)
+    real = starts < np.iinfo(np.int32).max
+    rs = starts[real]
+    rv = values[real]
+    rd = deltas[real]
+    bounds = np.append(rs, total)
+    for k in range(len(rs)):
+        lo, hi = int(bounds[k]), int(bounds[k + 1])
+        if hi > lo:
+            with np.errstate(over="ignore"):
+                out[lo:hi] = rv[k] + rd[k] * np.arange(hi - lo, dtype=np.int64)
+    return out
+
+
+def delta_decode_ref(base, deltas):
+    """Oracle for delta_decode: base + inclusive cumsum."""
+    deltas = np.asarray(deltas, dtype=np.int64)
+    return int(np.asarray(base).reshape(-1)[0]) + np.cumsum(deltas)
+
+
+def runs_from_lens(lens):
+    """Helper: run lengths -> (exclusive-prefix starts i32, total)."""
+    lens = np.asarray(lens, dtype=np.int64)
+    starts = np.concatenate([[0], np.cumsum(lens)[:-1]]).astype(np.int32)
+    return starts, int(lens.sum())

@@ -1,0 +1,96 @@
+"""Layer-1 Pallas kernel: batched `write_run` expansion.
+
+This is CODAG's Table II `write_run(init, len, delta)` primitive hoisted
+to a whole chunk: given the run records the Rust (L3) decoder produced —
+``values[k]``, exclusive-prefix ``starts[k]`` and ``deltas[k]`` — produce
+the decompressed element stream
+
+    out[j] = values[k] + deltas[k] * (j - starts[k]),
+    k = searchsorted(starts, j, 'right') - 1.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA kernel's
+warp writes one 128 B cache line per iteration from a shared-memory
+staging buffer; the TPU formulation tiles the *output* dimension with a
+BlockSpec grid (one VMEM-resident tile per grid step) while the run
+table (≤ 32 Ki records) stays resident in VMEM across steps — the same
+HBM↔scratchpad schedule the paper expresses with thread blocks.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output elements produced per grid step. 512 × 8 B = 4 KiB of output
+# per step; with the run table (3 × N × 8 B) this keeps the worst-case
+# footprint ≈ 0.8 MiB (N = 32 Ki) — far under the ~16 MiB VMEM budget,
+# leaving room for double buffering (see DESIGN.md §Perf).
+TILE = 512
+
+
+def _expand_kernel(starts_ref, values_ref, deltas_ref, out_ref):
+    """One output tile: run lookup + affine reconstruction."""
+    j0 = pl.program_id(0) * TILE
+    pos = j0 + jnp.arange(TILE, dtype=jnp.int32)
+    starts = starts_ref[...]
+    # Which run covers each output position. Padded slots carry
+    # starts == i32::MAX so real runs win the search.
+    idx = jnp.searchsorted(starts, pos, side="right") - 1
+    idx = jnp.clip(idx, 0, starts.shape[0] - 1)
+    v = values_ref[...][idx]
+    d = deltas_ref[...][idx]
+    s = starts[idx]
+    off = (pos - s).astype(jnp.int64)
+    out_ref[...] = v + d * off
+
+
+@functools.partial(jax.jit, static_argnames=("m_out",))
+def rle_expand(starts, values, deltas, *, m_out):
+    """Expand run records to ``m_out`` elements.
+
+    Args:
+      starts: i32[N] exclusive prefix sum of run lengths, padded with
+        i32 max for unused slots.
+      values: i64[N] first element of each run (bit pattern).
+      deltas: i64[N] per-element increment of each run.
+      m_out: static output element count (bucket size).
+
+    Returns:
+      i64[m_out]; elements past the true total are garbage the caller
+      truncates (the Rust runtime slices to the chunk's length).
+    """
+    n = starts.shape[0]
+    assert m_out % TILE == 0, f"m_out={m_out} must be a multiple of {TILE}"
+    grid = (m_out // TILE,)
+    return pl.pallas_call(
+        _expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m_out,), jnp.int64),
+        interpret=True,
+    )(starts, values, deltas)
+
+
+def pad_runs(starts, values, deltas, n_bucket):
+    """Pad run arrays to a bucket size (host-side helper for tests; the
+    Rust runtime performs the same padding before PJRT execution)."""
+    import numpy as np
+
+    k = len(starts)
+    assert k <= n_bucket
+    s = np.full(n_bucket, np.iinfo(np.int32).max, dtype=np.int32)
+    v = np.zeros(n_bucket, dtype=np.int64)
+    d = np.zeros(n_bucket, dtype=np.int64)
+    s[:k] = starts
+    v[:k] = values
+    d[:k] = deltas
+    return s, v, d

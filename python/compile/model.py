@@ -1,0 +1,66 @@
+"""Layer-2 JAX compute graph: the chunk-expand model.
+
+The decompression pipeline splits per the paper's own structure:
+sequential decode (irregular, branchy — stays in Rust, as it stays on
+the leader/warp in CUDA) and parallel expand/write (regular — this
+graph). The Rust coordinator batches decoded run tables and executes
+one of the fixed-shape *buckets* below through PJRT.
+
+Each bucket (n_runs, m_out) is lowered once by aot.py to
+artifacts/expand_n{N}_m{M}.hlo.txt; delta buckets lower the scan kernel
+to artifacts/delta_n{N}.hlo.txt. The bucket list is the contract with
+rust/src/runtime/expander.rs — change it in one place only (BUCKETS /
+DELTA_BUCKETS).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.delta_decode import delta_decode
+from compile.kernels.rle_expand import rle_expand
+
+# (n_runs, m_out) buckets the runtime can dispatch to. m_out covers one
+# 128 KiB chunk: 16 Ki elements for 8-byte columns, 128 Ki for byte
+# columns. Chunks with more runs than the largest bucket fall back to
+# the CPU expand path (a documented design decision; see
+# rust/src/runtime/expander.rs).
+BUCKETS = [
+    (512, 16384),
+    (4096, 16384),
+    (4096, 131072),
+    (32768, 131072),
+]
+
+# Delta-scan bucket sizes (elements).
+DELTA_BUCKETS = [4096, 16384, 131072]
+
+
+def expand_chunk(starts, values, deltas, *, m_out):
+    """Expand one chunk's run table to `m_out` elements (i64).
+
+    A thin L2 wrapper so XLA sees a single fused computation: the Pallas
+    kernel lowered in interpret mode plus any surrounding glue.
+    """
+    return rle_expand(starts, values, deltas, m_out=m_out)
+
+
+def delta_chunk(base, deltas):
+    """Reconstruct a delta-encoded group (i64)."""
+    return delta_decode(base, deltas)
+
+
+def expand_abstract(n_runs, m_out):
+    """ShapeDtypeStructs for lowering an expand bucket."""
+    return (
+        jax.ShapeDtypeStruct((n_runs,), jnp.int32),
+        jax.ShapeDtypeStruct((n_runs,), jnp.int64),
+        jax.ShapeDtypeStruct((n_runs,), jnp.int64),
+    )
+
+
+def delta_abstract(n):
+    """ShapeDtypeStructs for lowering a delta bucket."""
+    return (
+        jax.ShapeDtypeStruct((1,), jnp.int64),
+        jax.ShapeDtypeStruct((n,), jnp.int64),
+    )

@@ -1,0 +1,8 @@
+"""Ensure the compile package (and its x64 flag) loads before tests."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import compile  # noqa: F401  (sets jax_enable_x64)

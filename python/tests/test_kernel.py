@@ -1,0 +1,120 @@
+"""Kernel vs oracle: the core L1 correctness signal.
+
+Deterministic cases cover structure (single run, many runs, deltas,
+padding); hypothesis sweeps randomized run tables and shapes.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.delta_decode import TILE as DELTA_TILE, delta_decode
+from compile.kernels.ref import delta_decode_ref, expand_runs_ref, runs_from_lens
+from compile.kernels.rle_expand import TILE, pad_runs, rle_expand
+
+M = 4 * TILE  # small bucket for tests
+
+
+def run_expand(lens, values, deltas, n_bucket=256, m_out=M):
+    starts, total = runs_from_lens(lens)
+    s, v, d = pad_runs(starts, values, deltas, n_bucket)
+    got = np.asarray(rle_expand(jnp.asarray(s), jnp.asarray(v), jnp.asarray(d), m_out=m_out))
+    want = expand_runs_ref(s, v, d, total, m_out)
+    np.testing.assert_array_equal(got[:total], want[:total])
+    return got
+
+
+class TestExpandDeterministic:
+    def test_single_full_run(self):
+        run_expand([M], [42], [0])
+
+    def test_single_delta_run(self):
+        out = run_expand([100], [7], [3])
+        assert out[0] == 7 and out[99] == 7 + 3 * 99
+
+    def test_negative_delta(self):
+        out = run_expand([50], [0], [-5])
+        assert out[49] == -5 * 49
+
+    def test_many_unit_runs(self):
+        lens = [1] * 200
+        values = list(range(200))
+        run_expand(lens, values, [0] * 200)
+
+    def test_mixed_runs(self):
+        lens = [3, 1, 128, 17, 1, 1, 64]
+        values = [10, -4, 1 << 40, 0, 5, 5, -1]
+        deltas = [1, 0, -2, 1000, 0, 0, 7]
+        run_expand(lens, values, deltas)
+
+    def test_total_shorter_than_bucket(self):
+        run_expand([10], [1], [1])
+
+    def test_int64_extremes(self):
+        run_expand([4, 4], [np.iinfo(np.int64).max - 3, np.iinfo(np.int64).min],
+                   [1, 0])
+
+    def test_tile_boundary_runs(self):
+        # Runs that start/end exactly at tile boundaries.
+        lens = [TILE, TILE, TILE, TILE]
+        run_expand(lens, [1, 2, 3, 4], [0, 1, 0, -1])
+
+    def test_run_spanning_tiles(self):
+        run_expand([2 * TILE + 37, TILE - 37], [100, -100], [2, 3], n_bucket=8, m_out=M)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_expand_hypothesis(data):
+    n_runs = data.draw(st.integers(1, 60))
+    drawn = data.draw(
+        st.lists(st.integers(1, 200), min_size=n_runs, max_size=n_runs)
+    )
+    # Trim to the output budget, keeping every length >= 1.
+    lens, budget = [], M
+    for l in drawn:
+        take = min(l, budget)
+        if take <= 0:
+            break
+        lens.append(take)
+        budget -= take
+    if not lens:
+        lens = [1]
+    values = [data.draw(st.integers(-(2**62), 2**62)) for _ in lens]
+    deltas = [data.draw(st.integers(-(2**20), 2**20)) for _ in lens]
+    run_expand(lens, values, deltas)
+
+
+class TestDeltaDecode:
+    def test_zero_deltas(self):
+        base = jnp.asarray([5], dtype=jnp.int64)
+        deltas = jnp.zeros(DELTA_TILE, dtype=jnp.int64)
+        got = np.asarray(delta_decode(base, deltas))
+        assert (got == 5).all()
+
+    def test_ones(self):
+        base = jnp.asarray([0], dtype=jnp.int64)
+        deltas = jnp.ones(2 * DELTA_TILE, dtype=jnp.int64)
+        got = np.asarray(delta_decode(base, deltas))
+        want = delta_decode_ref(0, np.ones(2 * DELTA_TILE, dtype=np.int64))
+        np.testing.assert_array_equal(got, want)
+
+    def test_cross_tile_carry(self):
+        rng = np.random.default_rng(7)
+        deltas = rng.integers(-1000, 1000, size=4 * DELTA_TILE).astype(np.int64)
+        got = np.asarray(delta_decode(jnp.asarray([123], dtype=jnp.int64), jnp.asarray(deltas)))
+        want = delta_decode_ref(123, deltas)
+        np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**32), st.integers(1, 4))
+def test_delta_hypothesis(seed, ntiles):
+    rng = np.random.default_rng(seed)
+    deltas = rng.integers(-(2**30), 2**30, size=ntiles * DELTA_TILE).astype(np.int64)
+    base = int(rng.integers(-(2**40), 2**40))
+    got = np.asarray(delta_decode(jnp.asarray([base], dtype=jnp.int64), jnp.asarray(deltas)))
+    want = delta_decode_ref(base, deltas)
+    np.testing.assert_array_equal(got, want)

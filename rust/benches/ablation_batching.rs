@@ -1,0 +1,76 @@
+//! Bench: coordinator ablations — (a) dynamic batch policy sweep for
+//! the PJRT expand dispatcher, (b) shared-cursor (CODAG-style
+//! fine-grained) vs static-partition (baseline-style coarse) work
+//! division on the host engine.
+//!
+//! Shape target: batching amortizes dispatch overhead up to a knee;
+//! shared-cursor beats static partitioning when chunk costs are skewed.
+
+use codag::bench_harness::compress_dataset;
+use codag::codecs::{decode_to_runs, CodecKind};
+use codag::coordinator::batcher::{BatchPolicy, Batcher, ExpandTask};
+use codag::coordinator::{decompress_parallel, decompress_static_partition};
+use codag::data::Dataset;
+use codag::runtime::{default_artifacts_dir, Expander, SharedRuntime};
+use std::time::{Duration, Instant};
+
+fn main() {
+    let data = Dataset::Mc0.generate(8 * 1024 * 1024);
+    let container = compress_dataset(&data, Dataset::Mc0, CodecKind::RleV1).expect("compress");
+
+    // (a) batch-size sweep through the PJRT expander (falls back to CPU
+    // when artifacts are missing, which still exercises the policy).
+    let rt = SharedRuntime::load(default_artifacts_dir()).ok();
+    let expander = match rt.as_ref() {
+        Some(rt) => Expander::new(rt),
+        None => Expander::cpu_only(),
+    };
+    println!("batch-policy sweep (MC0/rlev1, {} chunks):", container.n_chunks());
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+        let mut b = Batcher::new(BatchPolicy { max_batch, max_delay: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        for i in 0..container.n_chunks() {
+            let comp = container.chunk_bytes(i).unwrap();
+            let (runs, width) = decode_to_runs(CodecKind::RleV1, comp).unwrap();
+            let total: u64 = runs.iter().map(|r| r.len).sum();
+            b.push(ExpandTask { id: i as u64, runs, width, total: total as usize, enqueued: Instant::now() });
+            if b.due(Instant::now()) {
+                for r in b.flush(&expander) {
+                    r.bytes.expect("expand ok");
+                }
+            }
+        }
+        for r in b.drain(&expander) {
+            r.bytes.expect("expand ok");
+        }
+        let dt = t0.elapsed();
+        println!(
+            "  max_batch={max_batch:3}  {:8.2} ms  ({} batches, {:.2} GB/s)",
+            dt.as_secs_f64() * 1e3,
+            b.batches,
+            data.len() as f64 / dt.as_secs_f64() / 1e9
+        );
+    }
+
+    // (b) work-division comparison on a skewed container (mixed datasets
+    // make chunk costs uneven).
+    let mut mixed = Dataset::Mc0.generate(4 * 1024 * 1024);
+    mixed.extend(Dataset::Hrg.generate(4 * 1024 * 1024));
+    let skewed = compress_dataset(&mixed, Dataset::Hrg, CodecKind::Deflate).expect("compress");
+    println!("\nwork division (skewed Deflate container, 8 workers):");
+    type DecompressFn = fn(&codag::format::container::Container, usize) -> codag::Result<Vec<u8>>;
+    for (name, f) in [
+        ("shared-cursor", decompress_parallel as DecompressFn),
+        ("static-partition", decompress_static_partition as DecompressFn),
+    ] {
+        // Warm + best-of-3.
+        let mut best = f64::MAX;
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            let out = f(&skewed, 8).expect("decompress");
+            assert_eq!(out.len(), mixed.len());
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        println!("  {name:18} {:8.2} ms  ({:.2} GB/s)", best * 1e3, mixed.len() as f64 / best / 1e9);
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: §V-E ablation — all-thread vs single-thread decoding.
+//! Shape target: all-thread ~1.1-1.3x faster end-to-end (the paper
+//! measures 1.17x / 1.19x), while the §IV-D micro-benchmark shows the
+//! redundant ALU work itself is free.
+
+use codag::bench_harness::{all_workloads, figures, Scale};
+
+/// Bench scale: lighter than the official report (CODAG_SCALE_MB=8,
+/// chunks=64 regenerates the paper-scale numbers recorded in
+/// report_output.txt; benches default to 4 MiB / 32 chunks so the full
+/// `cargo bench` sweep completes in minutes on one core).
+fn bench_scale() -> Scale {
+    let mut s = Scale::default();
+    if std::env::var_os("CODAG_SCALE_MB").is_none() {
+        s.dataset_bytes = 2 * 1024 * 1024;
+        s.sim_chunks = 16;
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let workloads = all_workloads(scale).expect("workloads");
+    print!("{}", figures::ablation_decode(&workloads, scale).expect("ablation"));
+}

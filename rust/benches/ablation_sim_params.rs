@@ -1,0 +1,55 @@
+//! Bench: simulator-robustness ablation — sweep the timing parameters
+//! the conclusions could be sensitive to (block-barrier cost, shared-
+//! memory latency, ALU issue interval, DRAM latency) and report the
+//! RLE v1 CODAG-vs-baseline speedup under each. Shape target: the
+//! speedup stays >> 1 across the whole sweep — the paper's conclusion
+//! is not an artifact of one parameter choice.
+
+use codag::bench_harness::compress_dataset;
+use codag::codecs::CodecKind;
+use codag::data::Dataset;
+use codag::decomp::codag_engine::Variant;
+use codag::gpu_sim::{simulate_container, GpuConfig, Provisioning};
+
+fn speedup(cfg: &GpuConfig, container: &codag::format::container::Container) -> f64 {
+    let b = simulate_container(cfg, Provisioning::Baseline, container, 32).unwrap();
+    let c = simulate_container(cfg, Provisioning::Codag(Variant::Codag), container, 32).unwrap();
+    c.throughput_gbps(cfg) / b.throughput_gbps(cfg).max(1e-12)
+}
+
+fn main() {
+    let data = Dataset::Mc0.generate(4 * 1024 * 1024);
+    let container = compress_dataset(&data, Dataset::Mc0, CodecKind::RleV1).expect("compress");
+    let base = GpuConfig::a100();
+    println!("baseline config: speedup {:.2}x\n", speedup(&base, &container));
+
+    // §IV-E: shared-memory vs register input buffer.
+    let smem =
+        simulate_container(&base, Provisioning::Codag(Variant::Codag), &container, 32).unwrap();
+    let reg =
+        simulate_container(&base, Provisioning::Codag(Variant::RegisterBuffer), &container, 32)
+            .unwrap();
+    println!(
+        "input buffer: shared-memory {:.1} GB/s vs registers {:.1} GB/s ({:+.1}%)\n",
+        smem.throughput_gbps(&base),
+        reg.throughput_gbps(&base),
+        (reg.throughput_gbps(&base) / smem.throughput_gbps(&base) - 1.0) * 100.0
+    );
+    println!("{:24} {:>8} {:>10}", "parameter", "value", "speedup");
+    for v in [10u32, 30, 60, 120] {
+        let cfg = GpuConfig { block_barrier_cycles: v, ..GpuConfig::a100() };
+        println!("{:24} {:>8} {:>9.2}x", "block_barrier_cycles", v, speedup(&cfg, &container));
+    }
+    for v in [12u32, 24, 48] {
+        let cfg = GpuConfig { smem_latency: v, ..GpuConfig::a100() };
+        println!("{:24} {:>8} {:>9.2}x", "smem_latency", v, speedup(&cfg, &container));
+    }
+    for v in [1u32, 2, 4] {
+        let cfg = GpuConfig { alu_issue_interval: v, ..GpuConfig::a100() };
+        println!("{:24} {:>8} {:>9.2}x", "alu_issue_interval", v, speedup(&cfg, &container));
+    }
+    for v in [235u32, 470, 940] {
+        let cfg = GpuConfig { mem_latency: v, ..GpuConfig::a100() };
+        println!("{:24} {:>8} {:>9.2}x", "mem_latency", v, speedup(&cfg, &container));
+    }
+}

@@ -1,0 +1,52 @@
+//! Bench: real wall-clock CPU codec throughput (the L3 hot path the
+//! §Perf pass optimizes). Measures single-threaded decode, 8-worker
+//! parallel decode, and compression, for each dataset × codec.
+
+use codag::bench_harness::compress_dataset;
+use codag::codecs::CodecKind;
+use codag::coordinator::decompress_parallel;
+use codag::data::Dataset;
+use std::time::Instant;
+
+const SIZE: usize = 8 * 1024 * 1024;
+
+fn best_of<F: FnMut() -> usize>(n: usize, mut f: F) -> (f64, usize) {
+    let mut best = f64::MAX;
+    let mut bytes = 0;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        bytes = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    (best, bytes)
+}
+
+fn main() {
+    println!(
+        "{:8} {:8} {:>12} {:>14} {:>14} {:>12}",
+        "dataset", "codec", "ratio", "dec-1thr GB/s", "dec-8thr GB/s", "comp MB/s"
+    );
+    for d in Dataset::all() {
+        let data = d.generate(SIZE);
+        for kind in CodecKind::all() {
+            let (t_comp, _) = best_of(1, || {
+                compress_dataset(&data, d, kind).map(|c| c.compressed_len()).unwrap_or(0)
+            });
+            let container = compress_dataset(&data, d, kind).expect("compress");
+            let (t1, n1) = best_of(3, || container.decompress_all().map(|v| v.len()).unwrap_or(0));
+            let (t8, _) = best_of(3, || {
+                decompress_parallel(&container, 8).map(|v| v.len()).unwrap_or(0)
+            });
+            assert_eq!(n1, data.len());
+            println!(
+                "{:8} {:8} {:>12.4} {:>14.3} {:>14.3} {:>12.1}",
+                d.name(),
+                kind.name(),
+                container.compression_ratio(),
+                n1 as f64 / t1 / 1e9,
+                n1 as f64 / t8 / 1e9,
+                data.len() as f64 / t_comp / 1e6,
+            );
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Bench: regenerate the characterization figures — Fig 2 (baseline
+//! RLE v1 stall distribution), Fig 3 (baseline Deflate pipe
+//! utilization), Fig 4 (issue timeline toy), Fig 5 (SB/MPT comparison),
+//! Fig 6 (compute/memory throughput comparison) and the §IV-D
+//! micro-benchmark. Shape targets: baseline dominated by barrier
+//! stalls; CODAG shifts stalls to MPT and raises compute%.
+
+use codag::bench_harness::{all_workloads, figures, Scale};
+
+/// Bench scale: lighter than the official report (CODAG_SCALE_MB=8,
+/// chunks=64 regenerates the paper-scale numbers recorded in
+/// report_output.txt; benches default to 4 MiB / 32 chunks so the full
+/// `cargo bench` sweep completes in minutes on one core).
+fn bench_scale() -> Scale {
+    let mut s = Scale::default();
+    if std::env::var_os("CODAG_SCALE_MB").is_none() {
+        s.dataset_bytes = 2 * 1024 * 1024;
+        s.sim_chunks = 16;
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let workloads = all_workloads(scale).expect("workloads");
+    for (name, text) in [
+        ("fig2", figures::fig2(&workloads, scale).expect("fig2")),
+        ("fig3", figures::fig3(&workloads, scale).expect("fig3")),
+        ("fig4", figures::fig4()),
+        ("fig5", figures::fig5(&workloads, scale).expect("fig5")),
+        ("fig6", figures::fig6(&workloads, scale).expect("fig6")),
+        ("ubench", figures::ubench()),
+    ] {
+        println!("=== {name} ===\n{text}");
+    }
+}

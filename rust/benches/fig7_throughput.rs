@@ -1,0 +1,31 @@
+//! Bench: regenerate Fig 7 — decompression throughput (GB/s) for every
+//! dataset × codec under CODAG and the RAPIDS-style baseline on the
+//! simulated A100. Shape target: CODAG >> baseline for RLE, ~parity for
+//! Deflate; MC0/MC3 amplified by compressibility.
+//!
+//! `cargo bench --bench fig7_throughput` (scale via CODAG_SCALE_MB).
+
+use codag::bench_harness::{all_workloads, figures, Scale};
+
+/// Bench scale: lighter than the official report (CODAG_SCALE_MB=8,
+/// chunks=64 regenerates the paper-scale numbers recorded in
+/// report_output.txt; benches default to 4 MiB / 32 chunks so the full
+/// `cargo bench` sweep completes in minutes on one core).
+fn bench_scale() -> Scale {
+    let mut s = Scale::default();
+    if std::env::var_os("CODAG_SCALE_MB").is_none() {
+        s.dataset_bytes = 2 * 1024 * 1024;
+        s.sim_chunks = 16;
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let t0 = std::time::Instant::now();
+    let workloads = all_workloads(scale).expect("workloads");
+    eprintln!("[workloads {:.1}s]", t0.elapsed().as_secs_f64());
+    let t = std::time::Instant::now();
+    print!("{}", figures::fig7(&workloads, scale).expect("fig7"));
+    eprintln!("[fig7 {:.1}s]", t.elapsed().as_secs_f64());
+}

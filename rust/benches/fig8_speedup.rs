@@ -1,0 +1,28 @@
+//! Bench: regenerate Fig 8 — geomean speedups over the baseline for
+//! CODAG and CODAG+prefetch-warp on A100, and CODAG on V100 (§V-F and
+//! §V-G). Shape target: prefetch variant strictly between baseline and
+//! full CODAG; V100 speedups slightly below A100 (CODAG scales better
+//! with hardware).
+
+use codag::bench_harness::{all_workloads, figures, Scale};
+
+/// Bench scale: lighter than the official report (CODAG_SCALE_MB=8,
+/// chunks=64 regenerates the paper-scale numbers recorded in
+/// report_output.txt; benches default to 4 MiB / 32 chunks so the full
+/// `cargo bench` sweep completes in minutes on one core).
+fn bench_scale() -> Scale {
+    let mut s = Scale::default();
+    if std::env::var_os("CODAG_SCALE_MB").is_none() {
+        s.dataset_bytes = 2 * 1024 * 1024;
+        s.sim_chunks = 16;
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let workloads = all_workloads(scale).expect("workloads");
+    let t = std::time::Instant::now();
+    print!("{}", figures::fig8(&workloads, scale).expect("fig8"));
+    eprintln!("[fig8 {:.1}s]", t.elapsed().as_secs_f64());
+}

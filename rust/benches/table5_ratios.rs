@@ -1,0 +1,26 @@
+//! Bench: regenerate Table V — compression ratios and average symbol
+//! lengths for all seven datasets under RLE v1 / RLE v2 / Deflate,
+//! side by side with the paper's numbers.
+
+use codag::bench_harness::{all_workloads, tables, Scale};
+
+/// Bench scale: lighter than the official report (CODAG_SCALE_MB=8,
+/// chunks=64 regenerates the paper-scale numbers recorded in
+/// report_output.txt; benches default to 4 MiB / 32 chunks so the full
+/// `cargo bench` sweep completes in minutes on one core).
+fn bench_scale() -> Scale {
+    let mut s = Scale::default();
+    if std::env::var_os("CODAG_SCALE_MB").is_none() {
+        s.dataset_bytes = 2 * 1024 * 1024;
+        s.sim_chunks = 16;
+    }
+    s
+}
+
+fn main() {
+    let scale = bench_scale();
+    let workloads = all_workloads(scale).expect("workloads");
+    print!("{}", tables::table5(&workloads).expect("table5"));
+    print!("{}", tables::table3());
+    print!("{}", tables::table4(&workloads));
+}

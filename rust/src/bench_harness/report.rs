@@ -1,0 +1,108 @@
+//! The all-in-one report runner (`codag report all`, the
+//! `reproduce_paper` example, and EXPERIMENTS.md generation).
+
+use crate::bench_harness::{all_workloads, figures, tables, Scale, Workload};
+use crate::Result;
+
+/// Experiment selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Experiment {
+    /// Table III (testbed).
+    Table3,
+    /// Table IV (datasets).
+    Table4,
+    /// Table V (ratios, symbol lengths).
+    Table5,
+    /// Fig 2 (baseline RLE v1 characterization).
+    Fig2,
+    /// Fig 3 (baseline Deflate characterization).
+    Fig3,
+    /// Fig 4 (issue timeline toy).
+    Fig4,
+    /// Fig 5 (SB/MPT comparison).
+    Fig5,
+    /// Fig 6 (compute/memory throughput comparison).
+    Fig6,
+    /// Fig 7 (throughput).
+    Fig7,
+    /// Fig 8 (speedups incl. prefetch + V100).
+    Fig8,
+    /// §IV-D micro-benchmark.
+    Ubench,
+    /// §V-E decode-mode ablation.
+    AblationDecode,
+}
+
+impl Experiment {
+    /// All experiments in paper order.
+    pub fn all() -> Vec<Experiment> {
+        use Experiment::*;
+        vec![
+            Table3, Table4, Table5, Fig2, Fig3, Fig4, Fig5, Fig6, Fig7, Fig8, Ubench,
+            AblationDecode,
+        ]
+    }
+
+    /// Parse a CLI name like "fig7" or "table5".
+    pub fn parse(s: &str) -> Option<Experiment> {
+        use Experiment::*;
+        match s.to_ascii_lowercase().as_str() {
+            "table3" => Some(Table3),
+            "table4" => Some(Table4),
+            "table5" => Some(Table5),
+            "fig2" => Some(Fig2),
+            "fig3" => Some(Fig3),
+            "fig4" => Some(Fig4),
+            "fig5" => Some(Fig5),
+            "fig6" => Some(Fig6),
+            "fig7" => Some(Fig7),
+            "fig8" => Some(Fig8),
+            "ubench" => Some(Ubench),
+            "ablation_decode" | "ablation-decode" => Some(AblationDecode),
+            _ => None,
+        }
+    }
+
+    /// Run one experiment against shared workloads.
+    pub fn run(&self, workloads: &[Workload], scale: Scale) -> Result<String> {
+        use Experiment::*;
+        Ok(match self {
+            Table3 => tables::table3(),
+            Table4 => tables::table4(workloads),
+            Table5 => tables::table5(workloads)?,
+            Fig2 => figures::fig2(workloads, scale)?,
+            Fig3 => figures::fig3(workloads, scale)?,
+            Fig4 => figures::fig4(),
+            Fig5 => figures::fig5(workloads, scale)?,
+            Fig6 => figures::fig6(workloads, scale)?,
+            Fig7 => figures::fig7(workloads, scale)?,
+            Fig8 => figures::fig8(workloads, scale)?,
+            Ubench => figures::ubench(),
+            AblationDecode => figures::ablation_decode(workloads, scale)?,
+        })
+    }
+}
+
+/// Run every experiment and return the combined report.
+pub fn run_all(scale: Scale) -> Result<String> {
+    let workloads = all_workloads(scale)?;
+    let mut out = String::new();
+    for e in Experiment::all() {
+        out.push_str(&e.run(&workloads, scale)?);
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_experiments() {
+        assert_eq!(Experiment::parse("fig7"), Some(Experiment::Fig7));
+        assert_eq!(Experiment::parse("TABLE5"), Some(Experiment::Table5));
+        assert_eq!(Experiment::parse("fig99"), None);
+        assert_eq!(Experiment::all().len(), 12);
+    }
+}

@@ -1,0 +1,182 @@
+//! Table reproductions: Table III (testbed), Table IV (datasets),
+//! Table V (compression ratios + average symbol lengths).
+
+use crate::bench_harness::{fmt_row, Workload};
+use crate::codecs::{avg_symbol_len, CodecKind};
+use crate::gpu_sim::GpuConfig;
+use crate::Result;
+
+/// Table III: the (simulated) testbed configuration.
+pub fn table3() -> String {
+    let mut s = String::from("Table III — Configuration (simulated testbed)\n");
+    s.push_str("  CPU     host worker pool (std::thread, shared-cursor units)\n");
+    s.push_str("  Memory  host RAM\n");
+    for cfg in [GpuConfig::v100(), GpuConfig::a100()] {
+        s.push_str(&format!(
+            "  GPU     {} (simulated): {} SMs x {} schedulers, {} warp slots/SM, {:.2} GHz, {:.0} GB/s HBM\n",
+            cfg.name,
+            cfg.num_sms,
+            cfg.schedulers_per_sm,
+            cfg.warp_slots_per_sm,
+            cfg.clock_ghz,
+            cfg.mem_bw_gbps,
+        ));
+    }
+    s
+}
+
+/// Table IV: the evaluation datasets (paper sizes + generated sizes).
+pub fn table4(workloads: &[Workload]) -> String {
+    let widths = [8usize, 14, 8, 12, 14];
+    let mut s = String::from("Table IV — Evaluation datasets\n");
+    s.push_str(&fmt_row(
+        &["Dataset", "Category", "DType", "Paper(GB)", "Generated(B)"]
+            .map(String::from),
+        &widths,
+    ));
+    s.push('\n');
+    for w in workloads {
+        let d = w.dataset;
+        s.push_str(&fmt_row(
+            &[
+                d.name().to_string(),
+                d.category().to_string(),
+                d.dtype().to_string(),
+                format!("{:.2}", d.paper_size_gb()),
+                format!("{}", w.data.len()),
+            ],
+            &widths,
+        ));
+        s.push('\n');
+    }
+    s
+}
+
+/// Paper Table V reference values (compression ratios), for the
+/// side-by-side comparison EXPERIMENTS.md records.
+pub fn paper_table5_ratio(d: crate::data::Dataset, kind: CodecKind) -> f64 {
+    use crate::data::Dataset::*;
+    match (d, kind) {
+        (Mc0, CodecKind::RleV1) => 0.023,
+        (Mc0, CodecKind::RleV2) => 0.022,
+        (Mc0, CodecKind::Deflate) => 0.017,
+        (Mc3, CodecKind::RleV1) => 0.038,
+        (Mc3, CodecKind::RleV2) => 0.039,
+        (Mc3, CodecKind::Deflate) => 0.015,
+        (Tpc, CodecKind::RleV1) => 0.867,
+        (Tpc, CodecKind::RleV2) => 0.637,
+        (Tpc, CodecKind::Deflate) => 0.119,
+        (Tpt, CodecKind::RleV1) => 1.41,
+        (Tpt, CodecKind::RleV2) => 0.99,
+        (Tpt, CodecKind::Deflate) => 0.042,
+        (Cd2, CodecKind::RleV1) => 0.286,
+        (Cd2, CodecKind::RleV2) => 0.308,
+        (Cd2, CodecKind::Deflate) => 0.625,
+        (Tc2, CodecKind::RleV1) => 0.087,
+        (Tc2, CodecKind::RleV2) => 0.075,
+        (Tc2, CodecKind::Deflate) => 0.0172,
+        (Hrg, CodecKind::RleV1) => 0.975,
+        (Hrg, CodecKind::RleV2) => 0.972,
+        (Hrg, CodecKind::Deflate) => 0.305,
+    }
+}
+
+/// One Table V row: measured ratios + avg symbol lengths vs paper.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    /// Dataset name.
+    pub dataset: &'static str,
+    /// (measured, paper) ratio per codec in [v1, v2, deflate] order.
+    pub ratios: [(f64, f64); 3],
+    /// Average symbol length (elements) for RLE v1 and Deflate.
+    pub sym_len_v1: f64,
+    /// Average symbol length (bytes) for Deflate.
+    pub sym_len_deflate: f64,
+}
+
+/// Compute Table V for the given workloads.
+pub fn table5_rows(workloads: &[Workload]) -> Result<Vec<Table5Row>> {
+    let mut rows = Vec::new();
+    for w in workloads {
+        let mut ratios = [(0.0, 0.0); 3];
+        for (i, kind) in CodecKind::all().into_iter().enumerate() {
+            ratios[i] = (w.ratio(kind), paper_table5_ratio(w.dataset, kind));
+        }
+        // Avg symbol length over the first few chunks (stable enough).
+        let sym = |kind: CodecKind| -> Result<f64> {
+            let c = w.container(kind);
+            let n = c.n_chunks().min(4);
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += avg_symbol_len(kind, c.chunk_bytes(i)?)?;
+            }
+            Ok(acc / n.max(1) as f64)
+        };
+        rows.push(Table5Row {
+            dataset: w.dataset.name(),
+            ratios,
+            sym_len_v1: sym(CodecKind::RleV1)?,
+            sym_len_deflate: sym(CodecKind::Deflate)?,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render Table V.
+pub fn table5(workloads: &[Workload]) -> Result<String> {
+    let rows = table5_rows(workloads)?;
+    let widths = [8usize, 16, 16, 16, 12, 12];
+    let mut s = String::from(
+        "Table V — Compression ratios (measured | paper) and avg symbol length\n",
+    );
+    s.push_str(&fmt_row(
+        &["Dataset", "RLEv1", "RLEv2", "Deflate", "SymV1", "SymDefl"].map(String::from),
+        &widths,
+    ));
+    s.push('\n');
+    for r in rows {
+        s.push_str(&fmt_row(
+            &[
+                r.dataset.to_string(),
+                format!("{:.3}|{:.3}", r.ratios[0].0, r.ratios[0].1),
+                format!("{:.3}|{:.3}", r.ratios[1].0, r.ratios[1].1),
+                format!("{:.3}|{:.3}", r.ratios[2].0, r.ratios[2].1),
+                format!("{:.1}", r.sym_len_v1),
+                format!("{:.1}", r.sym_len_deflate),
+            ],
+            &widths,
+        ));
+        s.push('\n');
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_harness::Scale;
+    use crate::data::Dataset;
+
+    #[test]
+    fn table3_mentions_both_gpus() {
+        let t = table3();
+        assert!(t.contains("A100") && t.contains("V100"));
+    }
+
+    #[test]
+    fn table5_shape_matches_paper_regimes() {
+        let scale = Scale { dataset_bytes: 512 * 1024, sim_chunks: 4 };
+        let ws = vec![
+            Workload::build(Dataset::Mc0, scale).unwrap(),
+            Workload::build(Dataset::Hrg, scale).unwrap(),
+        ];
+        let rows = table5_rows(&ws).unwrap();
+        // MC0: all codecs < 0.1; HRG: RLE ~1, deflate < 0.55.
+        assert!(rows[0].ratios[0].0 < 0.1);
+        assert!(rows[1].ratios[0].0 > 0.9);
+        assert!(rows[1].ratios[2].0 < 0.55);
+        // Long runs in MC0, none in HRG.
+        assert!(rows[0].sym_len_v1 > 10.0);
+        assert!(rows[1].sym_len_v1 < 1.5);
+    }
+}

@@ -1,0 +1,305 @@
+//! DEFLATE encoder: LZ77 tokens → fixed or dynamic Huffman blocks.
+//!
+//! Mirrors zlib level-9 structure: tokenize with the lazy hash-chain
+//! matcher, gather symbol frequencies, then emit whichever of
+//! {stored, fixed, dynamic} is smallest for the block. Dynamic blocks
+//! serialize their code lengths with the 16/17/18 run-length meta-code.
+
+use crate::codecs::deflate::huffman::{build_lengths, CanonicalCodes, MAX_BITS};
+use crate::codecs::deflate::inflate::{
+    CLC_ORDER, DIST_BASE, DIST_EXTRA, LENGTH_BASE, LENGTH_EXTRA,
+};
+use crate::codecs::deflate::lz77::{tokenize, Token};
+use crate::format::bitio::LsbBitWriter;
+use crate::Result;
+
+/// Map a match length (3–258) to (code index 0–28, extra bits value).
+#[inline]
+fn length_code(len: u16) -> (usize, u16) {
+    debug_assert!((3..=258).contains(&len));
+    // Linear scan is fine: 29 entries, called once per match token.
+    let mut i = 28;
+    while LENGTH_BASE[i] > len {
+        i -= 1;
+    }
+    (i, len - LENGTH_BASE[i])
+}
+
+/// Map a distance (1–32768) to (code index 0–29, extra bits value).
+#[inline]
+fn dist_code(dist: u16) -> (usize, u16) {
+    debug_assert!(dist >= 1);
+    let mut i = 29;
+    while DIST_BASE[i] > dist {
+        i -= 1;
+    }
+    (i, dist - DIST_BASE[i])
+}
+
+/// Compress `data` into a single-member DEFLATE stream.
+pub fn deflate(data: &[u8]) -> Result<Vec<u8>> {
+    let tokens = tokenize(data);
+    let mut w = LsbBitWriter::new();
+    emit_block(&tokens, data, true, &mut w)?;
+    Ok(w.finish())
+}
+
+/// Frequencies of literal/length and distance symbols for `tokens`.
+fn frequencies(tokens: &[Token]) -> (Vec<u32>, Vec<u32>) {
+    let mut lit = vec![0u32; 286];
+    let mut dist = vec![0u32; 30];
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => lit[b as usize] += 1,
+            Token::Match { len, dist: d } => {
+                lit[257 + length_code(len).0] += 1;
+                dist[dist_code(d).0] += 1;
+            }
+        }
+    }
+    lit[256] += 1; // end-of-block
+    (lit, dist)
+}
+
+/// Cost in bits of coding `tokens` with the given code lengths.
+fn token_cost(tokens: &[Token], lit_lens: &[u8], dist_lens: &[u8]) -> u64 {
+    let mut bits = lit_lens[256] as u64;
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => bits += lit_lens[b as usize] as u64,
+            Token::Match { len, dist: d } => {
+                let (lc, _) = length_code(len);
+                let (dc, _) = dist_code(d);
+                bits += lit_lens[257 + lc] as u64
+                    + LENGTH_EXTRA[lc] as u64
+                    + dist_lens[dc] as u64
+                    + DIST_EXTRA[dc] as u64;
+            }
+        }
+    }
+    bits
+}
+
+/// Fixed-table code lengths.
+fn fixed_lens() -> (Vec<u8>, Vec<u8>) {
+    let mut lit = vec![8u8; 144];
+    lit.extend(std::iter::repeat(9u8).take(112));
+    lit.extend(std::iter::repeat(7u8).take(24));
+    lit.extend(std::iter::repeat(8u8).take(8));
+    (lit, vec![5u8; 30])
+}
+
+/// RLE-compress code lengths with symbols 16/17/18; returns (sym, extra).
+fn rle_code_lengths(lens: &[u8]) -> Vec<(u8, u8)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < lens.len() {
+        let v = lens[i];
+        let mut run = 1usize;
+        while i + run < lens.len() && lens[i + run] == v {
+            run += 1;
+        }
+        if v == 0 {
+            let mut left = run;
+            while left >= 11 {
+                let n = left.min(138);
+                out.push((18, (n - 11) as u8));
+                left -= n;
+            }
+            if left >= 3 {
+                out.push((17, (left - 3) as u8));
+                left = 0;
+            }
+            for _ in 0..left {
+                out.push((0, 0));
+            }
+        } else {
+            out.push((v, 0));
+            let mut left = run - 1;
+            while left >= 3 {
+                let n = left.min(6);
+                out.push((16, (n - 3) as u8));
+                left -= n;
+            }
+            for _ in 0..left {
+                out.push((v, 0));
+            }
+        }
+        i += run;
+    }
+    out
+}
+
+/// Emit one block (stored / fixed / dynamic, whichever is smallest).
+fn emit_block(tokens: &[Token], raw: &[u8], bfinal: bool, w: &mut LsbBitWriter) -> Result<()> {
+    let (lit_freq, dist_freq) = frequencies(tokens);
+    let dyn_lit_lens = build_lengths(&lit_freq, MAX_BITS);
+    let mut dyn_dist_lens = build_lengths(&dist_freq, MAX_BITS);
+    // RFC: at least one distance code must be writable; a zero table is
+    // legal but zlib emits one length-1 code — do the same for parity.
+    if dyn_dist_lens.iter().all(|&l| l == 0) {
+        dyn_dist_lens[0] = 1;
+    }
+    let (fix_lit_lens, fix_dist_lens) = fixed_lens();
+
+    let fixed_cost = 3 + token_cost(tokens, &fix_lit_lens, &fix_dist_lens);
+    let (header_bits, clc_plan) = dynamic_header_cost(&dyn_lit_lens, &dyn_dist_lens);
+    let dyn_cost = 3 + header_bits + token_cost(tokens, &dyn_lit_lens, &dyn_dist_lens);
+    let stored_cost = 3 + 32 + 8 * raw.len() as u64 + 7; // + alignment
+
+    w.put_bits(bfinal as u64, 1);
+    if stored_cost < fixed_cost && stored_cost < dyn_cost && raw.len() <= 0xFFFF {
+        w.put_bits(0, 2);
+        w.align_byte();
+        w.put_aligned_bytes(&(raw.len() as u16).to_le_bytes());
+        w.put_aligned_bytes(&(!(raw.len() as u16)).to_le_bytes());
+        w.put_aligned_bytes(raw);
+        return Ok(());
+    }
+    if fixed_cost <= dyn_cost {
+        w.put_bits(1, 2);
+        let lit = CanonicalCodes::from_lengths(&fix_lit_lens)?;
+        let dist = CanonicalCodes::from_lengths(&fix_dist_lens)?;
+        emit_tokens(tokens, &lit, &dist, w);
+    } else {
+        w.put_bits(2, 2);
+        emit_dynamic_header(&dyn_lit_lens, &dyn_dist_lens, &clc_plan, w)?;
+        let lit = CanonicalCodes::from_lengths(&dyn_lit_lens)?;
+        let dist = CanonicalCodes::from_lengths(&dyn_dist_lens)?;
+        emit_tokens(tokens, &lit, &dist, w);
+    }
+    Ok(())
+}
+
+/// Pre-computed dynamic header plan (shared between cost + emission).
+struct ClcPlan {
+    hlit: usize,
+    hdist: usize,
+    hclen: usize,
+    rle: Vec<(u8, u8)>,
+    clc_lens: [u8; 19],
+}
+
+fn dynamic_header_cost(lit_lens: &[u8], dist_lens: &[u8]) -> (u64, ClcPlan) {
+    let hlit = (257..=286)
+        .rev()
+        .find(|&n| n == 257 || lit_lens[n - 1] != 0)
+        .unwrap_or(257)
+        .max(257);
+    let hdist = (1..=30).rev().find(|&n| n == 1 || dist_lens[n - 1] != 0).unwrap_or(1);
+    let mut all = Vec::with_capacity(hlit + hdist);
+    all.extend_from_slice(&lit_lens[..hlit]);
+    all.extend_from_slice(&dist_lens[..hdist]);
+    let rle = rle_code_lengths(&all);
+    let mut clc_freq = vec![0u32; 19];
+    for &(s, _) in &rle {
+        clc_freq[s as usize] += 1;
+    }
+    let clc_lens_v = build_lengths(&clc_freq, 7);
+    let mut clc_lens = [0u8; 19];
+    clc_lens.copy_from_slice(&clc_lens_v);
+    let hclen = (4..=19)
+        .rev()
+        .find(|&n| n == 4 || clc_lens[CLC_ORDER[n - 1]] != 0)
+        .unwrap_or(4);
+    let mut bits = 5 + 5 + 4 + 3 * hclen as u64;
+    for &(s, _) in &rle {
+        bits += clc_lens[s as usize] as u64
+            + match s {
+                16 => 2,
+                17 => 3,
+                18 => 7,
+                _ => 0,
+            };
+    }
+    (bits, ClcPlan { hlit, hdist, hclen, rle, clc_lens })
+}
+
+fn emit_dynamic_header(
+    _lit_lens: &[u8],
+    _dist_lens: &[u8],
+    plan: &ClcPlan,
+    w: &mut LsbBitWriter,
+) -> Result<()> {
+    w.put_bits((plan.hlit - 257) as u64, 5);
+    w.put_bits((plan.hdist - 1) as u64, 5);
+    w.put_bits((plan.hclen - 4) as u64, 4);
+    for &idx in CLC_ORDER.iter().take(plan.hclen) {
+        w.put_bits(plan.clc_lens[idx] as u64, 3);
+    }
+    let clc = CanonicalCodes::from_lengths(&plan.clc_lens)?;
+    for &(s, extra) in &plan.rle {
+        w.put_bits(clc.codes[s as usize] as u64, clc.lens[s as usize] as u32);
+        match s {
+            16 => w.put_bits(extra as u64, 2),
+            17 => w.put_bits(extra as u64, 3),
+            18 => w.put_bits(extra as u64, 7),
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn emit_tokens(tokens: &[Token], lit: &CanonicalCodes, dist: &CanonicalCodes, w: &mut LsbBitWriter) {
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => {
+                w.put_bits(lit.codes[b as usize] as u64, lit.lens[b as usize] as u32)
+            }
+            Token::Match { len, dist: d } => {
+                let (lc, lex) = length_code(len);
+                let sym = 257 + lc;
+                w.put_bits(lit.codes[sym] as u64, lit.lens[sym] as u32);
+                w.put_bits(lex as u64, LENGTH_EXTRA[lc] as u32);
+                let (dc, dex) = dist_code(d);
+                w.put_bits(dist.codes[dc] as u64, dist.lens[dc] as u32);
+                w.put_bits(dex as u64, DIST_EXTRA[dc] as u32);
+            }
+        }
+    }
+    w.put_bits(lit.codes[256] as u64, lit.lens[256] as u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn length_code_boundaries() {
+        assert_eq!(length_code(3), (0, 0));
+        assert_eq!(length_code(10), (7, 0));
+        assert_eq!(length_code(11), (8, 0));
+        assert_eq!(length_code(12), (8, 1));
+        assert_eq!(length_code(258), (28, 0));
+    }
+
+    #[test]
+    fn dist_code_boundaries() {
+        assert_eq!(dist_code(1), (0, 0));
+        assert_eq!(dist_code(4), (3, 0));
+        assert_eq!(dist_code(5), (4, 0));
+        assert_eq!(dist_code(6), (4, 1));
+        assert_eq!(dist_code(24577), (29, 0));
+        assert_eq!(dist_code(32768), (29, 8191));
+    }
+
+    #[test]
+    fn rle_code_lengths_reconstructs() {
+        let lens = [0u8, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 5, 5, 5, 5, 5, 7, 0, 0, 0, 2];
+        let rle = rle_code_lengths(&lens);
+        // Expand back.
+        let mut back: Vec<u8> = Vec::new();
+        for &(s, e) in &rle {
+            match s {
+                16 => {
+                    let last = *back.last().unwrap();
+                    back.extend(std::iter::repeat(last).take(3 + e as usize));
+                }
+                17 => back.extend(std::iter::repeat(0u8).take(3 + e as usize)),
+                18 => back.extend(std::iter::repeat(0u8).take(11 + e as usize)),
+                v => back.push(v),
+            }
+        }
+        assert_eq!(back, lens);
+    }
+}

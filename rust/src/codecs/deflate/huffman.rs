@@ -1,0 +1,438 @@
+//! Canonical Huffman coding for DEFLATE (RFC 1951 §3.2.2).
+//!
+//! DEFLATE transmits only *code lengths*; both sides derive the same
+//! canonical codes. This module provides:
+//!
+//! * [`CanonicalCodes`] — encoder side: lengths → (code, len) pairs with
+//!   DEFLATE's bit-reversed transmission order.
+//! * [`HuffmanDecoder`] — decoder side: the count/offset decoding
+//!   structure (as in Mark Adler's `puff`), augmented with a one-level
+//!   fast lookup table for short codes (the decode hot path).
+//! * [`build_lengths`] — length-limited code construction for the
+//!   encoder: Huffman frequencies → lengths capped at 15 bits with a
+//!   Kraft-sum repair pass (the zlib `gen_bitlen` overflow strategy).
+
+use crate::format::bitio::LsbBitReader;
+use crate::{corrupt, Result};
+
+/// Maximum code length DEFLATE allows.
+pub const MAX_BITS: usize = 15;
+/// Bits covered by the fast lookup table (trade table size vs hit rate).
+pub const FAST_BITS: u32 = 9;
+
+/// Encoder-side canonical code table.
+#[derive(Debug, Clone)]
+pub struct CanonicalCodes {
+    /// Per-symbol code, already bit-reversed for LSB-first emission.
+    pub codes: Vec<u16>,
+    /// Per-symbol length in bits (0 = symbol unused).
+    pub lens: Vec<u8>,
+}
+
+impl CanonicalCodes {
+    /// Build canonical codes from per-symbol lengths.
+    pub fn from_lengths(lens: &[u8]) -> Result<CanonicalCodes> {
+        let mut bl_count = [0u32; MAX_BITS + 1];
+        for &l in lens {
+            if l as usize > MAX_BITS {
+                return Err(corrupt("huffman: code length > 15"));
+            }
+            bl_count[l as usize] += 1;
+        }
+        bl_count[0] = 0;
+        let mut next_code = [0u16; MAX_BITS + 1];
+        let mut code = 0u32;
+        for bits in 1..=MAX_BITS {
+            code = (code + bl_count[bits - 1]) << 1;
+            if code > (1 << bits) {
+                return Err(corrupt("huffman: over-subscribed code lengths"));
+            }
+            next_code[bits] = code as u16;
+        }
+        let mut codes = vec![0u16; lens.len()];
+        for (sym, &l) in lens.iter().enumerate() {
+            if l > 0 {
+                let c = next_code[l as usize];
+                next_code[l as usize] += 1;
+                codes[sym] = reverse_bits(c, l as u32);
+            }
+        }
+        Ok(CanonicalCodes { codes, lens: lens.to_vec() })
+    }
+}
+
+/// Reverse the low `n` bits of `v` (DEFLATE codes transmit MSB-first
+/// within an LSB-first bit stream).
+#[inline]
+pub fn reverse_bits(v: u16, n: u32) -> u16 {
+    v.reverse_bits() >> (16 - n)
+}
+
+/// Decoder-side structure: fast table for codes ≤ FAST_BITS, canonical
+/// count/offset walk for longer codes.
+#[derive(Debug, Clone)]
+pub struct HuffmanDecoder {
+    /// fast[bits] = (symbol << 4) | code_len, or u16::MAX when the code is
+    /// longer than FAST_BITS.
+    fast: Vec<u16>,
+    /// Number of codes of each length.
+    count: [u16; MAX_BITS + 1],
+    /// Symbols sorted by (length, symbol) — canonical order.
+    symbols: Vec<u16>,
+    /// First canonical code value of each length (non-reversed).
+    first_code: [u32; MAX_BITS + 1],
+    /// Index into `symbols` of the first symbol of each length.
+    first_sym: [u32; MAX_BITS + 1],
+    /// Longest code length present.
+    max_len: u32,
+}
+
+impl HuffmanDecoder {
+    /// Build a decoder from per-symbol code lengths.
+    ///
+    /// Rejects over-subscribed length sets. Incomplete sets are accepted
+    /// — DEFLATE's fixed distance table only assigns 30 of 32 5-bit codes
+    /// — and decoding a bit pattern that falls in a gap errors out, the
+    /// same contract zlib's inflate implements.
+    pub fn from_lengths(lens: &[u8]) -> Result<HuffmanDecoder> {
+        let mut count = [0u16; MAX_BITS + 1];
+        for &l in lens {
+            if l as usize > MAX_BITS {
+                return Err(corrupt("huffman: code length > 15"));
+            }
+            count[l as usize] += 1;
+        }
+        count[0] = 0;
+        let total: u32 = lens.iter().filter(|&&l| l > 0).count() as u32;
+        if total == 0 {
+            return Err(corrupt("huffman: empty code"));
+        }
+        // Kraft check (over-subscription only).
+        let mut left = 1i64;
+        for bits in 1..=MAX_BITS {
+            left <<= 1;
+            left -= count[bits] as i64;
+            if left < 0 {
+                return Err(corrupt("huffman: over-subscribed lengths"));
+            }
+        }
+        // Canonical ordering.
+        let mut first_code = [0u32; MAX_BITS + 1];
+        let mut first_sym = [0u32; MAX_BITS + 1];
+        let mut code = 0u32;
+        let mut sym_base = 0u32;
+        let mut max_len = 0u32;
+        for bits in 1..=MAX_BITS {
+            code = (code + count[bits - 1] as u32) << 1;
+            first_code[bits] = code;
+            first_sym[bits] = sym_base;
+            sym_base += count[bits] as u32;
+            if count[bits] > 0 {
+                max_len = bits as u32;
+            }
+        }
+        let mut offs = [0u32; MAX_BITS + 1];
+        for bits in 1..=MAX_BITS {
+            offs[bits] = first_sym[bits];
+        }
+        let mut symbols = vec![0u16; total as usize];
+        for (sym, &l) in lens.iter().enumerate() {
+            if l > 0 {
+                symbols[offs[l as usize] as usize] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        // Fast table.
+        let mut fast = vec![u16::MAX; 1 << FAST_BITS];
+        {
+            let codes = CanonicalCodes::from_lengths(lens)?;
+            for (sym, (&rc, &l)) in codes.codes.iter().zip(codes.lens.iter()).enumerate() {
+                let l = l as u32;
+                if l == 0 || l > FAST_BITS {
+                    continue;
+                }
+                // Fill every table slot whose low `l` bits equal the code.
+                let step = 1u32 << l;
+                let mut idx = rc as u32;
+                while idx < (1 << FAST_BITS) {
+                    fast[idx as usize] = ((sym as u16) << 4) | l as u16;
+                    idx += step;
+                }
+            }
+        }
+        Ok(HuffmanDecoder { fast, count, symbols, first_code, first_sym, max_len })
+    }
+
+    /// Decode one symbol from `r`.
+    #[inline]
+    pub fn decode(&self, r: &mut LsbBitReader<'_>) -> Result<u16> {
+        let peek = r.peek_bits(FAST_BITS) as usize;
+        let e = self.fast[peek];
+        if e != u16::MAX {
+            let len = (e & 0xF) as u32;
+            r.skip_bits(len)?;
+            return Ok(e >> 4);
+        }
+        // Slow path: walk lengths FAST_BITS+1..=max_len using the
+        // canonical count/offset structure (code built MSB-first).
+        let mut code: u32 = 0;
+        // Reconstruct the first FAST_BITS bits MSB-first.
+        let prefix = r.peek_bits(FAST_BITS) as u32;
+        for i in 0..FAST_BITS {
+            code = (code << 1) | ((prefix >> i) & 1);
+        }
+        r.skip_bits(FAST_BITS)?;
+        let mut len = FAST_BITS;
+        loop {
+            // Codes of length `len`: range [first_code, first_code+count).
+            let fc = self.first_code[len as usize];
+            let cnt = self.count[len as usize] as u32;
+            if code >= fc && code < fc + cnt {
+                let idx = self.first_sym[len as usize] + (code - fc);
+                return Ok(self.symbols[idx as usize]);
+            }
+            if len >= self.max_len {
+                return Err(corrupt("huffman: invalid code"));
+            }
+            code = (code << 1) | r.fetch_bits(1)? as u32;
+            len += 1;
+        }
+    }
+}
+
+/// Build length-limited Huffman code lengths from symbol frequencies.
+///
+/// Standard Huffman construction, then an exact Kraft repair: lengths are
+/// clamped to `max_bits` and the Kraft sum (tracked in units of
+/// `2^-max_bits`) is restored to exactly `2^max_bits` — a *complete*
+/// prefix code, which [`HuffmanDecoder`] requires. Returns per-symbol
+/// lengths (0 = unused symbol).
+pub fn build_lengths(freqs: &[u32], max_bits: usize) -> Vec<u8> {
+    let n = freqs.len();
+    let used: Vec<usize> = (0..n).filter(|&i| freqs[i] > 0).collect();
+    let mut lens = vec![0u8; n];
+    match used.len() {
+        0 => return lens,
+        1 => {
+            lens[used[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    // Heap-free O(n log n) Huffman via two sorted queues.
+    #[derive(Clone, Copy)]
+    struct Node {
+        freq: u64,
+        /// Child arena indices; leaves have sym >= 0.
+        left: i32,
+        right: i32,
+        sym: i32,
+    }
+    let mut arena: Vec<Node> = used
+        .iter()
+        .map(|&i| Node { freq: freqs[i] as u64, left: -1, right: -1, sym: i as i32 })
+        .collect();
+    arena.sort_by_key(|nd| nd.freq);
+    let mut leaves: std::collections::VecDeque<usize> = (0..arena.len()).collect();
+    let mut internals: std::collections::VecDeque<usize> = std::collections::VecDeque::new();
+    fn take_min(
+        arena: &[Node],
+        leaves: &mut std::collections::VecDeque<usize>,
+        internals: &mut std::collections::VecDeque<usize>,
+    ) -> usize {
+        match (leaves.front(), internals.front()) {
+            (Some(&l), Some(&i)) => {
+                if arena[l].freq <= arena[i].freq {
+                    leaves.pop_front().unwrap()
+                } else {
+                    internals.pop_front().unwrap()
+                }
+            }
+            (Some(_), None) => leaves.pop_front().unwrap(),
+            (None, Some(_)) => internals.pop_front().unwrap(),
+            (None, None) => unreachable!(),
+        }
+    }
+    let mut root = 0usize;
+    while leaves.len() + internals.len() > 1 {
+        let a = take_min(&arena, &mut leaves, &mut internals);
+        let b = take_min(&arena, &mut leaves, &mut internals);
+        arena.push(Node {
+            freq: arena[a].freq + arena[b].freq,
+            left: a as i32,
+            right: b as i32,
+            sym: -1,
+        });
+        root = arena.len() - 1;
+        internals.push_back(root);
+    }
+    // Depth-assign, clamping to max_bits.
+    let mut stack = vec![(root, 0u32)];
+    while let Some((idx, depth)) = stack.pop() {
+        let nd = arena[idx];
+        if nd.sym >= 0 {
+            lens[nd.sym as usize] = depth.clamp(1, max_bits as u32) as u8;
+        } else {
+            stack.push((nd.left as usize, depth + 1));
+            stack.push((nd.right as usize, depth + 1));
+        }
+    }
+    // Exact Kraft repair in units of 2^-max_bits. Target K == 2^max_bits.
+    let unit = |l: u8| 1u64 << (max_bits - l as usize);
+    let target = 1u64 << max_bits;
+    let mut k: u64 = used.iter().map(|&i| unit(lens[i])).sum();
+    // Overshoot: demote (lengthen) the least-frequent symbol that is the
+    // deepest below max_bits. Each demotion halves its contribution.
+    while k > target {
+        let &sym = used
+            .iter()
+            .filter(|&&i| (lens[i] as usize) < max_bits)
+            .min_by_key(|&&i| (std::cmp::Reverse(lens[i]), freqs[i]))
+            .expect("kraft overshoot implies a demotable symbol");
+        k -= unit(lens[sym]) / 2;
+        lens[sym] += 1;
+    }
+    // Undershoot: promote (shorten) the deepest symbol whose doubled
+    // contribution still fits; prefer frequent symbols at equal depth.
+    while k < target {
+        let gap = target - k;
+        let &sym = used
+            .iter()
+            .filter(|&&i| lens[i] > 1 && unit(lens[i]) <= gap)
+            .max_by_key(|&&i| (lens[i], freqs[i]))
+            .expect("dyadic gap always admits a promotion");
+        k += unit(lens[sym]);
+        lens[sym] -= 1;
+    }
+    lens
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::bitio::LsbBitWriter;
+
+    fn encode_decode(lens: &[u8], seq: &[u16]) {
+        let codes = CanonicalCodes::from_lengths(lens).unwrap();
+        let mut w = LsbBitWriter::new();
+        for &s in seq {
+            w.put_bits(codes.codes[s as usize] as u64, codes.lens[s as usize] as u32);
+        }
+        let bytes = w.finish();
+        let dec = HuffmanDecoder::from_lengths(lens).unwrap();
+        let mut r = LsbBitReader::new(&bytes);
+        for &s in seq {
+            assert_eq!(dec.decode(&mut r).unwrap(), s);
+        }
+    }
+
+    #[test]
+    fn fixed_literal_table_roundtrip() {
+        // The DEFLATE fixed literal/length code.
+        let mut lens = vec![8u8; 144];
+        lens.extend(vec![9u8; 112]);
+        lens.extend(vec![7u8; 24]);
+        lens.extend(vec![8u8; 8]);
+        let seq: Vec<u16> = (0..288).step_by(7).collect();
+        encode_decode(&lens, &seq);
+    }
+
+    #[test]
+    fn long_codes_use_slow_path() {
+        // A skewed tree with codes longer than FAST_BITS.
+        let freqs: Vec<u32> = (0..24).map(|i| 1u32 << i.min(20)).collect();
+        let lens = build_lengths(&freqs, MAX_BITS);
+        assert!(lens.iter().any(|&l| l as u32 > FAST_BITS));
+        let seq: Vec<u16> = (0..24).collect();
+        encode_decode(&lens, &seq);
+    }
+
+    #[test]
+    fn build_lengths_kraft_valid() {
+        for trial in 0..50u64 {
+            let mut x = trial * 2654435761 + 1;
+            let n = 10 + (trial as usize % 276);
+            let freqs: Vec<u32> = (0..n)
+                .map(|_| {
+                    x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    ((x >> 33) % 10000) as u32
+                })
+                .collect();
+            let lens = build_lengths(&freqs, MAX_BITS);
+            let mut kraft = 0f64;
+            for (i, &l) in lens.iter().enumerate() {
+                assert_eq!(l == 0, freqs[i] == 0, "sym {i}");
+                assert!(l as usize <= MAX_BITS);
+                if l > 0 {
+                    kraft += (2f64).powi(-(l as i32));
+                }
+            }
+            if freqs.iter().filter(|&&f| f > 0).count() > 1 {
+                assert!(kraft <= 1.0 + 1e-9, "kraft {kraft}");
+                // Decoder must accept them.
+                HuffmanDecoder::from_lengths(&lens).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn more_frequent_symbols_get_shorter_codes() {
+        let freqs = [1000u32, 1, 500, 1, 250];
+        let lens = build_lengths(&freqs, MAX_BITS);
+        assert!(lens[0] <= lens[2]);
+        assert!(lens[2] <= lens[4]);
+        assert!(lens[4] <= lens[1]);
+    }
+
+    #[test]
+    fn oversubscribed_rejected() {
+        let lens = [1u8, 1, 1];
+        assert!(HuffmanDecoder::from_lengths(&lens).is_err());
+        assert!(CanonicalCodes::from_lengths(&lens).is_err());
+    }
+
+    #[test]
+    fn incomplete_code_accepted_but_gap_errors_at_decode() {
+        // Three 2-bit codes (00,01,10) leave the pattern 11 unassigned —
+        // the shape of DEFLATE's fixed distance table.
+        let lens = [2u8, 2, 2];
+        let dec = HuffmanDecoder::from_lengths(&lens).unwrap();
+        // Pattern 11 (LSB-first: 0b11) must be rejected.
+        let bytes = [0xFFu8, 0xFF];
+        let mut r = LsbBitReader::new(&bytes);
+        assert!(dec.decode(&mut r).is_err());
+        // Valid pattern 00 decodes to symbol 0.
+        let bytes = [0x00u8];
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(dec.decode(&mut r).unwrap(), 0);
+    }
+
+    #[test]
+    fn single_symbol_code_accepted() {
+        // DEFLATE distance trees may have a single 1-bit code.
+        let lens = [1u8];
+        let dec = HuffmanDecoder::from_lengths(&lens).unwrap();
+        let mut w = LsbBitWriter::new();
+        w.put_bits(0, 1);
+        let bytes = w.finish();
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(dec.decode(&mut r).unwrap(), 0);
+    }
+
+    #[test]
+    fn deep_gap_detected() {
+        // 1/2 + 1/4 + 1/8 = 7/8: the all-ones 3-bit pattern is a gap.
+        let lens = [1u8, 2, 3, 0];
+        let dec = HuffmanDecoder::from_lengths(&lens).unwrap();
+        let bytes = [0xFFu8, 0xFF];
+        let mut r = LsbBitReader::new(&bytes);
+        assert!(dec.decode(&mut r).is_err());
+    }
+
+    #[test]
+    fn reverse_bits_works() {
+        assert_eq!(reverse_bits(0b1, 1), 0b1);
+        assert_eq!(reverse_bits(0b110, 3), 0b011);
+        assert_eq!(reverse_bits(0b10000000, 8), 0b00000001);
+    }
+}

@@ -1,0 +1,274 @@
+//! LZ77 match finding for the DEFLATE encoder.
+//!
+//! Hash-chain matcher in the zlib style: 3-byte hashes index a head
+//! table, collisions chain through `prev`, and a lazy one-step evaluation
+//! defers emitting a match when the next position matches longer. Window
+//! 32 KiB, match lengths 3–258 — the RFC 1951 limits.
+
+/// Minimum DEFLATE match length.
+pub const MIN_MATCH: usize = 3;
+/// Maximum DEFLATE match length.
+pub const MAX_MATCH: usize = 258;
+/// Maximum backward distance.
+pub const MAX_DIST: usize = 32 * 1024;
+
+const HASH_BITS: u32 = 15;
+const HASH_SIZE: usize = 1 << HASH_BITS;
+/// Cap on chain walks per position (zlib level-9 uses 4096 but pairs it
+/// with good/nice cutoffs; 256 with the cutoffs below gives level-9-ish
+/// ratios at a fraction of the worst-case cost on tiny alphabets).
+const MAX_CHAIN: usize = 256;
+/// Stop searching when a match at least this long is found.
+const NICE_LENGTH: usize = 192;
+/// Once a match of at least this length is in hand, quarter the
+/// remaining chain budget (zlib's `good_match` heuristic).
+const GOOD_LENGTH: usize = 32;
+
+/// One LZ77 token.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Token {
+    /// A literal byte.
+    Literal(u8),
+    /// A back-reference: copy `len` bytes from `dist` bytes back.
+    Match { len: u16, dist: u16 },
+}
+
+#[inline]
+fn hash3(data: &[u8], i: usize) -> usize {
+    let v = (data[i] as u32) | ((data[i + 1] as u32) << 8) | ((data[i + 2] as u32) << 16);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+/// Length of the common prefix of `data[a..]` and `data[b..]`, capped.
+#[inline]
+fn match_len(data: &[u8], a: usize, b: usize, cap: usize) -> usize {
+    let max = cap.min(data.len() - b);
+    let mut n = 0;
+    // 8-byte strides on the hot path.
+    while n + 8 <= max {
+        let x = u64::from_le_bytes(data[a + n..a + n + 8].try_into().unwrap());
+        let y = u64::from_le_bytes(data[b + n..b + n + 8].try_into().unwrap());
+        let diff = x ^ y;
+        if diff != 0 {
+            return n + (diff.trailing_zeros() / 8) as usize;
+        }
+        n += 8;
+    }
+    while n < max && data[a + n] == data[b + n] {
+        n += 1;
+    }
+    n
+}
+
+/// Hash-chain match finder over one input buffer.
+pub struct Matcher {
+    head: Vec<i32>,
+    prev: Vec<i32>,
+}
+
+impl Matcher {
+    /// New matcher sized for `input_len` bytes.
+    pub fn new(input_len: usize) -> Self {
+        Matcher { head: vec![-1; HASH_SIZE], prev: vec![-1; input_len] }
+    }
+
+    #[inline]
+    fn insert(&mut self, data: &[u8], i: usize) {
+        if i + MIN_MATCH <= data.len() {
+            let h = hash3(data, i);
+            self.prev[i] = self.head[h];
+            self.head[h] = i as i32;
+        }
+    }
+
+    /// Best match at position `i`, if any.
+    #[inline]
+    fn best_match(&self, data: &[u8], i: usize) -> Option<(usize, usize)> {
+        if i + MIN_MATCH > data.len() {
+            return None;
+        }
+        let h = hash3(data, i);
+        let mut cand = self.head[h];
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let mut chain = MAX_CHAIN;
+        let limit = i.saturating_sub(MAX_DIST);
+        while cand >= 0 && chain > 0 {
+            let c = cand as usize;
+            if c < limit {
+                break;
+            }
+            let l = match_len(data, c, i, MAX_MATCH);
+            if l > best_len {
+                best_len = l;
+                best_dist = i - c;
+                if l >= NICE_LENGTH {
+                    break;
+                }
+                if l >= GOOD_LENGTH {
+                    chain = chain.min(MAX_CHAIN / 4);
+                }
+            }
+            cand = self.prev[c];
+            chain -= 1;
+        }
+        if best_len >= MIN_MATCH {
+            Some((best_len, best_dist))
+        } else {
+            None
+        }
+    }
+}
+
+/// Tokenize `data` with greedy + one-step-lazy matching.
+pub fn tokenize(data: &[u8]) -> Vec<Token> {
+    let mut tokens = Vec::with_capacity(data.len() / 3 + 8);
+    if data.is_empty() {
+        return tokens;
+    }
+    let mut m = Matcher::new(data.len());
+    let mut i = 0usize;
+    while i < data.len() {
+        let cur = m.best_match(data, i);
+        match cur {
+            None => {
+                tokens.push(Token::Literal(data[i]));
+                m.insert(data, i);
+                i += 1;
+            }
+            Some((len, dist)) => {
+                // Lazy evaluation: if i+1 has a strictly longer match,
+                // emit data[i] as a literal instead.
+                m.insert(data, i);
+                let next = if len < NICE_LENGTH && i + 1 < data.len() {
+                    m.best_match(data, i + 1)
+                } else {
+                    None
+                };
+                if let Some((nlen, _)) = next {
+                    if nlen > len {
+                        tokens.push(Token::Literal(data[i]));
+                        i += 1;
+                        continue;
+                    }
+                }
+                tokens.push(Token::Match { len: len as u16, dist: dist as u16 });
+                // Insert the covered positions into the hash chains.
+                for k in i + 1..(i + len).min(data.len()) {
+                    m.insert(data, k);
+                }
+                i += len;
+            }
+        }
+    }
+    tokens
+}
+
+/// Reconstruct bytes from tokens (testing aid / oracle).
+pub fn detokenize(tokens: &[Token]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tokens {
+        match *t {
+            Token::Literal(b) => out.push(b),
+            Token::Match { len, dist } => {
+                let start = out.len() - dist as usize;
+                for k in 0..len as usize {
+                    let b = out[start + k];
+                    out.push(b);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) -> Vec<Token> {
+        let toks = tokenize(data);
+        assert_eq!(detokenize(&toks), data);
+        toks
+    }
+
+    #[test]
+    fn empty_and_tiny() {
+        assert!(tokenize(&[]).is_empty());
+        roundtrip(b"a");
+        roundtrip(b"ab");
+        roundtrip(b"abc");
+    }
+
+    #[test]
+    fn repeated_text_finds_matches() {
+        let data = b"the quick brown fox. the quick brown fox! the quick brown fox?";
+        let toks = roundtrip(data);
+        assert!(toks.iter().any(|t| matches!(t, Token::Match { len, .. } if *len >= 18)));
+    }
+
+    #[test]
+    fn rle_style_overlap_match() {
+        // "aaaa..." should produce a dist-1 overlapping match.
+        let data = vec![b'a'; 300];
+        let toks = roundtrip(&data);
+        assert!(toks.len() <= 4, "run should compress to literal+match(es): {}", toks.len());
+        assert!(toks.iter().any(|t| matches!(t, Token::Match { dist: 1, .. })));
+    }
+
+    #[test]
+    fn max_match_length_respected() {
+        let data = vec![7u8; 10_000];
+        for t in roundtrip(&data) {
+            if let Token::Match { len, .. } = t {
+                assert!(len as usize <= MAX_MATCH);
+            }
+        }
+    }
+
+    #[test]
+    fn distance_never_exceeds_window() {
+        // Two identical blocks separated by > 32 KiB of noise.
+        let mut data = b"unique-prefix-0123456789".to_vec();
+        let mut x = 1u64;
+        for _ in 0..MAX_DIST + 100 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            data.push((x >> 56) as u8);
+        }
+        data.extend_from_slice(b"unique-prefix-0123456789");
+        for t in roundtrip(&data) {
+            if let Token::Match { dist, .. } = t {
+                assert!(dist as usize <= MAX_DIST);
+            }
+        }
+    }
+
+    #[test]
+    fn random_data_mostly_literals() {
+        let mut x = 9u64;
+        let data: Vec<u8> = (0..4096)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 56) as u8
+            })
+            .collect();
+        let toks = roundtrip(&data);
+        let lits = toks.iter().filter(|t| matches!(t, Token::Literal(_))).count();
+        assert!(lits * 10 >= toks.len() * 8, "random data should be literal-heavy");
+    }
+
+    #[test]
+    fn genome_like_text() {
+        let mut x = 5u64;
+        let alphabet = b"ACGT";
+        let data: Vec<u8> = (0..8192)
+            .map(|_| {
+                x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+                alphabet[(x >> 62) as usize]
+            })
+            .collect();
+        let toks = roundtrip(&data);
+        // 2-bit alphabet: matches abound even in random sequence.
+        assert!(toks.len() < data.len());
+    }
+}

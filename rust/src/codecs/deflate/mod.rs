@@ -1,0 +1,157 @@
+//! DEFLATE (RFC 1951) from scratch: LZ77 + Huffman (§II-A).
+//!
+//! The paper compresses with `zlib -9` and decompresses with the RAPIDS
+//! `gpuinflate` kernel; here both sides are ours. The decoder is written
+//! against the CODAG Table I/II stream abstractions so it runs unchanged
+//! under the CPU path, the tracing engines, and (its write phase) maps
+//! onto the `memcpy` writing primitive of Algorithm 2.
+
+pub mod encoder;
+pub mod huffman;
+pub mod inflate;
+pub mod lz77;
+pub mod zlib;
+
+use crate::decomp::{InputStream, OutputStream};
+use crate::Result;
+
+/// Compress a chunk into a raw DEFLATE stream.
+pub fn compress(chunk: &[u8]) -> Result<Vec<u8>> {
+    encoder::deflate(chunk)
+}
+
+/// Decode a DEFLATE chunk into `out`.
+pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+    // The bit reader borrows from the input's current position; DEFLATE
+    // consumes the whole chunk.
+    let data = input.fetch_bytes(input.remaining())?;
+    inflate::inflate(data, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::{decompress_chunk, CodecKind};
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let comp = compress(data).unwrap();
+        let out = decompress_chunk(CodecKind::Deflate, &comp, data.len()).unwrap();
+        assert_eq!(out, data);
+        comp.len()
+    }
+
+    #[test]
+    fn empty_input() {
+        roundtrip(&[]);
+    }
+
+    #[test]
+    fn short_strings() {
+        for s in ["a", "ab", "abc", "hello world", "aaaaaaa"] {
+            roundtrip(s.as_bytes());
+        }
+    }
+
+    #[test]
+    fn repeated_text_compresses() {
+        let data = "the quick brown fox jumps over the lazy dog. ".repeat(200);
+        let clen = roundtrip(data.as_bytes());
+        assert!(clen < data.len() / 10, "clen={clen} of {}", data.len());
+    }
+
+    #[test]
+    fn constant_run_compresses_extremely() {
+        let data = vec![0u8; 100_000];
+        let clen = roundtrip(&data);
+        assert!(clen < 200, "clen={clen}");
+    }
+
+    #[test]
+    fn random_bytes_stored_or_near_raw() {
+        let mut x = 77u64;
+        let data: Vec<u8> = (0..10_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 56) as u8
+            })
+            .collect();
+        let clen = roundtrip(&data);
+        // Incompressible: must not expand much (stored fallback).
+        assert!(clen <= data.len() + 64, "clen={clen}");
+    }
+
+    #[test]
+    fn genome_like_data() {
+        let mut x = 5u64;
+        let alphabet = b"ACGTN";
+        let data: Vec<u8> = (0..50_000)
+            .map(|i| {
+                x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+                if i % 1000 < 30 {
+                    b'N'
+                } else {
+                    alphabet[((x >> 33) % 4) as usize]
+                }
+            })
+            .collect();
+        let clen = roundtrip(&data);
+        // ~2 bits/base plus structure: at least 2.5x compression.
+        assert!(clen < data.len() * 2 / 5, "clen={clen}");
+    }
+
+    #[test]
+    fn structured_binary_data() {
+        let mut data = Vec::new();
+        for i in 0..20_000u32 {
+            data.extend_from_slice(&(i % 100).to_le_bytes());
+        }
+        let clen = roundtrip(&data);
+        assert!(clen < data.len() / 8);
+    }
+
+    #[test]
+    fn all_byte_values() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn long_distance_matches() {
+        // Identical 1 KiB blocks 30 KiB apart (within window).
+        let mut x = 1u64;
+        let block: Vec<u8> = (0..1024)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (x >> 56) as u8
+            })
+            .collect();
+        let mut mid: Vec<u8> = (0..30_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (x >> 56) as u8
+            })
+            .collect();
+        let mut data = block.clone();
+        data.append(&mut mid);
+        data.extend_from_slice(&block);
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_streams_rejected_not_panicking() {
+        let data = "compressible compressible compressible".repeat(50);
+        let comp = compress(data.as_bytes()).unwrap();
+        // Flip every byte one at a time; must never panic, and either
+        // error out or produce output (checksum-free format can't always
+        // detect corruption, but it must stay memory-safe).
+        for i in 0..comp.len().min(64) {
+            let mut bad = comp.clone();
+            bad[i] ^= 0xFF;
+            let _ = decompress_chunk(CodecKind::Deflate, &bad, data.len());
+        }
+        // Truncations must error.
+        for cut in [1usize, comp.len() / 2, comp.len() - 1] {
+            assert!(decompress_chunk(CodecKind::Deflate, &comp[..cut], data.len()).is_err());
+        }
+    }
+}

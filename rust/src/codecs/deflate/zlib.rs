@@ -1,0 +1,139 @@
+//! zlib framing (RFC 1950) around the DEFLATE stream.
+//!
+//! The paper compresses its Deflate corpus "with the zlib library at
+//! compression level 9" (§V-B); this module provides the same on-wire
+//! format: a 2-byte header (CMF/FLG), the raw DEFLATE stream, and the
+//! Adler-32 checksum of the uncompressed data — implemented from
+//! scratch like everything else.
+
+use crate::codecs::deflate;
+use crate::decomp::ByteSink;
+use crate::{corrupt, Result};
+
+/// Adler-32 modulus.
+const MOD_ADLER: u32 = 65_521;
+
+/// Compute the Adler-32 checksum of `data` (RFC 1950 §8).
+pub fn adler32(data: &[u8]) -> u32 {
+    let mut a: u32 = 1;
+    let mut b: u32 = 0;
+    // Process in blocks small enough that u32 sums cannot overflow
+    // (NMAX = 5552 from the reference implementation).
+    for block in data.chunks(5552) {
+        for &byte in block {
+            a += byte as u32;
+            b += a;
+        }
+        a %= MOD_ADLER;
+        b %= MOD_ADLER;
+    }
+    (b << 16) | a
+}
+
+/// Compress `data` into a zlib stream (CMF/FLG + DEFLATE + Adler-32).
+pub fn compress(data: &[u8]) -> Result<Vec<u8>> {
+    let body = deflate::compress(data)?;
+    let mut out = Vec::with_capacity(body.len() + 6);
+    // CMF: CM=8 (deflate), CINFO=7 (32K window). FLG: check bits so that
+    // (CMF*256 + FLG) % 31 == 0, FLEVEL=3 (maximum, we run level-9-ish
+    // effort), FDICT=0.
+    let cmf: u8 = 0x78;
+    let mut flg: u8 = 3 << 6;
+    let rem = ((cmf as u16) << 8 | flg as u16) % 31;
+    if rem != 0 {
+        flg += (31 - rem) as u8;
+    }
+    out.push(cmf);
+    out.push(flg);
+    out.extend_from_slice(&body);
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    Ok(out)
+}
+
+/// Decompress a zlib stream, verifying the Adler-32 checksum.
+pub fn decompress(stream: &[u8]) -> Result<Vec<u8>> {
+    if stream.len() < 6 {
+        return Err(corrupt("zlib: stream shorter than header + checksum"));
+    }
+    let cmf = stream[0];
+    let flg = stream[1];
+    if cmf & 0x0F != 8 {
+        return Err(corrupt(format!("zlib: unsupported method {}", cmf & 0x0F)));
+    }
+    if ((cmf as u16) << 8 | flg as u16) % 31 != 0 {
+        return Err(corrupt("zlib: header check bits invalid"));
+    }
+    if flg & 0x20 != 0 {
+        return Err(corrupt("zlib: preset dictionaries not supported"));
+    }
+    let body = &stream[2..stream.len() - 4];
+    let mut sink = ByteSink::new();
+    deflate::inflate::inflate(body, &mut sink)?;
+    let out = sink.into_bytes();
+    let want = u32::from_be_bytes(stream[stream.len() - 4..].try_into().unwrap());
+    let got = adler32(&out);
+    if want != got {
+        return Err(corrupt(format!(
+            "zlib: adler32 mismatch (stored {want:08x}, computed {got:08x})"
+        )));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adler32_known_vectors() {
+        // RFC 1950 examples / zlib test values.
+        assert_eq!(adler32(b""), 1);
+        assert_eq!(adler32(b"a"), 0x0062_0062);
+        assert_eq!(adler32(b"abc"), 0x024d_0127);
+        assert_eq!(adler32(b"Wikipedia"), 0x11E6_0398);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let data = b"zlib framing around our own deflate ".repeat(100);
+        let z = compress(&data).unwrap();
+        assert_eq!(z[0] & 0x0F, 8);
+        assert_eq!(decompress(&z).unwrap(), data);
+    }
+
+    #[test]
+    fn empty_roundtrip() {
+        let z = compress(&[]).unwrap();
+        assert_eq!(decompress(&z).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn checksum_detects_payload_corruption() {
+        let data = vec![7u8; 10_000];
+        let mut z = compress(&data).unwrap();
+        // Flip a literal deep in the stream: inflate may succeed but the
+        // checksum must catch it.
+        let mid = z.len() / 2;
+        z[mid] ^= 0x10;
+        assert!(decompress(&z).is_err());
+    }
+
+    #[test]
+    fn bad_header_rejected() {
+        let data = b"x".repeat(64);
+        let mut z = compress(&data).unwrap();
+        z[0] = 0x79; // wrong CINFO/check
+        assert!(decompress(&z).is_err());
+        let mut z2 = compress(&data).unwrap();
+        z2[1] |= 0x20; // FDICT set
+        assert!(decompress(&z2).is_err());
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let z = compress(b"hello hello hello").unwrap();
+        for cut in [0, 1, 5, z.len() - 1] {
+            assert!(decompress(&z[..cut]).is_err());
+        }
+    }
+}

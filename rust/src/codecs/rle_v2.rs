@@ -1,0 +1,727 @@
+//! ORC Run-Length Encoding version 2 (§II-A).
+//!
+//! RLE v2 augments RLE with delta encoding and bit-packing to capture
+//! more patterns. A chunk is a sequence of *groups*, each starting with
+//! a header whose top two bits select the sub-encoding:
+//!
+//! * `00` **SHORT_REPEAT** — 3–10 repeats of one value stored in 1–8
+//!   big-endian bytes.
+//! * `01` **DIRECT** — 1–512 values bit-packed MSB-first at a fixed
+//!   width from the closest-fixed-bits table.
+//! * `10` **PATCHED_BASE** — like DIRECT but values are offsets from a
+//!   base (the group minimum) packed at the 90th-percentile width, with
+//!   a patch list restoring the high bits of the few outliers.
+//! * `11` **DELTA** — a base value, a first delta, and (unless the run
+//!   has a fixed delta) the remaining deltas bit-packed; encodes
+//!   monotonic sequences.
+//!
+//! Values are zigzag-mapped i64s, matching ORC's signed-integer RLE v2.
+//! One documented deviation from the on-disk ORC format: PATCHED_BASE
+//! stores its base as a zigzag big-endian integer rather than ORC's
+//! sign-magnitude (round-trips identically; simplifies the bit path).
+
+use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header};
+use crate::decomp::{InputStream, OutputStream, SymbolKind};
+use crate::format::bitio::{MsbBitReader, MsbBitWriter};
+use crate::format::varint::{unzigzag, zigzag};
+use crate::{corrupt, Result};
+
+/// Maximum values per DIRECT/PATCHED/DELTA group.
+pub const MAX_GROUP: usize = 512;
+/// SHORT_REPEAT length bounds.
+pub const SR_MIN: usize = 3;
+/// SHORT_REPEAT maximum repeat count.
+pub const SR_MAX: usize = 10;
+
+/// Sub-encoding discriminants (header bits 7–6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubEncoding {
+    /// 3–10 repeats of a single value.
+    ShortRepeat = 0,
+    /// Fixed-width bit-packed values.
+    Direct = 1,
+    /// Base + reduced values + patch list.
+    PatchedBase = 2,
+    /// Base + deltas.
+    Delta = 3,
+}
+
+/// Decode the 5-bit closest-fixed-bits width code (DIRECT/PATCHED).
+#[inline]
+pub fn decode_width(code: u8) -> u32 {
+    match code {
+        0..=23 => code as u32 + 1,
+        24 => 26,
+        25 => 28,
+        26 => 30,
+        27 => 32,
+        28 => 40,
+        29 => 48,
+        30 => 56,
+        _ => 64,
+    }
+}
+
+/// Encode a bit width to the smallest 5-bit code covering it.
+#[inline]
+pub fn encode_width(bits: u32) -> u8 {
+    match bits {
+        0..=24 => bits.max(1) as u8 - 1,
+        25..=26 => 24,
+        27..=28 => 25,
+        29..=30 => 26,
+        31..=32 => 27,
+        33..=40 => 28,
+        41..=48 => 29,
+        49..=56 => 30,
+        _ => 31,
+    }
+}
+
+/// Delta-group width code: 0 means "fixed delta, no packed deltas".
+#[inline]
+fn decode_delta_width(code: u8) -> u32 {
+    if code == 0 {
+        0
+    } else {
+        decode_width(code)
+    }
+}
+
+/// Bits needed to represent `v`.
+#[inline]
+fn bits_for(v: u64) -> u32 {
+    (64 - v.leading_zeros()).max(1)
+}
+
+// ---------------------------------------------------------------------
+// Encoder
+// ---------------------------------------------------------------------
+
+/// Compress `chunk` (little-endian bytes) as `width`-byte elements.
+pub fn compress(chunk: &[u8], width: u8) -> Result<Vec<u8>> {
+    let elems = bytes_to_elems(chunk, width)?;
+    // Work on sign-extended i64 views for widths < 8 so negative i8/i32
+    // columns zigzag compactly; the bit pattern is restored on decode by
+    // masking to the element width.
+    let vals: Vec<i64> = elems
+        .iter()
+        .map(|&e| sign_extend(e, width))
+        .collect();
+    let mut out = Vec::with_capacity(chunk.len() / 2 + 16);
+    write_rle_header(&mut out, width, vals.len() as u64);
+    let mut i = 0usize;
+    while i < vals.len() {
+        i += emit_group(&vals[i..], &mut out);
+    }
+    Ok(out)
+}
+
+/// Sign-extend the low `width` bytes of `e`.
+#[inline]
+fn sign_extend(e: u64, width: u8) -> i64 {
+    match width {
+        1 => e as u8 as i8 as i64,
+        2 => e as u16 as i16 as i64,
+        4 => e as u32 as i32 as i64,
+        _ => e as i64,
+    }
+}
+
+/// Emit one group for the prefix of `vals`; returns values consumed.
+fn emit_group(vals: &[i64], out: &mut Vec<u8>) -> usize {
+    debug_assert!(!vals.is_empty());
+    // 1. Equal run?
+    let eq = run_len_equal(vals).min(MAX_GROUP);
+    if (SR_MIN..=SR_MAX).contains(&eq) {
+        emit_short_repeat(vals[0], eq, out);
+        return eq;
+    }
+    if eq > SR_MAX {
+        emit_delta_fixed(vals[0], 0, eq, out);
+        return eq;
+    }
+    // 2. Constant-delta run?
+    let cd = run_len_const_delta(vals).min(MAX_GROUP);
+    if cd >= 4 {
+        let delta = vals[1].wrapping_sub(vals[0]);
+        emit_delta_fixed(vals[0], delta, cd, out);
+        return cd;
+    }
+    // 3. Monotonic prefix worth a packed DELTA group?
+    let mono = monotonic_len(vals).min(MAX_GROUP);
+    if mono >= 8 {
+        let take = mono;
+        if delta_packed_bits(&vals[..take]) * 2 < direct_bits(&vals[..take]) {
+            emit_delta_packed(&vals[..take], out);
+            return take;
+        }
+    }
+    // 4. Literal segment: up to the next run start (or MAX_GROUP), then
+    //    DIRECT or PATCHED_BASE.
+    let mut end = 1usize;
+    while end < vals.len() && end < MAX_GROUP {
+        // Stop the literal segment when a profitable run begins.
+        if run_len_equal(&vals[end..]) >= SR_MIN || run_len_const_delta(&vals[end..]) >= 4 {
+            break;
+        }
+        end += 1;
+    }
+    let seg = &vals[..end];
+    if let Some(plan) = plan_patched(seg) {
+        emit_patched(seg, &plan, out);
+    } else {
+        emit_direct(seg, out);
+    }
+    end
+}
+
+fn run_len_equal(vals: &[i64]) -> usize {
+    let mut n = 1;
+    while n < vals.len() && vals[n] == vals[0] {
+        n += 1;
+    }
+    n
+}
+
+fn run_len_const_delta(vals: &[i64]) -> usize {
+    if vals.len() < 2 {
+        return vals.len();
+    }
+    let d = vals[1].wrapping_sub(vals[0]);
+    let mut n = 2;
+    while n < vals.len() && vals[n].wrapping_sub(vals[n - 1]) == d {
+        n += 1;
+    }
+    n
+}
+
+fn monotonic_len(vals: &[i64]) -> usize {
+    if vals.len() < 2 {
+        return vals.len();
+    }
+    let up = vals[1] >= vals[0];
+    let mut n = 2;
+    while n < vals.len() && ((vals[n] >= vals[n - 1]) == up) {
+        n += 1;
+    }
+    n
+}
+
+fn direct_bits(vals: &[i64]) -> u64 {
+    let w = vals.iter().map(|&v| bits_for(zigzag(v))).max().unwrap_or(1);
+    decode_width(encode_width(w)) as u64 * vals.len() as u64
+}
+
+fn delta_packed_bits(vals: &[i64]) -> u64 {
+    let w = vals
+        .windows(2)
+        .map(|p| bits_for(p[1].wrapping_sub(p[0]).unsigned_abs()))
+        .max()
+        .unwrap_or(1);
+    decode_width(encode_width(w)) as u64 * (vals.len() as u64 - 1)
+}
+
+fn emit_short_repeat(v: i64, count: usize, out: &mut Vec<u8>) {
+    let zz = zigzag(v);
+    let nbytes = ((bits_for(zz) + 7) / 8).max(1) as usize;
+    out.push(((SubEncoding::ShortRepeat as u8) << 6)
+        | (((nbytes - 1) as u8) << 3)
+        | ((count - SR_MIN) as u8));
+    for i in (0..nbytes).rev() {
+        out.push((zz >> (i * 8)) as u8);
+    }
+}
+
+/// Write a DIRECT/PATCHED/DELTA 2-byte header: tag(2) wc(5) len-1(9).
+fn push_group_header(tag: SubEncoding, width_code: u8, len: usize, out: &mut Vec<u8>) {
+    debug_assert!((1..=MAX_GROUP).contains(&len));
+    let l = (len - 1) as u16;
+    out.push(((tag as u8) << 6) | (width_code << 1) | ((l >> 8) as u8));
+    out.push((l & 0xFF) as u8);
+}
+
+fn emit_delta_fixed(base: i64, delta: i64, len: usize, out: &mut Vec<u8>) {
+    push_group_header(SubEncoding::Delta, 0, len, out);
+    let mut tmp = Vec::new();
+    crate::format::varint::write_svarint(&mut tmp, base);
+    crate::format::varint::write_svarint(&mut tmp, delta);
+    out.extend_from_slice(&tmp);
+}
+
+fn emit_delta_packed(vals: &[i64], out: &mut Vec<u8>) {
+    debug_assert!(vals.len() >= 2);
+    let deltas: Vec<u64> = vals
+        .windows(2)
+        .map(|p| p[1].wrapping_sub(p[0]).unsigned_abs())
+        .collect();
+    let w = deltas.iter().skip(1).map(|&d| bits_for(d)).max().unwrap_or(1);
+    let wc = encode_width(w);
+    debug_assert!(wc != 0 || w <= 1);
+    let wc = wc.max(1); // width code 0 is reserved for fixed-delta
+    push_group_header(SubEncoding::Delta, wc, vals.len(), out);
+    crate::format::varint::write_svarint(out, vals[0]);
+    crate::format::varint::write_svarint(out, vals[1].wrapping_sub(vals[0]));
+    let mut bw = MsbBitWriter::new();
+    let width = decode_width(wc);
+    for &d in deltas.iter().skip(1) {
+        bw.put_bits(d, width);
+    }
+    out.extend_from_slice(&bw.finish());
+}
+
+fn emit_direct(vals: &[i64], out: &mut Vec<u8>) {
+    let w = vals.iter().map(|&v| bits_for(zigzag(v))).max().unwrap_or(1);
+    let wc = encode_width(w);
+    push_group_header(SubEncoding::Direct, wc, vals.len(), out);
+    let width = decode_width(wc);
+    let mut bw = MsbBitWriter::new();
+    for &v in vals {
+        bw.put_bits(zigzag(v), width);
+    }
+    out.extend_from_slice(&bw.finish());
+}
+
+/// PATCHED_BASE plan: packing width, patch width, and outlier positions.
+struct PatchPlan {
+    base: i64,
+    /// Width (bits) the reduced values are packed at (90th percentile).
+    width: u32,
+    /// Patch width in bits (high bits of outliers).
+    patch_width: u32,
+    /// (gap-encoded) outlier index list.
+    patches: Vec<(u8, u64)>,
+}
+
+/// Decide whether `vals` benefits from PATCHED_BASE; build the plan if so.
+fn plan_patched(vals: &[i64]) -> Option<PatchPlan> {
+    if vals.len() < 20 {
+        return None;
+    }
+    let base = *vals.iter().min().unwrap();
+    // Reduced values must fit u64 (they do: i64 range spans < 2^64).
+    let reduced: Vec<u64> = vals.iter().map(|&v| (v as i128 - base as i128) as u64).collect();
+    let mut widths: Vec<u32> = reduced.iter().map(|&r| bits_for(r)).collect();
+    widths.sort_unstable();
+    let w100 = *widths.last().unwrap();
+    let w90 = widths[(widths.len() * 9 / 10).min(widths.len() - 1)];
+    let w90 = decode_width(encode_width(w90));
+    if w100 <= w90 {
+        return None; // no outliers; DIRECT is as good
+    }
+    let patch_width = decode_width(encode_width(w100 - w90));
+    // Build the gap-encoded patch list (8-bit gaps, dummy entries for
+    // gaps > 255 like ORC).
+    let mut patches: Vec<(u8, u64)> = Vec::new();
+    let mut last = 0usize;
+    for (i, &r) in reduced.iter().enumerate() {
+        let high = r >> w90;
+        if high != 0 {
+            let mut gap = i - last;
+            while gap > 255 {
+                patches.push((255, 0));
+                gap -= 255;
+            }
+            patches.push((gap as u8, high));
+            last = i;
+        }
+    }
+    if patches.is_empty() || patches.len() > 31 {
+        return None;
+    }
+    // Profitable only if the narrower packing pays for the patch list.
+    let direct_cost = decode_width(encode_width(w100)) as u64 * vals.len() as u64;
+    let patched_cost = w90 as u64 * vals.len() as u64
+        + patches.len() as u64 * (8 + patch_width as u64)
+        + 8 * 8;
+    if patched_cost >= direct_cost {
+        return None;
+    }
+    Some(PatchPlan { base, width: w90, patch_width, patches })
+}
+
+fn emit_patched(vals: &[i64], plan: &PatchPlan, out: &mut Vec<u8>) {
+    let wc = encode_width(plan.width);
+    push_group_header(SubEncoding::PatchedBase, wc, vals.len(), out);
+    let base_zz = zigzag(plan.base);
+    let bw_bytes = ((bits_for(base_zz) + 7) / 8).max(1) as usize;
+    let pwc = encode_width(plan.patch_width);
+    out.push((((bw_bytes - 1) as u8) << 5) | pwc);
+    // Patch gap width fixed at 8 bits (code 7 = 8 bits in the 3-bit
+    // field); patch list length in the low 5 bits.
+    out.push((7u8 << 5) | (plan.patches.len() as u8));
+    for i in (0..bw_bytes).rev() {
+        out.push((base_zz >> (i * 8)) as u8);
+    }
+    let width = decode_width(wc);
+    let mut packer = MsbBitWriter::new();
+    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    for &v in vals {
+        let r = (v as i128 - plan.base as i128) as u64;
+        packer.put_bits(r & mask, width);
+    }
+    out.extend_from_slice(&packer.finish());
+    let pw = decode_width(pwc);
+    let mut packer = MsbBitWriter::new();
+    for &(gap, high) in &plan.patches {
+        packer.put_bits(gap as u64, 8);
+        packer.put_bits(high, pw);
+    }
+    out.extend_from_slice(&packer.finish());
+}
+
+// ---------------------------------------------------------------------
+// Decoder
+// ---------------------------------------------------------------------
+
+/// Decode an RLE v2 chunk into `out`.
+pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+    let (width, n_elems) = read_rle_header(input)?;
+    let mask = if width == 8 { u64::MAX } else { (1u64 << (width as u32 * 8)) - 1 };
+    let mut produced = 0u64;
+    while produced < n_elems {
+        let first = input.fetch_byte()?;
+        let tag = first >> 6;
+        let n = match tag {
+            0 => decode_short_repeat(first, input, out, width, mask, n_elems - produced)?,
+            1 => decode_direct(first, input, out, width, mask, n_elems - produced)?,
+            2 => decode_patched(first, input, out, width, mask, n_elems - produced)?,
+            _ => decode_delta(first, input, out, width, mask, n_elems - produced)?,
+        };
+        produced += n;
+    }
+    Ok(())
+}
+
+fn decode_short_repeat<O: OutputStream>(
+    first: u8,
+    input: &mut InputStream<'_>,
+    out: &mut O,
+    width: u8,
+    mask: u64,
+    budget: u64,
+) -> Result<u64> {
+    let nbytes = ((first >> 3) & 0x7) as usize + 1;
+    let count = (first & 0x7) as u64 + SR_MIN as u64;
+    if count > budget {
+        return Err(corrupt("rle_v2: short-repeat overruns chunk"));
+    }
+    let mut zz = 0u64;
+    for _ in 0..nbytes {
+        zz = (zz << 8) | input.fetch_byte()? as u64;
+    }
+    let v = unzigzag(zz) as u64 & mask;
+    out.on_symbol(SymbolKind::RleRun, 380 + 10 * nbytes as u32, input.bytes_consumed());
+    out.write_run(v, count, 0, width)?;
+    Ok(count)
+}
+
+/// Parse the common `wc(5) len(9)` tail of a group header.
+fn parse_header_tail(first: u8, input: &mut InputStream<'_>) -> Result<(u8, usize)> {
+    let wc = (first >> 1) & 0x1F;
+    let len_hi = (first & 1) as usize;
+    let len_lo = input.fetch_byte()? as usize;
+    Ok((wc, (len_hi << 8 | len_lo) + 1))
+}
+
+fn decode_direct<O: OutputStream>(
+    first: u8,
+    input: &mut InputStream<'_>,
+    out: &mut O,
+    width: u8,
+    mask: u64,
+    budget: u64,
+) -> Result<u64> {
+    let (wc, len) = parse_header_tail(first, input)?;
+    if len as u64 > budget {
+        return Err(corrupt("rle_v2: direct group overruns chunk"));
+    }
+    let w = decode_width(wc);
+    out.on_symbol(SymbolKind::RleV2Header, 400, input.bytes_consumed());
+    let mut r = input.msb_reader();
+    for _ in 0..len {
+        let zz = r.read_bits(w)?;
+        let v = unzigzag(zz) as u64 & mask;
+        out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
+        out.write_run(v, 1, 0, width)?;
+    }
+    input.commit_msb(&r);
+    Ok(len as u64)
+}
+
+/// Input position accounting for a partially-consumed MSB reader.
+#[inline]
+fn pos_after(input: &InputStream<'_>, r: &MsbBitReader<'_>) -> u64 {
+    input.bytes_consumed() + r.byte_pos() as u64
+}
+
+fn decode_patched<O: OutputStream>(
+    first: u8,
+    input: &mut InputStream<'_>,
+    out: &mut O,
+    width: u8,
+    mask: u64,
+    budget: u64,
+) -> Result<u64> {
+    let (wc, len) = parse_header_tail(first, input)?;
+    if len as u64 > budget {
+        return Err(corrupt("rle_v2: patched group overruns chunk"));
+    }
+    let b3 = input.fetch_byte()?;
+    let bw_bytes = ((b3 >> 5) & 0x7) as usize + 1;
+    let pwc = b3 & 0x1F;
+    let b4 = input.fetch_byte()?;
+    let pgw = ((b4 >> 5) & 0x7) as u32 + 1;
+    let pll = (b4 & 0x1F) as usize;
+    let mut base_zz = 0u64;
+    for _ in 0..bw_bytes {
+        base_zz = (base_zz << 8) | input.fetch_byte()? as u64;
+    }
+    let base = unzigzag(base_zz);
+    let w = decode_width(wc);
+    out.on_symbol(SymbolKind::RleV2Header, 700, input.bytes_consumed());
+    // Unpack reduced values.
+    let mut reduced = Vec::with_capacity(len);
+    {
+        let mut r = input.msb_reader();
+        for _ in 0..len {
+            reduced.push(r.read_bits(w)?);
+        }
+        input.commit_msb(&r);
+    }
+    // Apply the patch list.
+    let pw = decode_width(pwc);
+    {
+        let mut r = input.msb_reader();
+        let mut idx = 0usize;
+        for _ in 0..pll {
+            let gap = r.read_bits(pgw)? as usize;
+            let high = r.read_bits(pw)?;
+            idx += gap;
+            if high != 0 {
+                if idx >= reduced.len() {
+                    return Err(corrupt("rle_v2: patch index out of range"));
+                }
+                reduced[idx] |= high << w;
+            }
+        }
+        input.commit_msb(&r);
+    }
+    for &rv in &reduced {
+        let v = (base as i128 + rv as i128) as u64 & mask;
+        out.on_symbol(SymbolKind::RleLiteral, 110 + w / 2, input.bytes_consumed());
+        out.write_run(v, 1, 0, width)?;
+    }
+    Ok(len as u64)
+}
+
+fn decode_delta<O: OutputStream>(
+    first: u8,
+    input: &mut InputStream<'_>,
+    out: &mut O,
+    width: u8,
+    mask: u64,
+    budget: u64,
+) -> Result<u64> {
+    let (wc, len) = parse_header_tail(first, input)?;
+    if len as u64 > budget {
+        return Err(corrupt("rle_v2: delta group overruns chunk"));
+    }
+    let base = input.fetch_svarint()?;
+    let d1 = input.fetch_svarint()?;
+    let w = decode_delta_width(wc);
+    if w == 0 {
+        // Fixed-delta run: a single write_run covers the whole group.
+        out.on_symbol(SymbolKind::RleRun, 450, input.bytes_consumed());
+        out.write_run(base as u64 & mask, len as u64, d1, width)?;
+        return Ok(len as u64);
+    }
+    if len < 2 {
+        return Err(corrupt("rle_v2: packed delta group shorter than 2"));
+    }
+    out.on_symbol(SymbolKind::RleV2Header, 450, input.bytes_consumed());
+    out.write_run(base as u64 & mask, 1, 0, width)?;
+    let mut prev = base.wrapping_add(d1);
+    out.on_symbol(SymbolKind::RleLiteral, 60, input.bytes_consumed());
+    out.write_run(prev as u64 & mask, 1, 0, width)?;
+    let sign: i64 = if d1 < 0 { -1 } else { 1 };
+    let mut r = input.msb_reader();
+    for _ in 2..len {
+        let d = r.read_bits(w)? as i64;
+        prev = prev.wrapping_add(sign * d);
+        out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
+        out.write_run(prev as u64 & mask, 1, 0, width)?;
+    }
+    input.commit_msb(&r);
+    Ok(len as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::{decompress_chunk, CodecKind};
+
+    fn roundtrip(data: &[u8], width: u8) -> usize {
+        let comp = compress(data, width).unwrap();
+        let out = decompress_chunk(CodecKind::RleV2, &comp, data.len()).unwrap();
+        assert_eq!(out, data, "width {width}");
+        comp.len()
+    }
+
+    fn as_bytes_u64(vals: &[u64]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    fn as_bytes_i64(vals: &[i64]) -> Vec<u8> {
+        vals.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    #[test]
+    fn width_table_roundtrip() {
+        for bits in 1..=64u32 {
+            let code = encode_width(bits);
+            assert!(decode_width(code) >= bits, "bits {bits}");
+        }
+        assert_eq!(decode_width(encode_width(1)), 1);
+        assert_eq!(decode_width(encode_width(24)), 24);
+        assert_eq!(decode_width(encode_width(25)), 26);
+        assert_eq!(decode_width(encode_width(33)), 40);
+        assert_eq!(decode_width(encode_width(64)), 64);
+    }
+
+    #[test]
+    fn short_repeat_exact() {
+        for n in SR_MIN..=SR_MAX {
+            let data = as_bytes_u64(&vec![0xABCDu64; n]);
+            let clen = roundtrip(&data, 8);
+            // header + 2 value bytes + chunk header
+            assert!(clen <= 8, "n={n} clen={clen}");
+        }
+    }
+
+    #[test]
+    fn long_equal_run_uses_fixed_delta() {
+        let data = as_bytes_u64(&vec![7u64; 5000]);
+        let clen = roundtrip(&data, 8);
+        // 5000/512 = 10 groups x ~4 bytes.
+        assert!(clen < 64, "clen={clen}");
+    }
+
+    #[test]
+    fn arithmetic_sequence_fixed_delta() {
+        let vals: Vec<i64> = (0..2000).map(|i| 1000 - 3 * i).collect();
+        let data = as_bytes_i64(&vals);
+        let clen = roundtrip(&data, 8);
+        assert!(clen < 48, "clen={clen}");
+    }
+
+    #[test]
+    fn monotonic_packed_delta() {
+        // Monotonic with small varying deltas.
+        let mut v = 0i64;
+        let mut x = 99u64;
+        let vals: Vec<i64> = (0..1000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                v += (x >> 60) as i64; // deltas 0..15
+                v
+            })
+            .collect();
+        let data = as_bytes_i64(&vals);
+        let clen = roundtrip(&data, 8);
+        // Packed deltas at <=8 bits vs 8-byte raw values.
+        assert!(clen < data.len() / 4, "clen={clen}");
+    }
+
+    #[test]
+    fn random_values_direct() {
+        let mut x = 42u64;
+        let vals: Vec<i64> = (0..700)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 32) as i64 - (1 << 30)
+            })
+            .collect();
+        let data = as_bytes_i64(&vals);
+        roundtrip(&data, 8);
+    }
+
+    #[test]
+    fn power_law_outliers_use_patched_base() {
+        // Mostly small values with a few huge outliers: PATCHED_BASE.
+        let mut x = 7u64;
+        let vals: Vec<i64> = (0..512)
+            .map(|i| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                if i % 100 == 50 {
+                    1 << 45
+                } else {
+                    (x % 1000) as i64
+                }
+            })
+            .collect();
+        let data = as_bytes_i64(&vals);
+        let comp = compress(&data, 8).unwrap();
+        // Contains at least one PATCHED_BASE group (tag bits 10).
+        let has_patched = comp[4..].iter().any(|&b| b >> 6 == 2);
+        assert!(has_patched, "expected a patched-base group");
+        let out = decompress_chunk(CodecKind::RleV2, &comp, data.len()).unwrap();
+        assert_eq!(out, data);
+        assert!(comp.len() < data.len() / 3);
+    }
+
+    #[test]
+    fn negative_and_extreme_values() {
+        let vals = vec![i64::MIN, i64::MAX, -1, 0, 1, i64::MIN + 1, i64::MAX - 1, -42];
+        let data = as_bytes_i64(&vals);
+        roundtrip(&data, 8);
+    }
+
+    #[test]
+    fn narrow_widths() {
+        // i8-ish data in width 1.
+        let data: Vec<u8> = (0..3000).map(|i| ((i * 7) % 11) as u8).collect();
+        roundtrip(&data, 1);
+        // u16 data with runs.
+        let mut d2 = Vec::new();
+        for i in 0..1500u16 {
+            d2.extend_from_slice(&(i / 100).to_le_bytes());
+        }
+        roundtrip(&d2, 2);
+        // i32 negative data.
+        let mut d4 = Vec::new();
+        for i in 0..800i32 {
+            d4.extend_from_slice(&(-i * 3).to_le_bytes());
+        }
+        roundtrip(&d4, 4);
+    }
+
+    #[test]
+    fn empty_chunk() {
+        let comp = compress(&[], 8).unwrap();
+        assert_eq!(decompress_chunk(CodecKind::RleV2, &comp, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn truncated_groups_are_corrupt() {
+        let data = as_bytes_u64(&(0..600).map(|i| i * i).collect::<Vec<u64>>());
+        let comp = compress(&data, 8).unwrap();
+        for cut in [comp.len() - 1, comp.len() / 2, 5, 4, 3] {
+            assert!(decompress_chunk(CodecKind::RleV2, &comp[..cut], data.len()).is_err());
+        }
+    }
+
+    #[test]
+    fn group_boundary_512() {
+        for n in [511usize, 512, 513, 1024, 1025] {
+            let mut x = 3u64;
+            let vals: Vec<i64> = (0..n)
+                .map(|_| {
+                    x = x.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+                    (x >> 40) as i64
+                })
+                .collect();
+            roundtrip(&as_bytes_i64(&vals), 8);
+        }
+    }
+}

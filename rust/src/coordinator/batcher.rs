@@ -1,0 +1,173 @@
+//! Dynamic batching of expand dispatches (vLLM-router-style policy).
+//!
+//! PJRT dispatch has a fixed per-execution overhead; the batcher groups
+//! pending chunk-expand tasks by bucket and flushes a group when it
+//! reaches `max_batch` or its oldest member exceeds `max_delay`. The
+//! policy knobs are exactly what `benches/ablation_batching.rs` sweeps.
+
+use crate::decomp::RunRecord;
+use crate::runtime::Expander;
+use crate::Result;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many tasks are pending for one bucket.
+    pub max_batch: usize,
+    /// Flush any task older than this.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 8, max_delay: Duration::from_micros(500) }
+    }
+}
+
+/// One queued expand task.
+#[derive(Debug)]
+pub struct ExpandTask {
+    /// Chunk identifier (caller-defined).
+    pub id: u64,
+    /// Decoded run table.
+    pub runs: Vec<RunRecord>,
+    /// Element width in bytes.
+    pub width: u8,
+    /// Total output elements.
+    pub total: usize,
+    /// Enqueue time.
+    pub enqueued: Instant,
+}
+
+/// A completed expand result.
+#[derive(Debug)]
+pub struct ExpandResult {
+    /// Chunk identifier.
+    pub id: u64,
+    /// Decompressed bytes (or the error).
+    pub bytes: Result<Vec<u8>>,
+}
+
+/// The dynamic batcher. Single-threaded core (the service loop owns
+/// it); thread-safety comes from the channel in front of it.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<ExpandTask>,
+    /// Dispatched batches, for metrics.
+    pub batches: u64,
+    /// Dispatched tasks, for metrics.
+    pub tasks: u64,
+}
+
+impl Batcher {
+    /// New batcher with `policy`.
+    pub fn new(policy: BatchPolicy) -> Batcher {
+        Batcher { policy, queue: VecDeque::new(), batches: 0, tasks: 0 }
+    }
+
+    /// Enqueue a task.
+    pub fn push(&mut self, task: ExpandTask) {
+        self.queue.push_back(task);
+    }
+
+    /// Pending task count.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True if a flush is due under the policy at time `now`.
+    pub fn due(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.policy.max_batch {
+            return true;
+        }
+        match self.queue.front() {
+            Some(t) => now.duration_since(t.enqueued) >= self.policy.max_delay,
+            None => false,
+        }
+    }
+
+    /// Flush up to `max_batch` tasks through the expander, returning
+    /// results in task order. (The expander serializes PJRT execution;
+    /// batching amortizes dispatch and keeps bucket locality.)
+    pub fn flush(&mut self, expander: &Expander<'_>) -> Vec<ExpandResult> {
+        let n = self.queue.len().min(self.policy.max_batch);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let t = self.queue.pop_front().expect("n <= len");
+            let bytes = expander.expand(&t.runs, t.width, t.total);
+            out.push(ExpandResult { id: t.id, bytes });
+            self.tasks += 1;
+        }
+        if n > 0 {
+            self.batches += 1;
+        }
+        out
+    }
+
+    /// Drain everything regardless of policy (shutdown).
+    pub fn drain(&mut self, expander: &Expander<'_>) -> Vec<ExpandResult> {
+        let mut out = Vec::new();
+        while !self.queue.is_empty() {
+            out.extend(self.flush(expander));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> ExpandTask {
+        ExpandTask {
+            id,
+            runs: vec![RunRecord { init: id, len: 4, delta: 1 }],
+            width: 8,
+            total: 4,
+            enqueued: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn flush_on_batch_size() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_delay: Duration::from_secs(10) });
+        b.push(task(1));
+        b.push(task(2));
+        assert!(!b.due(Instant::now()));
+        b.push(task(3));
+        assert!(b.due(Instant::now()));
+        let ex = Expander::cpu_only();
+        let results = b.flush(&ex);
+        assert_eq!(results.len(), 3);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.batches, 1);
+        // Results carry the expanded bytes.
+        let bytes = results[0].bytes.as_ref().unwrap();
+        assert_eq!(bytes.len(), 32);
+    }
+
+    #[test]
+    fn flush_on_deadline() {
+        let mut b =
+            Batcher::new(BatchPolicy { max_batch: 100, max_delay: Duration::from_millis(1) });
+        b.push(task(1));
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(b.due(Instant::now()));
+    }
+
+    #[test]
+    fn drain_empties() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_delay: Duration::from_secs(1) });
+        for i in 0..7 {
+            b.push(task(i));
+        }
+        let ex = Expander::cpu_only();
+        let results = b.drain(&ex);
+        assert_eq!(results.len(), 7);
+        assert_eq!(b.batches, 4);
+        assert_eq!(b.pending(), 0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The L3 coordinator: the serving system around the decompression
+//! framework.
+//!
+//! * [`engine`] — parallel chunk decompression (shared-cursor worker
+//!   pool = CODAG-style fine-grained units; static partitioning = the
+//!   coarse baseline), with CPU and hybrid-PJRT decode paths.
+//! * [`router`] — container registry, request→chunk planning,
+//!   least-loaded worker selection.
+//! * [`batcher`] — dynamic batching of PJRT expand dispatches.
+//! * [`service`] — the request loop gluing it together.
+//! * [`stats`] — latency percentiles / throughput accounting.
+
+pub mod batcher;
+pub mod engine;
+pub mod router;
+pub mod service;
+pub mod stats;
+
+pub use batcher::{BatchPolicy, Batcher, ExpandTask};
+pub use engine::{decompress_hybrid, decompress_parallel, decompress_static_partition};
+pub use router::{plan, ChunkWork, LeastLoaded, Registry, Request};
+pub use service::{Response, Service, ServiceConfig};
+pub use stats::LatencyStats;

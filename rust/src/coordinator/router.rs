@@ -1,0 +1,205 @@
+//! Request routing: datasets → containers → chunk work items.
+//!
+//! The registry holds loaded containers (one per dataset/file); the
+//! router translates byte-range requests into chunk lists and picks
+//! workers by least outstanding work — the same shape as a serving
+//! router in front of replicated engines.
+
+use crate::format::container::Container;
+use crate::{invalid, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A decompression request: a byte range of a named dataset.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request id (caller-assigned, echoed in the response).
+    pub id: u64,
+    /// Registered dataset name.
+    pub dataset: String,
+    /// Uncompressed byte offset.
+    pub offset: u64,
+    /// Uncompressed byte length (0 = to end).
+    pub len: u64,
+}
+
+/// Chunk-level work derived from a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkWork {
+    /// Chunk index within the container.
+    pub chunk: usize,
+    /// Byte range *within the decompressed chunk* to return.
+    pub lo: usize,
+    /// Exclusive end within the decompressed chunk.
+    pub hi: usize,
+}
+
+/// Registry of loaded containers.
+#[derive(Debug, Default)]
+pub struct Registry {
+    containers: HashMap<String, Container>,
+}
+
+impl Registry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a container under `name` (replaces any previous).
+    pub fn insert(&mut self, name: impl Into<String>, c: Container) {
+        self.containers.insert(name.into(), c);
+    }
+
+    /// Look up a container.
+    pub fn get(&self, name: &str) -> Result<&Container> {
+        self.containers
+            .get(name)
+            .ok_or_else(|| invalid(format!("dataset '{name}' not registered")))
+    }
+
+    /// Registered names (sorted).
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.containers.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+}
+
+/// Translate a request into per-chunk work items.
+pub fn plan(container: &Container, offset: u64, len: u64) -> Result<Vec<ChunkWork>> {
+    let total = container.total_uncompressed;
+    if offset > total {
+        return Err(invalid(format!("offset {offset} beyond dataset end {total}")));
+    }
+    let end = if len == 0 { total } else { (offset + len).min(total) };
+    let cs = container.chunk_size as u64;
+    if cs == 0 {
+        return Err(invalid("container chunk_size is zero"));
+    }
+    let mut work = Vec::new();
+    let first = (offset / cs) as usize;
+    let last = if end == offset { first } else { ((end - 1) / cs) as usize };
+    for chunk in first..=last.min(container.n_chunks().saturating_sub(1)) {
+        let chunk_lo = chunk as u64 * cs;
+        let chunk_len = container.index[chunk].uncomp_len;
+        let lo = offset.max(chunk_lo) - chunk_lo;
+        let hi = (end.min(chunk_lo + chunk_len)) - chunk_lo;
+        if hi > lo {
+            work.push(ChunkWork { chunk, lo: lo as usize, hi: hi as usize });
+        }
+    }
+    Ok(work)
+}
+
+/// Least-outstanding-work worker picker.
+#[derive(Debug)]
+pub struct LeastLoaded {
+    outstanding: Vec<AtomicU64>,
+}
+
+impl LeastLoaded {
+    /// Picker over `n` workers.
+    pub fn new(n: usize) -> Self {
+        LeastLoaded { outstanding: (0..n.max(1)).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// Pick the worker with the least outstanding bytes and charge it.
+    pub fn pick(&self, bytes: u64) -> usize {
+        let mut best = 0usize;
+        let mut best_v = u64::MAX;
+        for (i, a) in self.outstanding.iter().enumerate() {
+            let v = a.load(Ordering::Relaxed);
+            if v < best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        self.outstanding[best].fetch_add(bytes, Ordering::Relaxed);
+        best
+    }
+
+    /// Credit a worker when its work completes.
+    pub fn complete(&self, worker: usize, bytes: u64) {
+        self.outstanding[worker].fetch_sub(bytes.min(
+            self.outstanding[worker].load(Ordering::Relaxed),
+        ), Ordering::Relaxed);
+    }
+
+    /// Number of workers.
+    pub fn len(&self) -> usize {
+        self.outstanding.len()
+    }
+
+    /// Never empty (n clamped to ≥ 1).
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::CodecKind;
+
+    fn sample_container() -> Container {
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i % 251) as u8).collect();
+        Container::compress(&data, CodecKind::Deflate, 4096).unwrap()
+    }
+
+    #[test]
+    fn plan_whole_dataset() {
+        let c = sample_container();
+        let w = plan(&c, 0, 0).unwrap();
+        assert_eq!(w.len(), c.n_chunks());
+        assert_eq!(w[0], ChunkWork { chunk: 0, lo: 0, hi: 4096 });
+        assert_eq!(w[2].hi, 10_000 - 2 * 4096);
+    }
+
+    #[test]
+    fn plan_sub_range_crossing_chunks() {
+        let c = sample_container();
+        let w = plan(&c, 4000, 300).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], ChunkWork { chunk: 0, lo: 4000, hi: 4096 });
+        assert_eq!(w[1], ChunkWork { chunk: 1, lo: 0, hi: 204 });
+    }
+
+    #[test]
+    fn plan_range_within_one_chunk() {
+        let c = sample_container();
+        let w = plan(&c, 5000, 10).unwrap();
+        assert_eq!(w, vec![ChunkWork { chunk: 1, lo: 904, hi: 914 }]);
+    }
+
+    #[test]
+    fn plan_rejects_bad_offset() {
+        let c = sample_container();
+        assert!(plan(&c, 999_999, 1).is_err());
+        assert!(plan(&c, 10_000, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn registry_lookup() {
+        let mut r = Registry::new();
+        r.insert("taxi", sample_container());
+        assert!(r.get("taxi").is_ok());
+        assert!(r.get("nope").is_err());
+        assert_eq!(r.names(), vec!["taxi"]);
+    }
+
+    #[test]
+    fn least_loaded_balances() {
+        let ll = LeastLoaded::new(3);
+        let a = ll.pick(100);
+        let b = ll.pick(100);
+        let c = ll.pick(100);
+        // Three picks land on three distinct workers.
+        let mut seen = vec![a, b, c];
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 3);
+        ll.complete(a, 100);
+        assert_eq!(ll.pick(1), a);
+    }
+}

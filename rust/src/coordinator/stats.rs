@@ -1,0 +1,96 @@
+//! Latency/throughput statistics for the serving path.
+
+use std::time::Duration;
+
+/// Online latency recorder with percentile queries.
+///
+/// Stores microsecond samples; `percentile` sorts a snapshot (serving
+/// benches take snapshots off the hot path).
+#[derive(Debug, Default, Clone)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+    total_bytes: u64,
+}
+
+impl LatencyStats {
+    /// Empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one request's latency and payload size.
+    pub fn record(&mut self, latency: Duration, bytes: u64) {
+        self.samples_us.push(latency.as_micros() as u64);
+        self.total_bytes += bytes;
+    }
+
+    /// Merge another recorder (per-worker aggregation).
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+        self.total_bytes += other.total_bytes;
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    /// Total decompressed bytes.
+    pub fn total_bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// p-th percentile latency in microseconds (p in [0, 100]).
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    /// Mean latency in microseconds.
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+    }
+
+    /// Throughput given a wall-clock window.
+    pub fn throughput_gbps(&self, wall: Duration) -> f64 {
+        self.total_bytes as f64 / wall.as_secs_f64().max(1e-9) / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let mut s = LatencyStats::new();
+        for i in 1..=100u64 {
+            s.record(Duration::from_micros(i), 10);
+        }
+        assert_eq!(s.count(), 100);
+        assert_eq!(s.percentile_us(0.0), 1);
+        assert_eq!(s.percentile_us(100.0), 100);
+        let p50 = s.percentile_us(50.0);
+        assert!((49..=51).contains(&p50), "{p50}");
+        assert_eq!(s.total_bytes(), 1000);
+        assert!((s.mean_us() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_and_empty() {
+        let mut a = LatencyStats::new();
+        assert_eq!(a.percentile_us(50.0), 0);
+        let mut b = LatencyStats::new();
+        b.record(Duration::from_micros(5), 1);
+        a.merge(&b);
+        assert_eq!(a.count(), 1);
+    }
+}

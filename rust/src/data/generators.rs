@@ -1,0 +1,396 @@
+//! Statistical generators for the paper's seven evaluation datasets
+//! (Table IV).
+//!
+//! The real datasets (Fannie-Mae mortgage, NYC taxi, Criteo 1TB,
+//! Twitter COO, GRCh38) total ~27 GB and are not redistributable here;
+//! per the substitution rule each generator reproduces the property
+//! that drives the dataset's Table V behaviour — run-length structure,
+//! alphabet, value distribution — at a configurable size. The Table V
+//! bench (`reproduce_paper table5`) checks our ratios land in the
+//! paper's regime (and documents where framing overheads differ).
+//!
+//! All generators are deterministic (splitmix64 seeded per dataset), so
+//! every figure regenerates bit-identically.
+
+/// Deterministic 64-bit RNG (splitmix64).
+#[derive(Debug, Clone)]
+pub struct Rng(u64);
+
+impl Rng {
+    /// Seeded RNG.
+    pub fn new(seed: u64) -> Rng {
+        Rng(seed.wrapping_add(0x9E37_79B9_7F4A_7C15))
+    }
+
+    /// Next u64.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Geometric-ish run length with the given mean (≥ 1).
+    #[inline]
+    pub fn run_len(&mut self, mean: f64) -> usize {
+        let u = self.f64().max(1e-12);
+        ((-u.ln() * mean).round() as usize).max(1)
+    }
+
+    /// Power-law value in [1, max) with exponent ~alpha.
+    #[inline]
+    pub fn power_law(&mut self, max: f64, alpha: f64) -> u64 {
+        let u = self.f64().max(1e-12);
+        (u.powf(-1.0 / alpha)).min(max) as u64
+    }
+}
+
+/// One of the paper's seven datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// Mortgage Col 0 — u64 analytics column with very long runs.
+    Mc0,
+    /// Mortgage Col 3 — f32 column (rates) with long runs.
+    Mc3,
+    /// NYC Taxi Passenger Count — int8 in 1..=6, barely any runs.
+    Tpc,
+    /// NYC Taxi Payment Type — char in a 2–4 symbol alphabet.
+    Tpt,
+    /// Criteo Dense 2 — u32, zero-inflated power law.
+    Cd2,
+    /// Twitter COO Col 1 — u64 source vertices, power-law out-degrees
+    /// (long runs of the same id, ids monotonically increasing).
+    Tc2,
+    /// Human Reference Genome — ACGT(N) text with repeated motifs.
+    Hrg,
+}
+
+impl Dataset {
+    /// All datasets in the paper's reporting order (Table IV).
+    pub fn all() -> [Dataset; 7] {
+        [
+            Dataset::Mc0,
+            Dataset::Mc3,
+            Dataset::Tpc,
+            Dataset::Tpt,
+            Dataset::Cd2,
+            Dataset::Tc2,
+            Dataset::Hrg,
+        ]
+    }
+
+    /// Short name as the paper abbreviates it.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataset::Mc0 => "MC0",
+            Dataset::Mc3 => "MC3",
+            Dataset::Tpc => "TPC",
+            Dataset::Tpt => "TPT",
+            Dataset::Cd2 => "CD2",
+            Dataset::Tc2 => "TC2",
+            Dataset::Hrg => "HRG",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn parse(s: &str) -> Option<Dataset> {
+        Dataset::all().into_iter().find(|d| d.name().eq_ignore_ascii_case(s))
+    }
+
+    /// Application category (Table IV).
+    pub fn category(&self) -> &'static str {
+        match self {
+            Dataset::Mc0 | Dataset::Mc3 | Dataset::Tpc | Dataset::Tpt => "Analytics",
+            Dataset::Cd2 => "Recommenders",
+            Dataset::Tc2 => "Graph",
+            Dataset::Hrg => "Genomics",
+        }
+    }
+
+    /// Element dtype label (Table IV).
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Dataset::Mc0 => "uint_64",
+            Dataset::Mc3 => "fp32",
+            Dataset::Tpc => "int_8",
+            Dataset::Tpt => "char",
+            Dataset::Cd2 => "uint_32",
+            Dataset::Tc2 => "uint_64",
+            Dataset::Hrg => "char",
+        }
+    }
+
+    /// Element width in bytes (drives the RLE codecs).
+    pub fn width(&self) -> u8 {
+        match self {
+            Dataset::Mc0 | Dataset::Tc2 => 8,
+            Dataset::Mc3 => 4,
+            Dataset::Cd2 => 4,
+            Dataset::Tpc | Dataset::Tpt | Dataset::Hrg => 1,
+        }
+    }
+
+    /// Original size in GB (Table IV), for the table reproduction.
+    pub fn paper_size_gb(&self) -> f64 {
+        match self {
+            Dataset::Mc0 => 4.86,
+            Dataset::Mc3 => 2.43,
+            Dataset::Tpc => 3.07,
+            Dataset::Tpt => 7.41,
+            Dataset::Cd2 => 0.73,
+            Dataset::Tc2 => 5.47,
+            Dataset::Hrg => 3.1,
+        }
+    }
+
+    /// Generate ~`size_bytes` of this dataset (rounded down to a whole
+    /// number of elements).
+    pub fn generate(&self, size_bytes: usize) -> Vec<u8> {
+        let mut rng = Rng::new(0xC0DA_6000 + *self as u64);
+        let mut out = Vec::with_capacity(size_bytes);
+        match self {
+            // Long runs of small counters: loan-level attributes repeat
+            // across monthly records. Mean run ≈ 30 elements.
+            Dataset::Mc0 => {
+                let mut v: u64 = 100_000;
+                while out.len() + 8 <= size_bytes {
+                    let run = rng.run_len(30.0).min(4000);
+                    // Occasionally jump, mostly small increments.
+                    v = if rng.below(10) == 0 {
+                        rng.below(1 << 20)
+                    } else {
+                        v.wrapping_add(rng.below(5))
+                    };
+                    for _ in 0..run {
+                        if out.len() + 8 > size_bytes {
+                            break;
+                        }
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            // fp32 interest-rate-like column: a handful of distinct
+            // values, runs ≈ 40.
+            Dataset::Mc3 => {
+                let rates: Vec<f32> =
+                    (0..24).map(|i| 2.0 + 0.125 * i as f32).collect();
+                while out.len() + 4 <= size_bytes {
+                    let run = rng.run_len(40.0).min(4000);
+                    let r = rates[rng.below(rates.len() as u64) as usize];
+                    for _ in 0..run {
+                        if out.len() + 4 > size_bytes {
+                            break;
+                        }
+                        out.extend_from_slice(&r.to_bits().to_le_bytes());
+                    }
+                }
+            }
+            // Passenger counts 1..=6, skewed to 1 but anti-correlated
+            // (consecutive trips rarely share a count in the stream
+            // order ORC sees), so runs >= 3 are rare: avg symbol length
+            // ~1.0 and ratio just under 1 (Table V: 1.00 / 0.867).
+            Dataset::Tpc => {
+                let mut prev = 0u8;
+                while out.len() < size_bytes {
+                    let r = rng.f64();
+                    let mut v: u8 = if r < 0.70 {
+                        1
+                    } else if r < 0.85 {
+                        2
+                    } else {
+                        3 + rng.below(4) as u8
+                    };
+                    // Redraw once when repeating, emulating interleaved
+                    // trip records.
+                    if v == prev && rng.f64() < 0.72 {
+                        v = 1 + rng.below(6) as u8;
+                    }
+                    out.push(v);
+                    prev = v;
+                }
+            }
+            // Payment type: two dominant symbols (card/cash) with short
+            // alternating runs — RLE v1 gains nothing (ratio ~1, paper
+            // 1.41 incl. ORC stream overheads) while Deflate crushes it.
+            Dataset::Tpt => {
+                let mut prev = b'1';
+                while out.len() < size_bytes {
+                    // Alternation-biased two-symbol stream: P(repeat) is
+                    // low enough that encodable runs (>= 3) are rare.
+                    let v = if rng.f64() < 0.86 {
+                        if prev == b'1' { b'2' } else { b'1' }
+                    } else {
+                        prev
+                    };
+                    out.push(v);
+                    prev = v;
+                }
+            }
+            // Zero-inflated power law u32 (dense ad features).
+            Dataset::Cd2 => {
+                while out.len() + 4 <= size_bytes {
+                    if rng.f64() < 0.55 {
+                        // Zero runs.
+                        let run = rng.run_len(18.0).min(2000);
+                        for _ in 0..run {
+                            if out.len() + 4 > size_bytes {
+                                break;
+                            }
+                            out.extend_from_slice(&0u32.to_le_bytes());
+                        }
+                    } else {
+                        let v = rng.power_law(4e9, 1.3) as u32;
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            // COO source column: vertex ids ascending, each repeated
+            // out-degree times (power-law degrees) — long runs of equal
+            // u64s plus monotonic structure for RLE v2's delta mode.
+            Dataset::Tc2 => {
+                let mut vid: u64 = 1;
+                while out.len() + 8 <= size_bytes {
+                    vid += 1 + rng.below(3);
+                    let degree = rng.power_law(10_000.0, 1.2).max(1).min(3000);
+                    for _ in 0..degree {
+                        if out.len() + 8 > size_bytes {
+                            break;
+                        }
+                        out.extend_from_slice(&vid.to_le_bytes());
+                    }
+                }
+            }
+            // Genome text: 4-symbol alphabet, N-runs at assembly gaps,
+            // repeated motifs (transposable elements) that only
+            // dictionary codecs exploit.
+            Dataset::Hrg => {
+                const BASES: [u8; 4] = [b'A', b'C', b'G', b'T'];
+                // A motif bank to replay (LINE/SINE-like repeats).
+                let motifs: Vec<Vec<u8>> = (0..8)
+                    .map(|_| {
+                        (0..300)
+                            .map(|_| BASES[rng.below(4) as usize])
+                            .collect()
+                    })
+                    .collect();
+                while out.len() < size_bytes {
+                    let r = rng.f64();
+                    if r < 0.02 {
+                        // Assembly gap: a run of 'N'.
+                        let run = rng.run_len(500.0).min(size_bytes - out.len());
+                        out.extend(std::iter::repeat(b'N').take(run));
+                    } else if r < 0.25 {
+                        // Replay a motif (with light mutation).
+                        let m = &motifs[rng.below(motifs.len() as u64) as usize];
+                        for &b in m {
+                            if out.len() >= size_bytes {
+                                break;
+                            }
+                            let b =
+                                if rng.below(50) == 0 { BASES[rng.below(4) as usize] } else { b };
+                            out.push(b);
+                        }
+                    } else {
+                        // Fresh sequence.
+                        let n = (50 + rng.below(400) as usize).min(size_bytes - out.len());
+                        for _ in 0..n {
+                            out.push(BASES[rng.below(4) as usize]);
+                        }
+                    }
+                }
+            }
+        }
+        // Exact sizing for width alignment.
+        let w = self.width() as usize;
+        out.truncate(size_bytes / w * w);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::{compress_chunk_with, CodecKind};
+
+    fn ratio(d: Dataset, kind: CodecKind) -> f64 {
+        let data = d.generate(512 * 1024);
+        let comp = compress_chunk_with(kind, &data, d.width()).unwrap();
+        comp.len() as f64 / data.len() as f64
+    }
+
+    #[test]
+    fn deterministic() {
+        for d in Dataset::all() {
+            assert_eq!(d.generate(4096), d.generate(4096), "{}", d.name());
+        }
+    }
+
+    #[test]
+    fn sizes_and_alignment() {
+        for d in Dataset::all() {
+            let data = d.generate(100_000);
+            assert!(data.len() <= 100_000);
+            assert_eq!(data.len() % d.width() as usize, 0);
+            assert!(data.len() > 90_000, "{} produced {}", d.name(), data.len());
+        }
+    }
+
+    #[test]
+    fn mc0_highly_compressible_rle() {
+        let r = ratio(Dataset::Mc0, CodecKind::RleV1);
+        assert!(r < 0.08, "MC0 RLE v1 ratio {r} (paper 0.023)");
+    }
+
+    #[test]
+    fn tpc_incompressible_rle_but_deflate_works() {
+        let r1 = ratio(Dataset::Tpc, CodecKind::RleV1);
+        let rd = ratio(Dataset::Tpc, CodecKind::Deflate);
+        assert!(r1 > 0.7, "TPC RLE v1 ratio {r1} (paper 0.867)");
+        assert!(rd < 0.35, "TPC Deflate ratio {rd} (paper 0.119)");
+    }
+
+    #[test]
+    fn tpt_defeats_rle_deflate_crushes() {
+        let r1 = ratio(Dataset::Tpt, CodecKind::RleV1);
+        let rd = ratio(Dataset::Tpt, CodecKind::Deflate);
+        assert!(r1 > 0.85, "TPT RLE v1 ratio {r1} (paper 1.41 w/ ORC overheads)");
+        assert!(rd < 0.12, "TPT Deflate ratio {rd} (paper 0.042)");
+    }
+
+    #[test]
+    fn tc2_rle_v2_beats_v1() {
+        let r1 = ratio(Dataset::Tc2, CodecKind::RleV1);
+        let r2 = ratio(Dataset::Tc2, CodecKind::RleV2);
+        assert!(r1 < 0.25, "TC2 RLE v1 {r1} (paper 0.087)");
+        assert!(r2 <= r1 * 1.1, "TC2 v2 {r2} should be <= v1 {r1}");
+    }
+
+    #[test]
+    fn hrg_rle_useless_deflate_ok() {
+        let r1 = ratio(Dataset::Hrg, CodecKind::RleV1);
+        let rd = ratio(Dataset::Hrg, CodecKind::Deflate);
+        assert!(r1 > 0.9, "HRG RLE v1 {r1} (paper 0.975)");
+        assert!(rd < 0.55, "HRG Deflate {rd} (paper 0.305)");
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Dataset::parse("mc0"), Some(Dataset::Mc0));
+        assert_eq!(Dataset::parse("HRG"), Some(Dataset::Hrg));
+        assert_eq!(Dataset::parse("xyz"), None);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation datasets (Table IV) and their statistics.
+//!
+//! See [`generators`] for the substitution rationale: each generator
+//! reproduces the statistical property that drives its real dataset's
+//! compression behaviour (Table V) so every downstream figure sees the
+//! same codec regimes the paper measured.
+
+pub mod generators;
+
+pub use generators::{Dataset, Rng};

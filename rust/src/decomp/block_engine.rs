@@ -1,0 +1,109 @@
+//! The RAPIDS-style baseline decompression units (paper §II-C, Fig 1a).
+//!
+//! One *thread block* per compressed chunk: a dedicated prefetch warp
+//! fills shared-memory batch buffers, a single leader thread performs the
+//! sequential decode, and after each decoded symbol the leader broadcasts
+//! to the whole block and all threads synchronize on a block-wide barrier
+//! before collectively writing. The paper's characterization (§III)
+//! attributes the baseline's poor resource utilization to exactly this
+//! provisioning; reproducing it faithfully is what lets the simulator
+//! regenerate Figs 2/3/5/6.
+//!
+//! Block widths match the paper (§V-F): 1024 threads for RLE v1/v2,
+//! 128 for Deflate.
+
+use crate::codecs::{decode_into, CodecKind};
+use crate::decomp::output_stream::{ByteSink, CountingSink, OutputStream, TracingSink};
+use crate::decomp::trace::UnitTrace;
+use crate::Result;
+
+/// Threads per block the baseline provisions for a codec (§V-F).
+pub fn block_width(kind: CodecKind) -> u32 {
+    match kind {
+        CodecKind::RleV1 | CodecKind::RleV2 => 1024,
+        CodecKind::Deflate => 128,
+    }
+}
+
+/// Warps one baseline decompression unit occupies (the prefetch warp is
+/// one of the block's warps — Fig 1a).
+pub fn warps_per_unit(kind: CodecKind) -> u32 {
+    block_width(kind) / 32
+}
+
+/// Decode one chunk under the baseline provisioning.
+pub fn trace_chunk(kind: CodecKind, comp: &[u8], uncomp_hint: usize) -> Result<(Vec<u8>, UnitTrace)> {
+    let sink = ByteSink::with_capacity(uncomp_hint);
+    let mut tracer = TracingSink::baseline(sink, block_width(kind));
+    decode_into(kind, comp, &mut tracer)?;
+    let (sink, events) = tracer.finish();
+    let out = sink.into_bytes();
+    let trace = UnitTrace {
+        events,
+        comp_bytes: comp.len() as u64,
+        uncomp_bytes: out.len() as u64,
+    };
+    Ok((out, trace))
+}
+
+/// Counting variant for throughput benches.
+pub fn trace_chunk_counting(kind: CodecKind, comp: &[u8]) -> Result<UnitTrace> {
+    let mut tracer = TracingSink::baseline(CountingSink::new(), block_width(kind));
+    decode_into(kind, comp, &mut tracer)?;
+    let uncomp = tracer.bytes_written();
+    let (_, events) = tracer.finish();
+    Ok(UnitTrace { events, comp_bytes: comp.len() as u64, uncomp_bytes: uncomp })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::compress_chunk_with;
+    use crate::decomp::codag_engine::{self, Variant};
+
+    #[test]
+    fn baseline_broadcasts_per_symbol() {
+        let mut data = Vec::new();
+        for i in 0..2048u64 {
+            data.extend_from_slice(&(i / 32).to_le_bytes());
+        }
+        let comp = compress_chunk_with(CodecKind::RleV1, &data, 8).unwrap();
+        let (out, t) = trace_chunk(CodecKind::RleV1, &comp, data.len()).unwrap();
+        assert_eq!(out, data);
+        assert!(t.broadcast_count() > 0);
+        // Block barriers dominate.
+        assert!(t.barrier_count() >= t.broadcast_count());
+    }
+
+    #[test]
+    fn baseline_and_codag_same_output_different_sync() {
+        let data: Vec<u8> = (0..50_000u32).map(|i| (i % 251) as u8).collect();
+        let comp = crate::codecs::deflate::compress(&data).unwrap();
+        let (o1, bt) = trace_chunk(CodecKind::Deflate, &comp, data.len()).unwrap();
+        let (o2, ct) =
+            codag_engine::trace_chunk(CodecKind::Deflate, &comp, data.len(), Variant::Codag).unwrap();
+        assert_eq!(o1, o2);
+        assert!(bt.broadcast_count() > ct.broadcast_count());
+        // Baseline syncs are block-scope (expensive); CODAG's are all
+        // warp-scope. (Counts aren't comparable: the baseline batches
+        // its output flushes through shared memory.)
+        use crate::decomp::trace::{BarrierScope, UnitEvent};
+        assert!(bt
+            .events
+            .iter()
+            .any(|e| matches!(e, UnitEvent::Barrier { scope: BarrierScope::Block })));
+        assert!(ct
+            .events
+            .iter()
+            .all(|e| !matches!(e, UnitEvent::Barrier { scope: BarrierScope::Block })));
+    }
+
+    #[test]
+    fn widths_match_paper() {
+        assert_eq!(block_width(CodecKind::RleV1), 1024);
+        assert_eq!(block_width(CodecKind::RleV2), 1024);
+        assert_eq!(block_width(CodecKind::Deflate), 128);
+        assert_eq!(warps_per_unit(CodecKind::RleV1), 32);
+        assert_eq!(warps_per_unit(CodecKind::Deflate), 4);
+    }
+}

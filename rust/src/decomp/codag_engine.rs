@@ -1,0 +1,167 @@
+//! CODAG warp-level decompression units (paper §IV, Fig 1b).
+//!
+//! One warp per compressed chunk; all 32 lanes execute the sequential
+//! decode redundantly (all-thread decoding, §IV-D), synchronize with
+//! cheap warp barriers only around the coalesced on-demand reads
+//! (Algorithm 1) and writes, and never broadcast.
+//!
+//! [`trace_chunk`] runs the real codec decoder over the real compressed
+//! bytes and returns both the decompressed output and the [`UnitTrace`]
+//! the GPU simulator schedules. [`Variant`] covers the paper's two
+//! ablations: adding back a prefetch warp (§V-F) and single-thread
+//! decoding (§V-E).
+
+use crate::codecs::{decode_into, CodecKind};
+use crate::decomp::output_stream::{ByteSink, OutputStream, TracingSink};
+use crate::decomp::trace::{UnitEvent, UnitTrace};
+use crate::Result;
+
+/// CODAG engine variants evaluated in the paper's ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Full CODAG: warp unit, all-thread decoding, no prefetch warp.
+    Codag,
+    /// §V-F ablation: CODAG plus a dedicated prefetch warp per chunk
+    /// (two warps scheduled per chunk).
+    CodagPrefetch,
+    /// §V-E ablation: warp unit but only the leader lane decodes, so a
+    /// broadcast is required per decoded symbol.
+    SingleThreadDecode,
+    /// §IV-E configuration: the input buffer lives in registers (two
+    /// 32-bit registers per lane as a double buffer) and fetches are
+    /// warp shuffles instead of shared-memory loads.
+    RegisterBuffer,
+}
+
+impl Variant {
+    /// Warps a single decompression unit occupies.
+    pub fn warps_per_unit(&self) -> u32 {
+        match self {
+            Variant::Codag | Variant::SingleThreadDecode | Variant::RegisterBuffer => 1,
+            Variant::CodagPrefetch => 2,
+        }
+    }
+
+    /// Whether input reads are overlapped by a prefetch warp.
+    pub fn has_prefetch_warp(&self) -> bool {
+        matches!(self, Variant::CodagPrefetch)
+    }
+}
+
+/// Decode one chunk under the CODAG provisioning, returning the output
+/// bytes and the unit trace.
+pub fn trace_chunk(
+    kind: CodecKind,
+    comp: &[u8],
+    uncomp_hint: usize,
+    variant: Variant,
+) -> Result<(Vec<u8>, UnitTrace)> {
+    let sink = ByteSink::with_capacity(uncomp_hint);
+    let mut tracer = TracingSink::codag(sink);
+    if matches!(variant, Variant::SingleThreadDecode) {
+        // Leader-only decoding re-introduces the per-descriptor
+        // broadcast and the decode-state save/restore around on-demand
+        // reads/writes (§IV-D) — ~1/7 extra decode instructions.
+        tracer.per_symbol_broadcast = true;
+        tracer.ops_overhead_eighths = 1;
+    }
+    decode_into(kind, comp, &mut tracer)?;
+    let (sink, events) = tracer.finish();
+    let out = sink.into_bytes();
+    let trace = UnitTrace {
+        events,
+        comp_bytes: comp.len() as u64,
+        uncomp_bytes: out.len() as u64,
+    };
+    Ok((out, trace))
+}
+
+/// Decode-only variant used by throughput benches (skips output copy).
+pub fn trace_chunk_counting(
+    kind: CodecKind,
+    comp: &[u8],
+    variant: Variant,
+) -> Result<UnitTrace> {
+    use crate::decomp::output_stream::CountingSink;
+    let mut tracer = TracingSink::codag(CountingSink::new());
+    if matches!(variant, Variant::SingleThreadDecode) {
+        tracer.per_symbol_broadcast = true;
+        tracer.ops_overhead_eighths = 1;
+    }
+    decode_into(kind, comp, &mut tracer)?;
+    let uncomp = tracer.bytes_written();
+    let (_, events) = tracer.finish();
+    Ok(UnitTrace { events, comp_bytes: comp.len() as u64, uncomp_bytes: uncomp })
+}
+
+/// Sanity summary used by tests: (decode_ops, barriers, broadcasts).
+pub fn trace_summary(t: &UnitTrace) -> (u64, u64, u64) {
+    (t.total_decode_ops(), t.barrier_count(), t.broadcast_count())
+}
+
+/// True if the trace's read events cover the compressed bytes.
+pub fn reads_cover_input(t: &UnitTrace) -> bool {
+    let read: u64 = t
+        .events
+        .iter()
+        .map(|e| if let UnitEvent::Read { bytes } = e { *bytes as u64 } else { 0 })
+        .sum();
+    read + 128 >= t.comp_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::compress_chunk_with;
+
+    fn runny_chunk() -> Vec<u8> {
+        let mut data = Vec::new();
+        for i in 0..4096u64 {
+            data.extend_from_slice(&(i / 64).to_le_bytes());
+        }
+        data
+    }
+
+    #[test]
+    fn codag_trace_has_no_broadcasts() {
+        let data = runny_chunk();
+        let comp = compress_chunk_with(CodecKind::RleV1, &data, 8).unwrap();
+        let (out, trace) = trace_chunk(CodecKind::RleV1, &comp, data.len(), Variant::Codag).unwrap();
+        assert_eq!(out, data);
+        assert_eq!(trace.broadcast_count(), 0);
+        assert!(trace.barrier_count() > 0);
+        assert!(reads_cover_input(&trace));
+    }
+
+    #[test]
+    fn single_thread_variant_broadcasts() {
+        let data = runny_chunk();
+        let comp = compress_chunk_with(CodecKind::RleV1, &data, 8).unwrap();
+        let (_, st) =
+            trace_chunk(CodecKind::RleV1, &comp, data.len(), Variant::SingleThreadDecode).unwrap();
+        let (_, at) = trace_chunk(CodecKind::RleV1, &comp, data.len(), Variant::Codag).unwrap();
+        assert!(st.broadcast_count() > 0);
+        assert_eq!(at.broadcast_count(), 0);
+        // Single-thread decode carries the save/restore overhead.
+        assert!(st.total_decode_ops() > at.total_decode_ops());
+    }
+
+    #[test]
+    fn counting_matches_materializing() {
+        let data = runny_chunk();
+        let comp = compress_chunk_with(CodecKind::RleV2, &data, 8).unwrap();
+        let (_, t1) = trace_chunk(CodecKind::RleV2, &comp, data.len(), Variant::Codag).unwrap();
+        let t2 = trace_chunk_counting(CodecKind::RleV2, &comp, Variant::Codag).unwrap();
+        assert_eq!(t1.uncomp_bytes, t2.uncomp_bytes);
+        assert_eq!(t1.total_decode_ops(), t2.total_decode_ops());
+    }
+
+    #[test]
+    fn deflate_traces_work_too() {
+        let data = b"deflate deflate deflate deflate deflate!".repeat(100);
+        let comp = crate::codecs::deflate::compress(&data).unwrap();
+        let (out, trace) = trace_chunk(CodecKind::Deflate, &comp, data.len(), Variant::Codag).unwrap();
+        assert_eq!(out, data);
+        assert!(trace.total_decode_ops() > 0);
+    }
+}

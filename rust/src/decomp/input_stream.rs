@@ -1,0 +1,151 @@
+//! `input_stream` — the paper's Table I reading abstraction.
+//!
+//! A byte/bit cursor over one compressed chunk with the two Table I
+//! member functions (`fetch_bits`, `peek_bits`) plus the byte-granular
+//! reads the RLE codecs use. The structure models Algorithm 1: data is
+//! conceptually staged through a double-cache-line input buffer refilled
+//! 128 B at a time; [`InputStream::bytes_consumed`] exposes the high-water
+//! mark the tracing layer converts into coalesced `Read` events.
+//!
+//! The DEFLATE path needs LSB-first sub-byte access and RLE v2 needs
+//! MSB-first; both conventions are provided on the same cursor (a chunk
+//! uses one convention throughout, so the mixed API carries no state
+//! hazards — switching convention mid-byte is a programming error caught
+//! by debug assertions).
+
+use crate::format::bitio::{LsbBitReader, MsbBitReader};
+use crate::format::varint;
+use crate::{corrupt, Result};
+
+/// Cursor over a compressed chunk (Table I).
+#[derive(Debug, Clone)]
+pub struct InputStream<'a> {
+    data: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> InputStream<'a> {
+    /// New stream over a compressed chunk.
+    pub fn new(data: &'a [u8]) -> Self {
+        InputStream { data, pos: 0 }
+    }
+
+    /// Bytes consumed so far (drives cache-line refill accounting).
+    #[inline]
+    pub fn bytes_consumed(&self) -> u64 {
+        self.pos as u64
+    }
+
+    /// Total chunk length.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the cursor is at the end.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.data.len()
+    }
+
+    /// Remaining bytes.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.data.len() - self.pos
+    }
+
+    /// Fetch one byte.
+    #[inline]
+    pub fn fetch_byte(&mut self) -> Result<u8> {
+        let b = *self.data.get(self.pos).ok_or_else(|| corrupt("input_stream: eof"))?;
+        self.pos += 1;
+        Ok(b)
+    }
+
+    /// Peek one byte without consuming.
+    #[inline]
+    pub fn peek_byte(&self) -> Result<u8> {
+        self.data.get(self.pos).copied().ok_or_else(|| corrupt("input_stream: eof"))
+    }
+
+    /// Fetch `n` raw bytes as a slice.
+    #[inline]
+    pub fn fetch_bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let s = self
+            .data
+            .get(self.pos..self.pos + n)
+            .ok_or_else(|| corrupt(format!("input_stream: wanted {n} bytes, {} left", self.remaining())))?;
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Fetch an unsigned LEB128 varint.
+    #[inline]
+    pub fn fetch_uvarint(&mut self) -> Result<u64> {
+        varint::read_uvarint(self.data, &mut self.pos)
+    }
+
+    /// Fetch a zigzag signed varint.
+    #[inline]
+    pub fn fetch_svarint(&mut self) -> Result<i64> {
+        varint::read_svarint(self.data, &mut self.pos)
+    }
+
+    /// Borrow the remainder of the chunk as an MSB-first bit reader
+    /// (RLE v2 packed sections); [`commit_msb`] advances the cursor.
+    pub fn msb_reader(&self) -> MsbBitReader<'a> {
+        MsbBitReader::new(&self.data[self.pos..])
+    }
+
+    /// Advance the cursor past the bytes consumed by an [`MsbBitReader`]
+    /// obtained from [`msb_reader`].
+    pub fn commit_msb(&mut self, reader: &MsbBitReader<'_>) {
+        self.pos += reader.byte_pos();
+    }
+
+    /// Borrow the remainder as an LSB-first bit reader (DEFLATE).
+    pub fn lsb_reader(&self) -> LsbBitReader<'a> {
+        LsbBitReader::new(&self.data[self.pos..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::varint::write_uvarint;
+
+    #[test]
+    fn byte_and_varint_reads() {
+        let mut buf = vec![7u8];
+        write_uvarint(&mut buf, 300);
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut s = InputStream::new(&buf);
+        assert_eq!(s.fetch_byte().unwrap(), 7);
+        assert_eq!(s.fetch_uvarint().unwrap(), 300);
+        assert_eq!(s.fetch_bytes(3).unwrap(), &[1, 2, 3]);
+        assert!(s.is_empty());
+        assert_eq!(s.bytes_consumed(), buf.len() as u64);
+    }
+
+    #[test]
+    fn msb_reader_commit() {
+        let buf = [0xAB, 0xCD, 0xEF];
+        let mut s = InputStream::new(&buf);
+        s.fetch_byte().unwrap();
+        let mut r = s.msb_reader();
+        assert_eq!(r.read_bits(12).unwrap(), 0xCDE);
+        s.commit_msb(&r);
+        // 12 bits consumed -> rounds to 2 bytes.
+        assert_eq!(s.bytes_consumed(), 3);
+    }
+
+    #[test]
+    fn eof_errors() {
+        let buf = [1u8];
+        let mut s = InputStream::new(&buf);
+        s.fetch_byte().unwrap();
+        assert!(s.fetch_byte().is_err());
+        assert!(s.fetch_bytes(1).is_err());
+        assert!(s.peek_byte().is_err());
+    }
+}

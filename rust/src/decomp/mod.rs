@@ -1,0 +1,37 @@
+//! The CODAG decompression framework core (paper §IV).
+//!
+//! CODAG's central abstraction is the pair of stream objects every codec
+//! is written against:
+//!
+//! * [`input_stream`] — Table I: `fetch_bits` / `peek_bits` over the
+//!   compressed chunk, with coalesced cache-line refill accounting (the
+//!   shared-memory input buffer of Algorithm 1).
+//! * [`output_stream`] — Table II: `write_byte`, `write_run(init, len,
+//!   delta)`, and `memcpy(offset, len)` writing primitives, implemented
+//!   by materializing sinks, tracing sinks (for the GPU simulator), and
+//!   run-recording sinks (for the PJRT expand path).
+//!
+//! On top of the streams sit the two **engines** that reproduce the
+//! paper's comparison:
+//!
+//! * [`codag_engine`] — warp-level decompression: one warp per chunk,
+//!   all-thread decoding, warp-scope barriers only around coalesced
+//!   on-demand reads/writes (Fig 1b).
+//! * [`block_engine`] — the RAPIDS-style baseline: one thread block per
+//!   chunk, a single leader decode thread, per-symbol broadcast + block
+//!   barrier, and a dedicated prefetch warp (Fig 1a).
+//!
+//! Both engines run the *same* codec decode logic; they differ only in
+//! how the decode/read/write activity is provisioned onto simulated GPU
+//! resources — which is exactly the paper's claim about where the
+//! performance difference comes from.
+
+pub mod block_engine;
+pub mod codag_engine;
+pub mod input_stream;
+pub mod output_stream;
+pub mod trace;
+
+pub use input_stream::InputStream;
+pub use output_stream::{ByteSink, CountingSink, OutputStream, RunRecord, RunRecorder, SymbolKind, TracingSink};
+pub use trace::{BarrierScope, UnitEvent, UnitTrace};

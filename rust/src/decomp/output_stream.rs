@@ -1,0 +1,619 @@
+//! `output_stream` — the paper's Table II writing abstraction.
+//!
+//! Decoders are written once against the [`OutputStream`] trait and run
+//! unchanged against:
+//!
+//! * [`ByteSink`] — materializes decompressed bytes (the correctness /
+//!   CPU-throughput path).
+//! * [`RunRecorder`] — records `write_run` calls as [`RunRecord`]s instead
+//!   of expanding them, producing the fixed-shape input of the AOT
+//!   JAX/Pallas expand kernel (the L2/L1 half of the hybrid path).
+//! * [`TracingSink`] — wraps another sink and emits [`UnitEvent`]s for the
+//!   GPU timing simulator: coalesced writes, barriers, broadcasts, decode
+//!   bursts, and cache-line input refills.
+//! * [`CountingSink`] — counts output bytes only (ratio measurements).
+//!
+//! The three primitives match Table II exactly: `write_byte` (single
+//! literal), `write_run(init, len, delta)` (RLE/delta expansion — delta 0
+//! is a plain run), and `memcpy(offset, len)` (dictionary copy, offset
+//! counted back from the current end of output, as in DEFLATE).
+
+use crate::decomp::trace::{BarrierScope, UnitEvent};
+use crate::{corrupt, Result};
+
+/// Classification of a decoded symbol, used by instrumentation to model
+/// per-symbol decode cost and the baseline's broadcast granularity.
+///
+/// *Descriptor* kinds (`RleRun`, `RleLiteralGroup`, `RleV2Header`,
+/// `DeflateHeader`) mark points where the baseline's leader thread has
+/// decoded a self-contained work item and broadcasts it to the block
+/// (RAPIDS broadcasts per descriptor, and per 32-symbol batch for
+/// DEFLATE — not per element).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymbolKind {
+    /// RLE v1/v2 run header (control byte + varints) — descriptor.
+    RleRun,
+    /// RLE v1 literal-group control byte — descriptor.
+    RleLiteralGroup,
+    /// One literal element within a group.
+    RleLiteral,
+    /// RLE v2 sub-encoding header — descriptor.
+    RleV2Header,
+    /// DEFLATE literal symbol (one Huffman decode).
+    DeflateLiteral,
+    /// DEFLATE length/distance match (two Huffman decodes + extra bits).
+    DeflateMatch,
+    /// DEFLATE block header (incl. dynamic Huffman table build) — descriptor.
+    DeflateHeader,
+}
+
+impl SymbolKind {
+    /// True if the baseline broadcasts after decoding this symbol.
+    pub fn is_descriptor(&self) -> bool {
+        matches!(
+            self,
+            SymbolKind::RleRun
+                | SymbolKind::RleLiteralGroup
+                | SymbolKind::RleV2Header
+                | SymbolKind::DeflateHeader
+        )
+    }
+
+    /// True for DEFLATE body symbols, which the baseline batches 32 at a
+    /// time through its shared-memory symbol queue before syncing.
+    pub fn is_deflate_body(&self) -> bool {
+        matches!(self, SymbolKind::DeflateLiteral | SymbolKind::DeflateMatch)
+    }
+}
+
+/// The Table II writing abstraction plus instrumentation hooks.
+///
+/// `init`/`delta` are element *bit patterns* as u64; `width` is the
+/// element width in bytes (1/2/4/8). Deltas wrap in the element's width
+/// (matching ORC's integer overflow semantics).
+pub trait OutputStream {
+    /// Write one literal byte (Table II `write_byte`).
+    fn write_byte(&mut self, b: u8) -> Result<()>;
+
+    /// Write `len` elements of `width` bytes: `init, init+delta, ...`
+    /// (Table II `write_run`).
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()>;
+
+    /// Copy `len` bytes starting `offset` bytes back from the current end
+    /// of the output (Table II `memcpy`; `len > offset` wraps the window,
+    /// the special case of Algorithm 2).
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()>;
+
+    /// Bytes written so far.
+    fn bytes_written(&self) -> u64;
+
+    /// Instrumentation: one decoded symbol costing ~`ops` scalar
+    /// instructions, with the decoder now `input_pos` bytes into the
+    /// compressed stream. No-op unless tracing.
+    #[inline]
+    fn on_symbol(&mut self, _kind: SymbolKind, _ops: u32, _input_pos: u64) {}
+}
+
+/// Expansion of a `write_run` into bytes, shared by sinks.
+///
+/// Hot path of the CPU decode: unit runs (literal elements) take the
+/// early exit, longer runs use per-width monomorphic loops so the
+/// compiler emits straight-line stores instead of a variable-length
+/// `extend_from_slice` per element (§Perf L3, EXPERIMENTS.md).
+#[inline]
+fn expand_run_into(out: &mut Vec<u8>, init: u64, len: u64, delta: i64, width: u8) {
+    let w = width as usize;
+    if len == 1 {
+        let le = init.to_le_bytes();
+        out.extend_from_slice(&le[..w]);
+        return;
+    }
+    out.reserve(len as usize * w);
+    let mut v = init;
+    let d = delta as u64;
+    match width {
+        1 => {
+            for _ in 0..len {
+                out.push(v as u8);
+                v = v.wrapping_add(d);
+            }
+        }
+        2 => {
+            for _ in 0..len {
+                out.extend_from_slice(&(v as u16).to_le_bytes());
+                v = v.wrapping_add(d);
+            }
+        }
+        4 => {
+            for _ in 0..len {
+                out.extend_from_slice(&(v as u32).to_le_bytes());
+                v = v.wrapping_add(d);
+            }
+        }
+        _ => {
+            for _ in 0..len {
+                out.extend_from_slice(&v.to_le_bytes());
+                v = v.wrapping_add(d);
+            }
+        }
+    }
+}
+
+/// Materializing sink: collects decompressed bytes in memory.
+#[derive(Debug, Default, Clone)]
+pub struct ByteSink {
+    /// The decompressed output.
+    pub out: Vec<u8>,
+}
+
+impl ByteSink {
+    /// New empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// New sink with reserved capacity.
+    pub fn with_capacity(cap: usize) -> Self {
+        ByteSink { out: Vec::with_capacity(cap) }
+    }
+
+    /// Consume the sink, returning the bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.out
+    }
+}
+
+impl OutputStream for ByteSink {
+    #[inline]
+    fn write_byte(&mut self, b: u8) -> Result<()> {
+        self.out.push(b);
+        Ok(())
+    }
+
+    #[inline]
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()> {
+        expand_run_into(&mut self.out, init, len, delta, width);
+        Ok(())
+    }
+
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
+        let off = offset as usize;
+        let n = len as usize;
+        if off == 0 || off > self.out.len() {
+            return Err(corrupt(format!(
+                "memcpy offset {off} out of window (output len {})",
+                self.out.len()
+            )));
+        }
+        let start = self.out.len() - off;
+        self.out.reserve(n);
+        // Overlapping copy semantics: bytes written by this memcpy are
+        // themselves part of the source window (offset < len wraps).
+        for i in 0..n {
+            let b = self.out[start + i];
+            self.out.push(b);
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.out.len() as u64
+    }
+}
+
+/// Counting sink: discards data, tracks only the output length.
+/// Still enforces `memcpy` window validity so corrupt streams fail.
+#[derive(Debug, Default, Clone)]
+pub struct CountingSink {
+    len: u64,
+}
+
+impl CountingSink {
+    /// New zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl OutputStream for CountingSink {
+    #[inline]
+    fn write_byte(&mut self, _b: u8) -> Result<()> {
+        self.len += 1;
+        Ok(())
+    }
+
+    #[inline]
+    fn write_run(&mut self, _init: u64, len: u64, _delta: i64, width: u8) -> Result<()> {
+        self.len += len * width as u64;
+        Ok(())
+    }
+
+    #[inline]
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
+        if offset == 0 || offset > self.len {
+            return Err(corrupt("memcpy offset out of window"));
+        }
+        self.len += len;
+        Ok(())
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.len
+    }
+}
+
+/// A recorded `write_run` call: the fixed-shape unit the AOT JAX/Pallas
+/// expand kernel consumes (L2's `values/starts/deltas` arrays).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunRecord {
+    /// First element bit pattern.
+    pub init: u64,
+    /// Number of elements.
+    pub len: u64,
+    /// Per-element increment (0 for plain runs).
+    pub delta: i64,
+}
+
+/// Records runs instead of expanding them (RLE hybrid path).
+///
+/// `write_byte`/`memcpy` are rejected: the PJRT expand path only applies
+/// to run-structured codecs (RLE v1/v2). Literal groups decode to
+/// length-1 runs, which is exactly how the expand kernel treats them.
+#[derive(Debug, Default, Clone)]
+pub struct RunRecorder {
+    /// Recorded runs in output order.
+    pub runs: Vec<RunRecord>,
+    /// Element width (bytes) of the decoded column.
+    pub width: u8,
+    bytes: u64,
+}
+
+impl RunRecorder {
+    /// New recorder; `width` is fixed on the first `write_run`.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total decoded elements across all runs.
+    pub fn total_elems(&self) -> u64 {
+        self.runs.iter().map(|r| r.len).sum()
+    }
+}
+
+impl OutputStream for RunRecorder {
+    fn write_byte(&mut self, b: u8) -> Result<()> {
+        // A raw byte is a width-1 length-1 run; keeps byte-RLE usable here.
+        self.write_run(b as u64, 1, 0, 1)
+    }
+
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()> {
+        if self.width == 0 {
+            self.width = width;
+        } else if self.width != width {
+            return Err(corrupt("RunRecorder: mixed element widths in one chunk"));
+        }
+        // Merge with the previous run when contiguous (common after
+        // literal groups decode to unit runs).
+        if let Some(last) = self.runs.last_mut() {
+            if last.len == 1 && len == 1 && delta == 0 {
+                let implied = last.init.wrapping_add(last.delta as u64);
+                if last.delta == 0 && implied == init && last.init == init {
+                    last.len += 1;
+                    self.bytes += width as u64;
+                    return Ok(());
+                }
+            }
+        }
+        self.runs.push(RunRecord { init, len, delta });
+        self.bytes += len * width as u64;
+        Ok(())
+    }
+
+    fn memcpy(&mut self, _offset: u64, _len: u64) -> Result<()> {
+        Err(corrupt("RunRecorder does not support memcpy (dictionary codecs)"))
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+}
+
+/// Cache line size assumed throughout (A100/V100 L1/L2 sector line).
+pub const CACHE_LINE: u64 = 128;
+
+/// DEFLATE symbols the baseline queues in shared memory before syncing
+/// (the RAPIDS gpuinflate batch buffer holds 32 LZ items).
+pub const DEFLATE_BATCH: u32 = 32;
+
+/// Wraps a sink and emits [`UnitEvent`]s modelling how a decompression
+/// unit would execute on the GPU: decode bursts, coalesced cache-line
+/// input refills (derived from the decoder's reported input position),
+/// cache-line-buffered coalesced output writes, and the barriers /
+/// broadcasts implied by the provisioning mode.
+#[derive(Debug)]
+pub struct TracingSink<S: OutputStream> {
+    /// The wrapped sink (usually [`ByteSink`] or [`CountingSink`]).
+    pub inner: S,
+    /// Collected events.
+    pub events: Vec<UnitEvent>,
+    /// Lanes participating in writes (32 for a warp unit, block width for
+    /// the baseline).
+    pub write_width: u32,
+    /// Baseline / single-thread-decode mode: the leader broadcasts each
+    /// decoded descriptor (and each 32-symbol DEFLATE batch) and the
+    /// unit synchronizes. CODAG's all-thread decoding emits neither.
+    pub per_symbol_broadcast: bool,
+    /// Barrier scope used around coalesced reads/writes.
+    pub barrier_scope: BarrierScope,
+    /// Input bytes already covered by emitted `Read` events.
+    input_fetched: u64,
+    /// Decode ops accumulated since the last non-decode event (merged so
+    /// traces stay compact).
+    pending_ops: u64,
+    /// Output bytes produced but not yet flushed as write transactions
+    /// (the output staging buffer of Fig 1b / RAPIDS batch buffers).
+    pending_out: u64,
+    /// Cache lines accumulated before a flush: 1 for CODAG (Algorithm 2
+    /// writes one line per warp iteration), 8 for the baseline (RAPIDS
+    /// stages ~1 KiB in its shared-memory batch buffers before the
+    /// block-wide flush barrier).
+    write_batch: u64,
+    /// DEFLATE body symbols decoded since the last batch sync.
+    deflate_batch: u32,
+    /// Extra decode work fraction in 1/8ths added per symbol — the
+    /// leader's decode-state save/restore and broadcast staging in
+    /// single-thread decoding (§IV-D); 0 for all-thread decoding where
+    /// every lane already holds the decoded state.
+    pub ops_overhead_eighths: u32,
+}
+
+impl<S: OutputStream> TracingSink<S> {
+    /// CODAG warp-level tracing: 32 write lanes, warp barriers, no
+    /// broadcasts (all-thread decoding).
+    pub fn codag(inner: S) -> Self {
+        TracingSink {
+            inner,
+            events: Vec::new(),
+            write_width: 32,
+            per_symbol_broadcast: false,
+            barrier_scope: BarrierScope::Warp,
+            input_fetched: 0,
+            pending_ops: 0,
+            pending_out: 0,
+            write_batch: 1,
+            deflate_batch: 0,
+            ops_overhead_eighths: 0,
+        }
+    }
+
+    /// Baseline (RAPIDS-style) tracing: `block_width` write lanes, block
+    /// barriers, a broadcast + barrier per decoded descriptor.
+    pub fn baseline(inner: S, block_width: u32) -> Self {
+        TracingSink {
+            inner,
+            events: Vec::new(),
+            write_width: block_width,
+            per_symbol_broadcast: true,
+            barrier_scope: BarrierScope::Block,
+            input_fetched: 0,
+            pending_ops: 0,
+            pending_out: 0,
+            write_batch: 8,
+            deflate_batch: 0,
+            ops_overhead_eighths: 0,
+        }
+    }
+
+    fn flush_ops(&mut self) {
+        while self.pending_ops > 0 {
+            let ops = self.pending_ops.min(u32::MAX as u64) as u32;
+            self.events.push(UnitEvent::Decode { ops });
+            self.pending_ops -= ops as u64;
+        }
+    }
+
+    /// Account `bytes` of produced output; emit coalesced write
+    /// transactions whenever full cache lines are available (the real
+    /// kernels stage output and write 128 B per warp iteration —
+    /// Algorithm 2's loop body).
+    fn add_output(&mut self, bytes: u64) {
+        self.pending_out += bytes;
+        if self.pending_out >= CACHE_LINE * self.write_batch {
+            self.flush_ops();
+            self.events.push(UnitEvent::Barrier { scope: self.barrier_scope });
+            while self.pending_out >= CACHE_LINE {
+                let active = self.write_width.min(32);
+                self.events.push(UnitEvent::Write { bytes: CACHE_LINE as u32, active });
+                self.pending_out -= CACHE_LINE;
+            }
+        }
+    }
+
+    /// Finish tracing: flush pending decode ops and the write-buffer
+    /// tail, and return (sink, events).
+    pub fn finish(mut self) -> (S, Vec<UnitEvent>) {
+        self.flush_ops();
+        if self.pending_out > 0 {
+            self.events.push(UnitEvent::Barrier { scope: self.barrier_scope });
+            let active = ((self.pending_out + 3) / 4).min(32) as u32;
+            self.events.push(UnitEvent::Write { bytes: self.pending_out as u32, active });
+            self.pending_out = 0;
+        }
+        (self.inner, self.events)
+    }
+}
+
+impl<S: OutputStream> OutputStream for TracingSink<S> {
+    fn write_byte(&mut self, b: u8) -> Result<()> {
+        self.inner.write_byte(b)?;
+        self.add_output(1);
+        Ok(())
+    }
+
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()> {
+        self.inner.write_run(init, len, delta, width)?;
+        self.add_output(len * width as u64);
+        Ok(())
+    }
+
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
+        self.inner.memcpy(offset, len)?;
+        // Algorithm 2 reads back 2×4 B per 4 B written from the output
+        // window; that read traffic hits L1/L2 (recently written lines),
+        // so only the write traffic is charged to DRAM.
+        self.add_output(len);
+        Ok(())
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.inner.bytes_written()
+    }
+
+    fn on_symbol(&mut self, kind: SymbolKind, ops: u32, input_pos: u64) {
+        let ops = ops + ops * self.ops_overhead_eighths / 8;
+        self.pending_ops += ops as u64;
+        if self.per_symbol_broadcast {
+            let sync = kind.is_descriptor() || {
+                if kind.is_deflate_body() {
+                    self.deflate_batch += 1;
+                    self.deflate_batch >= DEFLATE_BATCH
+                } else {
+                    false
+                }
+            };
+            if sync {
+                self.deflate_batch = 0;
+                self.flush_ops();
+                self.events.push(UnitEvent::Broadcast);
+                self.events.push(UnitEvent::Barrier { scope: self.barrier_scope });
+            }
+        }
+        // On-demand coalesced input refills (Algorithm 1): one cache line
+        // per 128 B of compressed input crossed.
+        while self.input_fetched < input_pos {
+            self.flush_ops();
+            if matches!(self.barrier_scope, BarrierScope::Warp) {
+                // CODAG refills synchronize the warp (Algorithm 1 line 2/7).
+                self.events.push(UnitEvent::Barrier { scope: BarrierScope::Warp });
+            }
+            self.events.push(UnitEvent::Read { bytes: CACHE_LINE as u32 });
+            self.input_fetched += CACHE_LINE;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_sink_run_expansion_widths() {
+        let mut s = ByteSink::new();
+        s.write_run(0x0102, 3, 0, 2).unwrap();
+        assert_eq!(s.out, vec![0x02, 0x01, 0x02, 0x01, 0x02, 0x01]);
+        let mut s = ByteSink::new();
+        s.write_run(10, 4, 3, 1).unwrap();
+        assert_eq!(s.out, vec![10, 13, 16, 19]);
+    }
+
+    #[test]
+    fn byte_sink_run_negative_delta_wraps_in_width() {
+        let mut s = ByteSink::new();
+        s.write_run(1, 3, -1, 1).unwrap();
+        assert_eq!(s.out, vec![1, 0, 255]);
+    }
+
+    #[test]
+    fn byte_sink_memcpy_overlapping() {
+        let mut s = ByteSink::new();
+        for b in b"abc" {
+            s.write_byte(*b).unwrap();
+        }
+        // offset 3, len 7 -> "abcabca" appended (wrapping window).
+        s.memcpy(3, 7).unwrap();
+        assert_eq!(&s.out, b"abcabcabca");
+    }
+
+    #[test]
+    fn byte_sink_memcpy_bad_offset() {
+        let mut s = ByteSink::new();
+        s.write_byte(b'x').unwrap();
+        assert!(s.memcpy(2, 1).is_err());
+        assert!(s.memcpy(0, 1).is_err());
+    }
+
+    #[test]
+    fn counting_sink_matches_byte_sink() {
+        let mut b = ByteSink::new();
+        let mut c = CountingSink::new();
+        for s in [&mut b as &mut dyn OutputStream, &mut c] {
+            s.write_byte(1).unwrap();
+            s.write_run(5, 10, 2, 4).unwrap();
+            s.memcpy(8, 20).unwrap();
+        }
+        assert_eq!(b.bytes_written(), c.bytes_written());
+    }
+
+    #[test]
+    fn run_recorder_records_and_rejects_memcpy() {
+        let mut r = RunRecorder::new();
+        r.write_run(100, 50, 0, 8).unwrap();
+        r.write_run(7, 1, 0, 8).unwrap();
+        assert!(r.memcpy(1, 1).is_err());
+        assert_eq!(r.total_elems(), 51);
+        assert_eq!(r.bytes_written(), 51 * 8);
+        assert_eq!(r.runs[0], RunRecord { init: 100, len: 50, delta: 0 });
+    }
+
+    #[test]
+    fn run_recorder_rejects_mixed_widths() {
+        let mut r = RunRecorder::new();
+        r.write_run(1, 1, 0, 8).unwrap();
+        assert!(r.write_run(1, 1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn tracing_sink_codag_no_broadcast() {
+        let mut t = TracingSink::codag(ByteSink::new());
+        t.on_symbol(SymbolKind::RleRun, 20, 10);
+        t.write_run(5, 64, 0, 8).unwrap();
+        let (sink, events) = t.finish();
+        assert_eq!(sink.bytes_written(), 512);
+        assert!(events.iter().all(|e| !matches!(e, UnitEvent::Broadcast)));
+        assert!(events.iter().any(|e| matches!(e, UnitEvent::Read { .. })));
+        assert!(events.iter().any(|e| matches!(e, UnitEvent::Write { .. })));
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, UnitEvent::Barrier { scope: BarrierScope::Warp })));
+    }
+
+    #[test]
+    fn tracing_sink_baseline_broadcasts_per_symbol() {
+        let mut t = TracingSink::baseline(ByteSink::new(), 1024);
+        t.on_symbol(SymbolKind::RleRun, 20, 10);
+        t.on_symbol(SymbolKind::RleRun, 20, 12);
+        t.write_run(5, 4, 0, 1).unwrap();
+        let (_, events) = t.finish();
+        let bcasts = events.iter().filter(|e| matches!(e, UnitEvent::Broadcast)).count();
+        assert_eq!(bcasts, 2);
+        assert!(events
+            .iter()
+            .any(|e| matches!(e, UnitEvent::Barrier { scope: BarrierScope::Block })));
+    }
+
+    #[test]
+    fn tracing_read_events_cover_input() {
+        let mut t = TracingSink::codag(CountingSink::new());
+        t.on_symbol(SymbolKind::RleRun, 5, 300);
+        let (_, events) = t.finish();
+        let read_bytes: u64 = events
+            .iter()
+            .map(|e| if let UnitEvent::Read { bytes } = e { *bytes as u64 } else { 0 })
+            .sum();
+        assert_eq!(read_bytes, 384); // ceil(300/128)*128
+    }
+}

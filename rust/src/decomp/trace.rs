@@ -1,0 +1,110 @@
+//! Decompression-unit event traces.
+//!
+//! A decompression unit (one chunk being decompressed) is summarized as a
+//! sequence of [`UnitEvent`]s. The real codec decoders emit these while
+//! decoding real data, so the traces carry the true per-dataset symbol
+//! statistics (run lengths, symbol bit widths, memcpy lengths). The GPU
+//! timing simulator ([`crate::gpu_sim`]) then replays them under either
+//! the CODAG warp-level provisioning or the RAPIDS-style block-level
+//! provisioning to produce the paper's characterization metrics.
+
+/// Scope of a synchronization barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BarrierScope {
+    /// `__syncwarp` — cheap, warp-wide (CODAG).
+    Warp,
+    /// `__syncthreads` — expensive, block-wide (baseline).
+    Block,
+}
+
+/// One event in a decompression unit's execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnitEvent {
+    /// Sequential decode work: `ops` arithmetic/logic instructions executed
+    /// by the decoding thread(s) — all lanes in CODAG's all-thread mode,
+    /// one leader lane in the baseline.
+    Decode { ops: u32 },
+    /// Coalesced read of one cache line (128 B) of compressed input from
+    /// global memory into the input buffer (Algorithm 1).
+    Read { bytes: u32 },
+    /// Coalesced write of decompressed output to global memory.
+    /// `active` is the number of lanes with work (run length can be
+    /// shorter than the unit width — paper §III notes idle write lanes).
+    Write { bytes: u32, active: u32 },
+    /// Synchronization barrier.
+    Barrier { scope: BarrierScope },
+    /// Leader-to-lanes broadcast of decoded information (baseline only;
+    /// CODAG's all-thread decoding eliminates these, §IV-D).
+    Broadcast,
+}
+
+/// The full event trace of one decompression unit (one chunk).
+#[derive(Debug, Clone, Default)]
+pub struct UnitTrace {
+    /// Events in program order.
+    pub events: Vec<UnitEvent>,
+    /// Compressed size of the chunk (bytes).
+    pub comp_bytes: u64,
+    /// Uncompressed size of the chunk (bytes).
+    pub uncomp_bytes: u64,
+}
+
+impl UnitTrace {
+    /// Total decode ops in the trace.
+    pub fn total_decode_ops(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                UnitEvent::Decode { ops } => *ops as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Number of barrier events.
+    pub fn barrier_count(&self) -> u64 {
+        self.events.iter().filter(|e| matches!(e, UnitEvent::Barrier { .. })).count() as u64
+    }
+
+    /// Number of broadcast events.
+    pub fn broadcast_count(&self) -> u64 {
+        self.events.iter().filter(|e| matches!(e, UnitEvent::Broadcast)).count() as u64
+    }
+
+    /// Bytes moved to/from global memory.
+    pub fn memory_bytes(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| match e {
+                UnitEvent::Read { bytes } => *bytes as u64,
+                UnitEvent::Write { bytes, .. } => *bytes as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_aggregates() {
+        let t = UnitTrace {
+            events: vec![
+                UnitEvent::Decode { ops: 10 },
+                UnitEvent::Read { bytes: 128 },
+                UnitEvent::Broadcast,
+                UnitEvent::Barrier { scope: BarrierScope::Block },
+                UnitEvent::Write { bytes: 256, active: 32 },
+                UnitEvent::Decode { ops: 5 },
+            ],
+            comp_bytes: 100,
+            uncomp_bytes: 400,
+        };
+        assert_eq!(t.total_decode_ops(), 15);
+        assert_eq!(t.barrier_count(), 1);
+        assert_eq!(t.broadcast_count(), 1);
+        assert_eq!(t.memory_bytes(), 384);
+    }
+}

@@ -1,0 +1,405 @@
+//! Bit-granular readers and writers.
+//!
+//! Two conventions coexist in the codecs we reproduce:
+//!
+//! * **DEFLATE (RFC 1951)** packs bits LSB-first within each byte:
+//!   [`LsbBitReader`] / [`LsbBitWriter`].
+//! * **ORC RLE v2** packs values MSB-first / big-endian across bytes:
+//!   [`MsbBitReader`] / [`MsbBitWriter`].
+//!
+//! Both readers operate over a borrowed `&[u8]` with an explicit cursor so
+//! the CODAG `input_stream` abstraction (see [`crate::decomp`]) can wrap
+//! them and account cache-line refills.
+
+use crate::{corrupt, Result};
+
+/// LSB-first bit reader (DEFLATE convention).
+///
+/// Maintains a 64-bit accumulator refilled from the byte stream; `fetch`
+/// consumes bits, `peek` does not. Peeking past the end of the stream
+/// returns zero bits (DEFLATE decoders rely on this to decode the final
+/// code of a stream), but *consuming* past the end is an error.
+#[derive(Debug, Clone)]
+pub struct LsbBitReader<'a> {
+    data: &'a [u8],
+    /// Next byte index to load into the accumulator.
+    pos: usize,
+    /// Bit accumulator; lowest bit = next bit of the stream.
+    acc: u64,
+    /// Number of valid bits in `acc`.
+    nbits: u32,
+    /// Total bits consumed so far (for symbol-length statistics).
+    consumed_bits: u64,
+}
+
+impl<'a> LsbBitReader<'a> {
+    /// Create a reader over `data`.
+    pub fn new(data: &'a [u8]) -> Self {
+        LsbBitReader { data, pos: 0, acc: 0, nbits: 0, consumed_bits: 0 }
+    }
+
+    /// Total number of bits consumed so far.
+    #[inline]
+    pub fn consumed_bits(&self) -> u64 {
+        self.consumed_bits
+    }
+
+    /// Byte offset of the next byte that would be loaded (coarse progress).
+    #[inline]
+    pub fn byte_pos(&self) -> usize {
+        self.pos - (self.nbits as usize + 7) / 8
+    }
+
+    /// True when every bit has been consumed.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nbits == 0 && self.pos >= self.data.len()
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.acc |= (self.data[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Peek at the next `n` (≤ 57) bits without consuming them.
+    /// Bits past the end of the stream read as zero.
+    #[inline]
+    pub fn peek_bits(&mut self, n: u32) -> u64 {
+        debug_assert!(n <= 57);
+        self.refill();
+        self.acc & ((1u64 << n) - 1)
+    }
+
+    /// Consume and return the next `n` (≤ 57) bits.
+    #[inline]
+    pub fn fetch_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 57);
+        self.refill();
+        if self.nbits < n {
+            return Err(corrupt(format!(
+                "bit stream exhausted: wanted {n} bits, {} available",
+                self.nbits
+            )));
+        }
+        let v = self.acc & ((1u64 << n) - 1);
+        self.acc >>= n;
+        self.nbits -= n;
+        self.consumed_bits += n as u64;
+        Ok(v)
+    }
+
+    /// Drop `n` bits that were previously peeked (must be available).
+    #[inline]
+    pub fn skip_bits(&mut self, n: u32) -> Result<()> {
+        self.fetch_bits(n).map(|_| ())
+    }
+
+    /// Discard bits up to the next byte boundary (DEFLATE stored blocks).
+    #[inline]
+    pub fn align_byte(&mut self) {
+        let drop = self.nbits % 8;
+        self.acc >>= drop;
+        self.nbits -= drop;
+        self.consumed_bits += drop as u64;
+    }
+
+    /// Read `len` bytes after aligning to a byte boundary.
+    pub fn read_aligned_bytes(&mut self, len: usize) -> Result<Vec<u8>> {
+        self.align_byte();
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.fetch_bits(8)? as u8);
+        }
+        Ok(out)
+    }
+}
+
+/// LSB-first bit writer (DEFLATE convention).
+#[derive(Debug, Default, Clone)]
+pub struct LsbBitWriter {
+    out: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl LsbBitWriter {
+    /// Create an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n` (≤ 57) bits of `v`.
+    #[inline]
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 57);
+        debug_assert!(n == 64 || v < (1u64 << n.max(1)) || n == 0);
+        self.acc |= v << self.nbits;
+        self.nbits += n;
+        while self.nbits >= 8 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    /// Zero-pad to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        if self.nbits > 0 {
+            self.out.push((self.acc & 0xFF) as u8);
+            self.acc = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Append raw bytes (caller must be byte-aligned).
+    pub fn put_aligned_bytes(&mut self, bytes: &[u8]) {
+        debug_assert_eq!(self.nbits, 0, "put_aligned_bytes requires byte alignment");
+        self.out.extend_from_slice(bytes);
+    }
+
+    /// Flush and return the underlying buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+
+    /// Bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.out.len() as u64 * 8 + self.nbits as u64
+    }
+}
+
+/// MSB-first (big-endian) bit reader — ORC RLE v2 convention.
+///
+/// Keeps a 64-bit accumulator so the common case (packed widths ≤ 56)
+/// is a shift+mask instead of a per-byte loop (§Perf L3).
+#[derive(Debug, Clone)]
+pub struct MsbBitReader<'a> {
+    data: &'a [u8],
+    /// Next byte to load into the accumulator.
+    pos: usize,
+    /// Pending bits, right-aligned (the low `nbits` bits of `acc`).
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> MsbBitReader<'a> {
+    /// Create a reader over `data`.
+    pub fn new(data: &'a [u8]) -> Self {
+        MsbBitReader { data, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    /// Byte offset of consumed input (rounded up if mid-byte).
+    pub fn byte_pos(&self) -> usize {
+        let consumed_bits = self.pos as u64 * 8 - self.nbits as u64;
+        ((consumed_bits + 7) / 8) as usize
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.nbits <= 56 && self.pos < self.data.len() {
+            self.acc = (self.acc << 8) | self.data[self.pos] as u64;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+    }
+
+    /// Read one full byte (must be byte-aligned).
+    pub fn read_byte(&mut self) -> Result<u8> {
+        debug_assert_eq!(self.nbits % 8, 0);
+        self.read_bits(8).map(|v| v as u8)
+    }
+
+    /// Read `n` (≤ 64) bits MSB-first.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u64> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(0);
+        }
+        self.refill();
+        if n <= self.nbits {
+            self.nbits -= n;
+            let v = (self.acc >> self.nbits) & mask64(n);
+            return Ok(v);
+        }
+        // Wide read (57..=64 bits) or end of stream.
+        if self.pos >= self.data.len() {
+            return Err(corrupt("msb reader: bit stream exhausted"));
+        }
+        let have = self.nbits;
+        let hi = (self.acc & mask64(have)) << (n - have);
+        self.acc = 0;
+        self.nbits = 0;
+        let lo = self.read_bits(n - have)?;
+        Ok(hi | lo)
+    }
+
+    /// Skip to the next byte boundary.
+    pub fn align_byte(&mut self) {
+        let drop = self.nbits % 8;
+        self.nbits -= drop;
+    }
+}
+
+/// Low-`n` bit mask (n in 1..=64).
+#[inline]
+fn mask64(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// MSB-first (big-endian) bit writer — ORC RLE v2 convention.
+#[derive(Debug, Default, Clone)]
+pub struct MsbBitWriter {
+    out: Vec<u8>,
+    cur: u8,
+    /// Bits already used in `cur` (filled from the top).
+    used: u32,
+}
+
+impl MsbBitWriter {
+    /// Create an empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one full byte (must be byte-aligned).
+    pub fn put_byte(&mut self, b: u8) {
+        debug_assert_eq!(self.used, 0);
+        self.out.push(b);
+    }
+
+    /// Append the low `n` (≤ 64) bits of `v`, MSB-first.
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        let mut left = n;
+        while left > 0 {
+            let room = 8 - self.used;
+            let take = left.min(room);
+            let bits = ((v >> (left - take)) & ((1u64 << take) - 1)) as u8;
+            self.cur |= bits << (room - take);
+            self.used += take;
+            if self.used == 8 {
+                self.out.push(self.cur);
+                self.cur = 0;
+                self.used = 0;
+            }
+            left -= take;
+        }
+    }
+
+    /// Zero-pad to a byte boundary.
+    pub fn align_byte(&mut self) {
+        if self.used > 0 {
+            self.out.push(self.cur);
+            self.cur = 0;
+            self.used = 0;
+        }
+    }
+
+    /// Flush and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.align_byte();
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lsb_roundtrip_mixed_widths() {
+        let mut w = LsbBitWriter::new();
+        let fields: &[(u64, u32)] = &[(0b1, 1), (0b1011, 4), (0x3FF, 10), (0, 3), (0x1FFFF, 17)];
+        for &(v, n) in fields {
+            w.put_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = LsbBitReader::new(&bytes);
+        for &(v, n) in fields {
+            assert_eq!(r.fetch_bits(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn lsb_peek_does_not_consume() {
+        let mut w = LsbBitWriter::new();
+        w.put_bits(0xAB, 8);
+        w.put_bits(0xCD, 8);
+        let bytes = w.finish();
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(r.peek_bits(8), 0xAB);
+        assert_eq!(r.peek_bits(16), 0xCDAB);
+        assert_eq!(r.fetch_bits(8).unwrap(), 0xAB);
+        assert_eq!(r.fetch_bits(8).unwrap(), 0xCD);
+    }
+
+    #[test]
+    fn lsb_peek_past_end_is_zero_but_fetch_errors() {
+        let bytes = [0xFFu8];
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(r.peek_bits(16), 0x00FF);
+        assert_eq!(r.fetch_bits(8).unwrap(), 0xFF);
+        assert!(r.fetch_bits(1).is_err());
+    }
+
+    #[test]
+    fn lsb_align_and_aligned_bytes() {
+        let mut w = LsbBitWriter::new();
+        w.put_bits(0b101, 3);
+        w.align_byte();
+        w.put_aligned_bytes(&[1, 2, 3]);
+        let bytes = w.finish();
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(r.fetch_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_aligned_bytes(3).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn msb_roundtrip_mixed_widths() {
+        let mut w = MsbBitWriter::new();
+        let fields: &[(u64, u32)] = &[(0b101, 3), (0xFFFF, 16), (1, 1), (0x123456789A, 40)];
+        for &(v, n) in fields {
+            w.put_bits(v, n);
+        }
+        let bytes = w.finish();
+        let mut r = MsbBitReader::new(&bytes);
+        for &(v, n) in fields {
+            assert_eq!(r.read_bits(n).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn msb_bigendian_byte_order() {
+        // 0xABCD written as 16 bits must serialize as [0xAB, 0xCD].
+        let mut w = MsbBitWriter::new();
+        w.put_bits(0xABCD, 16);
+        assert_eq!(w.finish(), vec![0xAB, 0xCD]);
+    }
+
+    #[test]
+    fn msb_eof_detection() {
+        let bytes = [0xFFu8];
+        let mut r = MsbBitReader::new(&bytes);
+        assert_eq!(r.read_bits(4).unwrap(), 0xF);
+        assert!(r.read_bits(8).is_err());
+    }
+
+    #[test]
+    fn consumed_bits_tracks() {
+        let bytes = [0xFFu8; 8];
+        let mut r = LsbBitReader::new(&bytes);
+        r.fetch_bits(5).unwrap();
+        r.fetch_bits(11).unwrap();
+        assert_eq!(r.consumed_bits(), 16);
+    }
+}

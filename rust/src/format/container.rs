@@ -1,0 +1,288 @@
+//! The chunked container format (paper §II-B).
+//!
+//! Modern compressed data formats (ORC, Parquet) divide the uncompressed
+//! input into fixed-size chunks, compress each independently, and record
+//! per-chunk offsets so a decompressor can assign chunks to parallel
+//! processing units. This module implements that container: a small
+//! header, a chunk index, and the concatenated compressed chunks.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic: u32 = 0xC0DA_6001
+//! version: u32
+//! codec: u32 (CodecKind discriminant)
+//! chunk_size: u64        (uncompressed bytes per chunk, last may be short)
+//! total_uncompressed: u64
+//! n_chunks: u64
+//! index: n_chunks × { comp_off: u64, comp_len: u64, uncomp_len: u64 }
+//! payload bytes
+//! ```
+//!
+//! The 128 KiB default matches the paper's evaluation (§V-B).
+
+use crate::codecs::{decompress_chunk, compress_chunk, CodecKind};
+use crate::{corrupt, invalid, Result};
+
+/// Container magic number ("C0DAG" v1).
+pub const MAGIC: u32 = 0xC0DA_6001;
+/// Current container version.
+pub const VERSION: u32 = 1;
+/// Default chunk size used throughout the paper's evaluation.
+pub const DEFAULT_CHUNK_SIZE: usize = 128 * 1024;
+
+/// Index entry for one compressed chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkEntry {
+    /// Offset of the chunk within the payload section.
+    pub comp_off: u64,
+    /// Compressed length in bytes.
+    pub comp_len: u64,
+    /// Uncompressed length in bytes (== chunk_size except the tail chunk).
+    pub uncomp_len: u64,
+}
+
+/// A parsed (or freshly built) container.
+#[derive(Debug, Clone)]
+pub struct Container {
+    /// Codec every chunk was compressed with.
+    pub codec: CodecKind,
+    /// Nominal uncompressed chunk size.
+    pub chunk_size: usize,
+    /// Total uncompressed length.
+    pub total_uncompressed: u64,
+    /// Per-chunk index.
+    pub index: Vec<ChunkEntry>,
+    /// Concatenated compressed chunk payloads.
+    pub payload: Vec<u8>,
+}
+
+impl Container {
+    /// Compress `data` into a container with `chunk_size`-byte chunks.
+    pub fn compress(data: &[u8], codec: CodecKind, chunk_size: usize) -> Result<Container> {
+        if chunk_size == 0 {
+            return Err(invalid("chunk_size must be > 0"));
+        }
+        let mut index = Vec::new();
+        let mut payload = Vec::new();
+        for chunk in data.chunks(chunk_size) {
+            let comp = compress_chunk(codec, chunk)?;
+            index.push(ChunkEntry {
+                comp_off: payload.len() as u64,
+                comp_len: comp.len() as u64,
+                uncomp_len: chunk.len() as u64,
+            });
+            payload.extend_from_slice(&comp);
+        }
+        Ok(Container {
+            codec,
+            chunk_size,
+            total_uncompressed: data.len() as u64,
+            index,
+            payload,
+        })
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Compressed payload size in bytes (excluding header/index).
+    pub fn compressed_len(&self) -> usize {
+        self.payload.len()
+    }
+
+    /// Compression ratio as the paper reports it:
+    /// compressed bytes / uncompressed bytes (smaller is better; >1 means
+    /// the encoding expanded the data, e.g. TPT under RLE v1).
+    pub fn compression_ratio(&self) -> f64 {
+        if self.total_uncompressed == 0 {
+            return 1.0;
+        }
+        self.payload.len() as f64 / self.total_uncompressed as f64
+    }
+
+    /// Borrow the compressed bytes of chunk `i`.
+    pub fn chunk_bytes(&self, i: usize) -> Result<&[u8]> {
+        let e = self.index.get(i).ok_or_else(|| invalid(format!("chunk {i} out of range")))?;
+        let lo = e.comp_off as usize;
+        let hi = lo + e.comp_len as usize;
+        self.payload
+            .get(lo..hi)
+            .ok_or_else(|| corrupt(format!("chunk {i} index out of payload bounds")))
+    }
+
+    /// Decompress a single chunk.
+    pub fn decompress_chunk(&self, i: usize) -> Result<Vec<u8>> {
+        let e = self.index[i];
+        let bytes = self.chunk_bytes(i)?;
+        let out = decompress_chunk(self.codec, bytes, e.uncomp_len as usize)?;
+        if out.len() != e.uncomp_len as usize {
+            return Err(corrupt(format!(
+                "chunk {i}: decompressed {} bytes, index says {}",
+                out.len(),
+                e.uncomp_len
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Decompress every chunk sequentially (correctness reference path;
+    /// the parallel engines live in [`crate::coordinator`]).
+    pub fn decompress_all(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::with_capacity(self.total_uncompressed as usize);
+        for i in 0..self.n_chunks() {
+            out.extend_from_slice(&self.decompress_chunk(i)?);
+        }
+        Ok(out)
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(48 + self.index.len() * 24 + self.payload.len());
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.codec as u32).to_le_bytes());
+        out.extend_from_slice(&(self.chunk_size as u64).to_le_bytes());
+        out.extend_from_slice(&self.total_uncompressed.to_le_bytes());
+        out.extend_from_slice(&(self.index.len() as u64).to_le_bytes());
+        for e in &self.index {
+            out.extend_from_slice(&e.comp_off.to_le_bytes());
+            out.extend_from_slice(&e.comp_len.to_le_bytes());
+            out.extend_from_slice(&e.uncomp_len.to_le_bytes());
+        }
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse a container from bytes.
+    pub fn from_bytes(data: &[u8]) -> Result<Container> {
+        let mut pos = 0usize;
+        let take_u32 = |data: &[u8], pos: &mut usize| -> Result<u32> {
+            let b = data.get(*pos..*pos + 4).ok_or_else(|| corrupt("container: truncated header"))?;
+            *pos += 4;
+            Ok(u32::from_le_bytes(b.try_into().unwrap()))
+        };
+        let magic = take_u32(data, &mut pos)?;
+        if magic != MAGIC {
+            return Err(corrupt(format!("bad magic 0x{magic:08X}")));
+        }
+        let version = take_u32(data, &mut pos)?;
+        if version != VERSION {
+            return Err(corrupt(format!("unsupported version {version}")));
+        }
+        let codec_raw = take_u32(data, &mut pos)?;
+        let codec = CodecKind::from_u32(codec_raw)
+            .ok_or_else(|| corrupt(format!("unknown codec {codec_raw}")))?;
+        let take_u64 = |data: &[u8], pos: &mut usize| -> Result<u64> {
+            let b = data.get(*pos..*pos + 8).ok_or_else(|| corrupt("container: truncated header"))?;
+            *pos += 8;
+            Ok(u64::from_le_bytes(b.try_into().unwrap()))
+        };
+        let chunk_size = take_u64(data, &mut pos)? as usize;
+        let total_uncompressed = take_u64(data, &mut pos)?;
+        let n_chunks = take_u64(data, &mut pos)? as usize;
+        // Sanity cap: the index must fit in the remaining bytes.
+        if n_chunks.saturating_mul(24) > data.len().saturating_sub(pos) {
+            return Err(corrupt("container: index larger than file"));
+        }
+        let mut index = Vec::with_capacity(n_chunks);
+        for _ in 0..n_chunks {
+            index.push(ChunkEntry {
+                comp_off: take_u64(data, &mut pos)?,
+                comp_len: take_u64(data, &mut pos)?,
+                uncomp_len: take_u64(data, &mut pos)?,
+            });
+        }
+        let payload = data[pos..].to_vec();
+        // Validate index bounds against payload.
+        for (i, e) in index.iter().enumerate() {
+            let end = e.comp_off.checked_add(e.comp_len).ok_or_else(|| corrupt("index overflow"))?;
+            if end as usize > payload.len() {
+                return Err(corrupt(format!("chunk {i} extends past payload")));
+            }
+        }
+        Ok(Container { codec, chunk_size, total_uncompressed, index, payload })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_data() -> Vec<u8> {
+        // Runs + literals so every codec has something to chew on.
+        let mut v = Vec::new();
+        for i in 0..2000u32 {
+            let b = (i % 7) as u8;
+            for _ in 0..(i % 13 + 1) {
+                v.push(b);
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        let data = sample_data();
+        for codec in [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate] {
+            let c = Container::compress(&data, codec, 4096).unwrap();
+            assert_eq!(c.decompress_all().unwrap(), data, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn serialization_roundtrip() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::Deflate, 4096).unwrap();
+        let bytes = c.to_bytes();
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c2.codec, CodecKind::Deflate);
+        assert_eq!(c2.n_chunks(), c.n_chunks());
+        assert_eq!(c2.decompress_all().unwrap(), data);
+    }
+
+    #[test]
+    fn tail_chunk_is_short() {
+        let data = vec![42u8; 10_000];
+        let c = Container::compress(&data, CodecKind::RleV1, 4096).unwrap();
+        assert_eq!(c.n_chunks(), 3);
+        assert_eq!(c.index[2].uncomp_len, 10_000 - 2 * 4096);
+        assert_eq!(c.decompress_all().unwrap(), data);
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = Container::compress(&[], CodecKind::Deflate, 4096).unwrap();
+        assert_eq!(c.n_chunks(), 0);
+        assert_eq!(c.decompress_all().unwrap(), Vec::<u8>::new());
+        let c2 = Container::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(c2.total_uncompressed, 0);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let data = vec![0u8; 64];
+        assert!(Container::from_bytes(&data).is_err());
+    }
+
+    #[test]
+    fn truncated_index_rejected() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::RleV1, 4096).unwrap();
+        let bytes = c.to_bytes();
+        assert!(Container::from_bytes(&bytes[..40]).is_err());
+    }
+
+    #[test]
+    fn corrupt_index_bounds_rejected() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::RleV1, 4096).unwrap();
+        let mut bytes = c.to_bytes();
+        // comp_len of chunk 0 lives at offset 36+8; blow it up.
+        let off = 36 + 8;
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+}

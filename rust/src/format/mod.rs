@@ -1,0 +1,16 @@
+//! Byte/bit stream substrate and the chunked container format.
+//!
+//! This module implements the serialization primitives every codec in the
+//! paper depends on:
+//!
+//! * [`bitio`] — LSB-first bit reader/writer (DEFLATE) and MSB-first
+//!   big-endian bit packing (ORC RLE v2 `DIRECT`/`PATCHED_BASE`).
+//! * [`varint`] — ORC base-128 varints with zigzag for signed values.
+//! * [`container`] — the chunked data format from §II-B: fixed-size
+//!   uncompressed chunks (128 KiB by default), independently compressed,
+//!   with an index of compressed offsets so chunks can be decompressed in
+//!   parallel — the property both CODAG and the RAPIDS baseline exploit.
+
+pub mod bitio;
+pub mod container;
+pub mod varint;

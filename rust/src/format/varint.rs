@@ -1,0 +1,141 @@
+//! ORC-style base-128 varints and zigzag encoding.
+//!
+//! ORC integer RLE (v1 and v2) stores base values as unsigned LEB128
+//! varints; signed columns are zigzag-mapped first so small magnitudes
+//! stay short. These are the `fetch_bits`-adjacent primitives every
+//! integer codec path shares.
+
+use crate::{corrupt, Result};
+
+/// Append `v` to `out` as an unsigned LEB128 varint (1–10 bytes).
+#[inline]
+pub fn write_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            break;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read an unsigned LEB128 varint from `data[*pos..]`, advancing `*pos`.
+#[inline]
+pub fn read_uvarint(data: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let b = *data.get(*pos).ok_or_else(|| corrupt("varint: eof"))?;
+        *pos += 1;
+        if shift >= 64 {
+            return Err(corrupt("varint: overflow (>10 bytes)"));
+        }
+        // The 10th byte may only carry the single remaining bit of a u64.
+        if shift == 63 && (b & 0x7E) != 0 {
+            return Err(corrupt("varint: value exceeds u64"));
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-map a signed value to unsigned (ORC signed varint convention).
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append `v` as a zigzag-ed signed varint.
+#[inline]
+pub fn write_svarint(out: &mut Vec<u8>, v: i64) {
+    write_uvarint(out, zigzag(v));
+}
+
+/// Read a zigzag-ed signed varint.
+#[inline]
+pub fn read_svarint(data: &[u8], pos: &mut usize) -> Result<i64> {
+    read_uvarint(data, pos).map(unzigzag)
+}
+
+/// Number of bytes `v` takes as an unsigned varint.
+#[inline]
+pub fn uvarint_len(mut v: u64) -> usize {
+    let mut n = 1;
+    while v >= 0x80 {
+        v >>= 7;
+        n += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip_boundaries() {
+        let cases = [
+            0u64,
+            1,
+            127,
+            128,
+            16383,
+            16384,
+            u32::MAX as u64,
+            u64::MAX - 1,
+            u64::MAX,
+        ];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            write_uvarint(&mut buf, v);
+            assert_eq!(buf.len(), uvarint_len(v));
+            let mut pos = 0;
+            assert_eq!(read_uvarint(&buf, &mut pos).unwrap(), v, "value {v}");
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn svarint_roundtrip() {
+        for &v in &[0i64, -1, 1, -64, 63, i64::MIN, i64::MAX, -123456789] {
+            let mut buf = Vec::new();
+            write_svarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_svarint(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn zigzag_small_magnitudes_are_small() {
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        assert_eq!(zigzag(-2), 3);
+        assert_eq!(unzigzag(zigzag(i64::MIN)), i64::MIN);
+    }
+
+    #[test]
+    fn truncated_varint_is_corrupt() {
+        let buf = [0x80u8, 0x80];
+        let mut pos = 0;
+        assert!(read_uvarint(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn overlong_varint_is_corrupt() {
+        let buf = [0xFFu8; 11];
+        let mut pos = 0;
+        assert!(read_uvarint(&buf, &mut pos).is_err());
+    }
+}

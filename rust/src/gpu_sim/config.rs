@@ -1,0 +1,156 @@
+//! GPU hardware configurations (paper Table III: A100 and V100).
+//!
+//! Parameters are drawn from the public architecture whitepapers the
+//! paper cites ([20], [21]) plus well-known microbenchmark numbers
+//! (instruction latencies, barrier costs). The simulator is a *timing
+//! model*, not an RTL model: what matters for reproducing the paper is
+//! the ratio structure — warps per SM, schedulers per SM, ALU issue
+//! intervals, DRAM latency vs. bandwidth — because the paper's entire
+//! argument is about how many independent instruction streams are
+//! available to each scheduler.
+
+/// One GPU model's timing/occupancy parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Display name ("A100", "V100").
+    pub name: &'static str,
+    /// Number of streaming multiprocessors.
+    pub num_sms: u32,
+    /// Warp schedulers per SM (A100/V100: 4).
+    pub schedulers_per_sm: u32,
+    /// Resident warp slots per SM (A100: 64, V100: 64).
+    pub warp_slots_per_sm: u32,
+    /// Max resident threads per SM (A100: 2048, V100: 2048).
+    pub max_threads_per_sm: u32,
+    /// Core clock in GHz (boost locked, §V-A "lock the GPU's clock").
+    pub clock_ghz: f64,
+    /// HBM bandwidth in GB/s.
+    pub mem_bw_gbps: f64,
+    /// DRAM access latency in cycles.
+    pub mem_latency: u32,
+    /// ALU (INT32) dependent-issue latency in cycles.
+    pub alu_latency: u32,
+    /// Cycles an ALU warp-instruction occupies its scheduler's issue
+    /// pipe (A100: 32 lanes / 16 INT32 units per partition = 2).
+    pub alu_issue_interval: u32,
+    /// Branch resolve latency in cycles.
+    pub branch_latency: u32,
+    /// Shared-memory load-to-use latency in cycles.
+    pub smem_latency: u32,
+    /// Warp shuffle (`__shfl_sync`) latency in cycles (§IV-E register
+    /// input buffer).
+    pub shuffle_latency: u32,
+    /// Store queue-admission cost in cycles (stores are fire-and-forget;
+    /// the warp does not wait for DRAM completion).
+    pub store_cost: u32,
+    /// Cycles a memory warp-instruction occupies the LSU issue pipe.
+    pub lsu_issue_interval: u32,
+    /// `__syncwarp` cost in cycles (cheap: converged warps ~ 1 issue).
+    pub warp_barrier_cycles: u32,
+    /// `__syncthreads` release overhead in cycles after the last warp
+    /// arrives (block-wide barriers cost tens of cycles).
+    pub block_barrier_cycles: u32,
+    /// Shared-memory broadcast (leader publish + read back) in cycles.
+    pub broadcast_cycles: u32,
+}
+
+impl GpuConfig {
+    /// NVIDIA A100 (SXM4 40 GB), paper Table III GPU 2.
+    pub fn a100() -> GpuConfig {
+        GpuConfig {
+            name: "A100",
+            num_sms: 108,
+            schedulers_per_sm: 4,
+            warp_slots_per_sm: 64,
+            max_threads_per_sm: 2048,
+            clock_ghz: 1.41,
+            mem_bw_gbps: 1555.0,
+            mem_latency: 470,
+            alu_latency: 4,
+            alu_issue_interval: 2,
+            branch_latency: 12,
+            smem_latency: 24,
+            shuffle_latency: 22,
+            store_cost: 4,
+            lsu_issue_interval: 4,
+            warp_barrier_cycles: 2,
+            block_barrier_cycles: 30,
+            broadcast_cycles: 25,
+        }
+    }
+
+    /// NVIDIA Tesla V100 (HBM2 32 GB), paper Table III GPU 1.
+    pub fn v100() -> GpuConfig {
+        GpuConfig {
+            name: "V100",
+            num_sms: 80,
+            schedulers_per_sm: 4,
+            warp_slots_per_sm: 64,
+            max_threads_per_sm: 2048,
+            clock_ghz: 1.38,
+            mem_bw_gbps: 900.0,
+            mem_latency: 440,
+            alu_latency: 4,
+            alu_issue_interval: 2,
+            branch_latency: 14,
+            smem_latency: 28,
+            shuffle_latency: 26,
+            store_cost: 4,
+            lsu_issue_interval: 4,
+            warp_barrier_cycles: 2,
+            block_barrier_cycles: 34,
+            broadcast_cycles: 28,
+        }
+    }
+
+    /// Look up by name (CLI).
+    pub fn by_name(name: &str) -> Option<GpuConfig> {
+        match name.to_ascii_lowercase().as_str() {
+            "a100" => Some(GpuConfig::a100()),
+            "v100" => Some(GpuConfig::v100()),
+            _ => None,
+        }
+    }
+
+    /// DRAM bytes per core-clock cycle available to one SM (the
+    /// simulator models each SM's fair bandwidth share).
+    pub fn bytes_per_cycle_per_sm(&self) -> f64 {
+        self.mem_bw_gbps / self.clock_ghz / self.num_sms as f64
+    }
+
+    /// Peak issue slots per SM per cycle.
+    pub fn issue_slots(&self) -> u32 {
+        self.schedulers_per_sm
+    }
+
+    /// Core clock in Hz.
+    pub fn clock_hz(&self) -> f64 {
+        self.clock_ghz * 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_sane() {
+        for cfg in [GpuConfig::a100(), GpuConfig::v100()] {
+            assert!(cfg.num_sms > 0);
+            assert!(cfg.bytes_per_cycle_per_sm() > 1.0, "{}", cfg.name);
+            assert!(cfg.warp_slots_per_sm >= 64);
+            assert!(cfg.alu_latency >= 1);
+        }
+        // A100 strictly more capable than V100.
+        let (a, v) = (GpuConfig::a100(), GpuConfig::v100());
+        assert!(a.num_sms > v.num_sms);
+        assert!(a.mem_bw_gbps > v.mem_bw_gbps);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuConfig::by_name("A100").unwrap().name, "A100");
+        assert_eq!(GpuConfig::by_name("v100").unwrap().name, "V100");
+        assert!(GpuConfig::by_name("h100").is_none());
+    }
+}

@@ -1,0 +1,535 @@
+//! The SM timing simulator.
+//!
+//! A cycle-stepped model of one streaming multiprocessor: warp contexts
+//! hold per-warp instruction streams ([`super::segment`]), each of the
+//! SM's schedulers issues at most one warp-instruction per cycle from its
+//! statically-assigned warps, math/LSU pipes have issue intervals, DRAM
+//! is a shared FIFO with a bandwidth share and a fixed latency, and
+//! block barriers gate whole units. Empty stretches are fast-forwarded,
+//! with stall cycles attributed in bulk, so simulating hundreds of
+//! chunks stays cheap.
+//!
+//! This is the substrate that stands in for the paper's A100/V100: every
+//! characterization figure (2, 3, 5, 6) and throughput figure (7, 8) is
+//! produced by replaying real decoder traces through this model under
+//! the two provisioning strategies.
+
+use crate::gpu_sim::config::GpuConfig;
+use crate::gpu_sim::metrics::{SimMetrics, StallReason};
+use crate::gpu_sim::segment::{Instr, UnitProgram};
+
+/// Every `FMA_EVERY`-th ALU op is routed to the FMA pipe (address and
+/// length arithmetic uses IMAD on NVIDIA GPUs; Fig 3 shows ~35% FMA
+/// utilization during Deflate decode).
+const FMA_EVERY: u64 = 3;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WarpState {
+    /// May issue at `ready_at`.
+    Ready,
+    /// Parked at a block barrier, waiting for the unit.
+    AtBarrier,
+    /// Program finished.
+    Done,
+}
+
+#[derive(Debug)]
+struct WarpCtx {
+    /// Instruction stream (index into the unit's program).
+    prog: Vec<Instr>,
+    pc: usize,
+    /// Remaining ops in the current `Alu` burst.
+    burst_left: u32,
+    ready_at: u64,
+    state: WarpState,
+    /// Why the warp is not ready (attribution for stall cycles).
+    stall: StallReason,
+    unit: usize,
+}
+
+impl WarpCtx {
+    fn current(&self) -> Option<Instr> {
+        self.prog.get(self.pc).copied()
+    }
+}
+
+#[derive(Debug)]
+struct UnitCtx {
+    /// Warp ids resident for this unit.
+    warps: Vec<usize>,
+    /// Warps expected at block barriers (compute warps).
+    barrier_width: u32,
+    arrived: u32,
+    warps_done: u32,
+    uncomp_bytes: u64,
+}
+
+/// Simulate `units` on one SM of `cfg`. Units are admitted in order as
+/// warp slots and thread slots free up (GPU thread-block scheduler).
+///
+/// `threads_per_warp_slot` is 32; a unit occupies `n_warps` slots and
+/// `n_warps * 32` threads.
+pub fn simulate_sm(cfg: &GpuConfig, units: &[UnitProgram]) -> SimMetrics {
+    let mut m = SimMetrics::default();
+    if units.is_empty() {
+        return m;
+    }
+    let mut warps: Vec<WarpCtx> = Vec::new();
+    let mut unit_ctxs: Vec<UnitCtx> = Vec::new();
+    let mut next_unit = 0usize;
+    let mut free_warp_slots = cfg.warp_slots_per_sm;
+    let mut free_threads = cfg.max_threads_per_sm;
+    // Scheduler state. Each scheduler keeps an *active list* of its
+    // resident, non-parked warps — the cycle scan never touches retired
+    // or barrier-parked warps (the difference between O(resident) and
+    // O(all warps ever created) per cycle).
+    let nsched = cfg.schedulers_per_sm as usize;
+    let mut alu_free = vec![0u64; nsched];
+    let mut fma_free = vec![0u64; nsched];
+    let mut lsu_free = vec![0u64; nsched];
+    let mut rr = vec![0usize; nsched]; // round-robin pointers
+    let mut active: Vec<Vec<usize>> = vec![Vec::new(); nsched];
+    let mut in_active: Vec<bool> = Vec::new();
+    let mut parked = vec![0u64; nsched]; // AtBarrier warps per scheduler
+    let mut dram_free: u64 = 0;
+    let bpc = cfg.bytes_per_cycle_per_sm();
+    let mut alu_op_count: u64 = 0;
+
+    let mut cycle: u64 = 0;
+    let mut live_warps = 0usize;
+    let mut units_done = 0usize;
+
+    // Admit as many units as fit.
+    macro_rules! admit {
+        () => {
+            while next_unit < units.len() {
+                let u = &units[next_unit];
+                let nw = u.warps.len() as u32;
+                if nw > free_warp_slots || nw * 32 > free_threads {
+                    break;
+                }
+                free_warp_slots -= nw;
+                free_threads -= nw * 32;
+                let uid = unit_ctxs.len();
+                let mut ids = Vec::with_capacity(u.warps.len());
+                for prog in &u.warps {
+                    let wi = warps.len();
+                    ids.push(wi);
+                    let done = prog.is_empty();
+                    warps.push(WarpCtx {
+                        prog: prog.clone(),
+                        pc: 0,
+                        burst_left: 0,
+                        ready_at: cycle,
+                        state: if done { WarpState::Done } else { WarpState::Ready },
+                        stall: StallReason::Wait,
+                        unit: uid,
+                    });
+                    in_active.push(!done);
+                    if !done {
+                        live_warps += 1;
+                        active[wi % nsched].push(wi);
+                    }
+                }
+                let empty = u.warps.iter().filter(|p| p.is_empty()).count() as u32;
+                // Compute warps = those that contain block barriers.
+                let bw = if u.n_block_barriers > 0 {
+                    u.warps
+                        .iter()
+                        .filter(|p| p.iter().any(|i| matches!(i, Instr::BlockBar { .. })))
+                        .count() as u32
+                } else {
+                    0
+                };
+                unit_ctxs.push(UnitCtx {
+                    warps: ids,
+                    barrier_width: bw,
+                    arrived: 0,
+                    warps_done: empty,
+                    uncomp_bytes: u.uncomp_bytes,
+                });
+                if empty as usize == u.warps.len() {
+                    // Degenerate all-empty unit: retire immediately.
+                    units_done += 1;
+                    m.units_done += 1;
+                    m.uncomp_bytes += u.uncomp_bytes;
+                    free_warp_slots += nw;
+                    free_threads += nw * 32;
+                }
+                next_unit += 1;
+            }
+        };
+    }
+
+    admit!();
+    // Safety valve: a unit that cannot ever fit would deadlock the loop.
+    if unit_ctxs.is_empty() {
+        return m;
+    }
+
+    // Retire `wi` if its program is exhausted (runs after the final
+    // instruction issues, and after a barrier release when the barrier
+    // was the warp's last instruction).
+    macro_rules! retire_if_done {
+        ($wi:expr) => {{
+            let wi = $wi;
+            let w = &mut warps[wi];
+            if w.state == WarpState::Ready && w.pc >= w.prog.len() && w.burst_left == 0 {
+                w.state = WarpState::Done;
+                live_warps -= 1;
+                let uid = w.unit;
+                let u = &mut unit_ctxs[uid];
+                u.warps_done += 1;
+                if u.warps_done as usize == u.warps.len() {
+                    units_done += 1;
+                    m.units_done += 1;
+                    m.uncomp_bytes += u.uncomp_bytes;
+                    free_warp_slots += u.warps.len() as u32;
+                    free_threads += u.warps.len() as u32 * 32;
+                }
+            }
+        }};
+    }
+
+    while units_done < unit_ctxs.len() || next_unit < units.len() {
+        let mut issued_this_cycle = false;
+        for s in 0..nsched {
+            // Lazily drop retired/parked warps from the active list.
+            {
+                let warps_ref = &warps;
+                let in_active_ref = &mut in_active;
+                active[s].retain(|&wi| {
+                    let keep = warps_ref[wi].state == WarpState::Ready;
+                    if !keep {
+                        in_active_ref[wi] = false;
+                    }
+                    keep
+                });
+            }
+            let part = active[s].len();
+            let mut best: Option<usize> = None;
+            let mut saw_ready_pipe_blocked = false;
+            let mut reason_counts = [0u64; 6];
+            reason_counts[0] += parked[s]; // barrier-parked warps
+            for k in 0..part {
+                let slot = (rr[s] + k) % part;
+                let wi = active[s][slot];
+                let w = &warps[wi];
+                debug_assert_eq!(w.state, WarpState::Ready);
+                if w.ready_at > cycle {
+                    let ri = StallReason::ALL.iter().position(|x| *x == w.stall).unwrap();
+                    reason_counts[ri] += 1;
+                    continue;
+                }
+                // Ready: check pipe availability.
+                let pipe_ok = match w.current() {
+                    Some(Instr::Alu { .. }) => {
+                        let is_fma = (alu_op_count + 1) % FMA_EVERY == 0;
+                        if is_fma { fma_free[s] <= cycle } else { alu_free[s] <= cycle }
+                    }
+                    Some(Instr::Mem { .. }) | Some(Instr::Smem) => lsu_free[s] <= cycle,
+                    Some(Instr::Shfl) => true, // shuffle unit, not LSU
+                    _ => true,
+                };
+                if !pipe_ok {
+                    saw_ready_pipe_blocked = true;
+                    continue;
+                }
+                best = Some(wi);
+                rr[s] = (slot + 1) % part;
+                break;
+            }
+            match best {
+                Some(wi) => {
+                    issued_this_cycle = true;
+                    m.issued += 1;
+                    let unit_id = warps[wi].unit;
+                    let instr = warps[wi].current().expect("ready warp has an instr");
+                    match instr {
+                        Instr::Alu { n } => {
+                            alu_op_count += 1;
+                            let is_fma = alu_op_count % FMA_EVERY == 0;
+                            if is_fma {
+                                fma_free[s] = cycle + cfg.alu_issue_interval as u64;
+                                m.fma_busy += cfg.alu_issue_interval as u64;
+                            } else {
+                                alu_free[s] = cycle + cfg.alu_issue_interval as u64;
+                                m.alu_busy += cfg.alu_issue_interval as u64;
+                            }
+                            let w = &mut warps[wi];
+                            if w.burst_left == 0 {
+                                w.burst_left = n;
+                            }
+                            w.burst_left -= 1;
+                            w.ready_at = cycle + cfg.alu_latency as u64;
+                            w.stall = StallReason::Wait;
+                            if w.burst_left == 0 {
+                                w.pc += 1;
+                            }
+                        }
+                        Instr::Branch => {
+                            let w = &mut warps[wi];
+                            w.ready_at = cycle + cfg.branch_latency as u64;
+                            w.stall = StallReason::BranchResolve;
+                            w.pc += 1;
+                        }
+                        Instr::Smem => {
+                            lsu_free[s] = cycle + cfg.lsu_issue_interval as u64;
+                            m.lsu_busy += cfg.lsu_issue_interval as u64;
+                            let w = &mut warps[wi];
+                            w.ready_at = cycle + cfg.smem_latency as u64;
+                            w.stall = StallReason::Wait;
+                            w.pc += 1;
+                        }
+                        Instr::Shfl => {
+                            // Warp shuffle: similar dependency latency,
+                            // no LSU pipe pressure (§IV-E).
+                            let w = &mut warps[wi];
+                            w.ready_at = cycle + cfg.shuffle_latency as u64;
+                            w.stall = StallReason::Wait;
+                            w.pc += 1;
+                        }
+                        Instr::Mem { bytes, read } => {
+                            lsu_free[s] = cycle + cfg.lsu_issue_interval as u64;
+                            m.lsu_busy += cfg.lsu_issue_interval as u64;
+                            let service = (bytes as f64 / bpc).ceil() as u64;
+                            let start = dram_free.max(cycle);
+                            dram_free = start + service;
+                            let w = &mut warps[wi];
+                            if read {
+                                // Loads stall on the scoreboard until the
+                                // data returns.
+                                w.ready_at = start + service + cfg.mem_latency as u64;
+                                w.stall = StallReason::LongScoreboard;
+                                m.bytes_read += bytes as u64;
+                            } else {
+                                // Stores retire once the queue admits them;
+                                // back-pressure only under DRAM saturation.
+                                w.ready_at = start + cfg.store_cost as u64;
+                                w.stall = if start > cycle {
+                                    StallReason::LongScoreboard
+                                } else {
+                                    StallReason::Wait
+                                };
+                                m.bytes_written += bytes as u64;
+                            }
+                            w.pc += 1;
+                        }
+                        Instr::WarpBar => {
+                            let w = &mut warps[wi];
+                            w.ready_at = cycle + cfg.warp_barrier_cycles as u64;
+                            w.stall = StallReason::Barrier;
+                            w.pc += 1;
+                        }
+                        Instr::Broadcast => {
+                            let w = &mut warps[wi];
+                            w.ready_at = cycle + cfg.broadcast_cycles as u64;
+                            w.stall = StallReason::Barrier;
+                            w.pc += 1;
+                        }
+                        Instr::BlockBar { .. } => {
+                            warps[wi].pc += 1;
+                            warps[wi].state = WarpState::AtBarrier;
+                            parked[wi % nsched] += 1;
+                            let u = &mut unit_ctxs[unit_id];
+                            u.arrived += 1;
+                            if u.arrived >= u.barrier_width {
+                                // Release everyone (and retire warps whose
+                                // program ended on this barrier).
+                                u.arrived = 0;
+                                let release = cycle + cfg.block_barrier_cycles as u64;
+                                let ids = u.warps.clone();
+                                for owi in ids {
+                                    if warps[owi].state == WarpState::AtBarrier {
+                                        warps[owi].state = WarpState::Ready;
+                                        warps[owi].ready_at = release;
+                                        warps[owi].stall = StallReason::Barrier;
+                                        parked[owi % nsched] -= 1;
+                                        retire_if_done!(owi);
+                                        if warps[owi].state == WarpState::Ready
+                                            && !in_active[owi]
+                                        {
+                                            in_active[owi] = true;
+                                            active[owi % nsched].push(owi);
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    retire_if_done!(wi);
+                }
+                None => {
+                    // No issue this scheduler-cycle: attribute.
+                    let r = if saw_ready_pipe_blocked {
+                        StallReason::MathPipeThrottle
+                    } else if part == 0 && parked[s] == 0 {
+                        StallReason::Idle
+                    } else {
+                        // Majority reason among this scheduler's waiting
+                        // warps (Barrier inflated by parked warps — the
+                        // Nsight SB semantics).
+                        let mut max_i = 5; // Idle
+                        let mut max_v = 0u64;
+                        for (i, &v) in reason_counts.iter().enumerate() {
+                            if v > max_v {
+                                max_v = v;
+                                max_i = i;
+                            }
+                        }
+                        StallReason::ALL[max_i]
+                    };
+                    m.stall(r, 1);
+                }
+            }
+        }
+        cycle += 1;
+        admit!();
+        // Fast-forward across globally idle stretches.
+        if !issued_this_cycle {
+            let mut next_ready = u64::MAX;
+            for lst in &active {
+                for &wi in lst {
+                    let w = &warps[wi];
+                    // Clamp to `cycle`: a warp that became ready in the
+                    // past (it was pipe-blocked when last scanned) must
+                    // keep the loop alive so the next scan issues it.
+                    if w.state == WarpState::Ready {
+                        next_ready = next_ready.min(w.ready_at.max(cycle));
+                    }
+                }
+            }
+            // Pipes could also be the gate (MPT with everything ready).
+            for s in 0..nsched {
+                for t in [alu_free[s], fma_free[s], lsu_free[s]] {
+                    if t > cycle {
+                        next_ready = next_ready.min(t);
+                    }
+                }
+            }
+            if next_ready != u64::MAX && next_ready > cycle {
+                let skip = next_ready - cycle;
+                // Attribute the skipped scheduler-cycles in bulk.
+                let mut reason_counts = [0u64; 6];
+                reason_counts[0] += parked.iter().sum::<u64>();
+                for lst in &active {
+                    for &wi in lst {
+                        let w = &warps[wi];
+                        if w.state == WarpState::Ready && w.ready_at > cycle {
+                            let ri =
+                                StallReason::ALL.iter().position(|x| *x == w.stall).unwrap();
+                            reason_counts[ri] += 1;
+                        }
+                    }
+                }
+                let mut max_i = 5;
+                let mut max_v = 0u64;
+                for (i, &v) in reason_counts.iter().enumerate() {
+                    if v > max_v {
+                        max_v = v;
+                        max_i = i;
+                    }
+                }
+                m.stall(StallReason::ALL[max_i], skip * nsched as u64);
+                cycle = next_ready;
+            } else if next_ready == u64::MAX && units_done == unit_ctxs.len() && next_unit >= units.len() {
+                break;
+            } else if next_ready == u64::MAX {
+                // Nothing can ever become ready: deadlock guard.
+                if std::env::var_os("CODAG_SIM_DEBUG").is_some() {
+                    eprintln!(
+                        "deadlock @cycle {cycle}: units_done={units_done}/{} next_unit={next_unit}/{} live={live_warps}",
+                        unit_ctxs.len(), units.len()
+                    );
+                    for (i, w) in warps.iter().enumerate() {
+                        if w.state != WarpState::Done {
+                            eprintln!(
+                                "  warp {i}: state={:?} ready_at={} pc={}/{} burst={} stall={:?} unit={} in_active={}",
+                                w.state, w.ready_at, w.pc, w.prog.len(), w.burst_left, w.stall, w.unit, in_active[i]
+                            );
+                        }
+                    }
+                }
+                debug_assert!(false, "simulator deadlock");
+                break;
+            }
+        }
+        if live_warps == 0 && next_unit >= units.len() && units_done == unit_ctxs.len() {
+            break;
+        }
+    }
+    m.cycles = cycle.max(1);
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::segment::compile_codag;
+    use crate::decomp::trace::{UnitEvent, UnitTrace};
+
+    fn alu_trace(ops: u32, uncomp: u64) -> UnitTrace {
+        UnitTrace {
+            events: vec![UnitEvent::Decode { ops }],
+            comp_bytes: 10,
+            uncomp_bytes: uncomp,
+        }
+    }
+
+    #[test]
+    fn single_warp_exposes_latency() {
+        let cfg = GpuConfig::a100();
+        let unit = compile_codag(&alu_trace(1000, 1), false);
+        let m = simulate_sm(&cfg, &[unit]);
+        // One warp, dependent ALU chain: ~alu_latency cycles per op.
+        assert!(m.cycles >= 1000 * (cfg.alu_latency as u64 - 1), "cycles {}", m.cycles);
+        assert!(m.compute_pct(&cfg) < 15.0);
+    }
+
+    #[test]
+    fn many_warps_hide_latency() {
+        let cfg = GpuConfig::a100();
+        let units: Vec<_> = (0..64).map(|_| compile_codag(&alu_trace(1000, 1), false)).collect();
+        let m = simulate_sm(&cfg, &units);
+        // 64 independent warps: schedulers should be mostly busy (the
+        // ALU issue interval of 2 caps per-scheduler issue at ~50%, and
+        // the FMA split raises the ceiling).
+        assert!(m.compute_pct(&cfg) > 45.0, "compute% {}", m.compute_pct(&cfg));
+        let single = simulate_sm(&cfg, &[compile_codag(&alu_trace(1000, 1), false)]);
+        // Throughput scaling: 64 units in much less than 64x the time.
+        assert!(m.cycles < single.cycles * 8, "{} vs {}", m.cycles, single.cycles);
+    }
+
+    #[test]
+    fn memory_requests_consume_bandwidth_and_latency() {
+        let cfg = GpuConfig::a100();
+        let t = UnitTrace {
+            events: vec![UnitEvent::Read { bytes: 128 }, UnitEvent::Decode { ops: 1 }],
+            comp_bytes: 128,
+            uncomp_bytes: 128,
+        };
+        let m = simulate_sm(&cfg, &[compile_codag(&t, false)]);
+        assert!(m.cycles >= cfg.mem_latency as u64);
+        assert_eq!(m.bytes_read, 128);
+    }
+
+    #[test]
+    fn units_complete_and_count_bytes() {
+        let cfg = GpuConfig::a100();
+        let units: Vec<_> =
+            (0..100).map(|_| compile_codag(&alu_trace(50, 4096), false)).collect();
+        let m = simulate_sm(&cfg, &units);
+        assert_eq!(m.units_done, 100);
+        assert_eq!(m.uncomp_bytes, 100 * 4096);
+        assert!(m.throughput_gbps(&cfg) > 0.0);
+    }
+
+    #[test]
+    fn admission_respects_occupancy() {
+        let cfg = GpuConfig::a100();
+        // 200 single-warp units: only 64 resident at once, all finish.
+        let units: Vec<_> = (0..200).map(|_| compile_codag(&alu_trace(100, 1), false)).collect();
+        let m = simulate_sm(&cfg, &units);
+        assert_eq!(m.units_done, 200);
+    }
+}

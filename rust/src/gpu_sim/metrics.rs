@@ -1,0 +1,170 @@
+//! Simulator metrics mirroring the Nsight counters the paper reports.
+
+use crate::gpu_sim::config::GpuConfig;
+
+/// Why a scheduler failed to issue in a given cycle — the categories of
+/// the paper's stalled-instruction distributions (Figs 2, 3, 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StallReason {
+    /// Warps waiting at a barrier / for the leader (paper "Barrier"/"SB").
+    Barrier,
+    /// Ready warps throttled by an oversubscribed math pipe ("MPT").
+    MathPipeThrottle,
+    /// Fixed-latency execution dependency ("Wait").
+    Wait,
+    /// Waiting for a branch target to resolve ("Branch Resolve").
+    BranchResolve,
+    /// Waiting on a global-memory access ("Long Scoreboard" / DRAM).
+    LongScoreboard,
+    /// No resident work (tail effects / under-occupancy).
+    Idle,
+}
+
+impl StallReason {
+    /// All categories, in reporting order.
+    pub const ALL: [StallReason; 6] = [
+        StallReason::Barrier,
+        StallReason::MathPipeThrottle,
+        StallReason::Wait,
+        StallReason::BranchResolve,
+        StallReason::LongScoreboard,
+        StallReason::Idle,
+    ];
+
+    /// Display label matching the paper's figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            StallReason::Barrier => "Barrier(SB)",
+            StallReason::MathPipeThrottle => "MPT",
+            StallReason::Wait => "Wait",
+            StallReason::BranchResolve => "BranchResolve",
+            StallReason::LongScoreboard => "LongScoreboard",
+            StallReason::Idle => "Idle",
+        }
+    }
+}
+
+/// Counters collected by one SM simulation.
+#[derive(Debug, Clone, Default)]
+pub struct SimMetrics {
+    /// Total simulated cycles.
+    pub cycles: u64,
+    /// Warp-instructions issued.
+    pub issued: u64,
+    /// Cycles each scheduler's ALU pipe was busy (summed over schedulers).
+    pub alu_busy: u64,
+    /// Cycles each scheduler's FMA pipe was busy.
+    pub fma_busy: u64,
+    /// Cycles each scheduler's LSU pipe was busy.
+    pub lsu_busy: u64,
+    /// Bytes read from DRAM.
+    pub bytes_read: u64,
+    /// Bytes written to DRAM.
+    pub bytes_written: u64,
+    /// Scheduler-cycles with no issue, by reason.
+    pub stalls: [u64; 6],
+    /// Uncompressed bytes produced by the simulated units.
+    pub uncomp_bytes: u64,
+    /// Units completed.
+    pub units_done: u64,
+}
+
+impl SimMetrics {
+    /// Record a stall.
+    #[inline]
+    pub fn stall(&mut self, r: StallReason, n: u64) {
+        let idx = StallReason::ALL.iter().position(|x| *x == r).unwrap();
+        self.stalls[idx] += n;
+    }
+
+    /// Total scheduler-cycles (issue opportunities).
+    pub fn scheduler_cycles(&self, cfg: &GpuConfig) -> u64 {
+        self.cycles * cfg.schedulers_per_sm as u64
+    }
+
+    /// Compute (issue) throughput as % of peak — paper "Compute %".
+    pub fn compute_pct(&self, cfg: &GpuConfig) -> f64 {
+        100.0 * self.issued as f64 / self.scheduler_cycles(cfg).max(1) as f64
+    }
+
+    /// Memory throughput as % of the SM's DRAM bandwidth share.
+    pub fn memory_pct(&self, cfg: &GpuConfig) -> f64 {
+        let peak = self.cycles as f64 * cfg.bytes_per_cycle_per_sm();
+        100.0 * (self.bytes_read + self.bytes_written) as f64 / peak.max(1.0)
+    }
+
+    /// ALU pipe utilization % (paper Fig 3 right).
+    pub fn alu_pct(&self, cfg: &GpuConfig) -> f64 {
+        100.0 * self.alu_busy as f64 / self.scheduler_cycles(cfg).max(1) as f64
+    }
+
+    /// FMA pipe utilization %.
+    pub fn fma_pct(&self, cfg: &GpuConfig) -> f64 {
+        100.0 * self.fma_busy as f64 / self.scheduler_cycles(cfg).max(1) as f64
+    }
+
+    /// LSU pipe utilization %.
+    pub fn lsu_pct(&self, cfg: &GpuConfig) -> f64 {
+        100.0 * self.lsu_busy as f64 / self.scheduler_cycles(cfg).max(1) as f64
+    }
+
+    /// Stall distribution (% of stalled scheduler-cycles per reason).
+    pub fn stall_distribution(&self) -> Vec<(StallReason, f64)> {
+        let total: u64 = self.stalls.iter().sum();
+        StallReason::ALL
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, 100.0 * self.stalls[i] as f64 / total.max(1) as f64))
+            .collect()
+    }
+
+    /// Fraction of stalled cycles attributed to `r`.
+    pub fn stall_pct(&self, r: StallReason) -> f64 {
+        let total: u64 = self.stalls.iter().sum();
+        let idx = StallReason::ALL.iter().position(|x| *x == r).unwrap();
+        100.0 * self.stalls[idx] as f64 / total.max(1) as f64
+    }
+
+    /// End-to-end decompression throughput in GB/s when this SM's work
+    /// is replicated over the whole GPU (units are homogeneous and SMs
+    /// independent — §IV-C).
+    pub fn throughput_gbps(&self, cfg: &GpuConfig) -> f64 {
+        let secs = self.cycles as f64 / cfg.clock_hz();
+        self.uncomp_bytes as f64 * cfg.num_sms as f64 / secs.max(1e-12) / 1e9
+    }
+
+    /// Wall-clock the simulated SM spent, in seconds.
+    pub fn sim_seconds(&self, cfg: &GpuConfig) -> f64 {
+        self.cycles as f64 / cfg.clock_hz()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentages_bounded() {
+        let cfg = GpuConfig::a100();
+        let mut m = SimMetrics::default();
+        m.cycles = 1000;
+        m.issued = 2000;
+        m.alu_busy = 1500;
+        m.bytes_read = 10_000;
+        m.uncomp_bytes = 1 << 20;
+        assert!(m.compute_pct(&cfg) <= 100.0 * 1.0 + 1e-9);
+        assert!(m.alu_pct(&cfg) <= 100.0);
+        assert!(m.throughput_gbps(&cfg) > 0.0);
+    }
+
+    #[test]
+    fn stall_distribution_sums_to_100() {
+        let mut m = SimMetrics::default();
+        m.stall(StallReason::Barrier, 80);
+        m.stall(StallReason::Wait, 15);
+        m.stall(StallReason::BranchResolve, 5);
+        let total: f64 = m.stall_distribution().iter().map(|(_, p)| p).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert!((m.stall_pct(StallReason::Barrier) - 80.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,281 @@
+//! Compilation of [`UnitTrace`]s into per-warp instruction segments.
+//!
+//! A decompression unit's event trace is provisioning-agnostic; this
+//! module lowers it onto warps according to the strategy under test:
+//!
+//! * **CODAG** (Fig 1b): one warp executes everything — decode ops,
+//!   warp barriers, coalesced reads and writes.
+//! * **Baseline** (Fig 1a): a leader warp executes decode ops and
+//!   broadcasts; `Read` events go to the dedicated prefetch warp;
+//!   `Write` events fan out over the block's warps; every broadcast and
+//!   write is bracketed by block-wide barriers that *all* warps must
+//!   join — which is how the paper's §III barrier-stall numbers arise.
+
+use crate::decomp::trace::{BarrierScope, UnitEvent, UnitTrace};
+
+/// One warp-level instruction (or synchronization token).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Instr {
+    /// `n` back-to-back dependent ALU warp-instructions.
+    Alu { n: u32 },
+    /// A dependent shared-memory load (input-buffer byte fetch).
+    Smem,
+    /// A warp shuffle broadcast (register-based input buffer, §IV-E):
+    /// same dependency latency class as Smem but does not occupy the
+    /// LSU pipe.
+    Shfl,
+    /// A data-dependent branch (decode control flow).
+    Branch,
+    /// Global memory transaction of `bytes` (read or write). Reads stall
+    /// the warp for the full DRAM latency (scoreboard); writes only wait
+    /// for queue admission (fire-and-forget stores).
+    Mem { bytes: u32, read: bool },
+    /// Warp-scope sync (`__syncwarp`).
+    WarpBar,
+    /// Block-scope barrier: wait for all warps of the unit at `seq`.
+    BlockBar { seq: u32 },
+    /// Leader's shared-memory broadcast publish.
+    Broadcast,
+}
+
+/// A warp's full program: instruction list (executed in order).
+pub type WarpProgram = Vec<Instr>;
+
+/// A decompression unit lowered to warps.
+#[derive(Debug, Clone)]
+pub struct UnitProgram {
+    /// Per-warp instruction streams; index 0 is the leader.
+    pub warps: Vec<WarpProgram>,
+    /// Uncompressed bytes this unit produces (for throughput).
+    pub uncomp_bytes: u64,
+    /// Number of block-barrier sequence points (for sanity checks).
+    pub n_block_barriers: u32,
+}
+
+/// Decode-op mix per 8 ops: 1 branch (paper Fig 2 shows up to 20%
+/// branch-resolve stalls for the baseline) ...
+pub const BRANCH_EVERY: u32 = 8;
+/// ... and 2 shared-memory input-buffer loads (`fetch_bits` reads bytes
+/// from the staging buffer; dependent smem loads are what make a lone
+/// leader thread latency-bound on real hardware).
+pub const SMEM_EVERY: u32 = 4;
+
+/// Split `ops` decode operations into Alu bursts, Smem loads, and
+/// Branches according to the fixed mix.
+fn push_decode(prog: &mut WarpProgram, ops: u32) {
+    let branches = ops / BRANCH_EVERY;
+    let smems = ops / SMEM_EVERY;
+    let alus = ops - branches - smems;
+    if branches == 0 && smems == 0 {
+        if ops > 0 {
+            prog.push(Instr::Alu { n: ops });
+        }
+        return;
+    }
+    // Interleave: emit groups of (alu burst, smem[, branch]).
+    let groups = smems.max(1);
+    let alu_per = alus / groups;
+    let mut alu_rem = alus % groups;
+    let mut branches_left = branches;
+    for g in 0..groups {
+        let n = alu_per + if alu_rem > 0 { alu_rem -= 1; 1 } else { 0 };
+        if n > 0 {
+            prog.push(Instr::Alu { n });
+        }
+        prog.push(Instr::Smem);
+        // A branch every other group keeps the 1:2 branch:smem ratio.
+        if branches_left > 0 && g % 2 == 1 {
+            prog.push(Instr::Branch);
+            branches_left -= 1;
+        }
+    }
+    for _ in 0..branches_left {
+        prog.push(Instr::Branch);
+    }
+}
+
+/// Lower a CODAG unit whose input buffer lives in registers (§IV-E
+/// "Using Registers"): every input-buffer fetch is a warp shuffle
+/// broadcast from the lane holding the requested bytes instead of a
+/// shared-memory load.
+pub fn compile_codag_regbuf(trace: &UnitTrace) -> UnitProgram {
+    let mut p = compile_codag(trace, false);
+    for w in &mut p.warps {
+        for i in w.iter_mut() {
+            if matches!(i, Instr::Smem) {
+                *i = Instr::Shfl;
+            }
+        }
+    }
+    p
+}
+
+/// Lower a CODAG warp-level unit: a single warp runs the whole trace.
+pub fn compile_codag(trace: &UnitTrace, prefetch_warp: bool) -> UnitProgram {
+    let mut main: WarpProgram = Vec::with_capacity(trace.events.len());
+    let mut prefetch: WarpProgram = Vec::new();
+    for e in &trace.events {
+        match *e {
+            UnitEvent::Decode { ops } => push_decode(&mut main, ops),
+            UnitEvent::Read { bytes } => {
+                if prefetch_warp {
+                    // §V-F ablation: reads run ahead on the prefetch warp.
+                    prefetch.push(Instr::Mem { bytes, read: true });
+                } else {
+                    main.push(Instr::Mem { bytes, read: true });
+                }
+            }
+            UnitEvent::Write { bytes, .. } => main.push(Instr::Mem { bytes, read: false }),
+            UnitEvent::Barrier { scope: BarrierScope::Warp } => main.push(Instr::WarpBar),
+            UnitEvent::Barrier { scope: BarrierScope::Block } => main.push(Instr::WarpBar),
+            UnitEvent::Broadcast => main.push(Instr::Broadcast),
+        }
+    }
+    let warps = if prefetch_warp { vec![main, prefetch] } else { vec![main] };
+    UnitProgram { warps, uncomp_bytes: trace.uncomp_bytes, n_block_barriers: 0 }
+}
+
+/// Lower a baseline block-level unit of `block_width` threads: leader
+/// decodes, everyone synchronizes, the block writes collectively. The
+/// prefetch warp is one of the block's warps (Fig 1a — it lives in the
+/// same thread block and shares its shared-memory batch buffers), so a
+/// 1024-thread block is 32 warps: 31 compute + 1 prefetch. The prefetch
+/// warp polls shared state rather than joining `__syncthreads`, letting
+/// it run ahead of the decoders (as RAPIDS does).
+pub fn compile_baseline(trace: &UnitTrace, block_width: u32) -> UnitProgram {
+    let total_warps = (block_width / 32).max(2) as usize;
+    let compute_warps = total_warps - 1; // last warp prefetches
+    let mut warps: Vec<WarpProgram> = vec![Vec::new(); total_warps];
+    let mut bar_seq = 0u32;
+    // Pending coalesced-write transactions distributed on the next
+    // barrier: each entry is one transaction's bytes.
+    let mut pending_writes: Vec<u32> = Vec::new();
+    for e in &trace.events {
+        match *e {
+            UnitEvent::Decode { ops } => push_decode(&mut warps[0], ops),
+            UnitEvent::Read { bytes } => {
+                warps[compute_warps].push(Instr::Mem { bytes, read: true })
+            }
+            UnitEvent::Write { bytes, .. } => pending_writes.push(bytes),
+            UnitEvent::Broadcast => warps[0].push(Instr::Broadcast),
+            UnitEvent::Barrier { .. } => {
+                // Block barrier: all compute warps join; distribute any
+                // pending writes across the block's warps afterwards.
+                for w in warps.iter_mut().take(compute_warps) {
+                    w.push(Instr::BlockBar { seq: bar_seq });
+                }
+                bar_seq += 1;
+                for (i, &bytes) in pending_writes.iter().enumerate() {
+                    warps[i % compute_warps].push(Instr::Mem { bytes, read: false });
+                }
+                pending_writes.clear();
+            }
+        }
+    }
+    for (i, &bytes) in pending_writes.iter().enumerate() {
+        warps[i % compute_warps].push(Instr::Mem { bytes, read: false });
+    }
+    UnitProgram {
+        warps,
+        uncomp_bytes: trace.uncomp_bytes,
+        n_block_barriers: bar_seq,
+    }
+}
+
+impl UnitProgram {
+    /// Total warp-instructions across all warps.
+    pub fn total_instrs(&self) -> u64 {
+        self.warps
+            .iter()
+            .flat_map(|w| w.iter())
+            .map(|i| match i {
+                Instr::Alu { n } => *n as u64,
+                _ => 1,
+            })
+            .sum()
+    }
+
+    /// Number of warps this unit occupies.
+    pub fn n_warps(&self) -> u32 {
+        self.warps.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::trace::{BarrierScope, UnitEvent, UnitTrace};
+
+    fn sample_trace() -> UnitTrace {
+        UnitTrace {
+            events: vec![
+                UnitEvent::Read { bytes: 128 },
+                UnitEvent::Decode { ops: 20 },
+                UnitEvent::Broadcast,
+                UnitEvent::Barrier { scope: BarrierScope::Block },
+                UnitEvent::Write { bytes: 512, active: 128 },
+                UnitEvent::Decode { ops: 17 },
+                UnitEvent::Barrier { scope: BarrierScope::Warp },
+            ],
+            comp_bytes: 100,
+            uncomp_bytes: 512,
+        }
+    }
+
+    #[test]
+    fn codag_single_warp() {
+        let p = compile_codag(&sample_trace(), false);
+        assert_eq!(p.n_warps(), 1);
+        assert_eq!(p.n_block_barriers, 0);
+        // Reads stay on the main warp.
+        assert!(p.warps[0].iter().any(|i| matches!(i, Instr::Mem { read: true, .. })));
+    }
+
+    #[test]
+    fn codag_prefetch_moves_reads() {
+        let p = compile_codag(&sample_trace(), true);
+        assert_eq!(p.n_warps(), 2);
+        assert!(p.warps[0].iter().all(|i| !matches!(i, Instr::Mem { read: true, .. })));
+        assert!(p.warps[1].iter().all(|i| matches!(i, Instr::Mem { read: true, .. })));
+    }
+
+    #[test]
+    fn baseline_structure() {
+        let p = compile_baseline(&sample_trace(), 1024);
+        assert_eq!(p.n_warps(), 32); // 31 compute + 1 prefetch
+        // Every compute warp holds the same number of block barriers.
+        for w in 0..31 {
+            let bars = p.warps[w]
+                .iter()
+                .filter(|i| matches!(i, Instr::BlockBar { .. }))
+                .count();
+            assert_eq!(bars as u32, p.n_block_barriers, "warp {w}");
+        }
+        // Leader holds the decode ops and the broadcast.
+        assert!(p.warps[0].iter().any(|i| matches!(i, Instr::Alu { .. })));
+        assert!(p.warps[0].iter().any(|i| matches!(i, Instr::Broadcast)));
+        assert!(p.warps[1].iter().all(|i| !matches!(i, Instr::Alu { .. })));
+        // Prefetch warp got the read and no barriers.
+        assert!(p.warps[31].iter().any(|i| matches!(i, Instr::Mem { read: true, .. })));
+        assert!(p.warps[31].iter().all(|i| !matches!(i, Instr::BlockBar { .. })));
+    }
+
+    #[test]
+    fn decode_mix_preserves_op_count() {
+        let mut prog = Vec::new();
+        push_decode(&mut prog, 40);
+        let branches = prog.iter().filter(|i| matches!(i, Instr::Branch)).count() as u32;
+        let smems = prog.iter().filter(|i| matches!(i, Instr::Smem)).count() as u32;
+        let alus: u32 = prog
+            .iter()
+            .map(|i| if let Instr::Alu { n } = i { *n } else { 0 })
+            .sum();
+        assert_eq!(branches, 40 / BRANCH_EVERY);
+        assert_eq!(smems, 40 / SMEM_EVERY);
+        assert_eq!(alus + branches + smems, 40);
+        // Small bursts stay pure ALU.
+        let mut small = Vec::new();
+        push_decode(&mut small, 3);
+        assert_eq!(small, vec![Instr::Alu { n: 3 }]);
+    }
+}

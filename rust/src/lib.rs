@@ -1,0 +1,93 @@
+//! # CODAG — Characterizing and Optimizing Decompression Algorithms for GPUs
+//!
+//! A full reproduction of the CODAG paper (Park et al., 2023) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the decompression framework itself: codecs
+//!   (ORC RLE v1 / RLE v2 / DEFLATE, all from scratch), the CODAG
+//!   `input_stream` / `output_stream` abstractions (paper Tables I & II),
+//!   warp-level and block-level (RAPIDS-style baseline) decompression
+//!   engines, a trace-driven GPU timing simulator standing in for the
+//!   A100/V100 testbed, a chunk coordinator (router + dynamic batcher +
+//!   worker pool), dataset generators for the paper's seven evaluation
+//!   datasets, and the benchmark harness regenerating every table and
+//!   figure.
+//! * **L2 (python/compile/model.py)** — the parallel *expand* phase of
+//!   decompression (batched `write_run` + delta reconstruction) as a JAX
+//!   graph, AOT-lowered to HLO text at build time.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for run expansion
+//!   and delta decoding, validated against pure-jnp oracles.
+//!
+//! Python never runs at request time: the [`runtime`] module loads the
+//! AOT artifacts through the `xla` crate's PJRT CPU client and the
+//! [`coordinator`] serves decompression requests from Rust only.
+//!
+//! ## Quick start
+//!
+//! (`no_run`: doctest binaries run outside the cargo rpath config that
+//! locates libxla_extension's bundled libstdc++.)
+//!
+//! ```no_run
+//! use codag::codecs::CodecKind;
+//! use codag::format::container::Container;
+//!
+//! let data = b"aaaaabbbbbcccccaaaaabbbbb".to_vec();
+//! let container = Container::compress(&data, CodecKind::Deflate, 128 * 1024).unwrap();
+//! let out = container.decompress_all().unwrap();
+//! assert_eq!(out, data);
+//! ```
+
+pub mod bench_harness;
+pub mod codecs;
+pub mod coordinator;
+pub mod data;
+pub mod decomp;
+pub mod format;
+pub mod gpu_sim;
+pub mod runtime;
+
+/// Crate-wide result type (string errors keep the dependency set small and
+/// the hot paths monomorphic; richer errors live at module boundaries).
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Crate-wide error type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Error {
+    /// Compressed stream is malformed (truncated, bad header, invalid code).
+    Corrupt(String),
+    /// Caller passed inconsistent arguments (bad chunk size, bucket, ...).
+    Invalid(String),
+    /// Underlying I/O failure.
+    Io(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Corrupt(m) => write!(f, "corrupt stream: {m}"),
+            Error::Invalid(m) => write!(f, "invalid argument: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Shorthand constructor for [`Error::Corrupt`].
+pub fn corrupt(msg: impl Into<String>) -> Error {
+    Error::Corrupt(msg.into())
+}
+
+/// Shorthand constructor for [`Error::Invalid`].
+pub fn invalid(msg: impl Into<String>) -> Error {
+    Error::Invalid(msg.into())
+}

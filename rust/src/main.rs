@@ -1,0 +1,295 @@
+//! `codag` — the CLI / leader entrypoint.
+//!
+//! Subcommands:
+//!
+//! ```text
+//! codag gen        --dataset MC0 --size 16M --out mc0.bin
+//! codag compress   --codec rlev2 --input mc0.bin --out mc0.codag [--chunk 131072] [--width 8]
+//! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
+//! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
+//! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
+//! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (requests on stdin: "<id> <offset> <len>")
+//! ```
+//!
+//! Hand-rolled flag parsing: the offline build environment provides no
+//! argument-parsing crates, and the surface is small.
+
+use codag::bench_harness::{all_workloads, report::Experiment, Scale};
+use codag::codecs::CodecKind;
+use codag::coordinator::{
+    decompress_hybrid, decompress_parallel, Registry, Request, Service, ServiceConfig,
+};
+use codag::data::Dataset;
+use codag::decomp::codag_engine::Variant;
+use codag::format::container::Container;
+use codag::gpu_sim::{simulate_container, GpuConfig, Provisioning};
+use codag::runtime::{default_artifacts_dir, Expander, SharedRuntime};
+use std::collections::HashMap;
+use std::io::BufRead;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Parse `--key value` flags after the subcommand.
+fn flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(k.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(k.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+/// Parse sizes like "16M", "512K", "4096".
+fn parse_size(s: &str) -> Result<usize, String> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last() {
+        Some('K') | Some('k') => (&s[..s.len() - 1], 1024),
+        Some('M') | Some('m') => (&s[..s.len() - 1], 1024 * 1024),
+        Some('G') | Some('g') => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().map(|v| v * mult).map_err(|e| format!("bad size '{s}': {e}"))
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let Some(cmd) = args.first() else {
+        return Err(
+            "usage: codag <gen|compress|decompress|simulate|report|serve> [flags]".into(),
+        );
+    };
+    let f = flags(&args[1..]);
+    match cmd.as_str() {
+        "gen" => cmd_gen(&f),
+        "compress" => cmd_compress(&f),
+        "decompress" => cmd_decompress(&f),
+        "simulate" => cmd_simulate(&f),
+        "report" => cmd_report(args.get(1).map(|s| s.as_str()).unwrap_or("all"), &f),
+        "serve" => cmd_serve(&f),
+        other => Err(format!("unknown command '{other}'")),
+    }
+}
+
+fn get<'a>(f: &'a HashMap<String, String>, k: &str) -> Result<&'a str, String> {
+    f.get(k).map(|s| s.as_str()).ok_or_else(|| format!("missing --{k}"))
+}
+
+fn cmd_gen(f: &HashMap<String, String>) -> Result<(), String> {
+    let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
+    let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
+    let out = get(f, "out")?;
+    let data = d.generate(size);
+    std::fs::write(out, &data).map_err(|e| e.to_string())?;
+    println!("wrote {} bytes of {} to {out}", data.len(), d.name());
+    Ok(())
+}
+
+fn cmd_compress(f: &HashMap<String, String>) -> Result<(), String> {
+    let codec = CodecKind::parse(get(f, "codec")?).ok_or("unknown codec")?;
+    let input = get(f, "input")?;
+    let out = get(f, "out")?;
+    let chunk = parse_size(f.get("chunk").map(String::as_str).unwrap_or("131072"))?;
+    let data = std::fs::read(input).map_err(|e| e.to_string())?;
+    let started = std::time::Instant::now();
+    let container = match f.get("width") {
+        Some(w) => {
+            let width: u8 = w.parse().map_err(|_| "bad --width")?;
+            compress_with_width(&data, codec, chunk, width).map_err(|e| e.to_string())?
+        }
+        None => Container::compress(&data, codec, chunk).map_err(|e| e.to_string())?,
+    };
+    std::fs::write(out, container.to_bytes()).map_err(|e| e.to_string())?;
+    println!(
+        "{input}: {} -> {} bytes (ratio {:.4}) in {:.2}s [{} chunks]",
+        data.len(),
+        container.compressed_len(),
+        container.compression_ratio(),
+        started.elapsed().as_secs_f64(),
+        container.n_chunks()
+    );
+    Ok(())
+}
+
+/// Compress with a pinned RLE element width.
+fn compress_with_width(
+    data: &[u8],
+    codec: CodecKind,
+    chunk: usize,
+    width: u8,
+) -> codag::Result<Container> {
+    use codag::format::container::ChunkEntry;
+    let mut index = Vec::new();
+    let mut payload = Vec::new();
+    for chunk_bytes in data.chunks(chunk) {
+        let comp = codag::codecs::compress_chunk_with(codec, chunk_bytes, width)?;
+        index.push(ChunkEntry {
+            comp_off: payload.len() as u64,
+            comp_len: comp.len() as u64,
+            uncomp_len: chunk_bytes.len() as u64,
+        });
+        payload.extend_from_slice(&comp);
+    }
+    Ok(Container {
+        codec,
+        chunk_size: chunk,
+        total_uncompressed: data.len() as u64,
+        index,
+        payload,
+    })
+}
+
+fn cmd_decompress(f: &HashMap<String, String>) -> Result<(), String> {
+    let input = get(f, "input")?;
+    let out = get(f, "out")?;
+    let workers: usize = match f.get("workers") {
+        Some(s) => s.parse().map_err(|_| "bad --workers")?,
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8),
+    };
+    let bytes = std::fs::read(input).map_err(|e| e.to_string())?;
+    let container = Container::from_bytes(&bytes).map_err(|e| e.to_string())?;
+    let started = std::time::Instant::now();
+    let data = if f.contains_key("hybrid") {
+        let rt = SharedRuntime::load(default_artifacts_dir()).map_err(|e| e.to_string())?;
+        let ex = Expander::new(&rt);
+        let d = decompress_hybrid(&container, workers, &ex).map_err(|e| e.to_string())?;
+        println!(
+            "hybrid dispatch: {} PJRT / {} CPU-fallback chunks",
+            ex.stats.pjrt.load(std::sync::atomic::Ordering::Relaxed),
+            ex.stats.cpu_fallback.load(std::sync::atomic::Ordering::Relaxed)
+        );
+        d
+    } else {
+        decompress_parallel(&container, workers).map_err(|e| e.to_string())?
+    };
+    let secs = started.elapsed().as_secs_f64();
+    std::fs::write(out, &data).map_err(|e| e.to_string())?;
+    println!(
+        "{input}: {} bytes in {:.3}s ({:.2} GB/s, {workers} workers)",
+        data.len(),
+        secs,
+        data.len() as f64 / secs / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_simulate(f: &HashMap<String, String>) -> Result<(), String> {
+    let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
+    let codec = CodecKind::parse(get(f, "codec")?).ok_or("unknown codec")?;
+    let gpu = GpuConfig::by_name(f.get("gpu").map(String::as_str).unwrap_or("a100"))
+        .ok_or("unknown gpu (a100|v100)")?;
+    let size = parse_size(f.get("size").map(String::as_str).unwrap_or("4M"))?;
+    let chunks: usize = f.get("chunks").map(|s| s.parse().unwrap_or(16)).unwrap_or(16);
+    let prov = match f.get("arch").map(String::as_str).unwrap_or("codag") {
+        "codag" => Provisioning::Codag(Variant::Codag),
+        "baseline" => Provisioning::Baseline,
+        "prefetch" => Provisioning::Codag(Variant::CodagPrefetch),
+        "single" => Provisioning::Codag(Variant::SingleThreadDecode),
+        "regbuf" => Provisioning::Codag(Variant::RegisterBuffer),
+        other => return Err(format!("unknown arch '{other}'")),
+    };
+    let data = d.generate(size);
+    let container =
+        codag::bench_harness::compress_dataset(&data, d, codec).map_err(|e| e.to_string())?;
+    let m = simulate_container(&gpu, prov, &container, chunks).map_err(|e| e.to_string())?;
+    println!(
+        "{} {} {} on {}: {:.2} GB/s  (cycles={} comp%={:.1} mem%={:.1})",
+        prov.label(),
+        codec.name(),
+        d.name(),
+        gpu.name,
+        m.throughput_gbps(&gpu),
+        m.cycles,
+        m.compute_pct(&gpu),
+        m.memory_pct(&gpu)
+    );
+    for (r, p) in m.stall_distribution() {
+        println!("  stall {:16} {:5.1}%", r.label(), p);
+    }
+    Ok(())
+}
+
+fn cmd_report(which: &str, f: &HashMap<String, String>) -> Result<(), String> {
+    let mut scale = Scale::default();
+    if let Some(s) = f.get("size") {
+        scale.dataset_bytes = parse_size(s)?;
+    }
+    if let Some(c) = f.get("chunks") {
+        scale.sim_chunks = c.parse().map_err(|_| "bad --chunks")?;
+    }
+    if which == "all" || which.starts_with("--") {
+        let report = codag::bench_harness::report::run_all(scale).map_err(|e| e.to_string())?;
+        println!("{report}");
+        return Ok(());
+    }
+    let e = Experiment::parse(which).ok_or_else(|| format!("unknown experiment '{which}'"))?;
+    let workloads = all_workloads(scale).map_err(|e| e.to_string())?;
+    println!("{}", e.run(&workloads, scale).map_err(|e| e.to_string())?);
+    Ok(())
+}
+
+fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
+    let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
+    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
+        .ok_or("unknown codec")?;
+    let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
+    let workers: usize = f.get("workers").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
+    let data = d.generate(size);
+    let container =
+        codag::bench_harness::compress_dataset(&data, d, codec).map_err(|e| e.to_string())?;
+    let mut registry = Registry::new();
+    registry.insert(d.name(), container);
+    let svc = Service::new(&registry, None, ServiceConfig { workers, hybrid: false });
+    eprintln!(
+        "serving {} ({} bytes, {}): '<id> <offset> <len>' per line on stdin",
+        d.name(),
+        data.len(),
+        codec.name()
+    );
+    let stdin = std::io::stdin();
+    for line in stdin.lock().lines() {
+        let line = line.map_err(|e| e.to_string())?;
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        if parts.len() != 3 {
+            eprintln!("want: <id> <offset> <len>");
+            continue;
+        }
+        let req = Request {
+            id: parts[0].parse().map_err(|_| "bad id")?,
+            dataset: d.name().to_string(),
+            offset: parts[1].parse().map_err(|_| "bad offset")?,
+            len: parts[2].parse().map_err(|_| "bad len")?,
+        };
+        let (responses, stats) = svc.serve_batch(&[req]);
+        let r = &responses[0];
+        match &r.data {
+            Ok(bytes) => println!(
+                "id={} {} bytes in {}us (p50 {}us)",
+                r.id,
+                bytes.len(),
+                r.latency.as_micros(),
+                stats.percentile_us(50.0)
+            ),
+            Err(e) => println!("id={} error: {e}", r.id),
+        }
+    }
+    Ok(())
+}

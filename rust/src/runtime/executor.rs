@@ -1,0 +1,293 @@
+//! PJRT executor: loads the AOT HLO artifacts and runs them.
+//!
+//! Follows the reference wiring (`/opt/xla-example/load_hlo`): parse HLO
+//! *text* with `HloModuleProto::from_text_file` (jax ≥ 0.5 emits protos
+//! with 64-bit ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them), wrap in an `XlaComputation`, compile on the PJRT CPU
+//! client, and execute with concrete literals.
+//!
+//! One compiled executable per bucket; compilation happens once at
+//! startup (`make artifacts` output is the contract — see
+//! `python/compile/model.py` BUCKETS).
+
+use crate::{invalid, Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Key identifying one compiled artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ArtifactKey {
+    /// Run expansion with `n_runs` input slots and `m_out` output elems.
+    Expand { n_runs: usize, m_out: usize },
+    /// Delta scan over `n` elements.
+    Delta { n: usize },
+}
+
+impl ArtifactKey {
+    /// Human-readable name (matches the artifact file stem).
+    pub fn name(&self) -> String {
+        match self {
+            ArtifactKey::Expand { n_runs, m_out } => format!("expand_n{n_runs}_m{m_out}"),
+            ArtifactKey::Delta { n } => format!("delta_n{n}"),
+        }
+    }
+}
+
+/// A parsed manifest entry.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    /// Bucket key.
+    pub key: ArtifactKey,
+    /// HLO text file (relative to the artifacts dir).
+    pub file: String,
+}
+
+/// Parse `artifacts/manifest.txt` (`kind n m file` per line).
+pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (lno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        if f.len() != 4 {
+            return Err(invalid(format!("manifest line {}: expected 4 fields", lno + 1)));
+        }
+        let n: usize = f[1].parse().map_err(|_| invalid("manifest: bad n"))?;
+        let m: usize = f[2].parse().map_err(|_| invalid("manifest: bad m"))?;
+        let key = match f[0] {
+            "expand" => ArtifactKey::Expand { n_runs: n, m_out: m },
+            "delta" => ArtifactKey::Delta { n },
+            other => return Err(invalid(format!("manifest: unknown kind {other}"))),
+        };
+        out.push(ManifestEntry { key, file: f[3].to_string() });
+    }
+    Ok(out)
+}
+
+/// The PJRT runtime: CPU client + compiled executables per bucket.
+///
+/// Executions are serialized behind a mutex: the CPU PJRT client runs
+/// one computation at a time anyway, and the coordinator's dynamic
+/// batcher amortizes dispatch (see `coordinator::batcher`).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+    exec_lock: Mutex<()>,
+    /// Artifacts dir (for diagnostics).
+    pub dir: PathBuf,
+    /// Cumulative executions, for metrics.
+    pub dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("dir", &self.dir)
+            .field("executables", &self.executables.len())
+            .finish()
+    }
+}
+
+fn xla_err(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+impl PjrtRuntime {
+    /// Load every artifact in `dir` (per its manifest) and compile.
+    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                manifest_path.display()
+            ))
+        })?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+        let mut executables = HashMap::new();
+        for e in &entries {
+            let path = dir.join(&e.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| invalid("non-utf8 path"))?,
+            )
+            .map_err(xla_err)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xla_err)?;
+            executables.insert(e.key, exe);
+        }
+        Ok(PjrtRuntime {
+            client,
+            executables,
+            exec_lock: Mutex::new(()),
+            dir,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    /// Buckets available, sorted.
+    pub fn buckets(&self) -> Vec<ArtifactKey> {
+        let mut v: Vec<ArtifactKey> = self.executables.keys().copied().collect();
+        v.sort();
+        v
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute the expand bucket: `starts` (i32, padded with i32::MAX),
+    /// `values`/`deltas` (i64). Returns `m_out` i64 elements.
+    pub fn run_expand(
+        &self,
+        key: ArtifactKey,
+        starts: &[i32],
+        values: &[i64],
+        deltas: &[i64],
+    ) -> Result<Vec<i64>> {
+        let (n_runs, _m) = match key {
+            ArtifactKey::Expand { n_runs, m_out } => (n_runs, m_out),
+            _ => return Err(invalid("run_expand wants an Expand key")),
+        };
+        if starts.len() != n_runs || values.len() != n_runs || deltas.len() != n_runs {
+            return Err(invalid(format!(
+                "bucket {} expects {n_runs} runs, got {}/{}/{}",
+                key.name(),
+                starts.len(),
+                values.len(),
+                deltas.len()
+            )));
+        }
+        let exe = self
+            .executables
+            .get(&key)
+            .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
+        let s = xla::Literal::vec1(starts);
+        let v = xla::Literal::vec1(values);
+        let d = xla::Literal::vec1(deltas);
+        let _g = self.exec_lock.lock().unwrap();
+        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe.execute::<xla::Literal>(&[s, v, d]).map_err(xla_err)?[0][0]
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        let out = result.to_tuple1().map_err(xla_err)?;
+        out.to_vec::<i64>().map_err(xla_err)
+    }
+
+    /// Execute the delta bucket: scalar `base` and `n` deltas (padded
+    /// with zeros). Returns `base + inclusive_cumsum(deltas)`.
+    pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
+        let n = match key {
+            ArtifactKey::Delta { n } => n,
+            _ => return Err(invalid("run_delta wants a Delta key")),
+        };
+        if deltas.len() != n {
+            return Err(invalid(format!("bucket {} expects {n} deltas", key.name())));
+        }
+        let exe = self
+            .executables
+            .get(&key)
+            .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
+        let b = xla::Literal::vec1(&[base]);
+        let d = xla::Literal::vec1(deltas);
+        let _g = self.exec_lock.lock().unwrap();
+        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe.execute::<xla::Literal>(&[b, d]).map_err(xla_err)?[0][0]
+            .to_literal_sync()
+            .map_err(xla_err)?;
+        let out = result.to_tuple1().map_err(xla_err)?;
+        out.to_vec::<i64>().map_err(xla_err)
+    }
+}
+
+/// Thread-shareable wrapper around [`PjrtRuntime`].
+///
+/// The `xla` crate's client/executable handles hold non-atomic `Rc`s
+/// and raw pointers, so they are neither `Send` nor `Sync`. Every
+/// access here goes through one mutex — the runtime is constructed
+/// inside the wrapper and no handle ever escapes it — so no `Rc` clone
+/// or PJRT call can race.
+///
+/// # Safety
+/// Soundness rests on the invariants above: exclusive access enforced
+/// by the mutex, construction and drop on whichever single thread holds
+/// the lock, and the PJRT C API itself being thread-compatible.
+pub struct SharedRuntime {
+    inner: Mutex<PjrtRuntime>,
+}
+
+unsafe impl Send for SharedRuntime {}
+unsafe impl Sync for SharedRuntime {}
+
+impl std::fmt::Debug for SharedRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedRuntime").finish()
+    }
+}
+
+impl SharedRuntime {
+    /// Load artifacts (see [`PjrtRuntime::load`]).
+    pub fn load(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
+        Ok(SharedRuntime { inner: Mutex::new(PjrtRuntime::load(dir)?) })
+    }
+
+    /// Available buckets.
+    pub fn buckets(&self) -> Vec<ArtifactKey> {
+        self.inner.lock().unwrap().buckets()
+    }
+
+    /// PJRT platform name.
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().platform()
+    }
+
+    /// Total PJRT dispatches so far.
+    pub fn dispatches(&self) -> u64 {
+        self.inner.lock().unwrap().dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute an expand bucket (see [`PjrtRuntime::run_expand`]).
+    pub fn run_expand(
+        &self,
+        key: ArtifactKey,
+        starts: &[i32],
+        values: &[i64],
+        deltas: &[i64],
+    ) -> Result<Vec<i64>> {
+        self.inner.lock().unwrap().run_expand(key, starts, values, deltas)
+    }
+
+    /// Execute a delta bucket (see [`PjrtRuntime::run_delta`]).
+    pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
+        self.inner.lock().unwrap().run_delta(key, base, deltas)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing() {
+        let text = "expand 512 16384 expand_n512_m16384.hlo.txt\ndelta 4096 0 delta_n4096.hlo.txt\n";
+        let m = parse_manifest(text).unwrap();
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].key, ArtifactKey::Expand { n_runs: 512, m_out: 16384 });
+        assert_eq!(m[1].key, ArtifactKey::Delta { n: 4096 });
+        assert!(parse_manifest("bogus line\n").is_err());
+        assert!(parse_manifest("expand x 2 f\n").is_err());
+    }
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(ArtifactKey::Expand { n_runs: 512, m_out: 16384 }.name(), "expand_n512_m16384");
+        assert_eq!(ArtifactKey::Delta { n: 4096 }.name(), "delta_n4096");
+    }
+
+    // PJRT-backed tests live in rust/tests/pjrt_roundtrip.rs (they need
+    // `make artifacts` to have run).
+}

@@ -1,0 +1,151 @@
+//! The expand dispatcher: run records → bucket selection → PJRT → bytes.
+//!
+//! Bridges the Rust decode half and the AOT JAX/Pallas expand half:
+//! pads a chunk's [`RunRecord`]s into the smallest fitting fixed-shape
+//! bucket, executes through [`PjrtRuntime`], and re-serializes the i64
+//! element stream to the column's byte width. Chunks whose run table
+//! exceeds every bucket (degenerate literal-heavy chunks) fall back to
+//! the CPU expansion — a deliberate design decision (expanding unit
+//! runs on an accelerator does no useful work); the fallback is counted
+//! so benches can report the split.
+
+use crate::decomp::{ByteSink, OutputStream, RunRecord};
+use crate::runtime::executor::{ArtifactKey, SharedRuntime};
+use crate::{invalid, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Dispatcher statistics.
+#[derive(Debug, Default)]
+pub struct ExpanderStats {
+    /// Chunks expanded through PJRT.
+    pub pjrt: AtomicU64,
+    /// Chunks expanded on the CPU fallback path.
+    pub cpu_fallback: AtomicU64,
+}
+
+/// Run-record expander with bucket dispatch.
+#[derive(Debug)]
+pub struct Expander<'rt> {
+    runtime: Option<&'rt SharedRuntime>,
+    buckets: Vec<(usize, usize)>,
+    /// Dispatch statistics.
+    pub stats: ExpanderStats,
+}
+
+impl<'rt> Expander<'rt> {
+    /// Expander backed by a PJRT runtime.
+    pub fn new(runtime: &'rt SharedRuntime) -> Expander<'rt> {
+        let buckets = runtime
+            .buckets()
+            .into_iter()
+            .filter_map(|k| match k {
+                ArtifactKey::Expand { n_runs, m_out } => Some((n_runs, m_out)),
+                _ => None,
+            })
+            .collect();
+        Expander { runtime: Some(runtime), buckets, stats: ExpanderStats::default() }
+    }
+
+    /// CPU-only expander (no artifacts available).
+    pub fn cpu_only() -> Expander<'static> {
+        Expander { runtime: None, buckets: Vec::new(), stats: ExpanderStats::default() }
+    }
+
+    /// Smallest bucket fitting `n_runs` runs and `total` elements.
+    pub fn pick_bucket(&self, n_runs: usize, total: usize) -> Option<(usize, usize)> {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&(n, m)| n_runs <= n && total <= m)
+            .min_by_key(|&(n, m)| (m, n))
+    }
+
+    /// Expand `runs` (element width `width`, `total` elements) to bytes.
+    pub fn expand(&self, runs: &[RunRecord], width: u8, total: usize) -> Result<Vec<u8>> {
+        if let (Some(rt), Some((bn, bm))) =
+            (self.runtime, self.pick_bucket(runs.len(), total))
+        {
+            self.stats.pjrt.fetch_add(1, Ordering::Relaxed);
+            let key = ArtifactKey::Expand { n_runs: bn, m_out: bm };
+            // Pad to the bucket: starts carry i32::MAX so the kernel's
+            // searchsorted never selects a padding slot.
+            let mut starts = vec![i32::MAX; bn];
+            let mut values = vec![0i64; bn];
+            let mut deltas = vec![0i64; bn];
+            let mut acc = 0u64;
+            for (i, r) in runs.iter().enumerate() {
+                if acc > i32::MAX as u64 {
+                    return Err(invalid("chunk too large for i32 offsets"));
+                }
+                starts[i] = acc as i32;
+                values[i] = r.init as i64;
+                deltas[i] = r.delta;
+                acc += r.len;
+            }
+            if acc as usize != total {
+                return Err(invalid(format!(
+                    "run records sum to {acc} elements, expected {total}"
+                )));
+            }
+            let elems = rt.run_expand(key, &starts, &values, &deltas)?;
+            Ok(elems_to_bytes(&elems[..total], width))
+        } else {
+            self.stats.cpu_fallback.fetch_add(1, Ordering::Relaxed);
+            cpu_expand(runs, width)
+        }
+    }
+}
+
+/// CPU reference expansion (also the fallback path).
+pub fn cpu_expand(runs: &[RunRecord], width: u8) -> Result<Vec<u8>> {
+    let mut sink = ByteSink::new();
+    for r in runs {
+        sink.write_run(r.init, r.len, r.delta, width)?;
+    }
+    Ok(sink.into_bytes())
+}
+
+/// Serialize i64 elements to `width`-byte little-endian bytes.
+pub fn elems_to_bytes(elems: &[i64], width: u8) -> Vec<u8> {
+    let w = width as usize;
+    let mut out = Vec::with_capacity(elems.len() * w);
+    for &e in elems {
+        let le = (e as u64).to_le_bytes();
+        out.extend_from_slice(&le[..w]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_expand_matches_manual() {
+        let runs = vec![
+            RunRecord { init: 5, len: 3, delta: 2 },
+            RunRecord { init: 100, len: 1, delta: 0 },
+        ];
+        let bytes = cpu_expand(&runs, 2).unwrap();
+        let want: Vec<u8> = [5u16, 7, 9, 100].iter().flat_map(|v| v.to_le_bytes()).collect();
+        assert_eq!(bytes, want);
+    }
+
+    #[test]
+    fn elems_serialization_widths() {
+        let elems = [0x1122334455667788i64, -1];
+        assert_eq!(elems_to_bytes(&elems, 1), vec![0x88, 0xFF]);
+        assert_eq!(elems_to_bytes(&elems, 2), vec![0x88, 0x77, 0xFF, 0xFF]);
+        assert_eq!(elems_to_bytes(&elems, 8).len(), 16);
+    }
+
+    #[test]
+    fn cpu_only_expander_falls_back() {
+        let ex = Expander::cpu_only();
+        let runs = vec![RunRecord { init: 1, len: 4, delta: 1 }];
+        let bytes = ex.expand(&runs, 1, 4).unwrap();
+        assert_eq!(bytes, vec![1, 2, 3, 4]);
+        assert_eq!(ex.stats.cpu_fallback.load(Ordering::Relaxed), 1);
+        assert_eq!(ex.stats.pjrt.load(Ordering::Relaxed), 0);
+    }
+}

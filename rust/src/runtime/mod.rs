@@ -1,0 +1,22 @@
+//! PJRT runtime: load + execute the AOT JAX/Pallas artifacts from Rust.
+//!
+//! Python runs once at `make artifacts`; after that the coordinator's
+//! request path touches only this module: [`executor::PjrtRuntime`]
+//! compiles the HLO-text artifacts on the PJRT CPU client at startup,
+//! and [`expander::Expander`] dispatches decoded run tables to the
+//! appropriate fixed-shape bucket (padding in, truncating out).
+
+pub mod executor;
+pub mod expander;
+
+pub use executor::{ArtifactKey, PjrtRuntime, SharedRuntime};
+pub use expander::{cpu_expand, Expander};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$CODAG_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("CODAG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,95 @@
+//! Integration: AOT artifacts load on the PJRT CPU client and the
+//! expand/delta executables agree with the Rust reference expansion.
+//! Requires `make artifacts` (skips cleanly when missing so plain
+//! `cargo test` works on a fresh checkout).
+
+use codag::codecs::{compress_chunk_with, decode_to_runs, CodecKind};
+use codag::decomp::RunRecord;
+use codag::runtime::{cpu_expand, default_artifacts_dir, ArtifactKey, Expander, SharedRuntime};
+
+fn runtime() -> Option<SharedRuntime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: no artifacts at {}", dir.display());
+        return None;
+    }
+    Some(SharedRuntime::load(dir).expect("artifacts should compile"))
+}
+
+#[test]
+fn artifacts_compile_and_list_buckets() {
+    let Some(rt) = runtime() else { return };
+    let buckets = rt.buckets();
+    assert!(buckets.contains(&ArtifactKey::Expand { n_runs: 512, m_out: 16384 }));
+    assert!(buckets.contains(&ArtifactKey::Delta { n: 4096 }));
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+}
+
+#[test]
+fn expand_matches_cpu_reference() {
+    let Some(rt) = runtime() else { return };
+    let ex = Expander::new(&rt);
+    // Mixed runs incl. negative deltas and extreme values.
+    let runs = vec![
+        RunRecord { init: 42, len: 100, delta: 0 },
+        RunRecord { init: u64::MAX - 5, len: 7, delta: 1 },
+        RunRecord { init: 1 << 40, len: 513, delta: -3 },
+        RunRecord { init: 9, len: 1, delta: 0 },
+    ];
+    let total: u64 = runs.iter().map(|r| r.len).sum();
+    for width in [1u8, 2, 4, 8] {
+        let got = ex.expand(&runs, width, total as usize).unwrap();
+        let want = cpu_expand(&runs, width).unwrap();
+        assert_eq!(got, want, "width {width}");
+    }
+    assert!(ex.stats.pjrt.load(std::sync::atomic::Ordering::Relaxed) >= 4);
+}
+
+#[test]
+fn decoded_rle_chunk_expands_identically() {
+    let Some(rt) = runtime() else { return };
+    let ex = Expander::new(&rt);
+    // Real codec path: compress -> decode to runs -> expand via PJRT.
+    let mut data = Vec::new();
+    for i in 0..10_000u64 {
+        data.extend_from_slice(&(i / 17 + (i % 3)).to_le_bytes());
+    }
+    for kind in [CodecKind::RleV1, CodecKind::RleV2] {
+        let comp = compress_chunk_with(kind, &data, 8).unwrap();
+        let (runs, width) = decode_to_runs(kind, &comp).unwrap();
+        let total: u64 = runs.iter().map(|r| r.len).sum();
+        let out = ex.expand(&runs, width, total as usize).unwrap();
+        assert_eq!(out, data, "{kind:?}");
+    }
+}
+
+#[test]
+fn oversized_run_table_falls_back_to_cpu() {
+    let Some(rt) = runtime() else { return };
+    let ex = Expander::new(&rt);
+    // 40k unit runs exceed the largest (32768-run) bucket.
+    let runs: Vec<RunRecord> =
+        (0..40_000).map(|i| RunRecord { init: i as u64, len: 1, delta: 0 }).collect();
+    let out = ex.expand(&runs, 1, 40_000).unwrap();
+    assert_eq!(out.len(), 40_000);
+    assert_eq!(ex.stats.cpu_fallback.load(std::sync::atomic::Ordering::Relaxed), 1);
+}
+
+#[test]
+fn delta_bucket_matches_reference() {
+    let Some(rt) = runtime() else { return };
+    let n = 4096usize;
+    let mut deltas = vec![0i64; n];
+    let mut x = 99u64;
+    for d in deltas.iter_mut() {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+        *d = ((x >> 40) as i64) - (1 << 23);
+    }
+    let base = -123456789i64;
+    let got = rt.run_delta(ArtifactKey::Delta { n }, base, &deltas).unwrap();
+    let mut acc = base;
+    for (i, &d) in deltas.iter().enumerate() {
+        acc = acc.wrapping_add(d);
+        assert_eq!(got[i], acc, "elem {i}");
+    }
+}

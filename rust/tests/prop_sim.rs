@@ -1,0 +1,122 @@
+//! Property tests on GPU-simulator invariants: conservation (bytes,
+//! units), monotonicity (more parallelism never hurts under CODAG),
+//! determinism, and metric sanity, over randomized synthetic traces.
+
+use codag::data::Rng;
+use codag::decomp::trace::{BarrierScope, UnitEvent, UnitTrace};
+use codag::gpu_sim::engine::simulate_sm;
+use codag::gpu_sim::segment::{compile_baseline, compile_codag};
+use codag::gpu_sim::GpuConfig;
+
+fn random_trace(rng: &mut Rng, symbols: usize) -> UnitTrace {
+    let mut events = Vec::new();
+    let mut uncomp = 0u64;
+    let mut comp = 0u64;
+    for _ in 0..symbols {
+        events.push(UnitEvent::Decode { ops: 5 + rng.below(400) as u32 });
+        if rng.below(3) == 0 {
+            events.push(UnitEvent::Read { bytes: 128 });
+            comp += 128;
+        }
+        if rng.below(4) == 0 {
+            events.push(UnitEvent::Broadcast);
+            events.push(UnitEvent::Barrier { scope: BarrierScope::Block });
+        }
+        let wbytes = 64 + rng.below(512) as u32;
+        events.push(UnitEvent::Write { bytes: wbytes, active: 32 });
+        uncomp += wbytes as u64;
+        if rng.below(2) == 0 {
+            events.push(UnitEvent::Barrier { scope: BarrierScope::Warp });
+        }
+    }
+    UnitTrace { events, comp_bytes: comp, uncomp_bytes: uncomp }
+}
+
+#[test]
+fn prop_conservation_and_determinism() {
+    let cfg = GpuConfig::a100();
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(seed);
+        let n_units = 1 + rng.below(80) as usize;
+        let traces: Vec<UnitTrace> = (0..n_units)
+            .map(|_| {
+                let sym = 1 + rng.below(40) as usize;
+                random_trace(&mut rng, sym)
+            })
+            .collect();
+        let units: Vec<_> = traces.iter().map(|t| compile_codag(t, false)).collect();
+        let m1 = simulate_sm(&cfg, &units);
+        let m2 = simulate_sm(&cfg, &units);
+        // Determinism.
+        assert_eq!(m1.cycles, m2.cycles, "seed {seed}");
+        assert_eq!(m1.issued, m2.issued);
+        // Conservation.
+        assert_eq!(m1.units_done as usize, n_units, "seed {seed}");
+        let want_uncomp: u64 = traces.iter().map(|t| t.uncomp_bytes).sum();
+        assert_eq!(m1.uncomp_bytes, want_uncomp);
+        let want_read: u64 = traces.iter().map(|t| t.comp_bytes).sum();
+        assert_eq!(m1.bytes_read, want_read);
+        // Sanity: percentages bounded.
+        assert!(m1.compute_pct(&cfg) <= 100.0 + 1e-9, "seed {seed}");
+        assert!(m1.cycles > 0);
+    }
+}
+
+#[test]
+fn prop_baseline_units_also_conserve() {
+    let cfg = GpuConfig::a100();
+    for seed in 100..115u64 {
+        let mut rng = Rng::new(seed);
+        let n_units = 1 + rng.below(8) as usize;
+        let traces: Vec<UnitTrace> = (0..n_units)
+            .map(|_| {
+                let sym = 1 + rng.below(25) as usize;
+                random_trace(&mut rng, sym)
+            })
+            .collect();
+        for width in [64u32, 128, 1024] {
+            let units: Vec<_> = traces.iter().map(|t| compile_baseline(t, width)).collect();
+            let m = simulate_sm(&cfg, &units);
+            assert_eq!(m.units_done as usize, n_units, "seed {seed} width {width}");
+            assert_eq!(
+                m.uncomp_bytes,
+                traces.iter().map(|t| t.uncomp_bytes).sum::<u64>()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_more_units_never_slower_per_byte() {
+    // CODAG scaling: doubling independent units must not reduce total
+    // throughput (queueing can only keep the SM busier).
+    let cfg = GpuConfig::a100();
+    for seed in 200..210u64 {
+        let mut rng = Rng::new(seed);
+        let t = random_trace(&mut rng, 30);
+        let small: Vec<_> = (0..8).map(|_| compile_codag(&t, false)).collect();
+        let large: Vec<_> = (0..64).map(|_| compile_codag(&t, false)).collect();
+        let ms = simulate_sm(&cfg, &small);
+        let ml = simulate_sm(&cfg, &large);
+        let rate_s = ms.uncomp_bytes as f64 / ms.cycles as f64;
+        let rate_l = ml.uncomp_bytes as f64 / ml.cycles as f64;
+        assert!(
+            rate_l >= rate_s * 0.95,
+            "seed {seed}: rate fell from {rate_s:.3} to {rate_l:.3} B/cy"
+        );
+    }
+}
+
+#[test]
+fn prop_stall_distribution_partitions_stalled_cycles() {
+    let cfg = GpuConfig::a100();
+    let mut rng = Rng::new(42);
+    let traces: Vec<UnitTrace> = (0..16).map(|_| random_trace(&mut rng, 20)).collect();
+    let units: Vec<_> = traces.iter().map(|t| compile_baseline(t, 256)).collect();
+    let m = simulate_sm(&cfg, &units);
+    let total: f64 = m.stall_distribution().iter().map(|(_, p)| p).sum();
+    assert!((total - 100.0).abs() < 1e-6);
+    // Issued + stalled == scheduler-cycles.
+    let stalled: u64 = m.stalls.iter().sum();
+    assert_eq!(m.issued + stalled, m.scheduler_cycles(&cfg));
+}
