@@ -45,7 +45,10 @@ impl StallReason {
 }
 
 /// Counters collected by one SM simulation.
-#[derive(Debug, Clone, Default)]
+///
+/// All fields are integers, so `==` is exact: the determinism tests
+/// (`tests/prop_sim.rs`) compare whole metric sets across repeated runs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SimMetrics {
     /// Total simulated cycles.
     pub cycles: u64,

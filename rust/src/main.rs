@@ -168,8 +168,26 @@ fn cmd_decompress(f: &HashMap<String, String>) -> Result<(), String> {
     let container = Container::from_bytes(&bytes).map_err(|e| e.to_string())?;
     let started = std::time::Instant::now();
     let data = if f.contains_key("hybrid") {
-        let rt = SharedRuntime::load(default_artifacts_dir()).map_err(|e| e.to_string())?;
-        let ex = Expander::new(&rt);
+        // Degrade gracefully only when PJRT is genuinely unavailable (a
+        // build without the `pjrt` feature, or no artifacts on disk): the
+        // run-record path still runs, expanded by the pure-Rust fallback.
+        // A pjrt-enabled build with artifacts present must NOT mask load
+        // errors (corrupt manifest, failed compile) as a silent CPU run.
+        let artifacts = default_artifacts_dir();
+        let rt = if cfg!(feature = "pjrt") && artifacts.join("manifest.txt").exists() {
+            Some(SharedRuntime::load(&artifacts).map_err(|e| e.to_string())?)
+        } else {
+            eprintln!(
+                "PJRT runtime unavailable (built without the `pjrt` feature, or no \
+                 artifacts at {}); using the CPU expand fallback",
+                artifacts.display()
+            );
+            None
+        };
+        let ex = match rt.as_ref() {
+            Some(rt) => Expander::new(rt),
+            None => Expander::cpu_only(),
+        };
         let d = decompress_hybrid(&container, workers, &ex).map_err(|e| e.to_string())?;
         println!(
             "hybrid dispatch: {} PJRT / {} CPU-fallback chunks",

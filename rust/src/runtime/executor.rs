@@ -9,11 +9,23 @@
 //! One compiled executable per bucket; compilation happens once at
 //! startup (`make artifacts` output is the contract — see
 //! `python/compile/model.py` BUCKETS).
+//!
+//! The `xla` crate is only available in PJRT-enabled builds, so the
+//! runtime comes in two interchangeable backends selected by the
+//! off-by-default `pjrt` cargo feature:
+//!
+//! * **`pjrt` on** — the real [`PjrtRuntime`]/[`SharedRuntime`] backed by
+//!   the PJRT CPU client (requires the `xla` dependency; see Cargo.toml).
+//! * **`pjrt` off (default, offline)** — API-identical stubs whose
+//!   [`PjrtRuntime::load`] fails cleanly; every caller already handles
+//!   that path by falling back to the pure-Rust
+//!   [`cpu_expand`](crate::runtime::cpu_expand) expansion, so the
+//!   coordinator's expand path works with zero external dependencies.
+//!
+//! Manifest parsing and bucket naming are backend-independent and live
+//! unconditionally in this module.
 
-use crate::{invalid, Error, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use crate::{invalid, Result};
 
 /// Key identifying one compiled artifact.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -67,205 +79,328 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
     Ok(out)
 }
 
-/// The PJRT runtime: CPU client + compiled executables per bucket.
-///
-/// Executions are serialized behind a mutex: the CPU PJRT client runs
-/// one computation at a time anyway, and the coordinator's dynamic
-/// batcher amortizes dispatch (see `coordinator::batcher`).
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    executables: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
-    exec_lock: Mutex<()>,
-    /// Artifacts dir (for diagnostics).
-    pub dir: PathBuf,
-    /// Cumulative executions, for metrics.
-    pub dispatches: std::sync::atomic::AtomicU64,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! The real PJRT backend (requires the `xla` crate).
 
-impl std::fmt::Debug for PjrtRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("PjrtRuntime")
-            .field("dir", &self.dir)
-            .field("executables", &self.executables.len())
-            .finish()
+    use super::{parse_manifest, ArtifactKey};
+    use crate::{invalid, Error, Result};
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::Mutex;
+
+    /// The PJRT runtime: CPU client + compiled executables per bucket.
+    ///
+    /// Executions are serialized behind a mutex: the CPU PJRT client runs
+    /// one computation at a time anyway, and the coordinator's dynamic
+    /// batcher amortizes dispatch (see `coordinator::batcher`).
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        executables: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+        exec_lock: Mutex<()>,
+        /// Artifacts dir (for diagnostics).
+        pub dir: PathBuf,
+        /// Cumulative executions, for metrics.
+        pub dispatches: std::sync::atomic::AtomicU64,
     }
-}
 
-fn xla_err(e: xla::Error) -> Error {
-    Error::Runtime(e.to_string())
-}
-
-impl PjrtRuntime {
-    /// Load every artifact in `dir` (per its manifest) and compile.
-    pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.txt");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            Error::Runtime(format!(
-                "cannot read {} (run `make artifacts` first): {e}",
-                manifest_path.display()
-            ))
-        })?;
-        let entries = parse_manifest(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(xla_err)?;
-        let mut executables = HashMap::new();
-        for e in &entries {
-            let path = dir.join(&e.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| invalid("non-utf8 path"))?,
-            )
-            .map_err(xla_err)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(xla_err)?;
-            executables.insert(e.key, exe);
+    impl std::fmt::Debug for PjrtRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("PjrtRuntime")
+                .field("dir", &self.dir)
+                .field("executables", &self.executables.len())
+                .finish()
         }
-        Ok(PjrtRuntime {
-            client,
-            executables,
-            exec_lock: Mutex::new(()),
-            dir,
-            dispatches: std::sync::atomic::AtomicU64::new(0),
-        })
     }
 
-    /// Buckets available, sorted.
-    pub fn buckets(&self) -> Vec<ArtifactKey> {
-        let mut v: Vec<ArtifactKey> = self.executables.keys().copied().collect();
-        v.sort();
-        v
+    fn xla_err(e: xla::Error) -> Error {
+        Error::Runtime(e.to_string())
     }
 
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute the expand bucket: `starts` (i32, padded with i32::MAX),
-    /// `values`/`deltas` (i64). Returns `m_out` i64 elements.
-    pub fn run_expand(
-        &self,
-        key: ArtifactKey,
-        starts: &[i32],
-        values: &[i64],
-        deltas: &[i64],
-    ) -> Result<Vec<i64>> {
-        let (n_runs, _m) = match key {
-            ArtifactKey::Expand { n_runs, m_out } => (n_runs, m_out),
-            _ => return Err(invalid("run_expand wants an Expand key")),
-        };
-        if starts.len() != n_runs || values.len() != n_runs || deltas.len() != n_runs {
-            return Err(invalid(format!(
-                "bucket {} expects {n_runs} runs, got {}/{}/{}",
-                key.name(),
-                starts.len(),
-                values.len(),
-                deltas.len()
-            )));
+    impl PjrtRuntime {
+        /// Load every artifact in `dir` (per its manifest) and compile.
+        pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+            let dir = dir.as_ref().to_path_buf();
+            let manifest_path = dir.join("manifest.txt");
+            let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+                Error::Runtime(format!(
+                    "cannot read {} (run `make artifacts` first): {e}",
+                    manifest_path.display()
+                ))
+            })?;
+            let entries = parse_manifest(&text)?;
+            let client = xla::PjRtClient::cpu().map_err(xla_err)?;
+            let mut executables = HashMap::new();
+            for e in &entries {
+                let path = dir.join(&e.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| invalid("non-utf8 path"))?,
+                )
+                .map_err(xla_err)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp).map_err(xla_err)?;
+                executables.insert(e.key, exe);
+            }
+            Ok(PjrtRuntime {
+                client,
+                executables,
+                exec_lock: Mutex::new(()),
+                dir,
+                dispatches: std::sync::atomic::AtomicU64::new(0),
+            })
         }
-        let exe = self
-            .executables
-            .get(&key)
-            .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
-        let s = xla::Literal::vec1(starts);
-        let v = xla::Literal::vec1(values);
-        let d = xla::Literal::vec1(deltas);
-        let _g = self.exec_lock.lock().unwrap();
-        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = exe.execute::<xla::Literal>(&[s, v, d]).map_err(xla_err)?[0][0]
-            .to_literal_sync()
-            .map_err(xla_err)?;
-        let out = result.to_tuple1().map_err(xla_err)?;
-        out.to_vec::<i64>().map_err(xla_err)
-    }
 
-    /// Execute the delta bucket: scalar `base` and `n` deltas (padded
-    /// with zeros). Returns `base + inclusive_cumsum(deltas)`.
-    pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
-        let n = match key {
-            ArtifactKey::Delta { n } => n,
-            _ => return Err(invalid("run_delta wants a Delta key")),
-        };
-        if deltas.len() != n {
-            return Err(invalid(format!("bucket {} expects {n} deltas", key.name())));
+        /// Buckets available, sorted.
+        pub fn buckets(&self) -> Vec<ArtifactKey> {
+            let mut v: Vec<ArtifactKey> = self.executables.keys().copied().collect();
+            v.sort();
+            v
         }
-        let exe = self
-            .executables
-            .get(&key)
-            .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
-        let b = xla::Literal::vec1(&[base]);
-        let d = xla::Literal::vec1(deltas);
-        let _g = self.exec_lock.lock().unwrap();
-        self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = exe.execute::<xla::Literal>(&[b, d]).map_err(xla_err)?[0][0]
-            .to_literal_sync()
-            .map_err(xla_err)?;
-        let out = result.to_tuple1().map_err(xla_err)?;
-        out.to_vec::<i64>().map_err(xla_err)
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute the expand bucket: `starts` (i32, padded with i32::MAX),
+        /// `values`/`deltas` (i64). Returns `m_out` i64 elements.
+        pub fn run_expand(
+            &self,
+            key: ArtifactKey,
+            starts: &[i32],
+            values: &[i64],
+            deltas: &[i64],
+        ) -> Result<Vec<i64>> {
+            let (n_runs, _m) = match key {
+                ArtifactKey::Expand { n_runs, m_out } => (n_runs, m_out),
+                _ => return Err(invalid("run_expand wants an Expand key")),
+            };
+            if starts.len() != n_runs || values.len() != n_runs || deltas.len() != n_runs {
+                return Err(invalid(format!(
+                    "bucket {} expects {n_runs} runs, got {}/{}/{}",
+                    key.name(),
+                    starts.len(),
+                    values.len(),
+                    deltas.len()
+                )));
+            }
+            let exe = self
+                .executables
+                .get(&key)
+                .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
+            let s = xla::Literal::vec1(starts);
+            let v = xla::Literal::vec1(values);
+            let d = xla::Literal::vec1(deltas);
+            let _g = self.exec_lock.lock().unwrap();
+            self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let result = exe.execute::<xla::Literal>(&[s, v, d]).map_err(xla_err)?[0][0]
+                .to_literal_sync()
+                .map_err(xla_err)?;
+            let out = result.to_tuple1().map_err(xla_err)?;
+            out.to_vec::<i64>().map_err(xla_err)
+        }
+
+        /// Execute the delta bucket: scalar `base` and `n` deltas (padded
+        /// with zeros). Returns `base + inclusive_cumsum(deltas)`.
+        pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
+            let n = match key {
+                ArtifactKey::Delta { n } => n,
+                _ => return Err(invalid("run_delta wants a Delta key")),
+            };
+            if deltas.len() != n {
+                return Err(invalid(format!("bucket {} expects {n} deltas", key.name())));
+            }
+            let exe = self
+                .executables
+                .get(&key)
+                .ok_or_else(|| invalid(format!("no executable for {}", key.name())))?;
+            let b = xla::Literal::vec1(&[base]);
+            let d = xla::Literal::vec1(deltas);
+            let _g = self.exec_lock.lock().unwrap();
+            self.dispatches.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let result = exe.execute::<xla::Literal>(&[b, d]).map_err(xla_err)?[0][0]
+                .to_literal_sync()
+                .map_err(xla_err)?;
+            let out = result.to_tuple1().map_err(xla_err)?;
+            out.to_vec::<i64>().map_err(xla_err)
+        }
+    }
+
+    /// Thread-shareable wrapper around [`PjrtRuntime`].
+    ///
+    /// The `xla` crate's client/executable handles hold non-atomic `Rc`s
+    /// and raw pointers, so they are neither `Send` nor `Sync`. Every
+    /// access here goes through one mutex — the runtime is constructed
+    /// inside the wrapper and no handle ever escapes it — so no `Rc` clone
+    /// or PJRT call can race.
+    ///
+    /// # Safety
+    /// Soundness rests on the invariants above: exclusive access enforced
+    /// by the mutex, construction and drop on whichever single thread holds
+    /// the lock, and the PJRT C API itself being thread-compatible.
+    pub struct SharedRuntime {
+        inner: Mutex<PjrtRuntime>,
+    }
+
+    unsafe impl Send for SharedRuntime {}
+    unsafe impl Sync for SharedRuntime {}
+
+    impl std::fmt::Debug for SharedRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.debug_struct("SharedRuntime").finish()
+        }
+    }
+
+    impl SharedRuntime {
+        /// Load artifacts (see [`PjrtRuntime::load`]).
+        pub fn load(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
+            Ok(SharedRuntime { inner: Mutex::new(PjrtRuntime::load(dir)?) })
+        }
+
+        /// Available buckets.
+        pub fn buckets(&self) -> Vec<ArtifactKey> {
+            self.inner.lock().unwrap().buckets()
+        }
+
+        /// PJRT platform name.
+        pub fn platform(&self) -> String {
+            self.inner.lock().unwrap().platform()
+        }
+
+        /// Total PJRT dispatches so far.
+        pub fn dispatches(&self) -> u64 {
+            self.inner.lock().unwrap().dispatches.load(std::sync::atomic::Ordering::Relaxed)
+        }
+
+        /// Execute an expand bucket (see [`PjrtRuntime::run_expand`]).
+        pub fn run_expand(
+            &self,
+            key: ArtifactKey,
+            starts: &[i32],
+            values: &[i64],
+            deltas: &[i64],
+        ) -> Result<Vec<i64>> {
+            self.inner.lock().unwrap().run_expand(key, starts, values, deltas)
+        }
+
+        /// Execute a delta bucket (see [`PjrtRuntime::run_delta`]).
+        pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
+            self.inner.lock().unwrap().run_delta(key, base, deltas)
+        }
     }
 }
 
-/// Thread-shareable wrapper around [`PjrtRuntime`].
-///
-/// The `xla` crate's client/executable handles hold non-atomic `Rc`s
-/// and raw pointers, so they are neither `Send` nor `Sync`. Every
-/// access here goes through one mutex — the runtime is constructed
-/// inside the wrapper and no handle ever escapes it — so no `Rc` clone
-/// or PJRT call can race.
-///
-/// # Safety
-/// Soundness rests on the invariants above: exclusive access enforced
-/// by the mutex, construction and drop on whichever single thread holds
-/// the lock, and the PJRT C API itself being thread-compatible.
-pub struct SharedRuntime {
-    inner: Mutex<PjrtRuntime>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Offline stub backend: the same public surface as the PJRT backend
+    //! with `load` failing cleanly. Callers (CLI `--hybrid`, the
+    //! analytics example, `ablation_batching`) already treat a load
+    //! failure as "no accelerator" and use the pure-Rust
+    //! [`cpu_expand`](crate::runtime::cpu_expand) fallback, so the whole
+    //! crate builds and serves without the `xla` dependency.
 
-unsafe impl Send for SharedRuntime {}
-unsafe impl Sync for SharedRuntime {}
+    use super::ArtifactKey;
+    use crate::{Error, Result};
+    use std::path::{Path, PathBuf};
 
-impl std::fmt::Debug for SharedRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("SharedRuntime").finish()
+    fn unavailable(dir: &Path) -> Error {
+        Error::Runtime(format!(
+            "PJRT runtime unavailable: codag was built without the `pjrt` feature \
+             (artifacts dir {}); the CPU expand fallback handles all requests",
+            dir.display()
+        ))
+    }
+
+    /// Offline stand-in for the PJRT runtime. [`PjrtRuntime::load`]
+    /// always fails; the remaining methods exist for API parity with the
+    /// `pjrt` backend and are unreachable in practice.
+    #[derive(Debug)]
+    pub struct PjrtRuntime {
+        /// Artifacts dir (for diagnostics).
+        pub dir: PathBuf,
+        /// Cumulative executions, for metrics (always 0 offline).
+        pub dispatches: std::sync::atomic::AtomicU64,
+    }
+
+    impl PjrtRuntime {
+        /// Fails: PJRT support is compiled out in this build.
+        pub fn load(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+            Err(unavailable(dir.as_ref()))
+        }
+
+        /// No buckets in the offline build.
+        pub fn buckets(&self) -> Vec<ArtifactKey> {
+            Vec::new()
+        }
+
+        /// Stub platform label.
+        pub fn platform(&self) -> String {
+            "offline-stub".to_string()
+        }
+
+        /// Fails: no executables exist in the offline build.
+        pub fn run_expand(
+            &self,
+            _key: ArtifactKey,
+            _starts: &[i32],
+            _values: &[i64],
+            _deltas: &[i64],
+        ) -> Result<Vec<i64>> {
+            Err(unavailable(&self.dir))
+        }
+
+        /// Fails: no executables exist in the offline build.
+        pub fn run_delta(&self, _key: ArtifactKey, _base: i64, _deltas: &[i64]) -> Result<Vec<i64>> {
+            Err(unavailable(&self.dir))
+        }
+    }
+
+    /// Offline stand-in for the thread-shareable runtime wrapper.
+    #[derive(Debug)]
+    pub struct SharedRuntime {
+        inner: PjrtRuntime,
+    }
+
+    impl SharedRuntime {
+        /// Fails: PJRT support is compiled out in this build.
+        pub fn load(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
+            Ok(SharedRuntime { inner: PjrtRuntime::load(dir)? })
+        }
+
+        /// No buckets in the offline build.
+        pub fn buckets(&self) -> Vec<ArtifactKey> {
+            self.inner.buckets()
+        }
+
+        /// Stub platform label.
+        pub fn platform(&self) -> String {
+            self.inner.platform()
+        }
+
+        /// Always 0 offline.
+        pub fn dispatches(&self) -> u64 {
+            self.inner.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+        }
+
+        /// Fails (see [`PjrtRuntime::run_expand`]).
+        pub fn run_expand(
+            &self,
+            key: ArtifactKey,
+            starts: &[i32],
+            values: &[i64],
+            deltas: &[i64],
+        ) -> Result<Vec<i64>> {
+            self.inner.run_expand(key, starts, values, deltas)
+        }
+
+        /// Fails (see [`PjrtRuntime::run_delta`]).
+        pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
+            self.inner.run_delta(key, base, deltas)
+        }
     }
 }
 
-impl SharedRuntime {
-    /// Load artifacts (see [`PjrtRuntime::load`]).
-    pub fn load(dir: impl AsRef<Path>) -> Result<SharedRuntime> {
-        Ok(SharedRuntime { inner: Mutex::new(PjrtRuntime::load(dir)?) })
-    }
-
-    /// Available buckets.
-    pub fn buckets(&self) -> Vec<ArtifactKey> {
-        self.inner.lock().unwrap().buckets()
-    }
-
-    /// PJRT platform name.
-    pub fn platform(&self) -> String {
-        self.inner.lock().unwrap().platform()
-    }
-
-    /// Total PJRT dispatches so far.
-    pub fn dispatches(&self) -> u64 {
-        self.inner.lock().unwrap().dispatches.load(std::sync::atomic::Ordering::Relaxed)
-    }
-
-    /// Execute an expand bucket (see [`PjrtRuntime::run_expand`]).
-    pub fn run_expand(
-        &self,
-        key: ArtifactKey,
-        starts: &[i32],
-        values: &[i64],
-        deltas: &[i64],
-    ) -> Result<Vec<i64>> {
-        self.inner.lock().unwrap().run_expand(key, starts, values, deltas)
-    }
-
-    /// Execute a delta bucket (see [`PjrtRuntime::run_delta`]).
-    pub fn run_delta(&self, key: ArtifactKey, base: i64, deltas: &[i64]) -> Result<Vec<i64>> {
-        self.inner.lock().unwrap().run_delta(key, base, deltas)
-    }
-}
+pub use backend::{PjrtRuntime, SharedRuntime};
 
 #[cfg(test)]
 mod tests {
@@ -286,6 +421,14 @@ mod tests {
     fn artifact_names() {
         assert_eq!(ArtifactKey::Expand { n_runs: 512, m_out: 16384 }.name(), "expand_n512_m16384");
         assert_eq!(ArtifactKey::Delta { n: 4096 }.name(), "delta_n4096");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn offline_stub_fails_cleanly_and_keeps_api_parity() {
+        let err = SharedRuntime::load("definitely/missing").unwrap_err();
+        assert!(matches!(err, crate::Error::Runtime(_)), "{err:?}");
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     // PJRT-backed tests live in rust/tests/pjrt_roundtrip.rs (they need

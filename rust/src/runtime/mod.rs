@@ -5,6 +5,11 @@
 //! compiles the HLO-text artifacts on the PJRT CPU client at startup,
 //! and [`expander::Expander`] dispatches decoded run tables to the
 //! appropriate fixed-shape bucket (padding in, truncating out).
+//!
+//! The PJRT half is gated behind the off-by-default `pjrt` cargo
+//! feature (the `xla` crate is unavailable offline); without it,
+//! [`executor`] compiles API-identical stubs and every expand request
+//! takes the pure-Rust [`cpu_expand`] fallback. See DESIGN.md §Runtime.
 
 pub mod executor;
 pub mod expander;

@@ -1,0 +1,87 @@
+//! Shared golden-vector registry for the conformance and corruption
+//! suites — one list, consumed by both `conformance_golden.rs` and
+//! `prop_codecs.rs`, so a new fixture automatically joins every sweep.
+//!
+//! Fixture bytes live in `tests/golden/`; see that directory's README
+//! and `gen_golden.py` for how they are generated and independently
+//! verified (Python codec ports, zlib, inflate_port.py, and the
+//! `expand_runs_ref` oracle in python/compile/kernels/ref.py).
+
+use codag::codecs::CodecKind;
+
+/// One pinned wire-format vector.
+#[allow(dead_code)] // each consuming test binary uses a subset of fields
+pub struct GoldenVector {
+    pub name: &'static str,
+    pub kind: CodecKind,
+    /// RLE element width; 1 for DEFLATE (which ignores it).
+    pub width: u8,
+    /// When true, the Rust encoder must reproduce `comp` byte-for-byte.
+    pub encoder_pinned: bool,
+    pub input: &'static [u8],
+    pub comp: &'static [u8],
+    /// Dead bits for the exhaustive flip sweep, beyond the universal
+    /// RLE allowance (the reserved header byte at offset 1): `(byte
+    /// index, mask)` pairs naming the only bits a silent — undetected,
+    /// payload-identical — flip may touch. Every mask was measured
+    /// exhaustively against the Python decoder ports (gen_golden.py +
+    /// inflate_port.py); positions fall into three classes: MSB
+    /// bit-pack padding (RLE v2), DEFLATE alignment/final padding, and
+    /// DEFLATE back-references that copy identical bytes from another
+    /// window position (df_dynamic_genome).
+    pub dead: &'static [(usize, u8)],
+}
+
+macro_rules! golden {
+    ($name:literal, $kind:expr, $width:literal, $pinned:literal, $dead:expr) => {
+        GoldenVector {
+            name: $name,
+            kind: $kind,
+            width: $width,
+            encoder_pinned: $pinned,
+            input: include_bytes!(concat!("../golden/", $name, ".input.bin")),
+            comp: include_bytes!(concat!("../golden/", $name, ".comp.bin")),
+            dead: $dead,
+        }
+    };
+}
+
+/// Every golden vector, in fixture order.
+pub fn vectors() -> Vec<GoldenVector> {
+    use CodecKind::{Deflate, RleV1, RleV2};
+    vec![
+        // ORC RLE v1: byte RLE (width 1) and integer RLE (widths 2/4/8).
+        golden!("v1_byte_runs_w1", RleV1, 1, true, &[]),
+        golden!("v1_byte_literals_w1", RleV1, 1, true, &[]),
+        golden!("v1_int_delta_w4", RleV1, 4, true, &[]),
+        golden!("v1_int_literals_w8", RleV1, 8, true, &[]),
+        golden!("v1_int_mixed_w2", RleV1, 2, true, &[]),
+        // ORC RLE v2: one vector per sub-encoding.
+        golden!("v2_short_repeat_w8", RleV2, 8, true, &[]),
+        golden!("v2_fixed_delta_w4", RleV2, 4, true, &[]),
+        golden!("v2_equal_long_w1", RleV2, 1, true, &[]),
+        golden!("v2_direct_w2", RleV2, 2, true, &[]),
+        golden!("v2_empty_w8", RleV2, 8, true, &[]),
+        // Packed-section padding: 4 trailing bits of the delta bit-pack,
+        // 6 trailing bits of the patch-list bit-pack.
+        golden!("v2_delta_packed_w8", RleV2, 8, false, &[(9, 0x0F)]),
+        golden!("v2_patched_base_w8", RleV2, 8, false, &[(19, 0x3F)]),
+        // DEFLATE: stored (5 alignment-padding bits after BFINAL/BTYPE),
+        // fixed-Huffman, dynamic-Huffman (final-byte padding), a
+        // genome-like dynamic stream (five single-bit flips reach
+        // equivalent back-references copying identical bytes), and a
+        // multi-block stream with a Z_FULL_FLUSH empty stored block
+        // (mid-stream alignment padding).
+        golden!("df_stored", Deflate, 1, false, &[(0, 0xF8)]),
+        golden!("df_fixed_match", Deflate, 1, false, &[(6, 0xC0)]),
+        golden!("df_dynamic_text", Deflate, 1, false, &[(63, 0xF0)]),
+        golden!(
+            "df_dynamic_genome",
+            Deflate,
+            1,
+            false,
+            &[(192, 0x40), (194, 0x80), (353, 0x20), (765, 0x40), (783, 0x10)]
+        ),
+        golden!("df_multiblock", Deflate, 1, false, &[(37, 0xF0), (99, 0xFE)]),
+    ]
+}

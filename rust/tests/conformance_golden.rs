@@ -1,0 +1,151 @@
+//! Golden-vector conformance suite: pins the exact wire format of all
+//! three codecs and of the chunked container.
+//!
+//! Fixtures live in `tests/golden/` (generated and cross-verified by
+//! `tests/golden/gen_golden.py`, which checks every stream against a
+//! Python decoder port, the `expand_runs_ref` oracle in
+//! `python/compile/kernels/ref.py`, and — for DEFLATE — `zlib`).
+//!
+//! Two pinning levels:
+//!
+//! * **encoder-pinned** (`encoder_pinned: true`) — the Rust encoder must
+//!   reproduce `comp` byte-for-byte from `input`. Any change to the
+//!   emitted stream (header layout, group selection heuristics, varint
+//!   shapes) fails here.
+//! * **decode-pinned** — `comp` is a valid stream of the frozen wire
+//!   format (some hand-built, DEFLATE ones emitted by zlib) that must
+//!   decode to `input` exactly. Any decoder-side format change fails
+//!   here even if the crate's own encode/decode pair still agrees with
+//!   itself.
+//!
+//! If a wire-format change is *intentional*, regenerate fixtures with
+//! `python3 rust/tests/golden/gen_golden.py --force` and document the
+//! break in DESIGN.md.
+
+mod common;
+
+use codag::codecs::{
+    compress_chunk_with, decode_to_runs, decompress_chunk, CodecKind, VALID_WIDTHS,
+};
+use codag::format::container::Container;
+use codag::runtime::cpu_expand;
+use common::vectors;
+
+fn hex(bytes: &[u8]) -> String {
+    bytes.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+#[test]
+fn golden_decode_matches_pinned_streams() {
+    for g in vectors() {
+        let out = decompress_chunk(g.kind, g.comp, g.input.len())
+            .unwrap_or_else(|e| panic!("{}: pinned stream failed to decode: {e}", g.name));
+        assert_eq!(
+            out,
+            g.input,
+            "{}: decoder output diverged from the pinned fixture",
+            g.name
+        );
+    }
+}
+
+#[test]
+fn golden_encode_matches_pinned_streams() {
+    for g in vectors().iter().filter(|g| g.encoder_pinned) {
+        let comp = compress_chunk_with(g.kind, g.input, g.width)
+            .unwrap_or_else(|e| panic!("{}: compress failed: {e}", g.name));
+        assert_eq!(
+            hex(&comp),
+            hex(g.comp),
+            "{}: encoder output diverged from the pinned fixture (wire-format \
+             change? regenerate via tests/golden/gen_golden.py --force and \
+             document in DESIGN.md)",
+            g.name
+        );
+    }
+}
+
+#[test]
+fn golden_inputs_roundtrip_through_own_encoder() {
+    // Decode-pinned vectors too: the crate's encoder must be able to
+    // re-encode every fixture input into something its decoder accepts.
+    for g in vectors() {
+        let comp = compress_chunk_with(g.kind, g.input, g.width).unwrap();
+        let out = decompress_chunk(g.kind, &comp, g.input.len()).unwrap();
+        assert_eq!(out, g.input, "{}: own-encoder roundtrip failed", g.name);
+    }
+}
+
+#[test]
+fn golden_rle_streams_decode_to_runs_and_reexpand() {
+    // The hybrid-PJRT path contract: RLE chunks decode to run records
+    // whose pure-Rust expansion reproduces the payload (mirrors the
+    // expand_runs_ref cross-check the fixture generator performs with
+    // python/compile/kernels/ref.py).
+    for g in vectors().iter().filter(|g| g.kind.is_rle()) {
+        let (runs, width) = decode_to_runs(g.kind, g.comp)
+            .unwrap_or_else(|e| panic!("{}: decode_to_runs failed: {e}", g.name));
+        if g.input.is_empty() {
+            assert!(runs.is_empty(), "{}", g.name);
+            continue;
+        }
+        assert_eq!(width, g.width, "{}: recorded width", g.name);
+        let out = cpu_expand(&runs, width).unwrap();
+        assert_eq!(out, g.input, "{}: run-record re-expansion diverged", g.name);
+    }
+}
+
+#[test]
+fn golden_coverage_floor() {
+    // The acceptance bar: at least 3 vectors per codec, and the RLE
+    // vectors jointly cover every legal element width.
+    let vs = vectors();
+    for kind in CodecKind::all() {
+        let n = vs.iter().filter(|g| g.kind == kind).count();
+        assert!(n >= 3, "{}: only {n} golden vectors", kind.name());
+    }
+    for w in VALID_WIDTHS {
+        assert!(
+            vs.iter().any(|g| g.kind.is_rle() && g.width == w),
+            "no RLE golden vector at width {w}"
+        );
+    }
+    assert!(
+        vs.iter().filter(|g| g.encoder_pinned).count() >= 8,
+        "encoder-pinned coverage eroded"
+    );
+}
+
+#[test]
+fn golden_container_layout_pinned() {
+    // Pins the container serialization (format::container) and the
+    // auto-width selection of compress_chunk: [42u8; 100] at chunk size
+    // 64 must pick byte-RLE (width 1) for both chunks.
+    let data = vec![42u8; 100];
+    let c = Container::compress(&data, CodecKind::RleV1, 64).unwrap();
+    let chunk0: [u8; 5] = [1, 0, 64, 61, 42]; // hdr(w=1, n=64) + run(64 x 42)
+    let chunk1: [u8; 5] = [1, 0, 36, 33, 42]; // hdr(w=1, n=36) + run(36 x 42)
+    let mut want = Vec::new();
+    want.extend_from_slice(&0xC0DA_6001u32.to_le_bytes()); // magic
+    want.extend_from_slice(&1u32.to_le_bytes()); // version
+    want.extend_from_slice(&1u32.to_le_bytes()); // codec = RleV1
+    want.extend_from_slice(&64u64.to_le_bytes()); // chunk_size
+    want.extend_from_slice(&100u64.to_le_bytes()); // total_uncompressed
+    want.extend_from_slice(&2u64.to_le_bytes()); // n_chunks
+    for (off, comp_len, uncomp_len) in [(0u64, 5u64, 64u64), (5, 5, 36)] {
+        want.extend_from_slice(&off.to_le_bytes());
+        want.extend_from_slice(&comp_len.to_le_bytes());
+        want.extend_from_slice(&uncomp_len.to_le_bytes());
+    }
+    want.extend_from_slice(&chunk0);
+    want.extend_from_slice(&chunk1);
+    assert_eq!(
+        hex(&c.to_bytes()),
+        hex(&want),
+        "container byte layout changed (header fields, index shape, or \
+         auto-width selection)"
+    );
+    // And the parse side accepts exactly this layout.
+    let c2 = Container::from_bytes(&want).unwrap();
+    assert_eq!(c2.decompress_all().unwrap(), data);
+}

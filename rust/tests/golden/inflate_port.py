@@ -1,0 +1,202 @@
+"""Python port of the crate's DEFLATE decoder (codecs/deflate/inflate.rs
++ huffman.rs + bitio.rs LSB reader), used by gen_golden.py's corruption
+sweep to validate, bit-for-bit on the checked-in fixtures, which flip
+positions the Rust decoder can legitimately not detect (final-byte
+padding) before the Rust property tests hard-code that allowance.
+
+Error behaviour mirrors the Rust decoder: any condition that returns
+`Error::Corrupt` there raises `Corrupt` here.
+"""
+
+LENGTH_BASE = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59,
+    67, 83, 99, 115, 131, 163, 195, 227, 258,
+]
+LENGTH_EXTRA = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4,
+    5, 5, 5, 5, 0,
+]
+DIST_BASE = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513,
+    769, 1025, 1537, 2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+]
+DIST_EXTRA = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10,
+    11, 11, 12, 12, 13, 13,
+]
+CLC_ORDER = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15]
+MAX_BITS = 15
+
+
+class Corrupt(Exception):
+    pass
+
+
+class LsbReader:
+    def __init__(self, data: bytes) -> None:
+        self.data = data
+        self.pos = 0
+        self.acc = 0
+        self.nbits = 0
+
+    def _refill(self) -> None:
+        while self.nbits <= 56 and self.pos < len(self.data):
+            self.acc |= self.data[self.pos] << self.nbits
+            self.pos += 1
+            self.nbits += 8
+
+    def fetch_bits(self, n: int) -> int:
+        self._refill()
+        if self.nbits < n:
+            raise Corrupt("bit stream exhausted")
+        v = self.acc & ((1 << n) - 1)
+        self.acc >>= n
+        self.nbits -= n
+        return v
+
+    def align_byte(self) -> None:
+        drop = self.nbits % 8
+        self.acc >>= drop
+        self.nbits -= drop
+
+
+class HuffmanDecoder:
+    """Canonical count/offset decoder (port of HuffmanDecoder)."""
+
+    def __init__(self, lens) -> None:
+        count = [0] * (MAX_BITS + 1)
+        for l in lens:
+            if l > MAX_BITS:
+                raise Corrupt("code length > 15")
+            count[l] += 1
+        count[0] = 0
+        if sum(1 for l in lens if l > 0) == 0:
+            raise Corrupt("empty code")
+        left = 1
+        for bits in range(1, MAX_BITS + 1):
+            left = (left << 1) - count[bits]
+            if left < 0:
+                raise Corrupt("over-subscribed lengths")
+        first_code = [0] * (MAX_BITS + 1)
+        first_sym = [0] * (MAX_BITS + 1)
+        code = 0
+        sym_base = 0
+        self.max_len = 0
+        for bits in range(1, MAX_BITS + 1):
+            code = (code + count[bits - 1]) << 1
+            first_code[bits] = code
+            first_sym[bits] = sym_base
+            sym_base += count[bits]
+            if count[bits] > 0:
+                self.max_len = bits
+        offs = first_sym[:]
+        symbols = [0] * sym_base
+        for sym, l in enumerate(lens):
+            if l > 0:
+                symbols[offs[l]] = sym
+                offs[l] += 1
+        self.count = count
+        self.first_code = first_code
+        self.first_sym = first_sym
+        self.symbols = symbols
+
+    def decode(self, r: LsbReader) -> int:
+        code = 0
+        length = 0
+        while True:
+            code = (code << 1) | r.fetch_bits(1)
+            length += 1
+            fc = self.first_code[length]
+            cnt = self.count[length]
+            if fc <= code < fc + cnt:
+                return self.symbols[self.first_sym[length] + (code - fc)]
+            if length >= self.max_len:
+                raise Corrupt("invalid code")
+
+
+def fixed_lit_decoder() -> HuffmanDecoder:
+    return HuffmanDecoder([8] * 144 + [9] * 112 + [7] * 24 + [8] * 8)
+
+
+def fixed_dist_decoder() -> HuffmanDecoder:
+    return HuffmanDecoder([5] * 30)
+
+
+def _read_dynamic_tables(r: LsbReader):
+    hlit = r.fetch_bits(5) + 257
+    hdist = r.fetch_bits(5) + 1
+    hclen = r.fetch_bits(4) + 4
+    if hlit > 286 or hdist > 30:
+        raise Corrupt("bad table sizes")
+    clc_lens = [0] * 19
+    for idx in CLC_ORDER[:hclen]:
+        clc_lens[idx] = r.fetch_bits(3)
+    clc = HuffmanDecoder(clc_lens)
+    total = hlit + hdist
+    lens: list[int] = []
+    while len(lens) < total:
+        sym = clc.decode(r)
+        if sym <= 15:
+            lens.append(sym)
+        elif sym == 16:
+            if not lens:
+                raise Corrupt("repeat with no prior length")
+            lens.extend([lens[-1]] * (3 + r.fetch_bits(2)))
+        elif sym == 17:
+            lens.extend([0] * (3 + r.fetch_bits(3)))
+        else:
+            lens.extend([0] * (11 + r.fetch_bits(7)))
+    if len(lens) != total:
+        raise Corrupt("code-length run overflows table")
+    if lens[256] == 0:
+        raise Corrupt("end-of-block symbol has no code")
+    lit = HuffmanDecoder(lens[:hlit])
+    dist_lens = lens[hlit:]
+    dist = HuffmanDecoder([1]) if all(l == 0 for l in dist_lens) else HuffmanDecoder(dist_lens)
+    return lit, dist
+
+
+def inflate(data: bytes) -> bytes:
+    r = LsbReader(data)
+    out = bytearray()
+    while True:
+        bfinal = r.fetch_bits(1)
+        btype = r.fetch_bits(2)
+        if btype == 0:
+            r.align_byte()
+            length = r.fetch_bits(16)
+            nlen = r.fetch_bits(16)
+            if length != (~nlen & 0xFFFF):
+                raise Corrupt("stored LEN/NLEN mismatch")
+            for _ in range(length):
+                out.append(r.fetch_bits(8))
+        elif btype in (1, 2):
+            lit, dist = (
+                (fixed_lit_decoder(), fixed_dist_decoder())
+                if btype == 1
+                else _read_dynamic_tables(r)
+            )
+            while True:
+                sym = lit.decode(r)
+                if sym < 256:
+                    out.append(sym)
+                elif sym == 256:
+                    break
+                elif sym <= 285:
+                    li = sym - 257
+                    length = LENGTH_BASE[li] + r.fetch_bits(LENGTH_EXTRA[li])
+                    dsym = dist.decode(r)
+                    if dsym >= 30:
+                        raise Corrupt("bad distance symbol")
+                    d = DIST_BASE[dsym] + r.fetch_bits(DIST_EXTRA[dsym])
+                    if d == 0 or d > len(out):
+                        raise Corrupt("memcpy offset out of window")
+                    start = len(out) - d
+                    for k in range(length):
+                        out.append(out[start + k])
+                else:
+                    raise Corrupt("bad literal/length symbol")
+        else:
+            raise Corrupt("reserved block type")
+        if bfinal == 1:
+            return bytes(out)

@@ -107,6 +107,56 @@ fn prop_more_units_never_slower_per_byte() {
     }
 }
 
+/// Full-stack determinism gate for the bench trajectory: the same
+/// `GpuConfig` + dataset seed + container must produce byte-identical
+/// decoder traces and identical simulator metrics across repeated runs.
+/// (The generators are splitmix64-seeded and the simulator has no
+/// wall-clock or ambient-randomness inputs, so any drift here means a
+/// nondeterminism bug crept into the decode or scheduling path.)
+#[test]
+fn prop_same_config_seed_container_is_byte_identical() {
+    use codag::bench_harness::compress_dataset;
+    use codag::codecs::CodecKind;
+    use codag::data::Dataset;
+    use codag::decomp::codag_engine::Variant;
+    use codag::gpu_sim::{simulate_container, trace_for, Provisioning};
+
+    // Dataset generation itself must be reproducible...
+    let data1 = Dataset::Tc2.generate(512 * 1024);
+    let data2 = Dataset::Tc2.generate(512 * 1024);
+    assert_eq!(data1, data2, "dataset generator is seed-stable");
+    // ...and so must compression.
+    let c1 = compress_dataset(&data1, Dataset::Tc2, CodecKind::RleV2).unwrap();
+    let c2 = compress_dataset(&data2, Dataset::Tc2, CodecKind::RleV2).unwrap();
+    assert_eq!(c1.to_bytes(), c2.to_bytes(), "container bytes are stable");
+
+    for prov in [
+        Provisioning::Codag(Variant::Codag),
+        Provisioning::Codag(Variant::CodagPrefetch),
+        Provisioning::Baseline,
+    ] {
+        // Per-chunk decoder timelines: event-for-event identical.
+        for i in 0..c1.n_chunks().min(3) {
+            let t1 = trace_for(prov, c1.codec, c1.chunk_bytes(i).unwrap()).unwrap();
+            let t2 = trace_for(prov, c2.codec, c2.chunk_bytes(i).unwrap()).unwrap();
+            assert_eq!(t1.events, t2.events, "{prov:?}: chunk {i} trace drifted");
+            assert_eq!(t1.comp_bytes, t2.comp_bytes);
+            assert_eq!(t1.uncomp_bytes, t2.uncomp_bytes);
+        }
+        // End-to-end metrics: every counter identical (SimMetrics is Eq).
+        let m1 = simulate_container(&GpuConfig::a100(), prov, &c1, 4).unwrap();
+        let m2 = simulate_container(&GpuConfig::a100(), prov, &c2, 4).unwrap();
+        assert_eq!(m1, m2, "{prov:?}: simulator metrics drifted between runs");
+    }
+
+    // The Fig 4 toy-timeline comparison is part of the determinism
+    // contract too (it feeds the rendered report).
+    let f1 = codag::gpu_sim::timeline::fig4();
+    let f2 = codag::gpu_sim::timeline::fig4();
+    assert_eq!(f1.codag, f2.codag);
+    assert_eq!(f1.baseline, f2.baseline);
+}
+
 #[test]
 fn prop_stall_distribution_partitions_stalled_cycles() {
     let cfg = GpuConfig::a100();
