@@ -72,7 +72,9 @@ pub fn plan(container: &Container, offset: u64, len: u64) -> Result<Vec<ChunkWor
     if offset > total {
         return Err(invalid(format!("offset {offset} beyond dataset end {total}")));
     }
-    let end = if len == 0 { total } else { (offset + len).min(total) };
+    // Saturating: offset/len come straight off the wire in the daemon
+    // path, and `offset + len` must not overflow on hostile input.
+    let end = if len == 0 { total } else { offset.saturating_add(len).min(total) };
     let cs = container.chunk_size as u64;
     if cs == 0 {
         return Err(invalid("container chunk_size is zero"));
@@ -177,6 +179,17 @@ mod tests {
         let c = sample_container();
         assert!(plan(&c, 999_999, 1).is_err());
         assert!(plan(&c, 10_000, 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn plan_clamps_hostile_len_without_overflow() {
+        // Wire-reachable input: offset + len would overflow u64; the
+        // plan must clamp to the dataset end, not panic or wrap.
+        let c = sample_container();
+        let w = plan(&c, 1, u64::MAX).unwrap();
+        assert_eq!(w.len(), c.n_chunks());
+        assert_eq!(w[0], ChunkWork { chunk: 0, lo: 1, hi: 4096 });
+        assert_eq!(w.last().unwrap().hi, 10_000 - 2 * 4096);
     }
 
     #[test]

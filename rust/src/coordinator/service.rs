@@ -9,6 +9,7 @@
 use crate::coordinator::router::{plan, ChunkWork, Registry, Request};
 use crate::coordinator::stats::LatencyStats;
 use crate::runtime::Expander;
+use crate::server::cache::ChunkCache;
 use crate::{Error, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -45,13 +46,14 @@ impl Default for ServiceConfig {
 ///
 /// `serve_batch` processes a closed set of requests with a worker pool
 /// and returns all responses plus latency statistics — the form every
-/// bench and the analytics example use. (A long-running daemon would
-/// wrap the same core in a listener loop; the CLI's `serve` command
-/// does exactly that over stdin.)
+/// bench and the analytics example use. The long-running daemon
+/// (`server::daemon`, the CLI's `codag serve --port`) wraps this same
+/// core behind per-dataset shard queues and a chunk cache.
 pub struct Service<'a> {
     registry: &'a Registry,
     expander: Option<&'a Expander<'a>>,
     config: ServiceConfig,
+    cache: Option<&'a ChunkCache>,
 }
 
 impl<'a> Service<'a> {
@@ -61,7 +63,15 @@ impl<'a> Service<'a> {
         expander: Option<&'a Expander<'a>>,
         config: ServiceConfig,
     ) -> Self {
-        Service { registry, expander, config }
+        Service { registry, expander, config, cache: None }
+    }
+
+    /// Attach a decompressed-chunk cache: full chunks are looked up
+    /// before decoding and inserted after (the daemon path — see
+    /// `server::daemon`).
+    pub fn with_cache(mut self, cache: &'a ChunkCache) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     /// Serve a batch of requests; returns responses (same order) and
@@ -88,25 +98,34 @@ impl<'a> Service<'a> {
             }
         }
         let started: Vec<Instant> = requests.iter().map(|_| Instant::now()).collect();
-        // Decode all items with a shared-cursor pool.
+        // Decode all items with a shared-cursor pool. Single-item (or
+        // single-worker) batches decode inline: the daemon's shard
+        // loops call this per batch, and a thread spawn/join per
+        // request would dominate small-request latency.
         let cursor = std::sync::atomic::AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Result<Vec<u8>>>>> =
             items.iter().map(|_| Mutex::new(None)).collect();
         let items = &items;
         let slots_ref = &slots;
-        std::thread::scope(|s| {
-            for _ in 0..self.config.workers.max(1) {
-                s.spawn(|| loop {
-                    let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    if i >= items.len() {
-                        break;
-                    }
-                    let item = &items[i];
-                    let out = self.decode_item(&item.dataset, item.work);
-                    *slots_ref[i].lock().unwrap() = Some(out);
-                });
+        if items.len() <= 1 || self.config.workers.max(1) == 1 {
+            for (i, item) in items.iter().enumerate() {
+                *slots_ref[i].lock().unwrap() = Some(self.decode_item(&item.dataset, item.work));
             }
-        });
+        } else {
+            std::thread::scope(|s| {
+                for _ in 0..self.config.workers.max(1).min(items.len()) {
+                    s.spawn(|| loop {
+                        let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        let item = &items[i];
+                        let out = self.decode_item(&item.dataset, item.work);
+                        *slots_ref[i].lock().unwrap() = Some(out);
+                    });
+                }
+            });
+        }
         // Assemble responses in request order.
         let mut per_req: Vec<Result<Vec<u8>>> = plans
             .iter()
@@ -144,6 +163,11 @@ impl<'a> Service<'a> {
     }
 
     fn decode_item(&self, dataset: &str, w: ChunkWork) -> Result<Vec<u8>> {
+        if let Some(cache) = self.cache {
+            if let Some(full) = cache.get(dataset, w.chunk) {
+                return slice_chunk(&full, w);
+            }
+        }
         let c = self.registry.get(dataset)?;
         let use_hybrid = self.config.hybrid && c.codec.is_rle() && self.expander.is_some();
         let full = if use_hybrid {
@@ -155,14 +179,28 @@ impl<'a> Service<'a> {
         } else {
             c.decompress_chunk(w.chunk)?
         };
+        // Only pay the Arc-wrap (and the full-chunk copy it forces for
+        // whole-chunk reads) when the cache will actually retain it.
+        if let Some(cache) = self.cache {
+            if cache.accepts(full.len()) {
+                let full = Arc::new(full);
+                cache.insert(dataset, w.chunk, full.clone());
+                return slice_chunk(&full, w);
+            }
+        }
         if w.lo == 0 && w.hi == full.len() {
             Ok(full)
         } else {
-            full.get(w.lo..w.hi)
-                .map(|s| s.to_vec())
-                .ok_or_else(|| Error::Runtime("range outside decoded chunk".into()))
+            slice_chunk(&full, w)
         }
     }
+}
+
+/// Copy the requested sub-range out of a decoded chunk.
+fn slice_chunk(full: &[u8], w: ChunkWork) -> Result<Vec<u8>> {
+    full.get(w.lo..w.hi)
+        .map(|s| s.to_vec())
+        .ok_or_else(|| Error::Runtime("range outside decoded chunk".into()))
 }
 
 /// Convenience: run requests through a fresh service via channels — the
@@ -175,13 +213,15 @@ pub fn serve_channel(
 ) {
     // Collect until the sender closes, then serve as one batch per
     // received burst (simple store-and-forward loop; latency-sensitive
-    // callers use Service::serve_batch directly).
+    // callers use Service::serve_batch directly). One service is built
+    // up front and reused across bursts (decode threads are still
+    // scoped per serve_batch call; single-item batches decode inline).
+    let service = Service::new(&registry, None, config);
     while let Ok(first) = rx.recv() {
         let mut batch = vec![first];
         while let Ok(r) = rx.try_recv() {
             batch.push(r);
         }
-        let service = Service::new(&registry, None, config);
         let (responses, _) = service.serve_batch(&batch);
         for r in responses {
             if tx.send(r).is_err() {
@@ -232,6 +272,22 @@ mod tests {
             vec![Request { id: 9, dataset: "tpc".into(), offset: 65_000, len: 70_000 }];
         let (resp, _) = svc.serve_batch(&reqs);
         assert_eq!(resp[0].data.as_ref().unwrap(), &data[65_000..135_000]);
+    }
+
+    #[test]
+    fn cached_service_matches_and_hits() {
+        let (data, reg) = registry();
+        let cache = ChunkCache::new(8 << 20, 2);
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false })
+            .with_cache(&cache);
+        let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
+        let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+        assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
+        assert!(cache.misses() >= 1);
+        let before_hits = cache.hits();
+        let (resp, _) = svc.serve_batch(&[req]);
+        assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
+        assert!(cache.hits() > before_hits, "second identical read must hit the cache");
     }
 
     #[test]

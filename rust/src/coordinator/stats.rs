@@ -1,15 +1,32 @@
 //! Latency/throughput statistics for the serving path.
 
+use crate::data::Rng;
 use std::time::Duration;
+
+/// Percentile sample cap: the reservoir never grows past this, so a
+/// long-lived daemon's stats stay O(1) in memory (the seed version grew
+/// `samples_us` without bound).
+pub const RESERVOIR_CAP: usize = 64 * 1024;
 
 /// Online latency recorder with percentile queries.
 ///
-/// Stores microsecond samples; `percentile` sorts a snapshot (serving
-/// benches take snapshots off the hot path).
+/// `count`, `mean_us` and `total_bytes` are exact over every recorded
+/// request; percentiles are computed from a uniform reservoir (Vitter's
+/// algorithm R, capped at [`RESERVOIR_CAP`] samples) so they stay
+/// accurate while memory stays bounded. `percentile_us` sorts a
+/// snapshot — serving benches take snapshots off the hot path.
 #[derive(Debug, Default, Clone)]
 pub struct LatencyStats {
     samples_us: Vec<u64>,
+    /// Requests recorded (exact, not capped).
+    seen: u64,
+    /// Exact sum of all latencies (µs).
+    total_us: u128,
     total_bytes: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    /// Reservoir-replacement RNG (deterministic zero-seeded stream).
+    rng: Rng,
 }
 
 impl LatencyStats {
@@ -20,24 +37,106 @@ impl LatencyStats {
 
     /// Record one request's latency and payload size.
     pub fn record(&mut self, latency: Duration, bytes: u64) {
-        self.samples_us.push(latency.as_micros() as u64);
+        let us = latency.as_micros() as u64;
+        self.seen += 1;
+        self.total_us += us as u128;
         self.total_bytes += bytes;
+        if self.samples_us.len() < RESERVOIR_CAP {
+            self.samples_us.push(us);
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability CAP/seen.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples_us[j as usize] = us;
+            }
+        }
     }
 
-    /// Merge another recorder (per-worker aggregation).
+    /// Merge another recorder (per-worker / per-batch aggregation).
+    /// Exact counters add exactly. When the combined reservoir
+    /// overflows the cap, each side contributes slots in proportion to
+    /// the *population* its reservoir represents (`seen`, not reservoir
+    /// length) — repeated small merges must not make the reservoir
+    /// converge to a recent-window sample.
     pub fn merge(&mut self, other: &LatencyStats) {
-        self.samples_us.extend_from_slice(&other.samples_us);
+        let (self_seen, other_seen) = (self.seen, other.seen);
+        self.seen += other_seen;
+        self.total_us += other.total_us;
         self.total_bytes += other.total_bytes;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        if self.samples_us.len() + other.samples_us.len() <= RESERVOIR_CAP {
+            self.samples_us.extend_from_slice(&other.samples_us);
+            return;
+        }
+        // Seen-weighted quotas (each side's reservoir is ~uniform over
+        // its own population, so proportional subsampling keeps the
+        // merged reservoir ~uniform over the union).
+        let total = (self_seen + other_seen).max(1);
+        let mut quota_self =
+            ((RESERVOIR_CAP as u128 * self_seen as u128) / total as u128) as usize;
+        quota_self = quota_self.min(self.samples_us.len());
+        let mut quota_other = RESERVOIR_CAP - quota_self;
+        if quota_other > other.samples_us.len() {
+            quota_other = other.samples_us.len();
+            quota_self = (RESERVOIR_CAP - quota_other).min(self.samples_us.len());
+        }
+        self.subsample_in_place(quota_self);
+        let mut from_other = other.samples_us.clone();
+        let n = from_other.len();
+        for i in 0..quota_other {
+            let j = i + self.rng.below((n - i) as u64) as usize;
+            from_other.swap(i, j);
+        }
+        from_other.truncate(quota_other);
+        self.samples_us.extend_from_slice(&from_other);
     }
 
-    /// Number of samples.
+    /// Uniformly shrink the reservoir to `k` samples (partial
+    /// Fisher–Yates).
+    fn subsample_in_place(&mut self, k: usize) {
+        let n = self.samples_us.len();
+        if k >= n {
+            return;
+        }
+        for i in 0..k {
+            let j = i + self.rng.below((n - i) as u64) as usize;
+            self.samples_us.swap(i, j);
+        }
+        self.samples_us.truncate(k);
+    }
+
+    /// Number of requests recorded (exact).
     pub fn count(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// Samples currently held for percentile queries (≤ [`RESERVOIR_CAP`]).
+    pub fn reservoir_len(&self) -> usize {
         self.samples_us.len()
     }
 
     /// Total decompressed bytes.
     pub fn total_bytes(&self) -> u64 {
         self.total_bytes
+    }
+
+    /// Add chunk-cache counters (the daemon folds `ChunkCache` atomics
+    /// into its stats snapshot here).
+    pub fn add_cache_counts(&mut self, hits: u64, misses: u64) {
+        self.cache_hits += hits;
+        self.cache_misses += misses;
+    }
+
+    /// Chunk-cache hits attributed to this recorder.
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits
+    }
+
+    /// Chunk-cache misses attributed to this recorder.
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses
     }
 
     /// p-th percentile latency in microseconds (p in [0, 100]).
@@ -51,12 +150,12 @@ impl LatencyStats {
         v[idx.min(v.len() - 1)]
     }
 
-    /// Mean latency in microseconds.
+    /// Mean latency in microseconds (exact over all recorded requests).
     pub fn mean_us(&self) -> f64 {
-        if self.samples_us.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.samples_us.iter().sum::<u64>() as f64 / self.samples_us.len() as f64
+        self.total_us as f64 / self.seen as f64
     }
 
     /// Throughput given a wall-clock window.
@@ -92,5 +191,73 @@ mod tests {
         b.record(Duration::from_micros(5), 1);
         a.merge(&b);
         assert_eq!(a.count(), 1);
+    }
+
+    #[test]
+    fn reservoir_stays_bounded_counters_stay_exact() {
+        let mut s = LatencyStats::new();
+        let n = 3 * RESERVOIR_CAP as u64;
+        for _ in 0..n {
+            s.record(Duration::from_micros(7), 2);
+        }
+        assert_eq!(s.count(), n as usize);
+        assert_eq!(s.reservoir_len(), RESERVOIR_CAP);
+        assert_eq!(s.total_bytes(), 2 * n);
+        // Every sample is 7µs, so every percentile is exact despite
+        // reservoir replacement.
+        assert_eq!(s.percentile_us(50.0), 7);
+        assert_eq!(s.percentile_us(99.0), 7);
+        assert!((s.mean_us() - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_overflow_stays_bounded() {
+        let mut a = LatencyStats::new();
+        let mut b = LatencyStats::new();
+        for _ in 0..RESERVOIR_CAP {
+            a.record(Duration::from_micros(1), 1);
+            b.record(Duration::from_micros(3), 1);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 2 * RESERVOIR_CAP);
+        assert_eq!(a.reservoir_len(), RESERVOIR_CAP);
+        // Downsampled from an equal mix of 1s and 3s: both survive.
+        assert_eq!(a.percentile_us(0.0), 1);
+        assert_eq!(a.percentile_us(100.0), 3);
+        assert!((a.mean_us() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn repeated_small_merges_keep_population_weighting() {
+        // The daemon merges one small batch at a time into a full
+        // recorder; history must not be washed out by recency.
+        let mut a = LatencyStats::new();
+        for _ in 0..RESERVOIR_CAP {
+            a.record(Duration::from_micros(1), 1);
+        }
+        for _ in 0..100 {
+            let mut b = LatencyStats::new();
+            for _ in 0..8 {
+                b.record(Duration::from_micros(1000), 1);
+            }
+            a.merge(&b);
+        }
+        assert_eq!(a.count(), RESERVOIR_CAP + 800);
+        assert_eq!(a.reservoir_len(), RESERVOIR_CAP);
+        // 800 of ~66k requests were slow: the reservoir must still be
+        // dominated by the old population.
+        assert_eq!(a.percentile_us(50.0), 1);
+        assert_eq!(a.percentile_us(90.0), 1);
+    }
+
+    #[test]
+    fn cache_counters_merge() {
+        let mut a = LatencyStats::new();
+        a.add_cache_counts(3, 5);
+        let mut b = LatencyStats::new();
+        b.add_cache_counts(2, 1);
+        a.merge(&b);
+        assert_eq!(a.cache_hits(), 5);
+        assert_eq!(a.cache_misses(), 6);
     }
 }

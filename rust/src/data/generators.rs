@@ -16,6 +16,14 @@
 #[derive(Debug, Clone)]
 pub struct Rng(u64);
 
+impl Default for Rng {
+    /// Zero-seeded stream (the Weyl increment drives it, so seed 0 is
+    /// as good as any).
+    fn default() -> Rng {
+        Rng::new(0)
+    }
+}
+
 impl Rng {
     /// Seeded RNG.
     pub fn new(seed: u64) -> Rng {

@@ -9,9 +9,11 @@
 //!   warp-level and block-level (RAPIDS-style baseline) decompression
 //!   engines, a trace-driven GPU timing simulator standing in for the
 //!   A100/V100 testbed, a chunk coordinator (router + dynamic batcher +
-//!   worker pool), dataset generators for the paper's seven evaluation
-//!   datasets, and the benchmark harness regenerating every table and
-//!   figure.
+//!   worker pool), a long-lived TCP serving daemon (`server`: wire
+//!   protocol, per-dataset shard queues, decompressed-chunk LRU cache,
+//!   `Busy` backpressure), dataset generators for the paper's seven
+//!   evaluation datasets, and the benchmark harness regenerating every
+//!   table and figure.
 //! * **L2 (python/compile/model.py)** — the parallel *expand* phase of
 //!   decompression (batched `write_run` + delta reconstruction) as a JAX
 //!   graph, AOT-lowered to HLO text at build time.
@@ -45,6 +47,7 @@ pub mod decomp;
 pub mod format;
 pub mod gpu_sim;
 pub mod runtime;
+pub mod server;
 
 /// Crate-wide result type (string errors keep the dependency set small and
 /// the hot paths monomorphic; richer errors live at module boundaries).

@@ -8,7 +8,10 @@
 //! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
 //! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
-//! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (requests on stdin: "<id> <offset> <len>")
+//! codag serve      --port 7311 --datasets MC0,TPC [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M]
+//! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (legacy stdin mode: "<id> <offset> <len>" per line)
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N]
+//! codag loadgen    --addr 127.0.0.1:7311 --shutdown   (drain the daemon and exit)
 //! ```
 //!
 //! Hand-rolled flag parsing: the offline build environment provides no
@@ -24,9 +27,11 @@ use codag::decomp::codag_engine::Variant;
 use codag::format::container::Container;
 use codag::gpu_sim::{simulate_container, GpuConfig, Provisioning};
 use codag::runtime::{default_artifacts_dir, Expander, SharedRuntime};
+use codag::server::{daemon, loadgen};
 use std::collections::HashMap;
 use std::io::BufRead;
 use std::process::ExitCode;
+use std::sync::Arc;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -74,7 +79,7 @@ fn parse_size(s: &str) -> Result<usize, String> {
 fn run(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
         return Err(
-            "usage: codag <gen|compress|decompress|simulate|report|serve> [flags]".into(),
+            "usage: codag <gen|compress|decompress|simulate|report|serve|loadgen> [flags]".into(),
         );
     };
     let f = flags(&args[1..]);
@@ -85,6 +90,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "simulate" => cmd_simulate(&f),
         "report" => cmd_report(args.get(1).map(|s| s.as_str()).unwrap_or("all"), &f),
         "serve" => cmd_serve(&f),
+        "loadgen" => cmd_loadgen(&f),
         other => Err(format!("unknown command '{other}'")),
     }
 }
@@ -265,6 +271,9 @@ fn cmd_report(which: &str, f: &HashMap<String, String>) -> Result<(), String> {
 }
 
 fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
+    if f.contains_key("port") {
+        return cmd_serve_daemon(f);
+    }
     let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
     let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
         .ok_or("unknown codec")?;
@@ -308,6 +317,148 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
             ),
             Err(e) => println!("id={} error: {e}", r.id),
         }
+    }
+    Ok(())
+}
+
+/// `codag serve --port …`: the long-lived TCP daemon (server::daemon).
+fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
+    let port: u16 = get(f, "port")?.parse().map_err(|_| "bad --port")?;
+    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
+        .ok_or("unknown codec")?;
+    let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
+    let mut registry = Registry::new();
+    // Accept the legacy singular --dataset too so daemon mode doesn't
+    // silently serve the default when given the stdin-mode flag.
+    for name in f
+        .get("datasets")
+        .or_else(|| f.get("dataset"))
+        .map(String::as_str)
+        .unwrap_or("MC0")
+        .split(',')
+        .filter(|s| !s.is_empty())
+    {
+        let d = Dataset::parse(name).ok_or_else(|| format!("unknown dataset '{name}'"))?;
+        let data = d.generate(size);
+        let container =
+            codag::bench_harness::compress_dataset(&data, d, codec).map_err(|e| e.to_string())?;
+        eprintln!(
+            "loaded {}: {} -> {} bytes ({}, {} chunks)",
+            d.name(),
+            data.len(),
+            container.compressed_len(),
+            codec.name(),
+            container.n_chunks()
+        );
+        registry.insert(d.name(), container);
+    }
+    if registry.names().is_empty() {
+        return Err("no datasets loaded (check --datasets)".into());
+    }
+    let mut config = daemon::DaemonConfig::default();
+    if let Some(s) = f.get("shards") {
+        config.shards = s.parse().map_err(|_| "bad --shards")?;
+    }
+    if let Some(s) = f.get("depth") {
+        config.queue_depth = s.parse().map_err(|_| "bad --depth")?;
+    }
+    if let Some(s) = f.get("workers") {
+        config.workers_per_shard = s.parse().map_err(|_| "bad --workers")?;
+    }
+    if let Some(s) = f.get("cache") {
+        config.cache_bytes = parse_size(s)?;
+    }
+    // Loopback by default: the wire protocol has no auth (Shutdown is a
+    // single unauthenticated frame), so exposing it wider is opt-in.
+    let bind = f.get("bind").map(String::as_str).unwrap_or("127.0.0.1");
+    // Bare IPv6 literals need brackets before the port.
+    let addr = if bind.contains(':') && !bind.starts_with('[') {
+        format!("[{bind}]:{port}")
+    } else {
+        format!("{bind}:{port}")
+    };
+    // A per-shard budget below the chunk size can never hold a chunk:
+    // warn rather than run a structurally dead cache that still counts
+    // misses.
+    if config.cache_bytes > 0 {
+        let max_chunk = registry
+            .names()
+            .iter()
+            .filter_map(|n| registry.get(n).ok().map(|c| c.chunk_size))
+            .max()
+            .unwrap_or(0);
+        if config.cache_bytes / config.shards.max(1) < max_chunk {
+            eprintln!(
+                "warning: --cache {} over {} shards gives {} bytes/shard, below the {} byte \
+                 chunk size — no chunk will ever be cached (use --cache 0 to disable, or \
+                 raise the budget)",
+                config.cache_bytes,
+                config.shards.max(1),
+                config.cache_bytes / config.shards.max(1),
+                max_chunk
+            );
+        }
+    }
+    let handle =
+        daemon::start(Arc::new(registry), config, &addr).map_err(|e| e.to_string())?;
+    eprintln!(
+        "codag-serve listening on {} ({} shards, depth {}, {} workers/shard, cache {} MiB)",
+        handle.addr(),
+        config.shards,
+        config.queue_depth,
+        config.workers_per_shard,
+        config.cache_bytes / (1024 * 1024)
+    );
+    eprintln!("stop with: codag loadgen --addr 127.0.0.1:{port} --shutdown");
+    let stats = handle.wait().map_err(|e| e.to_string())?;
+    eprintln!(
+        "served {} requests, {} bytes: p50={}us p99={}us cache hits={} misses={}",
+        stats.count(),
+        stats.total_bytes(),
+        stats.percentile_us(50.0),
+        stats.percentile_us(99.0),
+        stats.cache_hits(),
+        stats.cache_misses()
+    );
+    Ok(())
+}
+
+/// `codag loadgen`: hammer a daemon (or `--shutdown` to stop one).
+fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
+    let addr = get(f, "addr")?.to_string();
+    if f.contains_key("shutdown") {
+        loadgen::shutdown(&addr).map_err(|e| e.to_string())?;
+        println!("shutdown acknowledged by {addr}");
+        return Ok(());
+    }
+    let mut cfg = loadgen::LoadgenConfig { addr, ..Default::default() };
+    if let Some(d) = f.get("dataset") {
+        // Canonicalize known paper datasets (serve registers them under
+        // Dataset::name(), e.g. "MC0") so `--dataset mc0` matches; any
+        // other name goes on the wire verbatim.
+        cfg.dataset = match Dataset::parse(d) {
+            Some(known) => known.name().to_string(),
+            None => d.clone(),
+        };
+    }
+    if let Some(s) = f.get("connections") {
+        cfg.connections = s.parse().map_err(|_| "bad --connections")?;
+    }
+    if let Some(s) = f.get("requests") {
+        cfg.requests = s.parse().map_err(|_| "bad --requests")?;
+    }
+    if let Some(s) = f.get("maxlen") {
+        cfg.max_len = parse_size(s)? as u64;
+    }
+    if let Some(s) = f.get("seed") {
+        cfg.seed = s.parse().map_err(|_| "bad --seed")?;
+    }
+    let report = loadgen::run(&cfg).map_err(|e| e.to_string())?;
+    print!("{report}");
+    // Exit nonzero when nothing succeeded so CI smoke steps that gate
+    // on this command actually verify a served request.
+    if report.ok == 0 {
+        return Err("no successful requests".into());
     }
     Ok(())
 }

@@ -1,0 +1,273 @@
+//! Sharded LRU cache of hot *decompressed* chunks.
+//!
+//! Keyed by `(dataset, chunk index)` with a byte-budget capacity split
+//! evenly across shards: ranged requests that repeatedly touch the same
+//! 128 KiB chunk skip re-inflation entirely. Values are `Arc<Vec<u8>>`
+//! so retaining a chunk never duplicates the decoded buffer (responses
+//! copy only the requested span out of the cached chunk). Recency is a
+//! per-shard logical clock; eviction
+//! removes the least-recently-touched entry until the shard is back
+//! under budget. Hit/miss/eviction counters are atomics, surfaced
+//! through `LatencyStats` by the daemon (DESIGN.md §6.2).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// FNV-1a over `bytes` (stable across runs/platforms — used for shard
+/// selection by both the cache and the daemon's queue router).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Debug)]
+struct Entry {
+    data: Arc<Vec<u8>>,
+    stamp: u64,
+}
+
+#[derive(Debug, Default)]
+struct Shard {
+    /// dataset → chunk index → entry (two levels so lookups by `&str`
+    /// never allocate a key).
+    per_dataset: HashMap<String, HashMap<usize, Entry>>,
+    bytes: u64,
+    clock: u64,
+}
+
+impl Shard {
+    fn evict_one(&mut self) -> u64 {
+        // O(entries) scan; shards hold at most budget/chunk_size
+        // entries (a few hundred at defaults), and eviction only runs
+        // on insert overflow. The victim key is borrowed during the
+        // scan and cloned exactly once.
+        let mut victim: Option<(u64, &String, usize)> = None;
+        for (ds, chunks) in &self.per_dataset {
+            for (&ci, e) in chunks {
+                if victim.map_or(true, |(stamp, _, _)| e.stamp < stamp) {
+                    victim = Some((e.stamp, ds, ci));
+                }
+            }
+        }
+        let Some((_, ds, ci)) = victim else { return 0 };
+        let ds = ds.clone();
+        let mut freed = 0;
+        if let Some(chunks) = self.per_dataset.get_mut(&ds) {
+            if let Some(e) = chunks.remove(&ci) {
+                freed = e.data.len() as u64;
+                self.bytes -= freed;
+            }
+            if chunks.is_empty() {
+                self.per_dataset.remove(&ds);
+            }
+        }
+        freed
+    }
+}
+
+/// Sharded byte-budgeted LRU of decompressed chunks.
+#[derive(Debug)]
+pub struct ChunkCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: u64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+}
+
+impl ChunkCache {
+    /// Cache with `budget_bytes` total capacity split across `shards`
+    /// locks. A zero budget disables caching (every insert is dropped;
+    /// every get is a miss).
+    pub fn new(budget_bytes: usize, shards: usize) -> ChunkCache {
+        let n = shards.max(1);
+        ChunkCache {
+            shards: (0..n).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: (budget_bytes / n) as u64,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_for(&self, dataset: &str, chunk: usize) -> usize {
+        let h = fnv1a(dataset.as_bytes()) ^ (chunk as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Look up a decompressed chunk, refreshing its recency. Counts a
+    /// hit or a miss.
+    pub fn get(&self, dataset: &str, chunk: usize) -> Option<Arc<Vec<u8>>> {
+        let si = self.shard_for(dataset, chunk);
+        let mut shard = self.shards[si].lock().unwrap();
+        shard.clock += 1;
+        let stamp = shard.clock;
+        let found = shard
+            .per_dataset
+            .get_mut(dataset)
+            .and_then(|chunks| chunks.get_mut(&chunk))
+            .map(|e| {
+                e.stamp = stamp;
+                e.data.clone()
+            });
+        drop(shard);
+        match found {
+            Some(data) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(data)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Would a chunk of `len` bytes be cached? (Callers use this to
+    /// skip the `Arc`-wrap + copy on the decode path when the cache
+    /// would drop the chunk anyway.)
+    pub fn accepts(&self, len: usize) -> bool {
+        len > 0 && len as u64 <= self.shard_budget
+    }
+
+    /// Insert a decompressed chunk, evicting least-recently-used
+    /// entries until the shard fits its budget. Chunks larger than one
+    /// shard's budget (and empty chunks) are not cached.
+    pub fn insert(&self, dataset: &str, chunk: usize, data: Arc<Vec<u8>>) {
+        let len = data.len() as u64;
+        if len == 0 || len > self.shard_budget {
+            return;
+        }
+        let si = self.shard_for(dataset, chunk);
+        let mut shard = self.shards[si].lock().unwrap();
+        shard.clock += 1;
+        let stamp = shard.clock;
+        let old = shard
+            .per_dataset
+            .entry(dataset.to_string())
+            .or_default()
+            .insert(chunk, Entry { data, stamp });
+        if let Some(old) = old {
+            shard.bytes -= old.data.len() as u64;
+        }
+        shard.bytes += len;
+        while shard.bytes > self.shard_budget {
+            if shard.evict_one() == 0 {
+                break; // defensive: nothing evictable
+            }
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cache hits since construction.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Cache misses since construction.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Evicted entries since construction.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Bytes currently resident across all shards.
+    pub fn resident_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().bytes).sum()
+    }
+
+    /// Entries currently resident across all shards.
+    pub fn entries(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| {
+                s.lock().unwrap().per_dataset.values().map(|c| c.len()).sum::<usize>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chunk(fill: u8, len: usize) -> Arc<Vec<u8>> {
+        Arc::new(vec![fill; len])
+    }
+
+    #[test]
+    fn hit_and_miss_counting() {
+        let c = ChunkCache::new(1 << 20, 1);
+        assert!(c.get("a", 0).is_none());
+        assert_eq!((c.hits(), c.misses()), (0, 1));
+        c.insert("a", 0, chunk(7, 100));
+        let got = c.get("a", 0).unwrap();
+        assert_eq!(got.as_slice(), &[7u8; 100][..]);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+        // Same chunk index under a different dataset is distinct.
+        assert!(c.get("b", 0).is_none());
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.resident_bytes(), 100);
+    }
+
+    #[test]
+    fn lru_eviction_respects_budget_and_recency() {
+        // Budget fits exactly two 100-byte chunks (single shard).
+        let c = ChunkCache::new(200, 1);
+        c.insert("a", 0, chunk(1, 100));
+        c.insert("a", 1, chunk(2, 100));
+        // Touch chunk 0 so chunk 1 is the LRU victim.
+        assert!(c.get("a", 0).is_some());
+        c.insert("a", 2, chunk(3, 100));
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.resident_bytes(), 200);
+        assert!(c.get("a", 0).is_some(), "recently-touched survives");
+        assert!(c.get("a", 1).is_none(), "LRU evicted");
+        assert!(c.get("a", 2).is_some());
+    }
+
+    #[test]
+    fn oversized_and_zero_budget_inserts_dropped() {
+        let c = ChunkCache::new(100, 1);
+        c.insert("a", 0, chunk(1, 101));
+        assert_eq!(c.entries(), 0);
+        let disabled = ChunkCache::new(0, 4);
+        disabled.insert("a", 0, chunk(1, 10));
+        assert_eq!(disabled.entries(), 0);
+        assert!(disabled.get("a", 0).is_none());
+    }
+
+    #[test]
+    fn accepts_mirrors_insert_policy() {
+        let c = ChunkCache::new(100, 1);
+        assert!(c.accepts(100));
+        assert!(!c.accepts(101));
+        assert!(!c.accepts(0));
+        assert!(!ChunkCache::new(0, 1).accepts(1));
+    }
+
+    #[test]
+    fn replacement_updates_accounting() {
+        let c = ChunkCache::new(1000, 1);
+        c.insert("a", 0, chunk(1, 100));
+        c.insert("a", 0, chunk(2, 300));
+        assert_eq!(c.entries(), 1);
+        assert_eq!(c.resident_bytes(), 300);
+        assert_eq!(c.get("a", 0).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn fnv1a_stable() {
+        // Pinned values keep shard placement stable across builds.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+}

@@ -1,0 +1,658 @@
+//! The long-lived `codag-serve` daemon.
+//!
+//! Architecture (DESIGN.md §6):
+//!
+//! ```text
+//! TcpListener (non-blocking accept loop)
+//!   └─ per-connection reader thread ── FrameReader → decode_request
+//!        ├─ admission: hash(dataset) → shard queue (bounded sync
+//!        │  channel; `try_send` full ⇒ immediate `Busy` response) and
+//!        │  a per-connection in-flight response budget (pipelining
+//!        │  without reading ⇒ `Busy`) — never unbounded buffering on
+//!        │  either side
+//!        └─ per-connection writer thread (response channel → socket,
+//!           debits the in-flight budget as responses are written)
+//! shard worker threads (one per shard, long-lived)
+//!   └─ own a reused `Service` (+ shared `ChunkCache`); drain their
+//!      queue in FIFO order, opportunistically batching up to
+//!      `DaemonConfig::batch` requests per `serve_batch` call
+//! ```
+//!
+//! All requests for one dataset hash to one shard, so per-dataset FIFO
+//! order is preserved end to end. Shutdown is a shared token: the
+//! accept loop stops, reader threads notice on their next read timeout,
+//! queue senders drop, shard workers drain what was admitted and exit,
+//! and [`DaemonHandle::join`]/[`DaemonHandle::wait`] joins every thread.
+
+use crate::coordinator::router::Request;
+use crate::coordinator::service::{Service, ServiceConfig};
+use crate::coordinator::stats::LatencyStats;
+use crate::coordinator::Registry;
+use crate::server::cache::{fnv1a, ChunkCache};
+use crate::server::proto::{
+    decode_request, write_response, FrameReader, ReadEvent, Status, WireRequest, WireResponse,
+};
+use crate::{Error, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+/// Daemon tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct DaemonConfig {
+    /// Shard queues / long-lived shard worker threads.
+    pub shards: usize,
+    /// Admission limit: queued requests per shard before `Busy`.
+    pub queue_depth: usize,
+    /// Decode workers inside each shard's `Service`.
+    pub workers_per_shard: usize,
+    /// Max requests folded into one `serve_batch` call.
+    pub batch: usize,
+    /// Unwritten responses allowed per connection before requests get
+    /// `Busy`: a client that pipelines requests without reading
+    /// responses cannot make the daemon buffer payloads without bound
+    /// (a 4× hard cap closes the connection outright — see
+    /// `conn_hard_cap`).
+    pub max_inflight_per_conn: usize,
+    /// Unwritten response *payload bytes* allowed per connection before
+    /// Gets are refused with `Busy` (one oversized request is always
+    /// admitted when nothing is outstanding, so the bound is this
+    /// budget plus one frame).
+    pub max_inflight_bytes_per_conn: usize,
+    /// Concurrent connections accepted; excess connects are closed
+    /// immediately (each connection costs two threads).
+    pub max_connections: usize,
+    /// Total decompressed-chunk cache budget (0 disables the cache).
+    pub cache_bytes: usize,
+    /// Read-timeout granularity at which blocked threads poll the
+    /// shutdown token.
+    pub poll_interval: Duration,
+    /// Socket write timeout (a stuck peer cannot wedge shutdown).
+    pub write_timeout: Duration,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            shards: 4,
+            queue_depth: 64,
+            workers_per_shard: 2,
+            batch: 32,
+            max_inflight_per_conn: 64,
+            max_inflight_bytes_per_conn: 64 * 1024 * 1024,
+            max_connections: 1024,
+            cache_bytes: 64 * 1024 * 1024,
+            poll_interval: Duration::from_millis(50),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// One response travelling to a connection's writer thread, carrying
+/// the byte charge taken at admission (debited once written; 0 for
+/// reader-generated error/metadata responses).
+struct Outbound {
+    resp: WireResponse,
+    charge: u64,
+}
+
+/// Send a reader-generated response (no byte charge).
+fn send_reply(tx: &mpsc::Sender<Outbound>, resp: WireResponse) {
+    let _ = tx.send(Outbound { resp, charge: 0 });
+}
+
+/// One admitted request, owned by a shard queue. `charge` is the byte
+/// span debited from the connection's in-flight byte budget when the
+/// response hits the socket.
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Outbound>,
+    received: Instant,
+    charge: u64,
+}
+
+/// Absolute ceiling on unwritten responses per connection (small error
+/// responses included): past this the connection is closed instead of
+/// buffered. The floor keeps bursty-but-honest pipelining clients off
+/// the ceiling when `max_inflight_per_conn` is configured very low.
+fn conn_hard_cap(config: &DaemonConfig) -> usize {
+    config.max_inflight_per_conn.max(1).saturating_mul(4).max(256)
+}
+
+/// Running daemon: address, shutdown token, and every thread handle.
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<LatencyStats>>,
+    cache: Arc<ChunkCache>,
+    poll_interval: Duration,
+}
+
+impl DaemonHandle {
+    /// Bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The shared decompressed-chunk cache (hit/miss counters).
+    pub fn cache(&self) -> &ChunkCache {
+        &self.cache
+    }
+
+    /// Snapshot of serving stats with cache counters folded in.
+    pub fn stats(&self) -> LatencyStats {
+        let mut s = self.stats.lock().unwrap().clone();
+        s.add_cache_counts(self.cache.hits(), self.cache.misses());
+        s
+    }
+
+    /// Trip the shutdown token (idempotent; threads drain and exit).
+    pub fn shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// True once shutdown has been requested (locally or over the wire).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Shut down now and join every thread.
+    pub fn join(mut self) -> Result<LatencyStats> {
+        self.shutdown();
+        self.join_threads()
+    }
+
+    /// Block until shutdown is requested (e.g. a wire `Shutdown`
+    /// frame), then join every thread.
+    pub fn wait(mut self) -> Result<LatencyStats> {
+        while !self.shutdown.load(Ordering::SeqCst) {
+            thread::sleep(self.poll_interval);
+        }
+        self.join_threads()
+    }
+
+    fn join_threads(&mut self) -> Result<LatencyStats> {
+        // Order matters: the accept thread joins reader/writer threads,
+        // whose exit drops the last queue senders, which lets shard
+        // workers drain and observe disconnect. Every thread is joined
+        // even if an earlier one panicked — shutdown is total; the
+        // first failure is reported after.
+        let mut first_err: Option<Error> = None;
+        if let Some(h) = self.accept.take() {
+            if h.join().is_err() {
+                first_err.get_or_insert(Error::Runtime("accept thread panicked".into()));
+            }
+        }
+        for h in self.workers.drain(..) {
+            if h.join().is_err() {
+                first_err.get_or_insert(Error::Runtime("shard worker panicked".into()));
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(self.stats()),
+        }
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:0"`) and start serving `registry`.
+pub fn start(
+    registry: Arc<Registry>,
+    config: DaemonConfig,
+    addr: &str,
+) -> Result<DaemonHandle> {
+    let listener = TcpListener::bind(addr)?;
+    let local_addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let n_shards = config.shards.max(1);
+    let cache = Arc::new(ChunkCache::new(config.cache_bytes, n_shards));
+    let stats = Arc::new(Mutex::new(LatencyStats::new()));
+    let mut senders = Vec::with_capacity(n_shards);
+    let mut workers = Vec::with_capacity(n_shards);
+    for si in 0..n_shards {
+        let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth.max(1));
+        senders.push(tx);
+        let reg = registry.clone();
+        let cache = cache.clone();
+        let stats = stats.clone();
+        let handle = thread::Builder::new()
+            .name(format!("codag-shard-{si}"))
+            .spawn(move || shard_loop(&reg, &cache, config, rx, &stats))?;
+        workers.push(handle);
+    }
+    // The accept thread owns the long-lived queue senders (each
+    // connection gets its own clone); when it and the readers it joins
+    // exit, every sender is dropped and workers see disconnect after
+    // draining — the drain half of graceful shutdown.
+    let accept = {
+        let reg = registry.clone();
+        let sd = shutdown.clone();
+        thread::Builder::new()
+            .name("codag-accept".into())
+            .spawn(move || accept_loop(listener, reg, senders, sd, config))?
+    };
+    Ok(DaemonHandle {
+        addr: local_addr,
+        shutdown,
+        accept: Some(accept),
+        workers,
+        stats,
+        cache,
+        poll_interval: config.poll_interval,
+    })
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    senders: Vec<SyncSender<Job>>,
+    shutdown: Arc<AtomicBool>,
+    config: DaemonConfig,
+) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shutdown.load(Ordering::SeqCst) {
+        // Reap finished connection threads every tick so a
+        // burst-then-idle pattern does not retain dead handles.
+        if conns.iter().any(|c| c.is_finished()) {
+            let mut live = Vec::with_capacity(conns.len());
+            for c in conns.drain(..) {
+                if c.is_finished() {
+                    let _ = c.join();
+                } else {
+                    live.push(c);
+                }
+            }
+            conns = live;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // Hard connection cap: each connection costs a reader
+                // and a writer thread, so excess connects are refused
+                // (closed) rather than accumulated.
+                if conns.len() >= config.max_connections.max(1) {
+                    drop(stream);
+                    continue;
+                }
+                let reg = registry.clone();
+                // Per-connection sender clones: no shared reference, so
+                // dropping them (reader exit) is all the bookkeeping
+                // shutdown needs.
+                let snd: Vec<SyncSender<Job>> = senders.clone();
+                let sd = shutdown.clone();
+                match thread::Builder::new()
+                    .name("codag-conn".into())
+                    .spawn(move || connection_loop(stream, &reg, &snd, &sd, config))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(e) => eprintln!("codag-serve: connection spawn failed: {e}"),
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+}
+
+fn connection_loop(
+    mut stream: TcpStream,
+    registry: &Registry,
+    senders: &[SyncSender<Job>],
+    shutdown: &AtomicBool,
+    config: DaemonConfig,
+) {
+    // Accepted sockets may inherit the listener's non-blocking flag on
+    // some platforms — force blocking + read timeout so this thread
+    // sleeps in `read` and still polls the shutdown token; write
+    // timeouts keep a stuck peer from wedging shutdown.
+    if stream.set_nonblocking(false).is_err()
+        || stream.set_read_timeout(Some(config.poll_interval)).is_err()
+    {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(config.write_timeout));
+    // Request/response framing writes header and payload separately:
+    // without NODELAY, Nagle + delayed ACK can stall every exchange.
+    let _ = stream.set_nodelay(true);
+    let Ok(mut wstream) = stream.try_clone() else { return };
+    let (tx, rx) = mpsc::channel::<Outbound>();
+    // Unwritten responses on this connection (every request yields
+    // exactly one response: the reader charges the counter per decoded
+    // frame, the writer debits it per frame written), plus the byte
+    // charge of admitted-but-unwritten payloads. Together they bound
+    // the response-side buffering the shard queues cannot see.
+    let inflight = Arc::new(AtomicUsize::new(0));
+    let inflight_bytes = Arc::new(AtomicU64::new(0));
+    let writer = {
+        let inflight = inflight.clone();
+        let inflight_bytes = inflight_bytes.clone();
+        thread::Builder::new().name("codag-conn-writer".into()).spawn(move || {
+            while let Ok(out) = rx.recv() {
+                let ok = write_response(&mut wstream, &out.resp).is_ok();
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                inflight_bytes.fetch_sub(out.charge, Ordering::SeqCst);
+                if !ok {
+                    break; // peer gone or stuck; remaining responses drop
+                }
+            }
+        })
+    };
+    let Ok(writer) = writer else { return };
+    // Request-sized cap: a hostile length prefix must not pre-allocate
+    // a response-sized buffer per connection.
+    let mut reader = FrameReader::for_requests();
+    loop {
+        // Check the token every iteration, not only on read timeouts: a
+        // client pipelining frames faster than poll_interval must not
+        // keep this thread (and therefore shutdown joins) alive. A dead
+        // writer (peer stopped reading; write timeout fired) is equally
+        // fatal — admitting more work would just decode into a dropped
+        // channel.
+        if shutdown.load(Ordering::SeqCst) || writer.is_finished() {
+            break;
+        }
+        match reader.poll(&mut stream) {
+            Ok(ReadEvent::WouldBlock) => {}
+            Ok(ReadEvent::Eof) => break,
+            Ok(ReadEvent::Frame(body)) => match decode_request(&body) {
+                Ok(req) => {
+                    // Charge this request's (single) response up front.
+                    let outstanding = inflight.fetch_add(1, Ordering::SeqCst);
+                    if outstanding >= conn_hard_cap(&config)
+                        && !matches!(req, WireRequest::Shutdown { .. })
+                    {
+                        // The client is pipelining without reading even
+                        // small responses: close instead of buffering
+                        // (the unsent response's charge is returned).
+                        inflight.fetch_sub(1, Ordering::SeqCst);
+                        break;
+                    }
+                    if !handle_request(
+                        req,
+                        registry,
+                        senders,
+                        &tx,
+                        outstanding,
+                        &inflight_bytes,
+                        shutdown,
+                        config,
+                    ) {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    // Framing is no longer trustworthy: respond (echo
+                    // the id when the body was long enough to carry
+                    // one), close.
+                    inflight.fetch_add(1, Ordering::SeqCst);
+                    let id = crate::server::proto::request_id_hint(&body);
+                    send_reply(&tx, WireResponse::error(id, Status::BadRequest, e.to_string()));
+                    break;
+                }
+            },
+            Err(e) => {
+                // Corrupt = the peer broke framing (oversized prefix,
+                // mid-frame close): client fault. Anything else is a
+                // transport failure on our side.
+                let status = match &e {
+                    Error::Corrupt(_) => Status::BadRequest,
+                    _ => Status::Internal,
+                };
+                inflight.fetch_add(1, Ordering::SeqCst);
+                send_reply(&tx, WireResponse::error(0, status, e.to_string()));
+                break;
+            }
+        }
+    }
+    drop(tx); // writer drains in-flight responses, then exits
+    let _ = writer.join();
+}
+
+/// Dispatch one decoded request; returns false to close the connection.
+/// `outstanding` is the connection's unwritten-response count at the
+/// moment this request was charged (the reader increments it, the
+/// writer decrements it as frames reach the socket).
+#[allow(clippy::too_many_arguments)]
+fn handle_request(
+    req: WireRequest,
+    registry: &Registry,
+    senders: &[SyncSender<Job>],
+    tx: &mpsc::Sender<Outbound>,
+    outstanding: usize,
+    inflight_bytes: &AtomicU64,
+    shutdown: &AtomicBool,
+    config: DaemonConfig,
+) -> bool {
+    // Backpressure half 2: a pipelining client that does not read its
+    // responses stops being served once its unwritten-response budget
+    // is spent (Shutdown stays exempt so a draining admin always gets
+    // through; the reader's hard cap bounds even Busy floods).
+    let over_budget = outstanding >= config.max_inflight_per_conn.max(1);
+    match req {
+        WireRequest::Shutdown { id } => {
+            send_reply(
+                tx,
+                WireResponse { id, status: Status::Ok, payload: b"shutting down".to_vec() },
+            );
+            shutdown.store(true, Ordering::SeqCst);
+            false
+        }
+        WireRequest::Stat { id, dataset } => {
+            let resp = if over_budget {
+                WireResponse::error(id, Status::Busy, "connection in-flight limit")
+            } else {
+                match registry.get(&dataset) {
+                    Ok(c) => {
+                        let mut payload = Vec::with_capacity(24);
+                        payload.extend_from_slice(&c.total_uncompressed.to_le_bytes());
+                        payload.extend_from_slice(&(c.chunk_size as u64).to_le_bytes());
+                        payload.extend_from_slice(&(c.n_chunks() as u64).to_le_bytes());
+                        WireResponse { id, status: Status::Ok, payload }
+                    }
+                    Err(e) => WireResponse::error(id, Status::NotFound, e.to_string()),
+                }
+            };
+            send_reply(tx, resp);
+            true
+        }
+        WireRequest::Get { id, dataset, offset, len } => {
+            if over_budget {
+                send_reply(
+                    tx,
+                    WireResponse::error(id, Status::Busy, "connection in-flight limit"),
+                );
+                return true;
+            }
+            if shutdown.load(Ordering::SeqCst) {
+                send_reply(
+                    tx,
+                    WireResponse::error(id, Status::ShuttingDown, "daemon is draining"),
+                );
+                return true;
+            }
+            let Ok(container) = registry.get(&dataset) else {
+                send_reply(
+                    tx,
+                    WireResponse::error(
+                        id,
+                        Status::NotFound,
+                        format!("dataset '{dataset}' not registered"),
+                    ),
+                );
+                return true;
+            };
+            // Reject ranges whose response could not be framed (body
+            // capped at MAX_FRAME_LEN) before any decode work is done —
+            // otherwise the writer would fail the oversized frame and
+            // drop the connection without an error response.
+            let span = {
+                let remaining = container.total_uncompressed.saturating_sub(offset);
+                if len == 0 {
+                    remaining
+                } else {
+                    len.min(remaining)
+                }
+            };
+            if span > (crate::server::proto::MAX_FRAME_LEN as u64).saturating_sub(64) {
+                send_reply(
+                    tx,
+                    WireResponse::error(
+                        id,
+                        Status::BadRequest,
+                        format!("range of {span} bytes exceeds the max response frame"),
+                    ),
+                );
+                return true;
+            }
+            // Byte half of the connection budget: admitted payload
+            // bytes not yet written to the socket. One request is
+            // always admitted when nothing is outstanding, so the true
+            // bound is the budget plus one frame.
+            let bytes_now = inflight_bytes.load(Ordering::SeqCst);
+            if bytes_now > 0
+                && bytes_now.saturating_add(span) > config.max_inflight_bytes_per_conn as u64
+            {
+                send_reply(
+                    tx,
+                    WireResponse::error(id, Status::Busy, "connection byte budget exhausted"),
+                );
+                return true;
+            }
+            inflight_bytes.fetch_add(span, Ordering::SeqCst);
+            // All requests for one dataset land on one shard: FIFO per
+            // dataset is preserved through the bounded queue.
+            let si = (fnv1a(dataset.as_bytes()) % senders.len() as u64) as usize;
+            let job = Job {
+                req: Request { id, dataset, offset, len },
+                reply: tx.clone(),
+                received: Instant::now(),
+                charge: span,
+            };
+            match senders[si].try_send(job) {
+                Ok(()) => {}
+                Err(TrySendError::Full(job)) => {
+                    inflight_bytes.fetch_sub(job.charge, Ordering::SeqCst);
+                    // Backpressure half 1: explicit Busy, never queue
+                    // growth.
+                    send_reply(
+                        tx,
+                        WireResponse::error(
+                            job.req.id,
+                            Status::Busy,
+                            format!("shard {si} queue at admission limit"),
+                        ),
+                    );
+                }
+                Err(TrySendError::Disconnected(job)) => {
+                    inflight_bytes.fetch_sub(job.charge, Ordering::SeqCst);
+                    send_reply(
+                        tx,
+                        WireResponse::error(
+                            job.req.id,
+                            Status::ShuttingDown,
+                            "daemon is shutting down",
+                        ),
+                    );
+                }
+            }
+            true
+        }
+    }
+}
+
+/// Map a decode error onto a wire status.
+fn status_for(e: &Error) -> Status {
+    match e {
+        Error::Corrupt(_) => Status::Corrupt,
+        Error::Invalid(_) => Status::BadRequest,
+        Error::Io(_) | Error::Runtime(_) => Status::Internal,
+    }
+}
+
+fn shard_loop(
+    registry: &Registry,
+    cache: &ChunkCache,
+    config: DaemonConfig,
+    rx: Receiver<Job>,
+    stats: &Mutex<LatencyStats>,
+) {
+    // One Service per shard, constructed once and reused for every
+    // batch (plan/cache wiring is long-lived; decode parallelism
+    // inside serve_batch uses scoped threads per batch, and
+    // single-item batches decode inline with no spawn at all). A zero
+    // cache budget means no cache: don't pay per-chunk lock+miss
+    // traffic for a disabled cache.
+    let svc_cfg = ServiceConfig { workers: config.workers_per_shard.max(1), hybrid: false };
+    let service = Service::new(registry, None, svc_cfg);
+    let service = if config.cache_bytes > 0 { service.with_cache(cache) } else { service };
+    loop {
+        let first = match rx.recv_timeout(config.poll_interval) {
+            Ok(j) => j,
+            Err(RecvTimeoutError::Timeout) => continue,
+            // All senders dropped (accept loop + readers exited) and
+            // the queue is fully drained: graceful exit.
+            Err(RecvTimeoutError::Disconnected) => break,
+        };
+        let mut jobs = vec![first];
+        while jobs.len() < config.batch.max(1) {
+            match rx.try_recv() {
+                Ok(j) => jobs.push(j),
+                Err(_) => break,
+            }
+        }
+        // Hand the owned Requests straight to serve_batch (no per-job
+        // clone on the hot path); reply metadata rides alongside.
+        let mut requests = Vec::with_capacity(jobs.len());
+        let mut replies = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            requests.push(j.req);
+            replies.push((j.reply, j.received, j.charge));
+        }
+        let (responses, _) = service.serve_batch(&requests);
+        // Record into a batch-local recorder and take the shared lock
+        // once per batch, not once per response — shards must not
+        // serialize on the stats mutex in the reply hot path.
+        let mut batch_stats = LatencyStats::new();
+        for ((reply, received, charge), resp) in replies.into_iter().zip(responses) {
+            let wire = match resp.data {
+                Ok(bytes) => {
+                    // Admission-to-reply latency (includes queue wait —
+                    // the quantity backpressure tuning moves).
+                    batch_stats.record(received.elapsed(), bytes.len() as u64);
+                    WireResponse { id: resp.id, status: Status::Ok, payload: bytes }
+                }
+                Err(e) => WireResponse::error(resp.id, status_for(&e), e.to_string()),
+            };
+            let _ = reply.send(Outbound { resp: wire, charge });
+        }
+        if batch_stats.count() > 0 {
+            stats.lock().unwrap().merge(&batch_stats);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_daemon_starts_and_joins() {
+        let registry = Arc::new(Registry::new());
+        let handle =
+            start(registry, DaemonConfig::default(), "127.0.0.1:0").expect("bind loopback");
+        assert_ne!(handle.addr().port(), 0);
+        assert!(!handle.is_shutting_down());
+        let stats = handle.join().expect("clean join");
+        assert_eq!(stats.count(), 0);
+    }
+}

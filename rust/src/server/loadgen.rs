@@ -1,0 +1,255 @@
+//! `codag loadgen` — hammer a running daemon and report latency.
+//!
+//! Opens N connections, each issuing seeded-random ranged reads against
+//! one dataset, and merges per-connection [`LatencyStats`] into a
+//! p50/p90/p99 + throughput report. `Busy` responses (backpressure) are
+//! counted separately from failures so admission-limit sweeps read
+//! directly off the report.
+
+use crate::coordinator::stats::LatencyStats;
+use crate::data::Rng;
+use crate::server::proto::{
+    decode_response, encode_request, read_frame_blocking, write_frame, FrameReader, Status,
+    WireRequest, WireResponse,
+};
+use crate::{corrupt, invalid, Error, Result};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Load-generator knobs.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Daemon address, e.g. `127.0.0.1:7311`.
+    pub addr: String,
+    /// Registered dataset to read (paper names, e.g. `MC0`).
+    pub dataset: String,
+    /// Concurrent connections.
+    pub connections: usize,
+    /// Requests per connection.
+    pub requests: usize,
+    /// Largest random range per request in bytes (0 = whole dataset).
+    pub max_len: u64,
+    /// RNG seed (per-connection streams derive from it).
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        LoadgenConfig {
+            addr: "127.0.0.1:7311".into(),
+            dataset: "MC0".into(),
+            connections: 4,
+            requests: 64,
+            max_len: 256 * 1024,
+            seed: 0xC0DA_6,
+        }
+    }
+}
+
+/// Outcome of one loadgen run.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Latency/throughput over all `Ok` responses.
+    pub stats: LatencyStats,
+    /// Requests sent.
+    pub sent: u64,
+    /// `Ok` responses.
+    pub ok: u64,
+    /// `Busy` responses (admission-limit backpressure).
+    pub busy: u64,
+    /// Everything else: error statuses, mismatched ids, and exchanges
+    /// aborted by a dying connection.
+    pub failed: u64,
+    /// Connections that died mid-run (their remaining requests were
+    /// never attempted; completed measurements are kept).
+    pub conn_failures: u64,
+    /// Wall-clock for the whole run.
+    pub wall: Duration,
+}
+
+impl std::fmt::Display for LoadgenReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests: sent={} ok={} busy={} failed={} conn-failures={}",
+            self.sent, self.ok, self.busy, self.failed, self.conn_failures
+        )?;
+        writeln!(
+            f,
+            "latency:  p50={}us p90={}us p99={}us mean={:.0}us",
+            self.stats.percentile_us(50.0),
+            self.stats.percentile_us(90.0),
+            self.stats.percentile_us(99.0),
+            self.stats.mean_us()
+        )?;
+        writeln!(
+            f,
+            "payload:  {} bytes in {:.2}s ({:.3} GB/s)",
+            self.stats.total_bytes(),
+            self.wall.as_secs_f64(),
+            self.stats.throughput_gbps(self.wall)
+        )
+    }
+}
+
+/// An open client connection: socket plus its persistent frame
+/// reassembly buffer (coalesced frames must survive between reads).
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl Conn {
+    fn open(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        // Synchronous request/response over two writes per frame:
+        // disable Nagle so latency numbers measure the daemon, not
+        // delayed-ACK stalls.
+        let _ = stream.set_nodelay(true);
+        Ok(Conn { stream, reader: FrameReader::new() })
+    }
+}
+
+/// One blocking request/response exchange on an open connection.
+fn rpc(conn: &mut Conn, req: &WireRequest) -> Result<WireResponse> {
+    let body = encode_request(req)?;
+    write_frame(&mut conn.stream, &body)?;
+    let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)?
+        .ok_or_else(|| corrupt("daemon closed the connection mid-exchange"))?;
+    decode_response(&frame)
+}
+
+/// Query `(total_uncompressed, chunk_size, n_chunks)` for a dataset.
+pub fn stat(addr: &str, dataset: &str) -> Result<(u64, u64, u64)> {
+    let mut conn = Conn::open(addr)?;
+    let resp = rpc(&mut conn, &WireRequest::Stat { id: 0, dataset: dataset.into() })?;
+    if resp.status != Status::Ok {
+        return Err(Error::Runtime(format!(
+            "stat {dataset}: {} ({})",
+            resp.status.label(),
+            String::from_utf8_lossy(&resp.payload)
+        )));
+    }
+    if resp.payload.len() != 24 {
+        return Err(corrupt(format!("stat payload is {} bytes, want 24", resp.payload.len())));
+    }
+    let rd = |i: usize| {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(&resp.payload[i..i + 8]);
+        u64::from_le_bytes(b)
+    };
+    Ok((rd(0), rd(8), rd(16)))
+}
+
+/// Ask the daemon to drain and exit.
+pub fn shutdown(addr: &str) -> Result<()> {
+    let mut conn = Conn::open(addr)?;
+    let resp = rpc(&mut conn, &WireRequest::Shutdown { id: 0 })?;
+    if resp.status != Status::Ok {
+        return Err(Error::Runtime(format!("shutdown refused: {}", resp.status.label())));
+    }
+    Ok(())
+}
+
+/// Run the load, merging every connection's stats.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
+    if cfg.connections == 0 || cfg.requests == 0 {
+        return Err(invalid("loadgen needs at least one connection and one request"));
+    }
+    let (total, _chunk, _n) = stat(&cfg.addr, &cfg.dataset)?;
+    if total == 0 {
+        return Err(invalid(format!("dataset '{}' is empty", cfg.dataset)));
+    }
+    let t0 = Instant::now();
+    let mut report = LoadgenReport {
+        stats: LatencyStats::new(),
+        sent: 0,
+        ok: 0,
+        busy: 0,
+        failed: 0,
+        conn_failures: 0,
+        wall: Duration::ZERO,
+    };
+    let results: Vec<ConnOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.connections)
+            .map(|ci| s.spawn(move || connection_run(cfg, ci as u64, total)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| {
+                    eprintln!("loadgen: connection thread panicked");
+                    ConnOutcome { died: true, ..ConnOutcome::default() }
+                })
+            })
+            .collect()
+    });
+    // A dead connection loses its remaining requests, not the whole
+    // run's measurements.
+    for r in results {
+        report.stats.merge(&r.stats);
+        report.ok += r.ok;
+        report.busy += r.busy;
+        report.failed += r.failed;
+        report.sent += r.ok + r.busy + r.failed;
+        report.conn_failures += u64::from(r.died);
+    }
+    report.wall = t0.elapsed();
+    if report.sent == 0 && report.conn_failures > 0 {
+        return Err(Error::Runtime("every loadgen connection failed".into()));
+    }
+    Ok(report)
+}
+
+/// One connection's results (partial if the connection died mid-run).
+#[derive(Debug, Default)]
+struct ConnOutcome {
+    stats: LatencyStats,
+    ok: u64,
+    busy: u64,
+    failed: u64,
+    died: bool,
+}
+
+fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome {
+    let mut out = ConnOutcome::default();
+    let mut conn = match Conn::open(&cfg.addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("loadgen: connection {conn_idx} failed to connect: {e}");
+            out.died = true;
+            return out;
+        }
+    };
+    let mut rng = Rng::new(cfg.seed ^ (conn_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    for r in 0..cfg.requests as u64 {
+        let offset = rng.below(total);
+        let span = if cfg.max_len == 0 { total - offset } else { cfg.max_len.min(total - offset) };
+        let len = 1 + rng.below(span.max(1));
+        let id = (conn_idx << 32) | r;
+        let started = Instant::now();
+        let resp = match rpc(
+            &mut conn,
+            &WireRequest::Get { id, dataset: cfg.dataset.clone(), offset, len },
+        ) {
+            Ok(resp) => resp,
+            Err(e) => {
+                eprintln!("loadgen: connection {conn_idx} died after {r} requests: {e}");
+                // The aborted exchange still counts as an attempt so
+                // `sent` reconciles with daemon-side counters.
+                out.failed += 1;
+                out.died = true;
+                break;
+            }
+        };
+        match resp.status {
+            Status::Ok if resp.id == id => {
+                out.stats.record(started.elapsed(), resp.payload.len() as u64);
+                out.ok += 1;
+            }
+            Status::Busy => out.busy += 1,
+            _ => out.failed += 1,
+        }
+    }
+    out
+}

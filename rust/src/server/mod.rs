@@ -1,0 +1,32 @@
+//! The serving layer: a long-lived decompression daemon (std-only).
+//!
+//! CODAG frames decompression as a component of data-analytics serving
+//! pipelines (§I, §V-F); this module gives the L3 chunk engine a real
+//! request path so batching, caching and admission control are
+//! measurable system properties rather than bench artifacts:
+//!
+//! * [`proto`] — length-prefixed little-endian wire protocol
+//!   (request/response framing, status codes; layout frozen in
+//!   DESIGN.md §6 and pinned by unit tests).
+//! * [`daemon`] — `TcpListener` daemon: per-connection reader/writer
+//!   threads, per-dataset shard queues over long-lived `Service`
+//!   workers, bounded admission with explicit `Busy` backpressure, and
+//!   token-based graceful shutdown that joins every thread.
+//! * [`cache`] — sharded byte-budgeted LRU of hot *decompressed*
+//!   chunks keyed by `(dataset, chunk index)`.
+//! * [`loadgen`] — client that hammers a running daemon and reports
+//!   p50/p90/p99 latency and throughput.
+//!
+//! Driven end-to-end over loopback TCP by
+//! `rust/tests/server_integration.rs`, and from the CLI via
+//! `codag serve --port …` / `codag loadgen`.
+
+pub mod cache;
+pub mod daemon;
+pub mod loadgen;
+pub mod proto;
+
+pub use cache::ChunkCache;
+pub use daemon::{start, DaemonConfig, DaemonHandle};
+pub use loadgen::{LoadgenConfig, LoadgenReport};
+pub use proto::{Status, WireRequest, WireResponse};

@@ -1,0 +1,716 @@
+//! The `codag-serve` wire protocol: length-prefixed little-endian
+//! frames over TCP.
+//!
+//! Every frame on the wire is a `u32` little-endian body length
+//! followed by the body; bodies are capped at [`MAX_FRAME_LEN`] so a
+//! corrupt or hostile peer cannot force an unbounded allocation. The
+//! byte layouts below are frozen in DESIGN.md §6 and pinned by the unit
+//! suite in this module.
+//!
+//! Request body:
+//!
+//! ```text
+//! magic:    u32 = 0xC0DA_5E01
+//! version:  u16 = 1
+//! kind:     u8          (1 = Get, 2 = Stat, 3 = Shutdown)
+//! name_len: u8          (dataset name bytes; 0 for Shutdown)
+//! id:       u64         (caller-assigned, echoed in the response)
+//! offset:   u64         (uncompressed byte offset; Get only, else 0)
+//! len:      u64         (uncompressed byte length, 0 = to end; Get only)
+//! name:     name_len bytes of UTF-8
+//! ```
+//!
+//! Response body:
+//!
+//! ```text
+//! magic:       u32 = 0xC0DA_5E01
+//! version:     u16 = 1
+//! status:      u8       (see `Status`)
+//! reserved:    u8 = 0
+//! id:          u64      (echoed request id)
+//! payload_len: u64      (== remaining bytes)
+//! payload:     data on Ok, UTF-8 error text otherwise
+//! ```
+//!
+//! A `Stat` response payload is 24 bytes: `total_uncompressed: u64`,
+//! `chunk_size: u64`, `n_chunks: u64` (little-endian).
+
+use crate::{corrupt, invalid, Error, Result};
+use std::io::{ErrorKind, Read, Write};
+
+/// Magic number opening every request and response body.
+pub const WIRE_MAGIC: u32 = 0xC0DA_5E01;
+/// Protocol version; bumped on any layout change (see DESIGN.md §6).
+pub const WIRE_VERSION: u16 = 1;
+/// Upper bound on one frame body (guards allocation on decode).
+pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+/// Server-side bound on *inbound request* frames. Requests are at most
+/// 32 + 255 bytes, so the daemon reads with this cap instead of
+/// [`MAX_FRAME_LEN`] — a hostile length prefix must not make the
+/// server pre-allocate a response-sized buffer.
+pub const MAX_REQUEST_FRAME_LEN: u32 = 4096;
+/// Upper bound on a dataset name (it is length-prefixed with a u8).
+pub const MAX_NAME_LEN: usize = 255;
+
+/// Response status codes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Request served; payload is the decompressed bytes.
+    Ok,
+    /// Dataset is not registered on this daemon.
+    NotFound,
+    /// Malformed request (bad range, bad frame, bad name).
+    BadRequest,
+    /// Backpressure: the shard queue is past its admission limit, or
+    /// this connection's unwritten-response / byte budget is spent
+    /// (drain responses before retrying — see DESIGN.md §6.3; the
+    /// payload names the exact cause).
+    Busy,
+    /// The stored chunk failed to decode.
+    Corrupt,
+    /// Internal daemon error.
+    Internal,
+    /// Daemon is draining; no new work accepted.
+    ShuttingDown,
+}
+
+impl Status {
+    /// Wire discriminant.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::NotFound => 1,
+            Status::BadRequest => 2,
+            Status::Busy => 3,
+            Status::Corrupt => 4,
+            Status::Internal => 5,
+            Status::ShuttingDown => 6,
+        }
+    }
+
+    /// Parse a wire discriminant.
+    pub fn from_u8(v: u8) -> Option<Status> {
+        Some(match v {
+            0 => Status::Ok,
+            1 => Status::NotFound,
+            2 => Status::BadRequest,
+            3 => Status::Busy,
+            4 => Status::Corrupt,
+            5 => Status::Internal,
+            6 => Status::ShuttingDown,
+            _ => return None,
+        })
+    }
+
+    /// Human-readable label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Status::Ok => "ok",
+            Status::NotFound => "not-found",
+            Status::BadRequest => "bad-request",
+            Status::Busy => "busy",
+            Status::Corrupt => "corrupt",
+            Status::Internal => "internal",
+            Status::ShuttingDown => "shutting-down",
+        }
+    }
+}
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireRequest {
+    /// Decompress `[offset, offset+len)` of `dataset` (`len == 0` = to end).
+    Get {
+        /// Caller-assigned id, echoed back.
+        id: u64,
+        /// Registered dataset name.
+        dataset: String,
+        /// Uncompressed byte offset.
+        offset: u64,
+        /// Uncompressed byte length (0 = to end).
+        len: u64,
+    },
+    /// Query dataset metadata (total length, chunk size, chunk count).
+    Stat {
+        /// Caller-assigned id, echoed back.
+        id: u64,
+        /// Registered dataset name.
+        dataset: String,
+    },
+    /// Ask the daemon to drain and exit.
+    Shutdown {
+        /// Caller-assigned id, echoed back.
+        id: u64,
+    },
+}
+
+/// A response frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WireResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// Outcome.
+    pub status: Status,
+    /// Decompressed bytes on `Ok`, UTF-8 error text otherwise.
+    pub payload: Vec<u8>,
+}
+
+impl WireResponse {
+    /// Convenience constructor for error responses.
+    pub fn error(id: u64, status: Status, msg: impl Into<String>) -> WireResponse {
+        WireResponse { id, status, payload: msg.into().into_bytes() }
+    }
+}
+
+const REQ_KIND_GET: u8 = 1;
+const REQ_KIND_STAT: u8 = 2;
+const REQ_KIND_SHUTDOWN: u8 = 3;
+
+/// Encode a request into a frame body (no length prefix; pair with
+/// [`write_frame`]).
+pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
+    let (kind, id, dataset, offset, len) = match req {
+        WireRequest::Get { id, dataset, offset, len } => {
+            (REQ_KIND_GET, *id, dataset.as_str(), *offset, *len)
+        }
+        WireRequest::Stat { id, dataset } => (REQ_KIND_STAT, *id, dataset.as_str(), 0, 0),
+        WireRequest::Shutdown { id } => (REQ_KIND_SHUTDOWN, *id, "", 0, 0),
+    };
+    let name = dataset.as_bytes();
+    if name.len() > MAX_NAME_LEN {
+        return Err(invalid(format!("dataset name too long ({} bytes)", name.len())));
+    }
+    let mut out = Vec::with_capacity(32 + name.len());
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(name.len() as u8);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(name);
+    Ok(out)
+}
+
+/// Decode a request frame body.
+pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
+    let mut rd = Rd::new(body);
+    let magic = rd.u32()?;
+    if magic != WIRE_MAGIC {
+        return Err(corrupt(format!("bad request magic {magic:#010x}")));
+    }
+    let version = rd.u16()?;
+    if version != WIRE_VERSION {
+        return Err(corrupt(format!("unsupported protocol version {version}")));
+    }
+    let kind = rd.u8()?;
+    let name_len = rd.u8()? as usize;
+    let id = rd.u64()?;
+    let offset = rd.u64()?;
+    let len = rd.u64()?;
+    let name = rd.bytes(name_len)?;
+    let dataset = std::str::from_utf8(name)
+        .map_err(|_| corrupt("dataset name is not UTF-8"))?
+        .to_string();
+    rd.done()?;
+    match kind {
+        REQ_KIND_GET => Ok(WireRequest::Get { id, dataset, offset, len }),
+        REQ_KIND_STAT => Ok(WireRequest::Stat { id, dataset }),
+        REQ_KIND_SHUTDOWN => Ok(WireRequest::Shutdown { id }),
+        other => Err(corrupt(format!("unknown request kind {other}"))),
+    }
+}
+
+/// Encode a response into a frame body (no length prefix).
+pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
+    let mut out = Vec::with_capacity(24 + resp.payload.len());
+    out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(resp.status.as_u8());
+    out.push(0); // reserved
+    out.extend_from_slice(&resp.id.to_le_bytes());
+    out.extend_from_slice(&(resp.payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&resp.payload);
+    out
+}
+
+/// Decode a response frame body.
+pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
+    let mut rd = Rd::new(body);
+    let magic = rd.u32()?;
+    if magic != WIRE_MAGIC {
+        return Err(corrupt(format!("bad response magic {magic:#010x}")));
+    }
+    let version = rd.u16()?;
+    if version != WIRE_VERSION {
+        return Err(corrupt(format!("unsupported protocol version {version}")));
+    }
+    let status_byte = rd.u8()?;
+    let status = Status::from_u8(status_byte)
+        .ok_or_else(|| corrupt(format!("unknown status {status_byte}")))?;
+    let _reserved = rd.u8()?;
+    let id = rd.u64()?;
+    let payload_len = rd.u64()? as usize;
+    let payload = rd.bytes(payload_len)?.to_vec();
+    rd.done()?;
+    Ok(WireResponse { id, status, payload })
+}
+
+/// Write a response as one frame *without copying the payload*: length
+/// prefix and 24-byte header in one stack buffer, then the payload
+/// slice straight from the response. Byte-identical to
+/// `write_frame(w, &encode_response(resp))` (pinned by a unit test) —
+/// this is the daemon's reply hot path, where the extra
+/// `encode_response` memcpy of a multi-MiB payload matters.
+pub fn write_response(w: &mut impl Write, resp: &WireResponse) -> Result<()> {
+    let body_len = 24u64 + resp.payload.len() as u64;
+    if body_len > MAX_FRAME_LEN as u64 {
+        return Err(invalid(format!("response frame too large ({body_len} bytes)")));
+    }
+    let mut head = [0u8; 28];
+    head[0..4].copy_from_slice(&(body_len as u32).to_le_bytes());
+    head[4..8].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
+    head[8..10].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    head[10] = resp.status.as_u8();
+    head[11] = 0; // reserved
+    head[12..20].copy_from_slice(&resp.id.to_le_bytes());
+    head[20..28].copy_from_slice(&(resp.payload.len() as u64).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&resp.payload)?;
+    Ok(())
+}
+
+/// Best-effort request-id extraction for error responses: returns the
+/// id field whenever the body is long enough to contain one (magic and
+/// version are deliberately not checked — this exists so `BadRequest`
+/// responses to malformed-but-framed requests can still be correlated
+/// by id; a body too short to carry an id yields 0).
+pub fn request_id_hint(body: &[u8]) -> u64 {
+    match body.get(8..16) {
+        Some(s) => u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]),
+        None => 0,
+    }
+}
+
+/// Write one frame (length prefix + body).
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> Result<()> {
+    if body.len() as u64 > MAX_FRAME_LEN as u64 {
+        return Err(invalid(format!("frame body too large ({} bytes)", body.len())));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    Ok(())
+}
+
+/// What [`FrameReader::poll`] observed on the stream.
+#[derive(Debug)]
+pub enum ReadEvent {
+    /// One complete frame body.
+    Frame(Vec<u8>),
+    /// Clean end of stream (no partial frame buffered).
+    Eof,
+    /// The read timed out / would block; caller may check its shutdown
+    /// token and poll again.
+    WouldBlock,
+}
+
+/// Incremental frame reassembly over a (possibly timeout-equipped)
+/// byte stream. The length prefix and the body are read with exact
+/// sizes — the reader never consumes bytes past the current frame and
+/// the body lands directly in its final buffer (no intermediate copy
+/// on the receive hot path). Partial reads never lose data: progress
+/// persists in the reader between `poll` calls. The frame cap bounds
+/// the buffer allocated per length prefix: use [`FrameReader::new`]
+/// (cap [`MAX_FRAME_LEN`]) for reading responses and
+/// [`FrameReader::for_requests`] (cap [`MAX_REQUEST_FRAME_LEN`]) on
+/// the server side.
+#[derive(Debug)]
+pub struct FrameReader {
+    cap: u32,
+    head: [u8; 4],
+    head_filled: usize,
+    /// Allocated once the length prefix is complete.
+    body: Option<Vec<u8>>,
+    body_filled: usize,
+}
+
+impl Default for FrameReader {
+    fn default() -> FrameReader {
+        FrameReader::new()
+    }
+}
+
+impl FrameReader {
+    /// Reader for response-sized frames (cap [`MAX_FRAME_LEN`]).
+    pub fn new() -> FrameReader {
+        FrameReader::with_cap(MAX_FRAME_LEN)
+    }
+
+    /// Server-side reader for request frames: a hostile length prefix
+    /// can only force a [`MAX_REQUEST_FRAME_LEN`] allocation.
+    pub fn for_requests() -> FrameReader {
+        FrameReader::with_cap(MAX_REQUEST_FRAME_LEN)
+    }
+
+    /// Reader with an explicit frame cap.
+    pub fn with_cap(cap: u32) -> FrameReader {
+        FrameReader { cap, head: [0; 4], head_filled: 0, body: None, body_filled: 0 }
+    }
+
+    /// Pull the next frame. Returns [`ReadEvent::WouldBlock`] when the
+    /// underlying read times out so callers can poll a shutdown token.
+    pub fn poll(&mut self, r: &mut impl Read) -> Result<ReadEvent> {
+        loop {
+            if self.body.is_none() && self.head_filled == 4 {
+                let len = u32::from_le_bytes(self.head);
+                if len > self.cap {
+                    return Err(corrupt(format!(
+                        "frame length {len} exceeds cap {}",
+                        self.cap
+                    )));
+                }
+                self.body = Some(vec![0u8; len as usize]);
+                self.body_filled = 0;
+            }
+            if let Some(body) = &mut self.body {
+                if self.body_filled == body.len() {
+                    let frame = self.body.take().expect("checked above");
+                    self.head_filled = 0;
+                    self.body_filled = 0;
+                    return Ok(ReadEvent::Frame(frame));
+                }
+                match r.read(&mut body[self.body_filled..]) {
+                    Ok(0) => return Err(corrupt("connection closed mid-frame")),
+                    Ok(n) => self.body_filled += n,
+                    Err(e)
+                        if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                    {
+                        return Ok(ReadEvent::WouldBlock);
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(Error::from(e)),
+                }
+                continue;
+            }
+            match r.read(&mut self.head[self.head_filled..4]) {
+                Ok(0) => {
+                    return if self.head_filled == 0 {
+                        Ok(ReadEvent::Eof)
+                    } else {
+                        Err(corrupt("connection closed mid-frame"))
+                    };
+                }
+                Ok(n) => self.head_filled += n,
+                Err(e)
+                    if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut =>
+                {
+                    return Ok(ReadEvent::WouldBlock);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(Error::from(e)),
+            }
+        }
+    }
+}
+
+/// Blocking convenience: read the next frame body, `Ok(None)` on clean
+/// EOF. (On a blocking socket `WouldBlock` never surfaces; on one with
+/// a read timeout this spins until a frame or EOF arrives.)
+///
+/// `fr` must be the connection's persistent reader: one `read` can
+/// deliver bytes of several coalesced frames, and those bytes live in
+/// the `FrameReader`'s buffer between calls — a fresh reader per call
+/// would silently drop them and desync the stream.
+pub fn read_frame_blocking(fr: &mut FrameReader, r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    loop {
+        match fr.poll(r)? {
+            ReadEvent::Frame(f) => return Ok(Some(f)),
+            ReadEvent::Eof => return Ok(None),
+            ReadEvent::WouldBlock => continue,
+        }
+    }
+}
+
+/// Bounds-checked little-endian reader over a frame body.
+struct Rd<'a> {
+    b: &'a [u8],
+    off: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(b: &'a [u8]) -> Rd<'a> {
+        Rd { b, off: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .off
+            .checked_add(n)
+            .filter(|&e| e <= self.b.len())
+            .ok_or_else(|| corrupt("truncated frame"))?;
+        let s = &self.b[self.off..end];
+        self.off = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.bytes(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.bytes(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.bytes(8)?;
+        Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.off == self.b.len() {
+            Ok(())
+        } else {
+            Err(corrupt(format!("{} trailing bytes after frame", self.b.len() - self.off)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip_all_kinds() {
+        let reqs = [
+            WireRequest::Get { id: 7, dataset: "MC0".into(), offset: 1024, len: 4096 },
+            WireRequest::Get { id: u64::MAX, dataset: "x".into(), offset: 0, len: 0 },
+            WireRequest::Stat { id: 3, dataset: "TPC".into() },
+            WireRequest::Shutdown { id: 0 },
+        ];
+        for req in &reqs {
+            let body = encode_request(req).unwrap();
+            assert_eq!(&decode_request(&body).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_statuses() {
+        for v in 0..=6u8 {
+            let status = Status::from_u8(v).unwrap();
+            assert_eq!(status.as_u8(), v);
+            let resp = WireResponse { id: 42, status, payload: vec![1, 2, 3, v] };
+            let body = encode_response(&resp);
+            assert_eq!(decode_response(&body).unwrap(), resp);
+        }
+        assert!(Status::from_u8(7).is_none());
+    }
+
+    #[test]
+    fn request_header_layout_pinned() {
+        // Byte-layout pin: DESIGN.md §6 freezes these offsets.
+        let body = encode_request(&WireRequest::Get {
+            id: 0x1122_3344_5566_7788,
+            dataset: "ab".into(),
+            offset: 0x0102_0304_0506_0708,
+            len: 0x1112_1314_1516_1718,
+        })
+        .unwrap();
+        assert_eq!(body.len(), 32 + 2);
+        assert_eq!(&body[0..4], &WIRE_MAGIC.to_le_bytes());
+        assert_eq!(&body[4..6], &WIRE_VERSION.to_le_bytes());
+        assert_eq!(body[6], 1); // kind = Get
+        assert_eq!(body[7], 2); // name_len
+        assert_eq!(&body[8..16], &0x1122_3344_5566_7788u64.to_le_bytes());
+        assert_eq!(&body[16..24], &0x0102_0304_0506_0708u64.to_le_bytes());
+        assert_eq!(&body[24..32], &0x1112_1314_1516_1718u64.to_le_bytes());
+        assert_eq!(&body[32..], b"ab");
+    }
+
+    #[test]
+    fn response_header_layout_pinned() {
+        let body = encode_response(&WireResponse {
+            id: 9,
+            status: Status::Busy,
+            payload: b"full".to_vec(),
+        });
+        assert_eq!(body.len(), 24 + 4);
+        assert_eq!(&body[0..4], &WIRE_MAGIC.to_le_bytes());
+        assert_eq!(&body[4..6], &WIRE_VERSION.to_le_bytes());
+        assert_eq!(body[6], Status::Busy.as_u8());
+        assert_eq!(body[7], 0);
+        assert_eq!(&body[8..16], &9u64.to_le_bytes());
+        assert_eq!(&body[16..24], &4u64.to_le_bytes());
+        assert_eq!(&body[24..], b"full");
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        let good = encode_request(&WireRequest::Stat { id: 1, dataset: "d".into() }).unwrap();
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(decode_request(&bad).is_err());
+        // Bad version.
+        let mut bad = good.clone();
+        bad[4] = 0xEE;
+        assert!(decode_request(&bad).is_err());
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[6] = 99;
+        assert!(decode_request(&bad).is_err());
+        // Truncations at every length must error, never panic.
+        for cut in 0..good.len() {
+            assert!(decode_request(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(decode_request(&bad).is_err());
+        // Response payload_len mismatch.
+        let mut resp =
+            encode_response(&WireResponse { id: 1, status: Status::Ok, payload: vec![7; 8] });
+        resp.truncate(resp.len() - 1);
+        assert!(decode_response(&resp).is_err());
+    }
+
+    #[test]
+    fn write_response_matches_encode_response() {
+        for payload in [Vec::new(), vec![7u8; 3], vec![0xAB; 1000]] {
+            let resp = WireResponse { id: 11, status: Status::Ok, payload };
+            let mut via_encode = Vec::new();
+            write_frame(&mut via_encode, &encode_response(&resp)).unwrap();
+            let mut via_direct = Vec::new();
+            write_response(&mut via_direct, &resp).unwrap();
+            assert_eq!(via_direct, via_encode);
+        }
+    }
+
+    #[test]
+    fn request_id_hint_survives_malformed_kind() {
+        // A well-framed request with a bad kind byte still yields its
+        // id for error correlation.
+        let mut body =
+            encode_request(&WireRequest::Stat { id: 42, dataset: "d".into() }).unwrap();
+        body[6] = 99; // unknown kind
+        assert!(decode_request(&body).is_err());
+        assert_eq!(request_id_hint(&body), 42);
+        assert_eq!(request_id_hint(b"short"), 0);
+    }
+
+    #[test]
+    fn encode_rejects_oversized_name() {
+        let req = WireRequest::Stat { id: 1, dataset: "n".repeat(300) };
+        assert!(encode_request(&req).is_err());
+    }
+
+    /// A reader that delivers at most `chunk` bytes per read, to
+    /// exercise reassembly across partial reads.
+    struct Dribble<'a> {
+        data: &'a [u8],
+        off: usize,
+        chunk: usize,
+    }
+
+    impl Read for Dribble<'_> {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            let n = self.chunk.min(buf.len()).min(self.data.len() - self.off);
+            buf[..n].copy_from_slice(&self.data[self.off..self.off + n]);
+            self.off += n;
+            Ok(n)
+        }
+    }
+
+    #[test]
+    fn frame_reader_reassembles_split_frames() {
+        let mut wire = Vec::new();
+        let bodies: Vec<Vec<u8>> = vec![
+            encode_request(&WireRequest::Get {
+                id: 1,
+                dataset: "MC0".into(),
+                offset: 10,
+                len: 20,
+            })
+            .unwrap(),
+            encode_request(&WireRequest::Shutdown { id: 2 }).unwrap(),
+        ];
+        for b in &bodies {
+            write_frame(&mut wire, b).unwrap();
+        }
+        for chunk in [1usize, 3, 7, 64] {
+            let mut r = Dribble { data: &wire, off: 0, chunk };
+            let mut fr = FrameReader::new();
+            let mut got = Vec::new();
+            loop {
+                match fr.poll(&mut r).unwrap() {
+                    ReadEvent::Frame(f) => got.push(f),
+                    ReadEvent::Eof => break,
+                    ReadEvent::WouldBlock => unreachable!(),
+                }
+            }
+            assert_eq!(got, bodies, "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn read_frame_blocking_handles_coalesced_frames() {
+        // Two frames arriving in one read must both be returned across
+        // successive calls with a persistent reader.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"first").unwrap();
+        write_frame(&mut wire, b"second").unwrap();
+        let mut cur = std::io::Cursor::new(&wire);
+        let mut fr = FrameReader::new();
+        assert_eq!(read_frame_blocking(&mut fr, &mut cur).unwrap().unwrap(), b"first");
+        assert_eq!(read_frame_blocking(&mut fr, &mut cur).unwrap().unwrap(), b"second");
+        assert!(read_frame_blocking(&mut fr, &mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn request_reader_caps_hostile_length_prefix() {
+        // A server-side reader must refuse a response-sized length
+        // prefix outright (no pre-allocation for hostile prefixes).
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_REQUEST_FRAME_LEN + 1).to_le_bytes());
+        let mut fr = FrameReader::for_requests();
+        let mut cur = std::io::Cursor::new(&wire);
+        assert!(fr.poll(&mut cur).is_err());
+        // Every legal request fits under the request cap.
+        let widest = encode_request(&WireRequest::Get {
+            id: u64::MAX,
+            dataset: "n".repeat(MAX_NAME_LEN),
+            offset: u64::MAX,
+            len: u64::MAX,
+        })
+        .unwrap();
+        assert!((widest.len() as u32) <= MAX_REQUEST_FRAME_LEN);
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &widest).unwrap();
+        let mut fr = FrameReader::for_requests();
+        let mut cur = std::io::Cursor::new(&wire);
+        assert!(matches!(fr.poll(&mut cur).unwrap(), ReadEvent::Frame(f) if f == widest));
+    }
+
+    #[test]
+    fn frame_reader_rejects_oversized_and_truncated() {
+        // Length prefix over the cap.
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&(MAX_FRAME_LEN + 1).to_le_bytes());
+        let mut fr = FrameReader::new();
+        let mut cur = std::io::Cursor::new(&wire);
+        assert!(fr.poll(&mut cur).is_err());
+        // EOF mid-frame.
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        wire.truncate(wire.len() - 2);
+        let mut fr = FrameReader::new();
+        let mut cur = std::io::Cursor::new(&wire);
+        assert!(fr.poll(&mut cur).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Direct coverage for exported coordinator building blocks that the
+//! integration stack only exercises implicitly: `router::LeastLoaded`
+//! selection and `batcher::BatchPolicy` flush behavior.
+
+use codag::coordinator::{BatchPolicy, Batcher, ExpandTask, LeastLoaded};
+use codag::decomp::RunRecord;
+use codag::runtime::expander::elems_to_bytes;
+use codag::runtime::Expander;
+use std::time::{Duration, Instant};
+
+#[test]
+fn least_loaded_spreads_then_prefers_credited_worker() {
+    let ll = LeastLoaded::new(3);
+    assert_eq!(ll.len(), 3);
+    assert!(!ll.is_empty());
+    let a = ll.pick(100);
+    let b = ll.pick(100);
+    let c = ll.pick(100);
+    let mut seen = vec![a, b, c];
+    seen.sort_unstable();
+    seen.dedup();
+    assert_eq!(seen.len(), 3, "equal-cost picks land on distinct workers");
+    // Credit worker `b` fully: it must win the next pick.
+    ll.complete(b, 100);
+    assert_eq!(ll.pick(10), b);
+}
+
+#[test]
+fn least_loaded_clamps_to_one_worker_and_overcredit() {
+    let ll = LeastLoaded::new(0);
+    assert_eq!(ll.len(), 1, "worker count is clamped to >= 1");
+    assert_eq!(ll.pick(42), 0);
+    // Crediting more bytes than outstanding clamps at zero rather than
+    // wrapping, so the worker stays pickable.
+    ll.complete(0, 9999);
+    assert_eq!(ll.pick(1), 0);
+}
+
+#[test]
+fn least_loaded_weights_by_bytes_not_count() {
+    let ll = LeastLoaded::new(2);
+    let heavy = ll.pick(1000);
+    // Three light picks all fit on the other worker before it catches
+    // up with the heavy one.
+    for _ in 0..3 {
+        let w = ll.pick(100);
+        assert_ne!(w, heavy, "light work routes around the loaded worker");
+    }
+}
+
+fn task(id: u64, init: u64, len: u64, delta: i64) -> ExpandTask {
+    ExpandTask {
+        id,
+        runs: vec![RunRecord { init, len, delta }],
+        width: 8,
+        total: len as usize,
+        enqueued: Instant::now(),
+    }
+}
+
+#[test]
+fn batch_policy_default_knobs() {
+    let p = BatchPolicy::default();
+    assert_eq!(p.max_batch, 8);
+    assert_eq!(p.max_delay, Duration::from_micros(500));
+}
+
+#[test]
+fn batcher_not_due_when_empty_or_fresh() {
+    let policy = BatchPolicy { max_batch: 2, max_delay: Duration::from_secs(60) };
+    let mut b = Batcher::new(policy);
+    assert!(!b.due(Instant::now()), "empty batcher is never due");
+    b.push(task(1, 5, 4, 0));
+    assert!(!b.due(Instant::now()), "one fresh task under max_batch is not due");
+    b.push(task(2, 5, 4, 0));
+    assert!(b.due(Instant::now()), "max_batch reached");
+}
+
+#[test]
+fn batcher_deadline_makes_single_task_due() {
+    let policy = BatchPolicy { max_batch: 1000, max_delay: Duration::from_millis(1) };
+    let mut b = Batcher::new(policy);
+    b.push(task(1, 0, 4, 1));
+    std::thread::sleep(Duration::from_millis(3));
+    assert!(b.due(Instant::now()), "oldest task past max_delay forces a flush");
+}
+
+#[test]
+fn batcher_flush_caps_at_max_batch_and_preserves_order() {
+    let policy = BatchPolicy { max_batch: 3, max_delay: Duration::from_secs(60) };
+    let mut b = Batcher::new(policy);
+    for id in 0..5u64 {
+        b.push(task(id, id * 10, 2, 1));
+    }
+    let ex = Expander::cpu_only();
+    let first = b.flush(&ex);
+    assert_eq!(first.len(), 3, "flush dispatches at most max_batch tasks");
+    assert_eq!(b.pending(), 2);
+    assert_eq!(b.batches, 1);
+    assert_eq!(b.tasks, 3);
+    let ids: Vec<u64> = first.iter().map(|r| r.id).collect();
+    assert_eq!(ids, vec![0, 1, 2], "FIFO task order is preserved");
+    // Each result carries the run expansion (init, init+delta, ...).
+    for r in &first {
+        let bytes = r.bytes.as_ref().unwrap();
+        let init = r.id * 10;
+        assert_eq!(bytes, &elems_to_bytes(&[init as i64, init as i64 + 1], 8));
+    }
+    // Draining finishes the remainder under the same policy cap.
+    let rest = b.drain(&ex);
+    assert_eq!(rest.len(), 2);
+    assert_eq!(b.pending(), 0);
+    assert_eq!(b.batches, 2);
+    assert_eq!(b.tasks, 5);
+}
+
+#[test]
+fn batcher_flush_on_empty_is_a_noop() {
+    let mut b = Batcher::new(BatchPolicy::default());
+    let ex = Expander::cpu_only();
+    assert!(b.flush(&ex).is_empty());
+    assert_eq!(b.batches, 0, "empty flush must not count a batch");
+    assert!(b.drain(&ex).is_empty());
+}

@@ -1,0 +1,333 @@
+//! End-to-end tests driving a real `codag-serve` daemon over loopback
+//! TCP (acceptance gates for the serving layer, DESIGN.md §6):
+//!
+//! * ≥4 concurrent clients get byte-identical results vs direct
+//!   container decompression,
+//! * a repeated ranged read is served from the chunk cache (hit counter
+//!   asserted),
+//! * flooding a shard past its admission limit yields `Busy` responses
+//!   without deadlock or unbounded memory (shard-queue and
+//!   per-connection in-flight limits both),
+//! * the daemon joins all threads on shutdown (local and wire-driven).
+
+use codag::codecs::CodecKind;
+use codag::coordinator::Registry;
+use codag::data::Rng;
+use codag::format::container::Container;
+use codag::server::daemon::{start, DaemonConfig};
+use codag::server::proto::{
+    decode_response, encode_request, read_frame_blocking, write_frame, FrameReader, Status,
+    WireRequest, WireResponse,
+};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic mildly-compressible payload.
+fn payload(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        let run = 1 + rng.below(32) as usize;
+        let b = (rng.below(7) * 31) as u8;
+        for _ in 0..run.min(len - out.len()) {
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Test client: socket plus persistent frame reassembly buffer (frames
+/// coalesced into one read must survive between `recv` calls).
+struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        Client { stream: TcpStream::connect(addr).expect("connect"), reader: FrameReader::new() }
+    }
+
+    fn send(&mut self, req: &WireRequest) {
+        let body = encode_request(req).expect("encode");
+        write_frame(&mut self.stream, &body).expect("send frame");
+    }
+
+    fn send_raw(&mut self, body: &[u8]) {
+        write_frame(&mut self.stream, body).expect("send raw frame");
+    }
+
+    fn recv(&mut self) -> WireResponse {
+        let frame = read_frame_blocking(&mut self.reader, &mut self.stream)
+            .expect("read frame")
+            .expect("connection open");
+        decode_response(&frame).expect("decode response")
+    }
+
+    /// True if the daemon closed the connection cleanly.
+    fn at_eof(&mut self) -> bool {
+        read_frame_blocking(&mut self.reader, &mut self.stream).expect("read").is_none()
+    }
+
+    fn rpc(&mut self, req: &WireRequest) -> WireResponse {
+        self.send(req);
+        self.recv()
+    }
+}
+
+#[test]
+fn concurrent_clients_get_byte_identical_ranges() {
+    let alpha = payload(300 * 1024, 1);
+    let beta = payload(220 * 1024, 2);
+    let c_alpha = Container::compress(&alpha, CodecKind::RleV1, 32 * 1024).unwrap();
+    let c_beta = Container::compress(&beta, CodecKind::Deflate, 32 * 1024).unwrap();
+    // The reference: direct chunk-level decompression of the same
+    // containers the daemon serves.
+    let direct_alpha = c_alpha.decompress_all().unwrap();
+    let direct_beta = c_beta.decompress_all().unwrap();
+    assert_eq!(direct_alpha, alpha);
+    assert_eq!(direct_beta, beta);
+    let mut reg = Registry::new();
+    reg.insert("alpha", c_alpha);
+    reg.insert("beta", c_beta);
+    let cfg = DaemonConfig { shards: 2, queue_depth: 64, ..DaemonConfig::default() };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let addr = handle.addr();
+    let expected = [("alpha", direct_alpha.as_slice()), ("beta", direct_beta.as_slice())];
+    std::thread::scope(|s| {
+        for client in 0..5u64 {
+            let expected = &expected;
+            s.spawn(move || {
+                let mut conn = Client::connect(addr);
+                let mut rng = Rng::new(0xC11E_47 + client);
+                for r in 0..25u64 {
+                    let (name, data) = expected[(rng.below(2)) as usize];
+                    let total = data.len() as u64;
+                    let offset = rng.below(total);
+                    let len = 1 + rng.below((total - offset).min(80_000));
+                    let id = (client << 32) | r;
+                    let resp =
+                        conn.rpc(&WireRequest::Get { id, dataset: name.into(), offset, len });
+                    assert_eq!(
+                        resp.status,
+                        Status::Ok,
+                        "{}",
+                        String::from_utf8_lossy(&resp.payload)
+                    );
+                    assert_eq!(resp.id, id);
+                    let want = &data[offset as usize..(offset + len) as usize];
+                    assert_eq!(
+                        resp.payload, want,
+                        "client {client} req {r} {name} [{offset}+{len}]"
+                    );
+                }
+                // Stat agrees with the container.
+                let resp = conn.rpc(&WireRequest::Stat { id: 999, dataset: "alpha".into() });
+                assert_eq!(resp.status, Status::Ok);
+                assert_eq!(&resp.payload[0..8], &(expected[0].1.len() as u64).to_le_bytes());
+            });
+        }
+    });
+    // All threads join cleanly after a local shutdown.
+    let stats = handle.join().expect("daemon joins all threads");
+    assert_eq!(stats.count(), 5 * 25);
+    assert!(stats.total_bytes() > 0);
+}
+
+#[test]
+fn repeated_ranged_read_served_from_cache() {
+    let data = payload(256 * 1024, 3);
+    let container = Container::compress(&data, CodecKind::Deflate, 64 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("hot", container);
+    let cfg = DaemonConfig { shards: 1, cache_bytes: 8 << 20, ..DaemonConfig::default() };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    // A range inside chunk 1 (64 KiB chunks).
+    let resp =
+        conn.rpc(&WireRequest::Get { id: 1, dataset: "hot".into(), offset: 66_000, len: 1_000 });
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload, &data[66_000..67_000]);
+    assert!(handle.cache().misses() >= 1, "first read must miss");
+    let hits_before = handle.cache().hits();
+    let resp =
+        conn.rpc(&WireRequest::Get { id: 2, dataset: "hot".into(), offset: 66_000, len: 1_000 });
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload, &data[66_000..67_000]);
+    assert!(
+        handle.cache().hits() > hits_before,
+        "repeated ranged read must be served from the chunk cache"
+    );
+    // Cache counters surface through the LatencyStats snapshot.
+    let stats = handle.join().expect("clean join");
+    assert!(stats.cache_hits() >= 1);
+    assert!(stats.cache_misses() >= 1);
+    assert_eq!(stats.count(), 2);
+}
+
+#[test]
+fn flooding_a_shard_yields_busy_without_deadlock() {
+    // One shard, admission limit 1, no cache: every request re-inflates
+    // ~2 MiB, so the queue saturates while the flood is admitted.
+    let data = payload(2 * 1024 * 1024, 4);
+    let container = Container::compress(&data, CodecKind::Deflate, 128 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("flood", container);
+    let cfg = DaemonConfig {
+        shards: 1,
+        queue_depth: 1,
+        workers_per_shard: 1,
+        cache_bytes: 0,
+        ..DaemonConfig::default()
+    };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    const FLOOD: u64 = 48;
+    for id in 0..FLOOD {
+        conn.send(&WireRequest::Get { id, dataset: "flood".into(), offset: 0, len: 0 });
+    }
+    let mut statuses: HashMap<u64, Status> = HashMap::new();
+    let mut ok = 0u64;
+    let mut busy = 0u64;
+    for _ in 0..FLOOD {
+        let resp = conn.recv();
+        match resp.status {
+            Status::Ok => {
+                ok += 1;
+                assert_eq!(resp.payload, data, "full-range response must be byte-identical");
+            }
+            Status::Busy => busy += 1,
+            other => panic!("unexpected status {other:?}"),
+        }
+        assert!(statuses.insert(resp.id, resp.status).is_none(), "duplicate id {}", resp.id);
+    }
+    assert_eq!(ok + busy, FLOOD);
+    assert!(ok >= 1, "at least the first admitted request must succeed");
+    assert!(busy >= 1, "flooding past the admission limit must yield Busy");
+    // No deadlock: join completes and served-request accounting matches.
+    let stats = handle.join().expect("daemon joins after flood");
+    assert_eq!(stats.count() as u64, ok);
+}
+
+#[test]
+fn connection_inflight_limit_bounds_response_buffering() {
+    // Large shard queue but a tiny per-connection in-flight budget: a
+    // client that pipelines without reading must get Busy from the
+    // connection limit, not buffer responses without bound.
+    let data = payload(2 * 1024 * 1024, 7);
+    let container = Container::compress(&data, CodecKind::Deflate, 128 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("big", container);
+    let cfg = DaemonConfig {
+        shards: 1,
+        queue_depth: 64,
+        workers_per_shard: 1,
+        max_inflight_per_conn: 2,
+        cache_bytes: 0,
+        ..DaemonConfig::default()
+    };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    const PIPELINED: u64 = 32;
+    for id in 0..PIPELINED {
+        conn.send(&WireRequest::Get { id, dataset: "big".into(), offset: 0, len: 0 });
+    }
+    let (mut ok, mut busy) = (0u64, 0u64);
+    for _ in 0..PIPELINED {
+        let resp = conn.recv();
+        match resp.status {
+            Status::Ok => {
+                ok += 1;
+                assert_eq!(resp.payload, data);
+            }
+            Status::Busy => busy += 1,
+            other => panic!("unexpected status {other:?}"),
+        }
+    }
+    assert_eq!(ok + busy, PIPELINED);
+    assert!(ok >= 1 && busy >= 1, "ok={ok} busy={busy}");
+    handle.join().expect("clean join after in-flight backpressure");
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let data = payload(64 * 1024, 5);
+    let container = Container::compress(&data, CodecKind::RleV2, 16 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("d", container);
+    let handle = start(Arc::new(reg), DaemonConfig::default(), "127.0.0.1:0").expect("bind");
+    let addr = handle.addr();
+    {
+        let mut conn = Client::connect(addr);
+        // Unknown dataset.
+        let resp =
+            conn.rpc(&WireRequest::Get { id: 1, dataset: "nope".into(), offset: 0, len: 1 });
+        assert_eq!(resp.status, Status::NotFound);
+        let resp = conn.rpc(&WireRequest::Stat { id: 2, dataset: "nope".into() });
+        assert_eq!(resp.status, Status::NotFound);
+        // Offset beyond the end is a bad request, connection survives.
+        let resp = conn.rpc(&WireRequest::Get {
+            id: 3,
+            dataset: "d".into(),
+            offset: u64::MAX,
+            len: 1,
+        });
+        assert_eq!(resp.status, Status::BadRequest);
+        // Hostile length where offset + len overflows u64: must clamp
+        // to the dataset end, not panic a shard worker or wrap.
+        let resp = conn.rpc(&WireRequest::Get {
+            id: 7,
+            dataset: "d".into(),
+            offset: 1,
+            len: u64::MAX,
+        });
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.payload, &data[1..]);
+        // A well-formed request still works afterwards.
+        let resp =
+            conn.rpc(&WireRequest::Get { id: 4, dataset: "d".into(), offset: 100, len: 50 });
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.payload, &data[100..150]);
+    }
+    {
+        // A frame with a corrupt body gets BadRequest and the daemon
+        // closes the connection (framing no longer trustworthy).
+        let mut conn = Client::connect(addr);
+        conn.send_raw(b"garbage-not-a-request");
+        let resp = conn.recv();
+        assert_eq!(resp.status, Status::BadRequest);
+        assert!(conn.at_eof());
+    }
+    handle.join().expect("clean join");
+}
+
+#[test]
+fn wire_shutdown_drains_and_joins() {
+    let data = payload(64 * 1024, 6);
+    let container = Container::compress(&data, CodecKind::RleV1, 16 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("d", container);
+    let handle = start(Arc::new(reg), DaemonConfig::default(), "127.0.0.1:0").expect("bind");
+    let addr = handle.addr();
+    // Two idle connections must not block shutdown.
+    let idle_a = Client::connect(addr);
+    let mut idle_b = Client::connect(addr);
+    let client = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(100));
+        let mut conn = Client::connect(addr);
+        let resp = conn.rpc(&WireRequest::Get { id: 1, dataset: "d".into(), offset: 0, len: 0 });
+        assert_eq!(resp.status, Status::Ok);
+        let resp = conn.rpc(&WireRequest::Shutdown { id: 2 });
+        assert_eq!(resp.status, Status::Ok);
+    });
+    // wait() blocks until the wire Shutdown trips the token, then joins
+    // every daemon thread.
+    let stats = handle.wait().expect("wire-driven shutdown joins all threads");
+    assert_eq!(stats.count(), 1);
+    client.join().expect("client");
+    // Idle connections observe the close.
+    assert!(idle_b.at_eof());
+    drop(idle_a);
+}

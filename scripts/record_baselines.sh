@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Record the perf baselines tracked in EXPERIMENTS.md:
+#   1. codec_hotpath      — wall-clock CPU codec throughput
+#   2. fig7_throughput    — simulated A100 GB/s (deterministic model)
+#   3. loadgen            — daemon path p50/p99 + GB/s over loopback TCP
+#
+# Usage: scripts/record_baselines.sh [out-file]
+# Writes a markdown snippet (default: EXPERIMENTS.local.md) whose tables
+# paste directly into EXPERIMENTS.md. Run from the repository root on an
+# otherwise-idle machine; see EXPERIMENTS.md for the recording protocol.
+set -euo pipefail
+
+OUT="${1:-EXPERIMENTS.local.md}"
+PORT="${CODAG_BASELINE_PORT:-7313}"
+
+echo "building release binaries..." >&2
+cargo build --release --workspace >&2
+cargo build --release --benches >&2
+
+{
+  echo "# Baseline capture"
+  echo
+  echo "- date: $(date -u +%Y-%m-%dT%H:%M:%SZ)"
+  echo "- host: $(uname -srm)"
+  echo "- cpu: $(grep -m1 'model name' /proc/cpuinfo 2>/dev/null | cut -d: -f2- | sed 's/^ //' || echo unknown)"
+  echo "- commit: $(git rev-parse --short HEAD 2>/dev/null || echo unknown)"
+  echo
+  echo '## codec_hotpath'
+  echo
+  echo '```text'
+  cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
+  echo '## fig7_throughput'
+  echo
+  echo '```text'
+  cargo bench --bench fig7_throughput 2>/dev/null
+  echo '```'
+  echo
+  echo '## loadgen (daemon path)'
+  echo
+  echo '```text'
+  ./target/release/codag serve --port "$PORT" --datasets MC0 --size 8M --cache 64M 2>/dev/null &
+  SERVE_PID=$!
+  trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+  for i in $(seq 1 50); do
+    if ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+        --connections 1 --requests 1 >/dev/null 2>&1; then
+      break
+    fi
+    sleep 0.2
+  done
+  # Warm pass populates the chunk cache, measured pass is the baseline.
+  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+    --connections 4 --requests 64 >/dev/null
+  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+    --connections 4 --requests 256
+  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --shutdown >/dev/null
+  wait "$SERVE_PID" 2>/dev/null || true
+  trap - EXIT
+  echo '```'
+} > "$OUT"
+
+echo "baselines written to $OUT" >&2
