@@ -8,7 +8,18 @@ use codag::coordinator::decompress_parallel;
 use codag::data::Dataset;
 use std::time::Instant;
 
-const SIZE: usize = 8 * 1024 * 1024;
+/// Bytes generated per dataset: a light 2 MiB by default (matching the
+/// other benches' bench-scale-vs-paper-scale split), `CODAG_SCALE_MB`
+/// overrides — the paper-scale rows in `scripts/record_baselines.sh`
+/// run with `CODAG_SCALE_MB=8` pinned explicitly.
+fn size() -> usize {
+    std::env::var("CODAG_SCALE_MB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(2)
+        * 1024
+        * 1024
+}
 
 fn best_of<F: FnMut() -> usize>(n: usize, mut f: F) -> (f64, usize) {
     let mut best = f64::MAX;
@@ -26,8 +37,9 @@ fn main() {
         "{:8} {:8} {:>12} {:>14} {:>14} {:>12}",
         "dataset", "codec", "ratio", "dec-1thr GB/s", "dec-8thr GB/s", "comp MB/s"
     );
+    let size = size();
     for d in Dataset::all() {
-        let data = d.generate(SIZE);
+        let data = d.generate(size);
         for kind in CodecKind::all() {
             let (t_comp, _) = best_of(1, || {
                 compress_dataset(&data, d, kind).map(|c| c.compressed_len()).unwrap_or(0)

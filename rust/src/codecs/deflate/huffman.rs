@@ -163,25 +163,29 @@ impl HuffmanDecoder {
         Ok(HuffmanDecoder { fast, count, symbols, first_code, first_sym, max_len })
     }
 
-    /// Decode one symbol from `r`.
+    /// Decode one symbol from a pre-peeked LSB-first bit window (the
+    /// low bits of `word` are the next bits of the stream). Returns
+    /// `(symbol, code length in bits)` without consuming anything —
+    /// the caller retires the bits (plus any extra bits it read from
+    /// the same window) with one `LsbBitReader::consume_bits` call.
+    ///
+    /// `word` must hold at least [`MAX_BITS`] valid bits or be
+    /// zero-padded past the end of the stream; a symbol "decoded" from
+    /// padding is rejected when the caller's `consume_bits` overruns
+    /// the real stream, so truncation detection is unchanged.
     #[inline]
-    pub fn decode(&self, r: &mut LsbBitReader<'_>) -> Result<u16> {
-        let peek = r.peek_bits(FAST_BITS) as usize;
-        let e = self.fast[peek];
+    pub fn decode_word(&self, word: u64) -> Result<(u16, u32)> {
+        let e = self.fast[(word & ((1u64 << FAST_BITS) - 1)) as usize];
         if e != u16::MAX {
-            let len = (e & 0xF) as u32;
-            r.skip_bits(len)?;
-            return Ok(e >> 4);
+            return Ok((e >> 4, (e & 0xF) as u32));
         }
-        // Slow path: walk lengths FAST_BITS+1..=max_len using the
-        // canonical count/offset structure (code built MSB-first).
+        // Slow path (codes longer than FAST_BITS): walk lengths
+        // FAST_BITS..=max_len using the canonical count/offset
+        // structure, rebuilding the code MSB-first from the window.
         let mut code: u32 = 0;
-        // Reconstruct the first FAST_BITS bits MSB-first.
-        let prefix = r.peek_bits(FAST_BITS) as u32;
         for i in 0..FAST_BITS {
-            code = (code << 1) | ((prefix >> i) & 1);
+            code = (code << 1) | ((word >> i) & 1) as u32;
         }
-        r.skip_bits(FAST_BITS)?;
         let mut len = FAST_BITS;
         loop {
             // Codes of length `len`: range [first_code, first_code+count).
@@ -189,14 +193,23 @@ impl HuffmanDecoder {
             let cnt = self.count[len as usize] as u32;
             if code >= fc && code < fc + cnt {
                 let idx = self.first_sym[len as usize] + (code - fc);
-                return Ok(self.symbols[idx as usize]);
+                return Ok((self.symbols[idx as usize], len));
             }
             if len >= self.max_len {
                 return Err(corrupt("huffman: invalid code"));
             }
-            code = (code << 1) | r.fetch_bits(1)? as u32;
+            code = (code << 1) | ((word >> len) & 1) as u32;
             len += 1;
         }
+    }
+
+    /// Decode one symbol from `r` (peek+consume convenience wrapper
+    /// around [`decode_word`](Self::decode_word)).
+    #[inline]
+    pub fn decode(&self, r: &mut LsbBitReader<'_>) -> Result<u16> {
+        let (sym, len) = self.decode_word(r.peek_bits(57))?;
+        r.consume_bits(len)?;
+        Ok(sym)
     }
 }
 
@@ -335,6 +348,28 @@ mod tests {
         lens.extend(vec![8u8; 8]);
         let seq: Vec<u16> = (0..288).step_by(7).collect();
         encode_decode(&lens, &seq);
+    }
+
+    #[test]
+    fn max_depth_15_bit_codes_decode_via_word_path() {
+        // Complete canonical set with two 15-bit codes (Kraft sum
+        // exactly 1): lengths 1..=15 plus a second 15. Every symbol
+        // past length FAST_BITS exercises the slow path of
+        // decode_word, which the fast-path rewrite must not regress.
+        let mut lens: Vec<u8> = (1..=15).collect();
+        lens.push(15);
+        let seq: Vec<u16> = (0..16).chain((9..16).rev()).collect();
+        encode_decode(&lens, &seq);
+        // decode_word reports the exact code length for a deep symbol
+        // (codes are stored bit-reversed, i.e. stream order, so the
+        // code value is itself the low bits of the peek window).
+        let dec = HuffmanDecoder::from_lengths(&lens).unwrap();
+        let codes = CanonicalCodes::from_lengths(&lens).unwrap();
+        for sym in [9usize, 14, 15] {
+            let (got, len) = dec.decode_word(codes.codes[sym] as u64).unwrap();
+            assert_eq!((got, len), (sym as u16, codes.lens[sym] as u32));
+            assert!(len > FAST_BITS, "symbol {sym} must exercise the slow path");
+        }
     }
 
     #[test]

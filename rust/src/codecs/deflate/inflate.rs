@@ -1,7 +1,15 @@
 //! DEFLATE decoder (RFC 1951), written against the CODAG stream
-//! abstractions: literals go through `write_byte`, back-references
-//! through `memcpy(offset, len)` — exactly the Table II primitives the
-//! paper lists for dictionary-based encodings.
+//! abstractions: literals go through `write_slice` (consecutive
+//! literals are batched), back-references through `memcpy(offset, len)`
+//! — the Table II primitives the paper lists for dictionary-based
+//! encodings, in their batched slice-oriented form (DESIGN.md §7).
+//!
+//! The symbol loop is built around a single wide `peek_bits(57)`: one
+//! refill yields the literal/length Huffman code, its extra bits, the
+//! distance code, and the distance extra bits (≤ 48 bits worst case),
+//! which are then retired with at most two `consume_bits` calls — the
+//! dense decode loop CODAG §IV argues the throughput comes from,
+//! instead of a bit-fetch round trip per field.
 
 use crate::codecs::deflate::huffman::HuffmanDecoder;
 use crate::decomp::{OutputStream, SymbolKind};
@@ -136,12 +144,22 @@ fn inflate_stored<O: OutputStream>(r: &mut LsbBitReader<'_>, out: &mut O) -> Res
         return Err(corrupt("deflate: stored block LEN/NLEN mismatch"));
     }
     out.on_symbol(SymbolKind::DeflateHeader, 10, (r.consumed_bits() + 7) / 8);
-    for _ in 0..len {
-        let b = r.fetch_bits(8)? as u8;
-        out.write_byte(b)?;
-    }
+    // A stored block is one contiguous byte range of the input: borrow
+    // it and emit a single batched slice write.
+    let bytes = r.read_aligned_slice(len)?;
+    out.write_slice(bytes)?;
     out.on_symbol(SymbolKind::DeflateLiteral, 3 * len as u32, (r.consumed_bits() + 7) / 8);
     Ok(())
+}
+
+/// Literal batch size: consecutive literals are staged here and flushed
+/// through one `write_slice` per batch (or at a match / end of block).
+const LIT_BATCH: usize = 512;
+
+/// Low-`n` bit mask of a peeked word (n ≤ 13 here, so no shift overflow).
+#[inline]
+fn extra_mask(n: u32) -> u64 {
+    (1u64 << n) - 1
 }
 
 fn inflate_block<O: OutputStream>(
@@ -150,30 +168,56 @@ fn inflate_block<O: OutputStream>(
     dist: &HuffmanDecoder,
     out: &mut O,
 ) -> Result<()> {
+    let mut lits = [0u8; LIT_BATCH];
+    let mut n_lits = 0usize;
     loop {
-        let sym = lit.decode(r)?;
-        match sym {
-            0..=255 => {
-                out.on_symbol(SymbolKind::DeflateLiteral, 60, (r.consumed_bits() + 7) / 8);
-                out.write_byte(sym as u8)?;
+        // One wide peek covers the worst-case symbol: lit/len code (15)
+        // + length extra (5) + distance code (15) + distance extra (13)
+        // = 48 bits ≤ 57. Bits past the end of the stream peek as zero;
+        // consume_bits rejects any symbol that would overrun them.
+        let word = r.peek_bits(57);
+        let (sym, used) = lit.decode_word(word)?;
+        if sym < 256 {
+            r.consume_bits(used)?;
+            out.on_symbol(SymbolKind::DeflateLiteral, 60, (r.consumed_bits() + 7) / 8);
+            lits[n_lits] = sym as u8;
+            n_lits += 1;
+            if n_lits == LIT_BATCH {
+                out.write_slice(&lits)?;
+                n_lits = 0;
             }
-            256 => return Ok(()),
-            257..=285 => {
-                let li = (sym - 257) as usize;
-                let len =
-                    LENGTH_BASE[li] as u64 + r.fetch_bits(LENGTH_EXTRA[li] as u32)?;
-                let dsym = dist.decode(r)? as usize;
-                if dsym >= 30 {
-                    return Err(corrupt("deflate: bad distance symbol"));
-                }
-                let d = DIST_BASE[dsym] as u64 + r.fetch_bits(DIST_EXTRA[dsym] as u32)?;
-                // Two Huffman walks + extra-bit fetches + copy setup:
-                // the arithmetic-heavy decode the paper profiles (§III).
-                out.on_symbol(SymbolKind::DeflateMatch, 160, (r.consumed_bits() + 7) / 8);
-                out.memcpy(d, len)?;
-            }
-            _ => return Err(corrupt("deflate: bad literal/length symbol")),
+            continue;
         }
+        // Any non-literal ends the current literal run.
+        if n_lits > 0 {
+            out.write_slice(&lits[..n_lits])?;
+            n_lits = 0;
+        }
+        if sym == 256 {
+            r.consume_bits(used)?;
+            return Ok(());
+        }
+        if sym > 285 {
+            return Err(corrupt("deflate: bad literal/length symbol"));
+        }
+        let li = (sym - 257) as usize;
+        let lextra = LENGTH_EXTRA[li] as u32;
+        let len = LENGTH_BASE[li] as u64 + ((word >> used) & extra_mask(lextra));
+        r.consume_bits(used + lextra)?;
+        // The distance code and its extra bits are still in the same
+        // peeked word, shifted past the length half.
+        let dword = word >> (used + lextra);
+        let (dsym, dused) = dist.decode_word(dword)?;
+        if dsym >= 30 {
+            return Err(corrupt("deflate: bad distance symbol"));
+        }
+        let dextra = DIST_EXTRA[dsym as usize] as u32;
+        let d = DIST_BASE[dsym as usize] as u64 + ((dword >> dused) & extra_mask(dextra));
+        r.consume_bits(dused + dextra)?;
+        // Two Huffman walks + extra-bit decodes + copy setup: the
+        // arithmetic-heavy decode the paper profiles (§III).
+        out.on_symbol(SymbolKind::DeflateMatch, 160, (r.consumed_bits() + 7) / 8);
+        out.memcpy(d, len)?;
     }
 }
 
@@ -217,6 +261,36 @@ mod tests {
         let raw = [0b0000_0101u8]; // fixed block, then nothing
         let mut sink = ByteSink::new();
         assert!(inflate(&raw, &mut sink).is_err());
+    }
+
+    #[test]
+    fn literal_batches_flush_across_boundary() {
+        // More than LIT_BATCH consecutive literals in one fixed-Huffman
+        // block: the staged batch must flush mid-run and the tail must
+        // flush at end-of-block, byte-identical to the payload.
+        use crate::codecs::deflate::huffman::CanonicalCodes;
+        use crate::format::bitio::LsbBitWriter;
+        let payload: Vec<u8> = (0..LIT_BATCH + 37).map(|i| (i % 251) as u8).collect();
+        let mut lens = vec![8u8; 144];
+        lens.extend(std::iter::repeat(9u8).take(112));
+        lens.extend(std::iter::repeat(7u8).take(24));
+        lens.extend(std::iter::repeat(8u8).take(8));
+        let codes = CanonicalCodes::from_lengths(&lens).unwrap();
+        let mut w = LsbBitWriter::new();
+        w.put_bits(1, 1); // BFINAL
+        w.put_bits(1, 2); // BTYPE = fixed
+        for &b in &payload {
+            w.put_bits(codes.codes[b as usize] as u64, codes.lens[b as usize] as u32);
+        }
+        w.put_bits(codes.codes[256] as u64, codes.lens[256] as u32);
+        let raw = w.finish();
+        let mut sink = ByteSink::new();
+        inflate(&raw, &mut sink).unwrap();
+        assert_eq!(sink.out, payload);
+        // And the batched sink agrees with the scalar oracle.
+        let mut scalar = crate::decomp::ScalarSink::new();
+        inflate(&raw, &mut scalar).unwrap();
+        assert_eq!(scalar.out, payload);
     }
 
     // Full encoder<->decoder roundtrips live in deflate::tests.

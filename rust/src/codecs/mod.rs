@@ -173,6 +173,9 @@ pub fn avg_symbol_len(kind: CodecKind, comp: &[u8]) -> Result<f64> {
         fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
             self.inner.memcpy(offset, len)
         }
+        fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+            self.inner.write_slice(bytes)
+        }
         fn bytes_written(&self) -> u64 {
             self.inner.bytes_written()
         }

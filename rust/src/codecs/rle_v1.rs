@@ -162,14 +162,19 @@ pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Resu
             // literals collectively).
             out.on_symbol(SymbolKind::RleLiteralGroup, 280, input.bytes_consumed());
             if width == 1 {
-                // Byte literals need no per-element decode: the group is
-                // a straight copy the lanes perform in parallel (~2 ops
-                // of bookkeeping per element amortized over word copies).
-                for _ in 0..len {
-                    let b = input.fetch_byte()?;
-                    out.on_symbol(SymbolKind::RleLiteral, 4, input.bytes_consumed());
-                    out.write_byte(b)?;
+                // Byte literals need no per-element decode: the group
+                // is one contiguous input range, borrowed and emitted
+                // as a single batched slice write (~2 ops of
+                // bookkeeping per element amortized over word copies).
+                // Symbol accounting stays per element — same costs and
+                // input positions as the scalar loop — so Table V
+                // symbol statistics and trace decode ops are unchanged.
+                let base = input.bytes_consumed();
+                let bytes = input.fetch_bytes(len as usize)?;
+                for i in 0..len {
+                    out.on_symbol(SymbolKind::RleLiteral, 4, base + i + 1);
                 }
+                out.write_slice(bytes)?;
             } else {
                 for _ in 0..len {
                     let v = input.fetch_svarint()?;
@@ -213,6 +218,21 @@ mod tests {
         let clen = roundtrip(&data, 1);
         // 1 control byte per 128 literals -> slight expansion over raw.
         assert!(clen > 1000 && clen < 1020);
+    }
+
+    #[test]
+    fn byte_literal_groups_match_scalar_sink() {
+        // The batched slice path for width-1 literal groups must stay
+        // byte-identical to the per-byte oracle.
+        use crate::decomp::{ByteSink, ScalarSink};
+        let data: Vec<u8> = (0..1000).map(|i| (i * 7 % 5) as u8).collect();
+        let comp = compress(&data, 1).unwrap();
+        let mut batched = ByteSink::new();
+        crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut batched).unwrap();
+        let mut scalar = ScalarSink::new();
+        crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut scalar).unwrap();
+        assert_eq!(batched.out, data);
+        assert_eq!(batched.out, scalar.out);
     }
 
     #[test]

@@ -374,6 +374,74 @@ fn emit_patched(vals: &[i64], plan: &PatchPlan, out: &mut Vec<u8>) {
 // Decoder
 // ---------------------------------------------------------------------
 
+/// Stack buffer batching width-1 unit values into one `write_slice`
+/// per group (≤ [`MAX_GROUP`] values). Wider elements keep per-element
+/// `write_run` so the run-record path ([`crate::decomp::RunRecorder`])
+/// sees the element width.
+struct ByteBatch {
+    buf: [u8; MAX_GROUP],
+    n: usize,
+}
+
+impl ByteBatch {
+    fn new() -> Self {
+        ByteBatch { buf: [0; MAX_GROUP], n: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, v: u64) {
+        self.buf[self.n] = v as u8;
+        self.n += 1;
+    }
+
+    fn flush<O: OutputStream>(&mut self, out: &mut O) -> Result<()> {
+        if self.n > 0 {
+            out.write_slice(&self.buf[..self.n])?;
+            self.n = 0;
+        }
+        Ok(())
+    }
+}
+
+/// Per-group element emitter shared by the DIRECT/PATCHED/DELTA
+/// decoders: width-1 groups batch bytes into one `write_slice`, wider
+/// widths emit per-element unit `write_run`s — one loop body per
+/// decoder instead of two.
+enum Emitter {
+    Bytes(ByteBatch),
+    Runs { width: u8 },
+}
+
+impl Emitter {
+    fn new(width: u8) -> Self {
+        if width == 1 {
+            Emitter::Bytes(ByteBatch::new())
+        } else {
+            Emitter::Runs { width }
+        }
+    }
+
+    /// Emit one decoded element value.
+    #[inline]
+    fn emit<O: OutputStream>(&mut self, out: &mut O, v: u64) -> Result<()> {
+        match self {
+            Emitter::Bytes(b) => {
+                b.push(v);
+                Ok(())
+            }
+            Emitter::Runs { width } => out.write_run(v, 1, 0, *width),
+        }
+    }
+
+    /// Flush any staged batch at end of group.
+    fn finish<O: OutputStream>(&mut self, out: &mut O) -> Result<()> {
+        match self {
+            Emitter::Bytes(b) => b.flush(out),
+            Emitter::Runs { .. } => Ok(()),
+        }
+    }
+}
+
 /// Decode an RLE v2 chunk into `out`.
 pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     let (width, n_elems) = read_rle_header(input)?;
@@ -438,13 +506,17 @@ fn decode_direct<O: OutputStream>(
     }
     let w = decode_width(wc);
     out.on_symbol(SymbolKind::RleV2Header, 400, input.bytes_consumed());
+    // Per-element symbol accounting (costs, input positions) is
+    // unchanged by batching; only the write calls coalesce.
+    let mut emit = Emitter::new(width);
     let mut r = input.msb_reader();
     for _ in 0..len {
         let zz = r.read_bits(w)?;
         let v = unzigzag(zz) as u64 & mask;
         out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
-        out.write_run(v, 1, 0, width)?;
+        emit.emit(out, v)?;
     }
+    emit.finish(out)?;
     input.commit_msb(&r);
     Ok(len as u64)
 }
@@ -507,11 +579,13 @@ fn decode_patched<O: OutputStream>(
         }
         input.commit_msb(&r);
     }
+    let mut emit = Emitter::new(width);
     for &rv in &reduced {
         let v = (base as i128 + rv as i128) as u64 & mask;
         out.on_symbol(SymbolKind::RleLiteral, 110 + w / 2, input.bytes_consumed());
-        out.write_run(v, 1, 0, width)?;
+        emit.emit(out, v)?;
     }
+    emit.finish(out)?;
     Ok(len as u64)
 }
 
@@ -540,19 +614,21 @@ fn decode_delta<O: OutputStream>(
         return Err(corrupt("rle_v2: packed delta group shorter than 2"));
     }
     out.on_symbol(SymbolKind::RleV2Header, 450, input.bytes_consumed());
-    out.write_run(base as u64 & mask, 1, 0, width)?;
+    let mut emit = Emitter::new(width);
+    emit.emit(out, base as u64 & mask)?;
     let mut prev = base.wrapping_add(d1);
     out.on_symbol(SymbolKind::RleLiteral, 60, input.bytes_consumed());
-    out.write_run(prev as u64 & mask, 1, 0, width)?;
+    emit.emit(out, prev as u64 & mask)?;
     let sign: i64 = if d1 < 0 { -1 } else { 1 };
     let mut r = input.msb_reader();
     for _ in 2..len {
         let d = r.read_bits(w)? as i64;
         prev = prev.wrapping_add(sign * d);
         out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
-        out.write_run(prev as u64 & mask, 1, 0, width)?;
+        emit.emit(out, prev as u64 & mask)?;
     }
     input.commit_msb(&r);
+    emit.finish(out)?;
     Ok(len as u64)
 }
 
@@ -700,6 +776,32 @@ mod tests {
     fn empty_chunk() {
         let comp = compress(&[], 8).unwrap();
         assert_eq!(decompress_chunk(CodecKind::RleV2, &comp, 0).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn width1_groups_match_scalar_sink() {
+        // Width-1 batched slice emission (direct / patched / packed
+        // delta) must stay byte-identical to the per-byte oracle.
+        use crate::decomp::{ByteSink, ScalarSink};
+        let mut data: Vec<u8> = Vec::new();
+        for i in 0..600u32 {
+            data.push((i * 7 % 11) as u8); // literal-ish -> DIRECT
+        }
+        data.extend(std::iter::repeat(3u8).take(100)); // long run -> DELTA w=0
+        let mut v = 0u8;
+        let mut x = 17u64;
+        for _ in 0..400 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            v = v.wrapping_add((x >> 61) as u8); // monotonic -> packed DELTA
+            data.push(v);
+        }
+        let comp = compress(&data, 1).unwrap();
+        let mut batched = ByteSink::new();
+        crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut batched).unwrap();
+        let mut scalar = ScalarSink::new();
+        crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut scalar).unwrap();
+        assert_eq!(batched.out, data);
+        assert_eq!(batched.out, scalar.out);
     }
 
     #[test]

@@ -54,7 +54,18 @@ pub struct Service<'a> {
     expander: Option<&'a Expander<'a>>,
     config: ServiceConfig,
     cache: Option<&'a ChunkCache>,
+    /// Pool of reusable decode scratch buffers. Each worker checks one
+    /// out for the duration of a batch and decodes every chunk into it
+    /// (`Container::decompress_chunk_into`), so a long-lived service —
+    /// the daemon's per-shard `Service` — allocates no per-request
+    /// output `Vec` in steady state: buffers grow to the hot chunk size
+    /// once and are recycled across batches.
+    scratch: Mutex<Vec<Vec<u8>>>,
 }
+
+/// Scratch buffers retained in the pool (beyond this, returned buffers
+/// are dropped — a bound on idle memory, not on concurrency).
+const SCRATCH_POOL_CAP: usize = 32;
 
 impl<'a> Service<'a> {
     /// New service over `registry`.
@@ -63,7 +74,21 @@ impl<'a> Service<'a> {
         expander: Option<&'a Expander<'a>>,
         config: ServiceConfig,
     ) -> Self {
-        Service { registry, expander, config, cache: None }
+        Service { registry, expander, config, cache: None, scratch: Mutex::new(Vec::new()) }
+    }
+
+    /// Check a scratch buffer out of the pool (empty, capacity warm).
+    fn take_scratch(&self) -> Vec<u8> {
+        self.scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a scratch buffer to the pool for the next batch.
+    fn put_scratch(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        let mut pool = self.scratch.lock().unwrap();
+        if pool.len() < SCRATCH_POOL_CAP {
+            pool.push(buf);
+        }
     }
 
     /// Attach a decompressed-chunk cache: full chunks are looked up
@@ -108,20 +133,27 @@ impl<'a> Service<'a> {
         let items = &items;
         let slots_ref = &slots;
         if items.len() <= 1 || self.config.workers.max(1) == 1 {
+            let mut scratch = self.take_scratch();
             for (i, item) in items.iter().enumerate() {
-                *slots_ref[i].lock().unwrap() = Some(self.decode_item(&item.dataset, item.work));
+                *slots_ref[i].lock().unwrap() =
+                    Some(self.decode_item(&item.dataset, item.work, &mut scratch));
             }
+            self.put_scratch(scratch);
         } else {
             std::thread::scope(|s| {
                 for _ in 0..self.config.workers.max(1).min(items.len()) {
-                    s.spawn(|| loop {
-                        let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                        if i >= items.len() {
-                            break;
+                    s.spawn(|| {
+                        let mut scratch = self.take_scratch();
+                        loop {
+                            let i = cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            let item = &items[i];
+                            let out = self.decode_item(&item.dataset, item.work, &mut scratch);
+                            *slots_ref[i].lock().unwrap() = Some(out);
                         }
-                        let item = &items[i];
-                        let out = self.decode_item(&item.dataset, item.work);
-                        *slots_ref[i].lock().unwrap() = Some(out);
+                        self.put_scratch(scratch);
                     });
                 }
             });
@@ -162,7 +194,11 @@ impl<'a> Service<'a> {
         (responses, stats)
     }
 
-    fn decode_item(&self, dataset: &str, w: ChunkWork) -> Result<Vec<u8>> {
+    /// Decode one chunk work item, reusing `scratch` as the decode
+    /// output buffer. Chunks the cache retains are copied out of the
+    /// scratch into an `Arc<[u8]>` exactly once; everything else is
+    /// sliced straight from the scratch into the response.
+    fn decode_item(&self, dataset: &str, w: ChunkWork, scratch: &mut Vec<u8>) -> Result<Vec<u8>> {
         if let Some(cache) = self.cache {
             if let Some(full) = cache.get(dataset, w.chunk) {
                 return slice_chunk(&full, w);
@@ -170,29 +206,33 @@ impl<'a> Service<'a> {
         }
         let c = self.registry.get(dataset)?;
         let use_hybrid = self.config.hybrid && c.codec.is_rle() && self.expander.is_some();
-        let full = if use_hybrid {
-            crate::coordinator::engine::decode_chunk_hybrid(
+        if use_hybrid {
+            // The expand path produces its own buffer (PJRT output).
+            let full = crate::coordinator::engine::decode_chunk_hybrid(
                 c.codec,
                 c.chunk_bytes(w.chunk)?,
                 self.expander.expect("checked"),
-            )?
-        } else {
-            c.decompress_chunk(w.chunk)?
-        };
-        // Only pay the Arc-wrap (and the full-chunk copy it forces for
-        // whole-chunk reads) when the cache will actually retain it.
+            )?;
+            if let Some(cache) = self.cache {
+                if cache.accepts(full.len()) {
+                    let full: Arc<[u8]> = Arc::from(full);
+                    cache.insert(dataset, w.chunk, full.clone());
+                    return slice_chunk(&full, w);
+                }
+            }
+            return if w.lo == 0 && w.hi == full.len() { Ok(full) } else { slice_chunk(&full, w) };
+        }
+        c.decompress_chunk_into(w.chunk, scratch)?;
+        // Only pay the Arc build (one copy out of the scratch) when the
+        // cache will actually retain the chunk.
         if let Some(cache) = self.cache {
-            if cache.accepts(full.len()) {
-                let full = Arc::new(full);
+            if cache.accepts(scratch.len()) {
+                let full: Arc<[u8]> = Arc::from(&scratch[..]);
                 cache.insert(dataset, w.chunk, full.clone());
                 return slice_chunk(&full, w);
             }
         }
-        if w.lo == 0 && w.hi == full.len() {
-            Ok(full)
-        } else {
-            slice_chunk(&full, w)
-        }
+        slice_chunk(scratch, w)
     }
 }
 
@@ -288,6 +328,23 @@ mod tests {
         let (resp, _) = svc.serve_batch(&[req]);
         assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
         assert!(cache.hits() > before_hits, "second identical read must hit the cache");
+    }
+
+    #[test]
+    fn scratch_pool_reuses_buffers_across_batches() {
+        let (data, reg) = registry();
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 1, hybrid: false });
+        let req = Request { id: 1, dataset: "tpc".into(), offset: 10, len: 100 };
+        for _ in 0..3 {
+            let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+            assert_eq!(resp[0].data.as_ref().unwrap(), &data[10..110]);
+        }
+        // One inline worker -> exactly one pooled buffer, kept warm
+        // (grown capacity) and reused each batch instead of a fresh
+        // per-request output Vec.
+        let pool = svc.scratch.lock().unwrap();
+        assert_eq!(pool.len(), 1);
+        assert!(pool[0].capacity() >= 32 * 1024, "scratch capacity should stay warm");
     }
 
     #[test]

@@ -10,6 +10,11 @@
 //! the GPU simulator schedules. [`Variant`] covers the paper's two
 //! ablations: adding back a prefetch warp (§V-F) and single-thread
 //! decoding (§V-E).
+//!
+//! Decoders emit batched `write_slice` calls on the hot path (DESIGN.md
+//! §7); the tracing sink accounts a batch as one unit whose byte total
+//! equals the per-byte path's, so coalesced `Write` events still cover
+//! every output byte exactly once and traces stay deterministic.
 
 use crate::codecs::{decode_into, CodecKind};
 use crate::decomp::output_stream::{ByteSink, OutputStream, TracingSink};
@@ -154,6 +159,32 @@ mod tests {
         let t2 = trace_chunk_counting(CodecKind::RleV2, &comp, Variant::Codag).unwrap();
         assert_eq!(t1.uncomp_bytes, t2.uncomp_bytes);
         assert_eq!(t1.total_decode_ops(), t2.total_decode_ops());
+    }
+
+    #[test]
+    fn batched_writes_preserve_trace_byte_totals() {
+        // Deflate batches literal runs into slice writes; the trace's
+        // coalesced Write events must still cover every output byte
+        // exactly once, for both materializing and counting sinks.
+        let mut x = 5u64;
+        let data: Vec<u8> = (0..4096)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                (x >> 56) as u8
+            })
+            .collect();
+        let comp = crate::codecs::deflate::compress(&data).unwrap();
+        let (out, trace) = trace_chunk(CodecKind::Deflate, &comp, data.len(), Variant::Codag).unwrap();
+        assert_eq!(out, data);
+        let written: u64 = trace
+            .events
+            .iter()
+            .map(|e| if let UnitEvent::Write { bytes, .. } = e { *bytes as u64 } else { 0 })
+            .sum();
+        assert_eq!(written, out.len() as u64);
+        let counted = trace_chunk_counting(CodecKind::Deflate, &comp, Variant::Codag).unwrap();
+        assert_eq!(counted.uncomp_bytes, trace.uncomp_bytes);
+        assert_eq!(counted.events, trace.events, "trace must not depend on the sink");
     }
 
     #[test]

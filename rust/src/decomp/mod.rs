@@ -33,5 +33,8 @@ pub mod output_stream;
 pub mod trace;
 
 pub use input_stream::InputStream;
-pub use output_stream::{ByteSink, CountingSink, OutputStream, RunRecord, RunRecorder, SymbolKind, TracingSink};
+pub use output_stream::{
+    ByteSink, CountingSink, OutputStream, RunRecord, RunRecorder, ScalarSink, SymbolKind,
+    TracingSink,
+};
 pub use trace::{BarrierScope, UnitEvent, UnitTrace};

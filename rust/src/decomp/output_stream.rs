@@ -17,6 +17,16 @@
 //! literal), `write_run(init, len, delta)` (RLE/delta expansion — delta 0
 //! is a plain run), and `memcpy(offset, len)` (dictionary copy, offset
 //! counted back from the current end of output, as in DEFLATE).
+//!
+//! On top of the scalar primitives sits the **batched** op `write_slice`
+//! (default-implemented in terms of `write_byte`): decoders batch
+//! consecutive literals into one slice call so materializing sinks take
+//! one `extend_from_slice` instead of a per-byte push, and `ByteSink`'s
+//! `memcpy` resolves overlapping windows with chunked
+//! `extend_from_within` copies that double the resolved region per
+//! iteration (DESIGN.md §7). [`ScalarSink`] keeps the original
+//! byte-at-a-time semantics as the differential-test oracle
+//! (`rust/tests/prop_batched.rs`).
 
 use crate::decomp::trace::{BarrierScope, UnitEvent};
 use crate::{corrupt, Result};
@@ -83,6 +93,20 @@ pub trait OutputStream {
     /// of the output (Table II `memcpy`; `len > offset` wraps the window,
     /// the special case of Algorithm 2).
     fn memcpy(&mut self, offset: u64, len: u64) -> Result<()>;
+
+    /// Batched literal write: semantically identical to calling
+    /// [`write_byte`](OutputStream::write_byte) once per byte of
+    /// `bytes`, in order. Decoders use this to flush runs of
+    /// consecutive literals (DEFLATE literal bursts, stored blocks, RLE
+    /// byte literal groups) in one call; sinks override it with a bulk
+    /// implementation. The default is the scalar loop, so existing
+    /// `OutputStream` implementors stay correct unchanged.
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        for &b in bytes {
+            self.write_byte(b)?;
+        }
+        Ok(())
+    }
 
     /// Bytes written so far.
     fn bytes_written(&self) -> u64;
@@ -185,16 +209,98 @@ impl OutputStream for ByteSink {
                 self.out.len()
             )));
         }
+        // Overlapping copy semantics: bytes written by this memcpy are
+        // themselves part of the source window (`len > offset` repeats
+        // the window periodically). Resolve with chunked
+        // `extend_from_within` copies from a fixed source start: each
+        // pass copies the whole resolved region, so the resolvable
+        // prefix doubles per iteration instead of advancing one byte at
+        // a time (the scalar loop `ScalarSink` keeps as the oracle).
         let start = self.out.len() - off;
         self.out.reserve(n);
-        // Overlapping copy semantics: bytes written by this memcpy are
-        // themselves part of the source window (offset < len wraps).
+        let mut remaining = n;
+        while remaining > 0 {
+            let take = remaining.min(self.out.len() - start);
+            self.out.extend_from_within(start..start + take);
+            remaining -= take;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        self.out.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.out.len() as u64
+    }
+}
+
+/// Byte-at-a-time reference sink: the pre-batching [`ByteSink`]
+/// semantics kept verbatim as a differential-test oracle. `write_slice`
+/// loops `write_byte` and `memcpy` copies one byte per iteration, so
+/// any divergence between this sink and the vectorized [`ByteSink`] on
+/// the same decode is a bug in the batched paths
+/// (`rust/tests/prop_batched.rs` runs the comparison over the golden
+/// corruption registry).
+#[derive(Debug, Default, Clone)]
+pub struct ScalarSink {
+    /// The decompressed output.
+    pub out: Vec<u8>,
+}
+
+impl ScalarSink {
+    /// New empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Consume the sink, returning the bytes.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.out
+    }
+}
+
+impl OutputStream for ScalarSink {
+    #[inline]
+    fn write_byte(&mut self, b: u8) -> Result<()> {
+        self.out.push(b);
+        Ok(())
+    }
+
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()> {
+        // Per-element scalar expansion (no per-width monomorphic loops).
+        let w = width as usize;
+        let mut v = init;
+        for _ in 0..len {
+            self.out.extend_from_slice(&v.to_le_bytes()[..w]);
+            v = v.wrapping_add(delta as u64);
+        }
+        Ok(())
+    }
+
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
+        let off = offset as usize;
+        let n = len as usize;
+        if off == 0 || off > self.out.len() {
+            return Err(corrupt(format!(
+                "memcpy offset {off} out of window (output len {})",
+                self.out.len()
+            )));
+        }
+        let start = self.out.len() - off;
         for i in 0..n {
             let b = self.out[start + i];
             self.out.push(b);
         }
         Ok(())
     }
+
+    // No write_slice override: the trait default (write_byte loop) *is*
+    // the scalar semantics under test.
 
     #[inline]
     fn bytes_written(&self) -> u64 {
@@ -235,6 +341,12 @@ impl OutputStream for CountingSink {
             return Err(corrupt("memcpy offset out of window"));
         }
         self.len += len;
+        Ok(())
+    }
+
+    #[inline]
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        self.len += bytes.len() as u64;
         Ok(())
     }
 
@@ -313,6 +425,17 @@ impl OutputStream for RunRecorder {
 
     fn memcpy(&mut self, _offset: u64, _len: u64) -> Result<()> {
         Err(corrupt("RunRecorder does not support memcpy (dictionary codecs)"))
+    }
+
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        // Must stay record-identical to the per-byte path: each byte is
+        // a width-1 unit run, subject to the same adjacent-merge rule,
+        // so the PJRT expand input does not depend on whether a decoder
+        // batched its literals.
+        for &b in bytes {
+            self.write_run(b as u64, 1, 0, 1)?;
+        }
+        Ok(())
     }
 
     #[inline]
@@ -468,6 +591,16 @@ impl<S: OutputStream> OutputStream for TracingSink<S> {
         Ok(())
     }
 
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        // One batched accounting call per slice: byte totals (and
+        // therefore the coalesced Write events `add_output` emits) are
+        // identical to the per-byte path — a batch is an accounting
+        // unit, not extra traffic.
+        self.inner.write_slice(bytes)?;
+        self.add_output(bytes.len() as u64);
+        Ok(())
+    }
+
     #[inline]
     fn bytes_written(&self) -> u64 {
         self.inner.bytes_written()
@@ -536,6 +669,71 @@ mod tests {
         // offset 3, len 7 -> "abcabca" appended (wrapping window).
         s.memcpy(3, 7).unwrap();
         assert_eq!(&s.out, b"abcabcabca");
+    }
+
+    #[test]
+    fn byte_sink_memcpy_matches_scalar_oracle() {
+        // Sweep (offset, len) shapes across the vectorized chunked copy
+        // and the byte-at-a-time oracle, including the doubling cases
+        // (len >> offset) and exact window edges.
+        let seed: Vec<u8> = (0u16..97).map(|i| (i * 31 % 251) as u8).collect();
+        for off in [1u64, 2, 3, 7, 31, 96, 97] {
+            for len in [1u64, 2, 6, 7, 8, 63, 64, 65, 500] {
+                let mut v = ByteSink::new();
+                let mut s = ScalarSink::new();
+                v.write_slice(&seed).unwrap();
+                s.write_slice(&seed).unwrap();
+                v.memcpy(off, len).unwrap();
+                s.memcpy(off, len).unwrap();
+                assert_eq!(v.out, s.out, "off={off} len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_slice_matches_per_byte_everywhere() {
+        let bytes: Vec<u8> = (0u16..300).map(|i| (i % 256) as u8).collect();
+        // ByteSink bulk == ScalarSink default loop.
+        let mut b = ByteSink::new();
+        let mut s = ScalarSink::new();
+        b.write_slice(&bytes).unwrap();
+        s.write_slice(&bytes).unwrap();
+        assert_eq!(b.out, s.out);
+        // CountingSink counts the batch.
+        let mut c = CountingSink::new();
+        c.write_slice(&bytes).unwrap();
+        assert_eq!(c.bytes_written(), bytes.len() as u64);
+        // RunRecorder: slice path and per-byte path record identically.
+        let data = [7u8, 7, 7, 9, 9, 1];
+        let mut sliced = RunRecorder::new();
+        sliced.write_slice(&data).unwrap();
+        let mut scalar = RunRecorder::new();
+        for &x in &data {
+            scalar.write_byte(x).unwrap();
+        }
+        assert_eq!(sliced.runs, scalar.runs);
+        assert_eq!(sliced.bytes_written(), scalar.bytes_written());
+        assert_eq!(sliced.width, scalar.width);
+    }
+
+    #[test]
+    fn tracing_sink_slice_preserves_byte_totals() {
+        let payload = vec![42u8; 1000];
+        let mut batched = TracingSink::codag(CountingSink::new());
+        batched.write_slice(&payload).unwrap();
+        let (bs, bev) = batched.finish();
+        let mut scalar = TracingSink::codag(CountingSink::new());
+        for &b in &payload {
+            scalar.write_byte(b).unwrap();
+        }
+        let (ss, sev) = scalar.finish();
+        assert_eq!(bs.bytes_written(), ss.bytes_written());
+        let write_bytes = |evs: &[UnitEvent]| -> u64 {
+            evs.iter()
+                .map(|e| if let UnitEvent::Write { bytes, .. } = e { *bytes as u64 } else { 0 })
+                .sum()
+        };
+        assert_eq!(write_bytes(&bev), write_bytes(&sev));
     }
 
     #[test]

@@ -98,6 +98,31 @@ impl<'a> LsbBitReader<'a> {
         self.fetch_bits(n).map(|_| ())
     }
 
+    /// Consume `n` (≤ 57) bits previously observed through
+    /// [`peek_bits`](Self::peek_bits) without re-reading them — the
+    /// bulk half of the peek+consume decode loop: one wide peek yields
+    /// a Huffman symbol *and* its extra bits, then a single `consume`
+    /// retires them all. Errors (like `fetch_bits`) when fewer than `n`
+    /// real bits remain, so zero-padded peek bits can never be
+    /// silently consumed past the end of the stream.
+    #[inline]
+    pub fn consume_bits(&mut self, n: u32) -> Result<()> {
+        debug_assert!(n <= 57);
+        if self.nbits < n {
+            self.refill();
+            if self.nbits < n {
+                return Err(corrupt(format!(
+                    "bit stream exhausted: wanted {n} bits, {} available",
+                    self.nbits
+                )));
+            }
+        }
+        self.acc >>= n;
+        self.nbits -= n;
+        self.consumed_bits += n as u64;
+        Ok(())
+    }
+
     /// Discard bits up to the next byte boundary (DEFLATE stored blocks).
     #[inline]
     pub fn align_byte(&mut self) {
@@ -107,14 +132,36 @@ impl<'a> LsbBitReader<'a> {
         self.consumed_bits += drop as u64;
     }
 
+    /// Borrow `len` bytes directly from the underlying buffer after
+    /// aligning to a byte boundary — the zero-copy read DEFLATE stored
+    /// blocks feed straight into `OutputStream::write_slice`. The
+    /// accumulator is discarded and re-seeded past the slice, and
+    /// `consumed_bits`/`byte_pos` advance exactly as if the bytes had
+    /// been fetched 8 bits at a time.
+    pub fn read_aligned_slice(&mut self, len: usize) -> Result<&'a [u8]> {
+        self.align_byte();
+        debug_assert_eq!(self.nbits % 8, 0);
+        let cur = self.byte_pos();
+        let end = cur
+            .checked_add(len)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| {
+                corrupt(format!(
+                    "bit stream exhausted: wanted {len} aligned bytes, {} available",
+                    self.data.len() - cur
+                ))
+            })?;
+        let s = &self.data[cur..end];
+        self.pos = end;
+        self.acc = 0;
+        self.nbits = 0;
+        self.consumed_bits += len as u64 * 8;
+        Ok(s)
+    }
+
     /// Read `len` bytes after aligning to a byte boundary.
     pub fn read_aligned_bytes(&mut self, len: usize) -> Result<Vec<u8>> {
-        self.align_byte();
-        let mut out = Vec::with_capacity(len);
-        for _ in 0..len {
-            out.push(self.fetch_bits(8)? as u8);
-        }
-        Ok(out)
+        self.read_aligned_slice(len).map(|s| s.to_vec())
     }
 }
 
@@ -401,5 +448,81 @@ mod tests {
         r.fetch_bits(5).unwrap();
         r.fetch_bits(11).unwrap();
         assert_eq!(r.consumed_bits(), 16);
+    }
+
+    /// Tiny deterministic generator for the differential reader sweeps.
+    fn lcg(x: &mut u64) -> u64 {
+        *x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        *x >> 11
+    }
+
+    #[test]
+    fn bulk_peek_consume_pins_scalar_reader_accounting() {
+        // Satellite gate: under the bulk peek+consume API, the bits
+        // observed and the `consumed_bits`/`byte_pos` accounting must
+        // match a reader driven one `fetch_bits(1)` at a time, on
+        // random streams and random field widths.
+        for seed in 0..20u64 {
+            let mut x = 0x9E37_79B9 ^ seed;
+            let bytes: Vec<u8> = (0..257).map(|_| lcg(&mut x) as u8).collect();
+            let total_bits = bytes.len() as u64 * 8;
+            let mut bulk = LsbBitReader::new(&bytes);
+            let mut scalar = LsbBitReader::new(&bytes);
+            let mut consumed = 0u64;
+            loop {
+                let n = 1 + (lcg(&mut x) % 24) as u32;
+                if consumed + n as u64 > total_bits {
+                    // Past the end the bulk API must refuse too.
+                    assert!(bulk.consume_bits(n).is_err());
+                    break;
+                }
+                let word = bulk.peek_bits(57);
+                bulk.consume_bits(n).unwrap();
+                let mut want = 0u64;
+                for i in 0..n {
+                    want |= scalar.fetch_bits(1).unwrap() << i;
+                }
+                assert_eq!(word & ((1u64 << n) - 1), want, "seed {seed} n {n}");
+                consumed += n as u64;
+                assert_eq!(bulk.consumed_bits(), consumed, "seed {seed}");
+                assert_eq!(bulk.consumed_bits(), scalar.consumed_bits(), "seed {seed}");
+                assert_eq!(bulk.byte_pos(), scalar.byte_pos(), "seed {seed}");
+                assert_eq!(bulk.byte_pos(), (consumed / 8) as usize, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn consume_bits_errors_at_end_like_fetch() {
+        let bytes = [0xAAu8, 0x55];
+        let mut r = LsbBitReader::new(&bytes);
+        assert_eq!(r.peek_bits(57) & 0xFFFF, 0x55AA);
+        r.consume_bits(12).unwrap();
+        // 4 real bits left; zero-padded peek must not enable consuming 5.
+        assert!(r.consume_bits(5).is_err());
+        assert_eq!(r.consumed_bits(), 12, "failed consume must not advance");
+        r.consume_bits(4).unwrap();
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn read_aligned_slice_matches_bytes_and_accounting() {
+        let mut w = LsbBitWriter::new();
+        w.put_bits(0b1101, 4);
+        w.align_byte();
+        w.put_aligned_bytes(&[9, 8, 7, 6, 5]);
+        let bytes = w.finish();
+        let mut a = LsbBitReader::new(&bytes);
+        let mut b = LsbBitReader::new(&bytes);
+        a.fetch_bits(4).unwrap();
+        b.fetch_bits(4).unwrap();
+        let slice = a.read_aligned_slice(3).unwrap().to_vec();
+        let vec = b.read_aligned_bytes(3).unwrap();
+        assert_eq!(slice, vec);
+        assert_eq!(a.consumed_bits(), b.consumed_bits());
+        assert_eq!(a.byte_pos(), b.byte_pos());
+        // Remaining bytes still readable, and over-length reads error.
+        assert_eq!(a.read_aligned_slice(2).unwrap(), &[6, 5]);
+        assert!(a.read_aligned_slice(1).is_err());
     }
 }

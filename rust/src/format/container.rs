@@ -21,7 +21,7 @@
 //!
 //! The 128 KiB default matches the paper's evaluation (§V-B).
 
-use crate::codecs::{decompress_chunk, compress_chunk, CodecKind};
+use crate::codecs::{compress_chunk, CodecKind};
 use crate::{corrupt, invalid, Result};
 
 /// Container magic number ("C0DAG" v1).
@@ -115,9 +115,27 @@ impl Container {
 
     /// Decompress a single chunk.
     pub fn decompress_chunk(&self, i: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.decompress_chunk_into(i, &mut out)?;
+        Ok(out)
+    }
+
+    /// Decompress chunk `i` into a caller-owned buffer (cleared first),
+    /// reusing its capacity — the steady-state server path: workers
+    /// decode every request into one long-lived scratch buffer instead
+    /// of allocating a fresh `Vec` per chunk (DESIGN.md §7).
+    ///
+    /// On error the buffer contents are unspecified (cleared or
+    /// partially decoded) but the buffer itself remains reusable.
+    pub fn decompress_chunk_into(&self, i: usize, out: &mut Vec<u8>) -> Result<()> {
         let e = self.index[i];
         let bytes = self.chunk_bytes(i)?;
-        let out = decompress_chunk(self.codec, bytes, e.uncomp_len as usize)?;
+        out.clear();
+        out.reserve(e.uncomp_len as usize);
+        let mut sink = crate::decomp::ByteSink { out: std::mem::take(out) };
+        let decoded = crate::codecs::decode_into(self.codec, bytes, &mut sink);
+        *out = sink.into_bytes();
+        decoded?;
         if out.len() != e.uncomp_len as usize {
             return Err(corrupt(format!(
                 "chunk {i}: decompressed {} bytes, index says {}",
@@ -125,7 +143,7 @@ impl Container {
                 e.uncomp_len
             )));
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Decompress every chunk sequentially (correctness reference path;

@@ -2,8 +2,9 @@
 //!
 //! Keyed by `(dataset, chunk index)` with a byte-budget capacity split
 //! evenly across shards: ranged requests that repeatedly touch the same
-//! 128 KiB chunk skip re-inflation entirely. Values are `Arc<Vec<u8>>`
-//! so retaining a chunk never duplicates the decoded buffer (responses
+//! 128 KiB chunk skip re-inflation entirely. Values are `Arc<[u8]>`
+//! built once from the decoding worker's scratch buffer, so retaining
+//! a chunk never duplicates the decoded buffer afterwards (responses
 //! copy only the requested span out of the cached chunk). Recency is a
 //! per-shard logical clock; eviction
 //! removes the least-recently-touched entry until the shard is back
@@ -27,7 +28,7 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
 
 #[derive(Debug)]
 struct Entry {
-    data: Arc<Vec<u8>>,
+    data: Arc<[u8]>,
     stamp: u64,
 }
 
@@ -102,7 +103,7 @@ impl ChunkCache {
 
     /// Look up a decompressed chunk, refreshing its recency. Counts a
     /// hit or a miss.
-    pub fn get(&self, dataset: &str, chunk: usize) -> Option<Arc<Vec<u8>>> {
+    pub fn get(&self, dataset: &str, chunk: usize) -> Option<Arc<[u8]>> {
         let si = self.shard_for(dataset, chunk);
         let mut shard = self.shards[si].lock().unwrap();
         shard.clock += 1;
@@ -138,7 +139,7 @@ impl ChunkCache {
     /// Insert a decompressed chunk, evicting least-recently-used
     /// entries until the shard fits its budget. Chunks larger than one
     /// shard's budget (and empty chunks) are not cached.
-    pub fn insert(&self, dataset: &str, chunk: usize, data: Arc<Vec<u8>>) {
+    pub fn insert(&self, dataset: &str, chunk: usize, data: Arc<[u8]>) {
         let len = data.len() as u64;
         if len == 0 || len > self.shard_budget {
             return;
@@ -199,8 +200,8 @@ impl ChunkCache {
 mod tests {
     use super::*;
 
-    fn chunk(fill: u8, len: usize) -> Arc<Vec<u8>> {
-        Arc::new(vec![fill; len])
+    fn chunk(fill: u8, len: usize) -> Arc<[u8]> {
+        Arc::from(vec![fill; len])
     }
 
     #[test]
@@ -210,7 +211,7 @@ mod tests {
         assert_eq!((c.hits(), c.misses()), (0, 1));
         c.insert("a", 0, chunk(7, 100));
         let got = c.get("a", 0).unwrap();
-        assert_eq!(got.as_slice(), &[7u8; 100][..]);
+        assert_eq!(&got[..], &[7u8; 100][..]);
         assert_eq!((c.hits(), c.misses()), (1, 1));
         // Same chunk index under a different dataset is distinct.
         assert!(c.get("b", 0).is_none());

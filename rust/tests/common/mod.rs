@@ -83,5 +83,19 @@ pub fn vectors() -> Vec<GoldenVector> {
             &[(192, 0x40), (194, 0x80), (353, 0x20), (765, 0x40), (783, 0x10)]
         ),
         golden!("df_multiblock", Deflate, 1, false, &[(37, 0xF0), (99, 0xFE)]),
+        // Max-depth dynamic table: a complete literal code with two
+        // 15-bit codes (slow-path gate for HuffmanDecoder, codes >
+        // FAST_BITS). Dead bits: bytes 21–22 hold the 4-bit CLC code of
+        // the single zero-length distance entry — single-bit flips turn
+        // it into another code-length symbol whose one-entry distance
+        // table the decoder legally accepts (the stream has no matches,
+        // so the payload is unchanged); byte 222 is final padding.
+        golden!(
+            "df_dynamic_maxdepth",
+            Deflate,
+            1,
+            false,
+            &[(21, 0xE0), (22, 0x01), (222, 0xFE)]
+        ),
     ]
 }

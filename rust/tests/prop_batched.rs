@@ -1,0 +1,191 @@
+//! Differential property suite for the batched decode pipeline
+//! (ISSUE 3 satellite): every codec is run over random and adversarial
+//! inputs twice — once into the vectorized [`ByteSink`] (slice writes,
+//! chunked overlapping memcpy) and once into the byte-at-a-time
+//! [`ScalarSink`] oracle — and the two must agree exactly:
+//!
+//! * byte-identical output on every valid stream;
+//! * identical error classification (`Error` variant) on every
+//!   truncation point and every single-bit flip of the golden
+//!   corruption registry (`tests/common/mod.rs`);
+//! * [`TracingSink`] byte totals identical over both sinks.
+
+mod common;
+
+use codag::codecs::{compress_chunk_with, decode_into, CodecKind, VALID_WIDTHS};
+use codag::data::Rng;
+use codag::decomp::{ByteSink, OutputStream, ScalarSink, TracingSink};
+use codag::Error;
+
+/// Coarse error class used for the equivalence assertion (variant
+/// identity, not message identity — messages may differ in detail).
+fn class(e: &Error) -> &'static str {
+    match e {
+        Error::Corrupt(_) => "corrupt",
+        Error::Invalid(_) => "invalid",
+        Error::Io(_) => "io",
+        Error::Runtime(_) => "runtime",
+    }
+}
+
+/// Decode `comp` into both sinks; assert agreement and return the
+/// batched outcome for further checks.
+fn differential(kind: CodecKind, comp: &[u8], ctx: &str) -> Result<Vec<u8>, String> {
+    let mut batched = ByteSink::new();
+    let br = decode_into(kind, comp, &mut batched);
+    let mut scalar = ScalarSink::new();
+    let sr = decode_into(kind, comp, &mut scalar);
+    match (&br, &sr) {
+        (Ok(()), Ok(())) => {
+            assert_eq!(batched.out, scalar.out, "{ctx}: batched/scalar output diverged");
+        }
+        (Err(b), Err(s)) => {
+            assert_eq!(class(b), class(s), "{ctx}: error class diverged ({b} vs {s})");
+        }
+        (Ok(()), Err(s)) => panic!("{ctx}: batched decoded what the scalar oracle rejects ({s})"),
+        (Err(b), Ok(())) => panic!("{ctx}: scalar decoded what the batched sink rejects ({b})"),
+    }
+    match br {
+        Ok(()) => Ok(batched.out),
+        Err(e) => Err(class(&e).to_string()),
+    }
+}
+
+/// Structured-random generator shared with prop_codecs (shapes that hit
+/// literals, runs, motifs, and extreme values).
+fn gen_data(rng: &mut Rng, max_len: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    let target = 1 + rng.below(max_len as u64) as usize;
+    while out.len() < target {
+        match rng.below(6) {
+            0 => {
+                let b = rng.below(256) as u8;
+                let n = 1 + rng.below(700) as usize;
+                out.extend(std::iter::repeat(b).take(n));
+            }
+            1 => {
+                let mut v = rng.next_u64() as u32;
+                let d = rng.below(9) as u32;
+                for _ in 0..rng.below(300) {
+                    out.extend_from_slice(&v.to_le_bytes());
+                    v = v.wrapping_add(d);
+                }
+            }
+            2 => {
+                for _ in 0..rng.below(400) {
+                    out.push(rng.next_u64() as u8);
+                }
+            }
+            3 => {
+                let alpha = b"ACGTN";
+                for _ in 0..rng.below(600) {
+                    out.push(alpha[rng.below(5) as usize]);
+                }
+            }
+            4 => {
+                let m: Vec<u8> =
+                    (0..8 + rng.below(40)).map(|_| rng.next_u64() as u8).collect();
+                for _ in 0..rng.below(30) {
+                    out.extend_from_slice(&m);
+                }
+            }
+            _ => {
+                for _ in 0..rng.below(60) {
+                    let v = match rng.below(4) {
+                        0 => u64::MAX,
+                        1 => 0,
+                        2 => i64::MIN as u64,
+                        _ => rng.next_u64(),
+                    };
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+    }
+    out.truncate(target);
+    out
+}
+
+#[test]
+fn prop_batched_matches_scalar_on_random_streams() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(7_7000 + seed);
+        let mut data = gen_data(&mut rng, 30_000);
+        for kind in CodecKind::all() {
+            for &w in &VALID_WIDTHS {
+                if kind != CodecKind::Deflate {
+                    let n = data.len() / w as usize * w as usize;
+                    data.truncate(n);
+                    if data.is_empty() {
+                        continue;
+                    }
+                }
+                let comp = compress_chunk_with(kind, &data, w).unwrap();
+                let out = differential(kind, &comp, &format!("seed {seed} {kind:?} w{w}"))
+                    .expect("valid stream must decode");
+                assert_eq!(out, data, "seed {seed} {kind:?} w{w}: roundtrip");
+                if kind == CodecKind::Deflate {
+                    break; // width-independent
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batched_matches_scalar_on_every_golden_truncation() {
+    for c in &common::vectors() {
+        for cut in 0..c.comp.len() {
+            let ctx = format!("{} cut {cut}", c.name);
+            let r = differential(c.kind, &c.comp[..cut], &ctx);
+            assert!(r.is_err(), "{ctx}: every proper prefix must be rejected");
+        }
+    }
+}
+
+#[test]
+fn prop_batched_matches_scalar_on_every_golden_bitflip() {
+    for c in &common::vectors() {
+        for idx in 0..c.comp.len() {
+            for bit in 0..8u8 {
+                let mut bad = c.comp.to_vec();
+                bad[idx] ^= 1 << bit;
+                // The assertion of interest lives inside differential():
+                // batched and scalar must agree on Ok/Err, the error
+                // class, and (when Ok) the decoded bytes — flip by flip.
+                let _ = differential(c.kind, &bad, &format!("{} byte {idx} bit {bit}", c.name));
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_tracing_totals_identical_over_batched_and_scalar_sinks() {
+    for c in &common::vectors() {
+        let mut tb = TracingSink::codag(ByteSink::new());
+        decode_into(c.kind, c.comp, &mut tb).unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        let (bs, bev) = tb.finish();
+        let mut ts = TracingSink::codag(ScalarSink::new());
+        decode_into(c.kind, c.comp, &mut ts).unwrap_or_else(|e| panic!("{}: {e}", c.name));
+        let (ss, sev) = ts.finish();
+        assert_eq!(bs.bytes_written(), ss.bytes_written(), "{}", c.name);
+        let totals = |evs: &[codag::decomp::UnitEvent]| -> (u64, u64, u64) {
+            use codag::decomp::UnitEvent;
+            let mut w = 0u64;
+            let mut r = 0u64;
+            let mut ops = 0u64;
+            for e in evs {
+                match e {
+                    UnitEvent::Write { bytes, .. } => w += *bytes as u64,
+                    UnitEvent::Read { bytes } => r += *bytes as u64,
+                    UnitEvent::Decode { ops: o } => ops += *o as u64,
+                    _ => {}
+                }
+            }
+            (w, r, ops)
+        };
+        assert_eq!(totals(&bev), totals(&sev), "{}: trace byte/op totals diverged", c.name);
+        // The sink choice must not change the event stream at all.
+        assert_eq!(bev, sev, "{}: trace events diverged across sinks", c.name);
+    }
+}

@@ -31,10 +31,22 @@ cargo build --release --benches >&2
   cargo bench --bench codec_hotpath 2>/dev/null
   echo '```'
   echo
+  echo '## codec_hotpath (paper scale, CODAG_SCALE_MB=8)'
+  echo
+  echo '```text'
+  CODAG_SCALE_MB=8 cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
   echo '## fig7_throughput'
   echo
   echo '```text'
   cargo bench --bench fig7_throughput 2>/dev/null
+  echo '```'
+  echo
+  echo '## fig7_throughput (paper scale, CODAG_SCALE_MB=8)'
+  echo
+  echo '```text'
+  CODAG_SCALE_MB=8 cargo bench --bench fig7_throughput 2>/dev/null
   echo '```'
   echo
   echo '## loadgen (daemon path)'
