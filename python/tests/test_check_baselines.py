@@ -1,0 +1,190 @@
+"""Unit tests for the CI baselines gate (scripts/check_baselines.py)
+and the capture parser (scripts/bench_to_json.py) — including the
+committed negative test: a doctored 2x slowdown MUST fail the gate.
+
+stdlib-only; the scripts are loaded by path (scripts/ is not a
+package).
+"""
+
+import importlib.util
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _load(name):
+    path = REPO / "scripts" / f"{name}.py"
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check = _load("check_baselines")
+tojson = _load("bench_to_json")
+
+
+def _ref():
+    return {
+        "metrics": {
+            "codec_hotpath/default/MC0/rlev2/dec1_gbps": {
+                "value": 12.0, "unit": "GB/s", "kind": "throughput"},
+            "fig7/default/MC0/rlev1/codag_gbps": {
+                "value": 40.0, "unit": "GB/s", "kind": "model-throughput"},
+            "loadgen/gbps": {"value": 1.0, "unit": "GB/s", "kind": "throughput"},
+            "loadgen/p99_us": {"value": 900, "unit": "us", "kind": "latency"},
+        }
+    }
+
+
+def _cur(scale=1.0):
+    ref = _ref()
+    return {
+        "metrics": {
+            name: {**m, "value": m["value"] * scale}
+            for name, m in ref["metrics"].items()
+        }
+    }
+
+
+def test_equal_run_passes():
+    failures, _, _ = check.compare(_ref(), _cur(1.0))
+    assert failures == []
+
+
+def test_small_regression_within_tolerance_passes():
+    failures, _, _ = check.compare(_ref(), _cur(0.75))
+    assert failures == []
+
+
+def test_doctored_2x_slowdown_fails():
+    # The acceptance-criteria negative test: halved throughput (a 2x
+    # slowdown) must fail the gate on every gated metric.
+    failures, _, _ = check.compare(_ref(), _cur(0.5))
+    assert len(failures) == 3, failures
+    assert any("dec1_gbps" in f for f in failures)
+    assert any("codag_gbps" in f for f in failures)
+
+
+def test_just_past_threshold_fails():
+    failures, _, _ = check.compare(_ref(), _cur(0.69))
+    assert len(failures) == 3, failures
+
+
+def test_missing_metric_is_coverage_loss_failure():
+    cur = _cur(1.0)
+    del cur["metrics"]["loadgen/gbps"]
+    failures, _, _ = check.compare(_ref(), cur)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_latency_only_warns():
+    cur = _cur(1.0)
+    cur["metrics"]["loadgen/p99_us"]["value"] = 5000
+    failures, warnings, _ = check.compare(_ref(), cur)
+    assert failures == []
+    assert any("p99_us" in w for w in warnings)
+
+
+def test_unarmed_reference_passes_with_note():
+    failures, _, notes = check.compare({"metrics": {}}, _cur(1.0))
+    assert failures == []
+    assert notes
+
+
+def test_committed_reference_file_loads():
+    with open(REPO / "scripts" / "baselines_reference.json", encoding="utf-8") as f:
+        ref = json.load(f)
+    assert ref["schema"] == 1
+    assert isinstance(ref["metrics"], dict)
+
+
+def test_self_test_passes():
+    assert check.self_test()
+
+
+SAMPLE_CAPTURE = """# Baseline capture
+
+- date: 2026-07-28T00:00:00Z
+- host: Linux test x86_64
+- commit: abc1234
+
+## codec_hotpath
+
+```text
+dataset  codec        ratio  dec-1thr GB/s  dec-8thr GB/s    comp MB/s
+MC0      rlev1       0.0518         11.914         38.102        310.5
+MC0      deflate     0.0217          1.011          5.704         55.2
+```
+
+## fig7_throughput
+
+```text
+Fig 7 — Decompression throughput on A100 (GB/s)
+Codec     Dataset  CODAG      RAPIDS     Speedup
+rlev1     MC0      41.20      3.06       13.46x
+rlev1     geomean  30.00      2.50       12.00x
+```
+
+## loadgen (daemon path)
+
+```text
+requests: sent=1024 ok=1024 busy=0 expired=0 failed=0 conn-failures=0
+latency:  p50=181us p90=420us p99=913us mean=230us
+payload:  134217728 bytes in 1.10s (0.122 GB/s)
+```
+
+## loadgen batching ablation (§V-F)
+
+```text
+| pipeline depth | sent | ok | busy | expired | p50 (us) | p99 (us) | GB/s |
+|---|---|---|---|---|---|---|---|
+| 1 | 256 | 256 | 0 | 0 | 210 | 800 | 0.110 |
+| 8 | 256 | 256 | 0 | 0 | 450 | 1600 | 0.310 |
+| 32 | 256 | 250 | 6 | 0 | 900 | 3100 | 0.360 |
+```
+"""
+
+
+def test_bench_to_json_parses_all_sections():
+    doc = tojson.parse_capture(SAMPLE_CAPTURE)
+    m = doc["metrics"]
+    assert doc["commit"] == "abc1234"
+    assert m["codec_hotpath/default/MC0/rlev1/dec1_gbps"]["value"] == 11.914
+    assert m["codec_hotpath/default/MC0/rlev1/dec1_gbps"]["kind"] == "throughput"
+    assert m["codec_hotpath/default/MC0/deflate/dec8_gbps"]["value"] == 5.704
+    assert m["fig7/default/MC0/rlev1/codag_gbps"]["value"] == 41.20
+    assert m["fig7/default/MC0/rlev1/codag_gbps"]["kind"] == "model-throughput"
+    assert m["fig7/default/geomean/rlev1/codag_gbps"]["value"] == 30.00
+    assert m["loadgen/p99_us"] == {"value": 913, "unit": "us", "kind": "latency"}
+    assert m["loadgen/gbps"]["value"] == 0.122
+    assert m["loadgen/ok"]["value"] == 1024
+    assert m["ablate_batch/depth8/gbps"]["value"] == 0.310
+    assert m["ablate_batch/depth32/p99_us"]["value"] == 3100
+
+
+def test_gate_passes_on_parsed_capture_roundtrip():
+    # A capture diffed against a reference armed from itself passes.
+    doc = tojson.parse_capture(SAMPLE_CAPTURE)
+    failures, _, _ = check.compare(doc, doc)
+    assert failures == []
+    # And a 2x-slowdown doctored copy fails (end-to-end negative test).
+    slow = json.loads(json.dumps(doc))
+    for m in slow["metrics"].values():
+        if m["kind"] in ("throughput", "model-throughput"):
+            m["value"] = m["value"] / 2.0
+    failures, _, _ = check.compare(doc, slow)
+    assert failures
+
+
+def test_cli_self_test_exits_zero():
+    res = subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "check_baselines.py"), "--self-test"],
+        capture_output=True,
+        text=True,
+        check=False,
+    )
+    assert res.returncode == 0, res.stdout + res.stderr

@@ -18,6 +18,6 @@ pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher, ExpandTask};
 pub use engine::{decompress_hybrid, decompress_parallel, decompress_static_partition};
-pub use router::{plan, ChunkWork, LeastLoaded, Registry, Request};
+pub use router::{plan, plan_dims, ChunkWork, DatasetSource, LeastLoaded, Registry, Request};
 pub use service::{Response, Service, ServiceConfig};
 pub use stats::LatencyStats;

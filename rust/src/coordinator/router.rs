@@ -1,11 +1,15 @@
-//! Request routing: datasets → containers → chunk work items.
+//! Request routing: datasets → chunk sources → chunk work items.
 //!
-//! The registry holds loaded containers (one per dataset/file); the
-//! router translates byte-range requests into chunk lists and picks
-//! workers by least outstanding work — the same shape as a serving
-//! router in front of replicated engines.
+//! The registry holds loaded dataset sources — in-memory containers or
+//! file-backed [`FileDataset`]s whose compressed chunks stay on disk
+//! until fetched (DESIGN.md §8); the router translates byte-range
+//! requests into chunk lists and picks workers by least outstanding
+//! work — the same shape as a serving router in front of replicated
+//! engines.
 
-use crate::format::container::Container;
+use crate::codecs::CodecKind;
+use crate::format::container::{ChunkEntry, Container};
+use crate::server::store::FileDataset;
 use crate::{invalid, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,10 +38,89 @@ pub struct ChunkWork {
     pub hi: usize,
 }
 
-/// Registry of loaded containers.
+/// One serveable dataset: an in-memory container (the synthetic /
+/// bench path) or a file-backed container whose compressed chunks are
+/// fetched lazily from disk (`codag serve --data-dir`, DESIGN.md §8).
+/// Both expose the same header + index view, so planning and the
+/// decode path are source-agnostic.
+#[derive(Debug)]
+pub enum DatasetSource {
+    /// Fully resident container (payload in memory).
+    Memory(Container),
+    /// On-disk container; only header + index are resident.
+    File(FileDataset),
+}
+
+impl DatasetSource {
+    /// Codec every chunk was compressed with.
+    pub fn codec(&self) -> CodecKind {
+        match self {
+            DatasetSource::Memory(c) => c.codec,
+            DatasetSource::File(f) => f.codec(),
+        }
+    }
+
+    /// Nominal uncompressed chunk size.
+    pub fn chunk_size(&self) -> usize {
+        match self {
+            DatasetSource::Memory(c) => c.chunk_size,
+            DatasetSource::File(f) => f.chunk_size(),
+        }
+    }
+
+    /// Total uncompressed length.
+    pub fn total_uncompressed(&self) -> u64 {
+        match self {
+            DatasetSource::Memory(c) => c.total_uncompressed,
+            DatasetSource::File(f) => f.total_uncompressed(),
+        }
+    }
+
+    /// Per-chunk index.
+    pub fn index(&self) -> &[ChunkEntry] {
+        match self {
+            DatasetSource::Memory(c) => &c.index,
+            DatasetSource::File(f) => f.index(),
+        }
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.index().len()
+    }
+
+    /// Translate a byte-range request into per-chunk work items.
+    pub fn plan(&self, offset: u64, len: u64) -> Result<Vec<ChunkWork>> {
+        plan_dims(self.total_uncompressed(), self.chunk_size(), self.index(), offset, len)
+    }
+
+    /// Borrow the compressed bytes of chunk `i`: zero-copy from a
+    /// resident payload, a lazy positioned read into `scratch` for a
+    /// file-backed source.
+    pub fn chunk_bytes<'a>(&'a self, i: usize, scratch: &'a mut Vec<u8>) -> Result<&'a [u8]> {
+        match self {
+            DatasetSource::Memory(c) => c.chunk_bytes(i),
+            DatasetSource::File(f) => {
+                f.read_chunk_into(i, scratch)?;
+                Ok(&scratch[..])
+            }
+        }
+    }
+
+    /// Decompress chunk `i` into a caller-owned buffer (cleared first,
+    /// capacity reused — the scratch-pool contract of DESIGN.md §7.3).
+    pub fn decompress_chunk_into(&self, i: usize, out: &mut Vec<u8>) -> Result<()> {
+        match self {
+            DatasetSource::Memory(c) => c.decompress_chunk_into(i, out),
+            DatasetSource::File(f) => f.decompress_chunk_into(i, out),
+        }
+    }
+}
+
+/// Registry of loaded dataset sources.
 #[derive(Debug, Default)]
 pub struct Registry {
-    containers: HashMap<String, Container>,
+    containers: HashMap<String, DatasetSource>,
 }
 
 impl Registry {
@@ -46,13 +129,20 @@ impl Registry {
         Self::default()
     }
 
-    /// Register a container under `name` (replaces any previous).
+    /// Register an in-memory container under `name` (replaces any
+    /// previous source of that name).
     pub fn insert(&mut self, name: impl Into<String>, c: Container) {
-        self.containers.insert(name.into(), c);
+        self.containers.insert(name.into(), DatasetSource::Memory(c));
     }
 
-    /// Look up a container.
-    pub fn get(&self, name: &str) -> Result<&Container> {
+    /// Register any dataset source (e.g. a file-backed container from
+    /// `codag serve --data-dir`) under `name`.
+    pub fn insert_source(&mut self, name: impl Into<String>, s: DatasetSource) {
+        self.containers.insert(name.into(), s);
+    }
+
+    /// Look up a dataset source.
+    pub fn get(&self, name: &str) -> Result<&DatasetSource> {
         self.containers
             .get(name)
             .ok_or_else(|| invalid(format!("dataset '{name}' not registered")))
@@ -66,25 +156,39 @@ impl Registry {
     }
 }
 
-/// Translate a request into per-chunk work items.
+/// Translate a request into per-chunk work items (in-memory container
+/// convenience; the daemon path goes through [`DatasetSource::plan`]).
 pub fn plan(container: &Container, offset: u64, len: u64) -> Result<Vec<ChunkWork>> {
-    let total = container.total_uncompressed;
+    plan_dims(container.total_uncompressed, container.chunk_size, &container.index, offset, len)
+}
+
+/// Source-agnostic request planning over a container's dimensions.
+pub fn plan_dims(
+    total: u64,
+    chunk_size: usize,
+    index: &[ChunkEntry],
+    offset: u64,
+    len: u64,
+) -> Result<Vec<ChunkWork>> {
     if offset > total {
         return Err(invalid(format!("offset {offset} beyond dataset end {total}")));
     }
     // Saturating: offset/len come straight off the wire in the daemon
     // path, and `offset + len` must not overflow on hostile input.
     let end = if len == 0 { total } else { offset.saturating_add(len).min(total) };
-    let cs = container.chunk_size as u64;
+    if index.is_empty() {
+        return Ok(Vec::new());
+    }
+    let cs = chunk_size as u64;
     if cs == 0 {
         return Err(invalid("container chunk_size is zero"));
     }
     let mut work = Vec::new();
     let first = (offset / cs) as usize;
     let last = if end == offset { first } else { ((end - 1) / cs) as usize };
-    for chunk in first..=last.min(container.n_chunks().saturating_sub(1)) {
+    for chunk in first..=last.min(index.len().saturating_sub(1)) {
         let chunk_lo = chunk as u64 * cs;
-        let chunk_len = container.index[chunk].uncomp_len;
+        let chunk_len = index[chunk].uncomp_len;
         let lo = offset.max(chunk_lo) - chunk_lo;
         let hi = (end.min(chunk_lo + chunk_len)) - chunk_lo;
         if hi > lo {

@@ -6,7 +6,7 @@
 //! the L3 "request path" the paper's framework sits behind in a data
 //! analytics pipeline — Python is never involved.
 
-use crate::coordinator::router::{plan, ChunkWork, Registry, Request};
+use crate::coordinator::router::{ChunkWork, Registry, Request};
 use crate::coordinator::stats::LatencyStats;
 use crate::runtime::Expander;
 use crate::server::cache::ChunkCache;
@@ -14,6 +14,13 @@ use crate::{Error, Result};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Marker message for a request whose deadline expired before (or
+/// while) its chunks were decoded. The daemon maps exactly this error
+/// onto the wire `Expired` status (DESIGN.md §6.3); it is a
+/// `Runtime` error so no decode-failure status can be confused with
+/// cancellation.
+pub const DEADLINE_EXPIRED: &str = "request deadline expired";
 
 /// A completed response.
 #[derive(Debug)]
@@ -102,6 +109,22 @@ impl<'a> Service<'a> {
     /// Serve a batch of requests; returns responses (same order) and
     /// aggregate latency stats.
     pub fn serve_batch(&self, requests: &[Request]) -> (Vec<Response>, LatencyStats) {
+        self.serve_batch_with(requests, |_| false)
+    }
+
+    /// [`Service::serve_batch`] with a cancellation probe: `expired(ri)`
+    /// is consulted before each of request `ri`'s chunk items is
+    /// decoded, so a request whose deadline lapses mid-batch stops
+    /// consuming decode work between items. A cancelled request's
+    /// response is `Err(Error::Runtime(`[`DEADLINE_EXPIRED`]`))`.
+    pub fn serve_batch_with<F>(
+        &self,
+        requests: &[Request],
+        expired: F,
+    ) -> (Vec<Response>, LatencyStats)
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
         // Plan every request into (request, chunk work) units.
         #[derive(Debug)]
         struct Item {
@@ -112,7 +135,7 @@ impl<'a> Service<'a> {
         let mut items = Vec::new();
         let mut plans: Vec<Result<usize>> = Vec::new(); // per-request chunk count
         for (ri, r) in requests.iter().enumerate() {
-            match self.registry.get(&r.dataset).and_then(|c| plan(c, r.offset, r.len)) {
+            match self.registry.get(&r.dataset).and_then(|c| c.plan(r.offset, r.len)) {
                 Ok(work) => {
                     plans.push(Ok(work.len()));
                     for w in work {
@@ -132,11 +155,16 @@ impl<'a> Service<'a> {
             items.iter().map(|_| Mutex::new(None)).collect();
         let items = &items;
         let slots_ref = &slots;
+        let expired = &expired;
         if items.len() <= 1 || self.config.workers.max(1) == 1 {
             let mut scratch = self.take_scratch();
             for (i, item) in items.iter().enumerate() {
-                *slots_ref[i].lock().unwrap() =
-                    Some(self.decode_item(&item.dataset, item.work, &mut scratch));
+                let out = if expired(item.req_idx) {
+                    Err(Error::Runtime(DEADLINE_EXPIRED.into()))
+                } else {
+                    self.decode_item(&item.dataset, item.work, &mut scratch)
+                };
+                *slots_ref[i].lock().unwrap() = Some(out);
             }
             self.put_scratch(scratch);
         } else {
@@ -150,7 +178,11 @@ impl<'a> Service<'a> {
                                 break;
                             }
                             let item = &items[i];
-                            let out = self.decode_item(&item.dataset, item.work, &mut scratch);
+                            let out = if expired(item.req_idx) {
+                                Err(Error::Runtime(DEADLINE_EXPIRED.into()))
+                            } else {
+                                self.decode_item(&item.dataset, item.work, &mut scratch)
+                            };
                             *slots_ref[i].lock().unwrap() = Some(out);
                         }
                         self.put_scratch(scratch);
@@ -205,34 +237,46 @@ impl<'a> Service<'a> {
             }
         }
         let c = self.registry.get(dataset)?;
-        let use_hybrid = self.config.hybrid && c.codec.is_rle() && self.expander.is_some();
+        let use_hybrid = self.config.hybrid && c.codec().is_rle() && self.expander.is_some();
         if use_hybrid {
-            // The expand path produces its own buffer (PJRT output).
+            // The expand path produces its own buffer (PJRT output);
+            // compressed bytes borrow from the resident payload or a
+            // lazy file read into a local scratch (DatasetSource).
+            // This path is cold by construction (the daemon runs
+            // hybrid: false), so the per-item scratch is acceptable.
+            let mut comp_scratch = Vec::new();
             let full = crate::coordinator::engine::decode_chunk_hybrid(
-                c.codec,
-                c.chunk_bytes(w.chunk)?,
+                c.codec(),
+                c.chunk_bytes(w.chunk, &mut comp_scratch)?,
                 self.expander.expect("checked"),
             )?;
-            if let Some(cache) = self.cache {
-                if cache.accepts(full.len()) {
-                    let full: Arc<[u8]> = Arc::from(full);
-                    cache.insert(dataset, w.chunk, full.clone());
-                    return slice_chunk(&full, w);
-                }
+            if let Some(r) = self.try_cache(dataset, w, &full) {
+                return r;
             }
             return if w.lo == 0 && w.hi == full.len() { Ok(full) } else { slice_chunk(&full, w) };
         }
         c.decompress_chunk_into(w.chunk, scratch)?;
-        // Only pay the Arc build (one copy out of the scratch) when the
-        // cache will actually retain the chunk.
-        if let Some(cache) = self.cache {
-            if cache.accepts(scratch.len()) {
-                let full: Arc<[u8]> = Arc::from(&scratch[..]);
-                cache.insert(dataset, w.chunk, full.clone());
-                return slice_chunk(&full, w);
-            }
+        if let Some(r) = self.try_cache(dataset, w, scratch) {
+            return r;
         }
         slice_chunk(scratch, w)
+    }
+
+    /// Shared caching tail of [`Service::decode_item`]: when the
+    /// admission policy retains this freshly decoded chunk (ghost-LRU:
+    /// second touch of a key admits — see `server::cache`), pay the
+    /// `Arc` build exactly once, insert, and slice the response span
+    /// from the shared copy. `None` means "not cached; slice from the
+    /// decode buffer instead" — keeping both decode paths on the one
+    /// documented admission protocol.
+    fn try_cache(&self, dataset: &str, w: ChunkWork, full: &[u8]) -> Option<Result<Vec<u8>>> {
+        let cache = self.cache?;
+        if !cache.admit(dataset, w.chunk, full.len()) {
+            return None;
+        }
+        let shared: Arc<[u8]> = Arc::from(full);
+        cache.insert(dataset, w.chunk, shared.clone());
+        Some(slice_chunk(&shared, w))
     }
 }
 
@@ -321,13 +365,36 @@ mod tests {
         let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false })
             .with_cache(&cache);
         let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
+        // Ghost-LRU admission: the first touch of a chunk key is
+        // declined (recorded in the ghost), the second touch admits,
+        // the third read is a cache hit.
         let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
         assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
         assert!(cache.misses() >= 1);
+        assert!(cache.admit_declines() >= 1, "first touch must be declined by admission");
+        let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+        assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
+        assert!(cache.ghost_hits() >= 1, "second touch must admit via the ghost");
         let before_hits = cache.hits();
         let (resp, _) = svc.serve_batch(&[req]);
         assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
-        assert!(cache.hits() > before_hits, "second identical read must hit the cache");
+        assert!(cache.hits() > before_hits, "third identical read must hit the cache");
+    }
+
+    #[test]
+    fn serve_batch_with_cancels_expired_requests() {
+        let (data, reg) = registry();
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false });
+        let reqs = vec![
+            Request { id: 1, dataset: "tpc".into(), offset: 0, len: 1000 },
+            Request { id: 2, dataset: "tpc".into(), offset: 0, len: 1000 },
+        ];
+        // Request 1 is cancelled before any of its items decode.
+        let (resp, stats) = svc.serve_batch_with(&reqs, |ri| ri == 1);
+        assert_eq!(resp[0].data.as_ref().unwrap(), &data[..1000]);
+        assert_eq!(resp[1].data, Err(Error::Runtime(DEADLINE_EXPIRED.into())));
+        // Cancelled requests are not recorded as served.
+        assert_eq!(stats.count(), 1);
     }
 
     #[test]

@@ -5,12 +5,15 @@
 //! ```text
 //! codag gen        --dataset MC0 --size 16M --out mc0.bin
 //! codag compress   --codec rlev2 --input mc0.bin --out mc0.codag [--chunk 131072] [--width 8]
+//! codag pack       --data-dir DIR (--dataset MC0 [--size 16M] | --input raw.bin --name NAME) [--codec rlev2] [--chunk 131072]
 //! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
 //! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
-//! codag serve      --port 7311 --datasets MC0,TPC [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M]
+//! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M]
 //! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (legacy stdin mode: "<id> <offset> <len>" per line)
-//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N]
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0]
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --ablate-batch   (§V-F batching sweep, pipeline depths 1/8/32)
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --probe-expired  (deadline-expiry smoke probe)
 //! codag loadgen    --addr 127.0.0.1:7311 --shutdown   (drain the daemon and exit)
 //! ```
 //!
@@ -20,7 +23,8 @@
 use codag::bench_harness::{all_workloads, report::Experiment, Scale};
 use codag::codecs::CodecKind;
 use codag::coordinator::{
-    decompress_hybrid, decompress_parallel, Registry, Request, Service, ServiceConfig,
+    decompress_hybrid, decompress_parallel, DatasetSource, Registry, Request, Service,
+    ServiceConfig,
 };
 use codag::data::Dataset;
 use codag::decomp::codag_engine::Variant;
@@ -79,13 +83,15 @@ fn parse_size(s: &str) -> Result<usize, String> {
 fn run(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
         return Err(
-            "usage: codag <gen|compress|decompress|simulate|report|serve|loadgen> [flags]".into(),
+            "usage: codag <gen|compress|pack|decompress|simulate|report|serve|loadgen> [flags]"
+                .into(),
         );
     };
     let f = flags(&args[1..]);
     match cmd.as_str() {
         "gen" => cmd_gen(&f),
         "compress" => cmd_compress(&f),
+        "pack" => cmd_pack(&f),
         "decompress" => cmd_decompress(&f),
         "simulate" => cmd_simulate(&f),
         "report" => cmd_report(args.get(1).map(|s| s.as_str()).unwrap_or("all"), &f),
@@ -131,6 +137,38 @@ fn cmd_compress(f: &HashMap<String, String>) -> Result<(), String> {
         container.compression_ratio(),
         started.elapsed().as_secs_f64(),
         container.n_chunks()
+    );
+    Ok(())
+}
+
+/// `codag pack`: write a container file into a `--data-dir` that
+/// `codag serve --data-dir` then serves file-backed (DESIGN.md §8).
+/// The payload comes from `--input` (raw bytes on disk, named with
+/// `--name`) or a generated paper dataset (`--dataset`, deterministic).
+fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
+    let dir = std::path::Path::new(get(f, "data-dir")?);
+    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
+        .ok_or("unknown codec")?;
+    let chunk = parse_size(f.get("chunk").map(String::as_str).unwrap_or("131072"))?;
+    let (name, data) = if let Some(input) = f.get("input") {
+        let name = get(f, "name")?.to_string();
+        (name, std::fs::read(input).map_err(|e| e.to_string())?)
+    } else {
+        let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
+        let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
+        (d.name().to_string(), d.generate(size))
+    };
+    let container = Container::compress(&data, codec, chunk).map_err(|e| e.to_string())?;
+    std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    let path = dir.join(format!("{name}.codag"));
+    std::fs::write(&path, container.to_bytes()).map_err(|e| e.to_string())?;
+    println!(
+        "packed {name}: {} -> {} bytes ({}, {} chunks) into {}",
+        data.len(),
+        container.compressed_len(),
+        codec.name(),
+        container.n_chunks(),
+        path.display()
     );
     Ok(())
 }
@@ -328,16 +366,36 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         .ok_or("unknown codec")?;
     let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
     let mut registry = Registry::new();
-    // Accept the legacy singular --dataset too so daemon mode doesn't
-    // silently serve the default when given the stdin-mode flag.
-    for name in f
-        .get("datasets")
-        .or_else(|| f.get("dataset"))
-        .map(String::as_str)
-        .unwrap_or("MC0")
-        .split(',')
-        .filter(|s| !s.is_empty())
-    {
+    // File-backed datasets: every <name>.codag in --data-dir is opened
+    // (header + index validated, payload stays on disk) and served
+    // under its file stem.
+    if let Some(dir) = f.get("data-dir") {
+        let loaded = codag::server::store::load_dir(dir).map_err(|e| e.to_string())?;
+        if loaded.is_empty() {
+            return Err(format!("no .codag container files in {dir}"));
+        }
+        for (name, fd) in loaded {
+            eprintln!(
+                "loaded {name} from {}: {} bytes uncompressed ({}, {} chunks, lazy payload)",
+                fd.path().display(),
+                fd.total_uncompressed(),
+                fd.codec().name(),
+                fd.n_chunks()
+            );
+            registry.insert_source(name, DatasetSource::File(fd));
+        }
+    }
+    // Synthetic datasets (generated + compressed at startup) stay
+    // available behind --datasets for smoke tests; the legacy singular
+    // --dataset spelling is accepted too. With neither flag and no
+    // --data-dir, default to MC0 (back-compat).
+    let synth = f.get("datasets").or_else(|| f.get("dataset")).map(String::as_str);
+    let synth = match (synth, f.contains_key("data-dir")) {
+        (Some(list), _) => list,
+        (None, false) => "MC0",
+        (None, true) => "",
+    };
+    for name in synth.split(',').filter(|s| !s.is_empty()) {
         let d = Dataset::parse(name).ok_or_else(|| format!("unknown dataset '{name}'"))?;
         let data = d.generate(size);
         let container =
@@ -353,7 +411,7 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         registry.insert(d.name(), container);
     }
     if registry.names().is_empty() {
-        return Err("no datasets loaded (check --datasets)".into());
+        return Err("no datasets loaded (check --datasets / --data-dir)".into());
     }
     let mut config = daemon::DaemonConfig::default();
     if let Some(s) = f.get("shards") {
@@ -384,7 +442,7 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         let max_chunk = registry
             .names()
             .iter()
-            .filter_map(|n| registry.get(n).ok().map(|c| c.chunk_size))
+            .filter_map(|n| registry.get(n).ok().map(|c| c.chunk_size()))
             .max()
             .unwrap_or(0);
         if config.cache_bytes / config.shards.max(1) < max_chunk {
@@ -410,15 +468,20 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         config.cache_bytes / (1024 * 1024)
     );
     eprintln!("stop with: codag loadgen --addr 127.0.0.1:{port} --shutdown");
+    let cache = handle.cache_arc();
     let stats = handle.wait().map_err(|e| e.to_string())?;
     eprintln!(
-        "served {} requests, {} bytes: p50={}us p99={}us cache hits={} misses={}",
+        "served {} requests, {} bytes: p50={}us p99={}us cache hits={} misses={} \
+         evictions={} admit-declines={} ghost-hits={}",
         stats.count(),
         stats.total_bytes(),
         stats.percentile_us(50.0),
         stats.percentile_us(99.0),
         stats.cache_hits(),
-        stats.cache_misses()
+        stats.cache_misses(),
+        cache.evictions(),
+        cache.admit_declines(),
+        cache.ghost_hits()
     );
     Ok(())
 }
@@ -441,6 +504,11 @@ fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
             None => d.clone(),
         };
     }
+    if f.contains_key("probe-expired") {
+        loadgen::probe_expired(&cfg.addr, &cfg.dataset).map_err(|e| e.to_string())?;
+        println!("deadline-expiry probe: got Expired as required");
+        return Ok(());
+    }
     if let Some(s) = f.get("connections") {
         cfg.connections = s.parse().map_err(|_| "bad --connections")?;
     }
@@ -452,6 +520,20 @@ fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
     }
     if let Some(s) = f.get("seed") {
         cfg.seed = s.parse().map_err(|_| "bad --seed")?;
+    }
+    if let Some(s) = f.get("pipeline") {
+        cfg.pipeline = s.parse().map_err(|_| "bad --pipeline")?;
+    }
+    if let Some(s) = f.get("deadline-ms") {
+        cfg.deadline_ms = s.parse().map_err(|_| "bad --deadline-ms")?;
+    }
+    if f.contains_key("ablate-batch") {
+        // §V-F through the daemon: sweep pipeline depths {1, 8, 32}
+        // (the shard workers' effective batch size) and emit the
+        // EXPERIMENTS.md §4 table.
+        let table = loadgen::run_ablation(&cfg).map_err(|e| e.to_string())?;
+        print!("{table}");
+        return Ok(());
     }
     let report = loadgen::run(&cfg).map_err(|e| e.to_string())?;
     print!("{report}");

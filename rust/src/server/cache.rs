@@ -1,4 +1,5 @@
-//! Sharded LRU cache of hot *decompressed* chunks.
+//! Sharded LRU cache of hot *decompressed* chunks, with ghost-LRU
+//! admission.
 //!
 //! Keyed by `(dataset, chunk index)` with a byte-budget capacity split
 //! evenly across shards: ranged requests that repeatedly touch the same
@@ -8,10 +9,21 @@
 //! copy only the requested span out of the cached chunk). Recency is a
 //! per-shard logical clock; eviction
 //! removes the least-recently-touched entry until the shard is back
-//! under budget. Hit/miss/eviction counters are atomics, surfaced
-//! through `LatencyStats` by the daemon (DESIGN.md §6.2).
+//! under budget.
+//!
+//! **Admission** ([`ChunkCache::admit`]) is second-chance on key
+//! history: each shard keeps a bounded FIFO *ghost* of key hashes it
+//! has recently seen (first touches and evicted residents). A key is
+//! admitted only when it is already in the ghost — so a one-pass cold
+//! scan records every key once and inserts nothing, leaving the
+//! resident hot set untouched, while anything re-requested (or
+//! recently evicted) is admitted on its second touch (DESIGN.md §6.2).
+//! `insert` itself stays unconditional: admission is the caller
+//! protocol (the decode path asks `admit` before paying the `Arc`
+//! copy). Hit/miss/eviction/ghost counters are atomics, surfaced
+//! through `LatencyStats` and the wire `Stat` payload by the daemon.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -26,6 +38,14 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// Ghost entries retained per shard. Sized for ~32× the resident chunk
+/// count at default budgets (64 MiB / 4 shards / 128 KiB chunks ≈ 128
+/// resident entries per shard), so second touches survive long cold
+/// scans between them; memory cost is ~32 bytes per entry (generation-
+/// tagged FIFO deque + membership map, deque hard-bounded at 2× the
+/// cap).
+const GHOST_CAP_PER_SHARD: usize = 4096;
+
 #[derive(Debug)]
 struct Entry {
     data: Arc<[u8]>,
@@ -39,9 +59,60 @@ struct Shard {
     per_dataset: HashMap<String, HashMap<usize, Entry>>,
     bytes: u64,
     clock: u64,
+    /// FIFO of `(key hash, generation)` ghost entries; oldest live
+    /// entries fall off past [`GHOST_CAP_PER_SHARD`]. Entries consumed
+    /// by [`Shard::ghost_take`] go stale in place (membership lives in
+    /// `ghost_members`) and are reclaimed when they reach the front —
+    /// both ghost operations are O(1) amortized, since they run under
+    /// the shard lock on the cache-miss decode path. The generation
+    /// tag makes stale detection exact: a popped entry only evicts the
+    /// key if the membership still carries the same generation, so a
+    /// key re-remembered after a take cannot lose its *live* entry to
+    /// its own stale leftover.
+    ghost: VecDeque<(u64, u64)>,
+    /// Live ghost membership: key → generation of its one live deque
+    /// entry (the deque may additionally hold stale entries, bounded
+    /// at 2× the cap by `ghost_remember`).
+    ghost_members: HashMap<u64, u64>,
+    /// Monotonic generation counter for ghost entries.
+    ghost_gen: u64,
 }
 
 impl Shard {
+    /// Record a key hash in the ghost (no-op if already present).
+    fn ghost_remember(&mut self, key: u64) {
+        if self.ghost_members.contains_key(&key) {
+            return;
+        }
+        self.ghost_gen += 1;
+        self.ghost_members.insert(key, self.ghost_gen);
+        self.ghost.push_back((key, self.ghost_gen));
+        // FIFO-evict remembered keys past the cap; stale entries hit
+        // on the way out are reclaimed for free (their generation no
+        // longer matches). The 2× deque bound compacts stale buildup
+        // from take/re-remember cycles even while the live set stays
+        // small.
+        while self.ghost_members.len() > GHOST_CAP_PER_SHARD
+            || self.ghost.len() > 2 * GHOST_CAP_PER_SHARD
+        {
+            match self.ghost.pop_front() {
+                Some((k, gen)) => {
+                    if self.ghost_members.get(&k) == Some(&gen) {
+                        self.ghost_members.remove(&k);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Remove `key` from the ghost, reporting whether it was present
+    /// (a second touch — the admission signal). O(1): only membership
+    /// is dropped; the deque entry goes stale and is reclaimed later.
+    fn ghost_take(&mut self, key: u64) -> bool {
+        self.ghost_members.remove(&key).is_some()
+    }
+
     fn evict_one(&mut self) -> u64 {
         // O(entries) scan; shards hold at most budget/chunk_size
         // entries (a few hundred at defaults), and eviction only runs
@@ -67,8 +138,17 @@ impl Shard {
                 self.per_dataset.remove(&ds);
             }
         }
+        // Second chance: an evicted resident goes straight into the
+        // ghost, so a re-request readmits it without a decline cycle.
+        self.ghost_remember(key_hash(&ds, ci));
         freed
     }
+}
+
+/// Stable hash of a `(dataset, chunk)` cache key (shard selection and
+/// ghost identity both use it).
+fn key_hash(dataset: &str, chunk: usize) -> u64 {
+    fnv1a(dataset.as_bytes()) ^ (chunk as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
 }
 
 /// Sharded byte-budgeted LRU of decompressed chunks.
@@ -79,6 +159,8 @@ pub struct ChunkCache {
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+    ghost_hits: AtomicU64,
+    admit_declines: AtomicU64,
 }
 
 impl ChunkCache {
@@ -93,12 +175,13 @@ impl ChunkCache {
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
+            ghost_hits: AtomicU64::new(0),
+            admit_declines: AtomicU64::new(0),
         }
     }
 
     fn shard_for(&self, dataset: &str, chunk: usize) -> usize {
-        let h = fnv1a(dataset.as_bytes()) ^ (chunk as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-        (h % self.shards.len() as u64) as usize
+        (key_hash(dataset, chunk) % self.shards.len() as u64) as usize
     }
 
     /// Look up a decompressed chunk, refreshing its recency. Counts a
@@ -129,11 +212,43 @@ impl ChunkCache {
         }
     }
 
-    /// Would a chunk of `len` bytes be cached? (Callers use this to
-    /// skip the `Arc`-wrap + copy on the decode path when the cache
-    /// would drop the chunk anyway.)
+    /// Could a chunk of `len` bytes ever be cached? (Pure budget
+    /// check; admission policy is [`ChunkCache::admit`].)
     pub fn accepts(&self, len: usize) -> bool {
         len > 0 && len as u64 <= self.shard_budget
+    }
+
+    /// Ghost-LRU admission decision for a chunk about to be inserted.
+    /// Returns `true` when the insert should proceed (the caller then
+    /// pays the `Arc` build and calls [`ChunkCache::insert`]):
+    ///
+    /// * the chunk is already resident (refresh/replace path), or
+    /// * its key is in the ghost — a second touch (counted as a ghost
+    ///   hit; the key is consumed from the ghost).
+    ///
+    /// A first touch records the key in the ghost and declines
+    /// (counted), so a one-pass cold scan cannot evict the hot set.
+    /// Chunks the budget can never hold decline without ghost traffic.
+    pub fn admit(&self, dataset: &str, chunk: usize, len: usize) -> bool {
+        if !self.accepts(len) {
+            return false;
+        }
+        let key = key_hash(dataset, chunk);
+        let si = self.shard_for(dataset, chunk);
+        let mut shard = self.shards[si].lock().unwrap();
+        if shard.per_dataset.get(dataset).is_some_and(|c| c.contains_key(&chunk)) {
+            return true;
+        }
+        if shard.ghost_take(key) {
+            drop(shard);
+            self.ghost_hits.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            shard.ghost_remember(key);
+            drop(shard);
+            self.admit_declines.fetch_add(1, Ordering::Relaxed);
+            false
+        }
     }
 
     /// Insert a decompressed chunk, evicting least-recently-used
@@ -178,6 +293,17 @@ impl ChunkCache {
     /// Evicted entries since construction.
     pub fn evictions(&self) -> u64 {
         self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Admissions granted because the key was in the ghost (second
+    /// touch) since construction.
+    pub fn ghost_hits(&self) -> u64 {
+        self.ghost_hits.load(Ordering::Relaxed)
+    }
+
+    /// Admissions declined (first touch of a key) since construction.
+    pub fn admit_declines(&self) -> u64 {
+        self.admit_declines.load(Ordering::Relaxed)
     }
 
     /// Bytes currently resident across all shards.
@@ -263,6 +389,100 @@ mod tests {
         assert_eq!(c.entries(), 1);
         assert_eq!(c.resident_bytes(), 300);
         assert_eq!(c.get("a", 0).unwrap()[0], 2);
+    }
+
+    #[test]
+    fn admission_declines_first_touch_admits_second() {
+        let c = ChunkCache::new(1 << 20, 1);
+        // First touch: declined, key recorded in the ghost.
+        assert!(!c.admit("a", 0, 100));
+        assert_eq!((c.admit_declines(), c.ghost_hits()), (1, 0));
+        assert_eq!(c.entries(), 0);
+        // Second touch: ghost hit, admitted.
+        assert!(c.admit("a", 0, 100));
+        assert_eq!((c.admit_declines(), c.ghost_hits()), (1, 1));
+        c.insert("a", 0, chunk(7, 100));
+        // Resident key: re-admission is free (refresh path).
+        assert!(c.admit("a", 0, 100));
+        assert_eq!((c.admit_declines(), c.ghost_hits()), (1, 1));
+        // A different key starts its own first-touch cycle.
+        assert!(!c.admit("a", 1, 100));
+        assert_eq!(c.admit_declines(), 2);
+    }
+
+    #[test]
+    fn cold_scan_cannot_evict_hot_set() {
+        // Hot set: two admitted 100-byte chunks filling the budget.
+        let c = ChunkCache::new(200, 1);
+        for ci in 0..2 {
+            assert!(!c.admit("hot", ci, 100));
+            assert!(c.admit("hot", ci, 100));
+            c.insert("hot", ci, chunk(1, 100));
+        }
+        assert_eq!(c.entries(), 2);
+        // One-pass cold scan over 50 distinct keys: every admit is a
+        // declined first touch, nothing is inserted, nothing evicted.
+        for ci in 0..50 {
+            assert!(!c.admit("scan", ci, 100));
+        }
+        assert_eq!(c.entries(), 2);
+        assert_eq!(c.evictions(), 0);
+        assert!(c.get("hot", 0).is_some() && c.get("hot", 1).is_some());
+    }
+
+    #[test]
+    fn evicted_resident_readmits_via_ghost() {
+        let c = ChunkCache::new(200, 1);
+        for ci in 0..2 {
+            assert!(!c.admit("a", ci, 100));
+            assert!(c.admit("a", ci, 100));
+            c.insert("a", ci, chunk(ci as u8, 100));
+        }
+        // Admit a third chunk (two touches) — evicts the LRU resident.
+        assert!(!c.admit("a", 2, 100));
+        assert!(c.admit("a", 2, 100));
+        c.insert("a", 2, chunk(2, 100));
+        assert_eq!(c.evictions(), 1);
+        assert!(c.get("a", 0).is_none(), "chunk 0 was the LRU victim");
+        // The evicted key went straight to the ghost: one admit call
+        // readmits it (no first-touch decline cycle).
+        let declines = c.admit_declines();
+        assert!(c.admit("a", 0, 100), "evicted resident must readmit immediately");
+        assert_eq!(c.admit_declines(), declines);
+    }
+
+    #[test]
+    fn ghost_at_cap_pops_stale_entries_without_evicting_live_twins() {
+        // Key A is remembered, consumed (its deque entry goes stale),
+        // then re-remembered behind key B. When a flood pushes the
+        // ghost membership past its cap, the FIFO must reclaim A's
+        // *stale* front entry without stripping A's live membership
+        // (generation tags make the distinction exact); B, the oldest
+        // live entry, is the one evicted.
+        let c = ChunkCache::new(1 << 30, 1);
+        assert!(!c.admit("a", 0, 100)); // remember A
+        assert!(c.admit("a", 0, 100)); // take A: deque entry now stale
+        assert!(!c.admit("a", 1, 100)); // remember B
+        assert!(!c.admit("a", 0, 100)); // re-remember A (live, behind B)
+        // Flood with distinct keys until membership exceeds the cap.
+        for ci in 2..(2 + GHOST_CAP_PER_SHARD - 1) {
+            assert!(!c.admit("a", ci, 100));
+        }
+        // A must still be a second-touch admit; with naive stale
+        // handling its membership would have been stripped when the
+        // stale front entry was popped.
+        assert!(c.admit("a", 0, 100), "live re-remembered key must survive its stale twin");
+        // B was the oldest live entry and was FIFO-evicted at cap.
+        assert!(!c.admit("a", 1, 100), "oldest live key is the one the cap evicts");
+    }
+
+    #[test]
+    fn oversized_admit_declines_without_ghost_traffic() {
+        let c = ChunkCache::new(100, 1);
+        assert!(!c.admit("a", 0, 101));
+        assert!(!c.admit("a", 0, 101), "oversized keys never reach the ghost");
+        assert_eq!((c.ghost_hits(), c.admit_declines()), (0, 0));
+        assert!(!ChunkCache::new(0, 1).admit("a", 0, 1));
     }
 
     #[test]

@@ -30,7 +30,8 @@ use crate::coordinator::stats::LatencyStats;
 use crate::coordinator::Registry;
 use crate::server::cache::{fnv1a, ChunkCache};
 use crate::server::proto::{
-    decode_request, write_response, FrameReader, ReadEvent, Status, WireRequest, WireResponse,
+    decode_request_versioned, write_response_versioned, FrameReader, ReadEvent, Status,
+    WireRequest, WireResponse, WIRE_VERSION,
 };
 use crate::{Error, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -93,25 +94,33 @@ impl Default for DaemonConfig {
 
 /// One response travelling to a connection's writer thread, carrying
 /// the byte charge taken at admission (debited once written; 0 for
-/// reader-generated error/metadata responses).
+/// reader-generated error/metadata responses) and the protocol version
+/// to stamp on the wire (echoing the requester's version — a v1 client
+/// rejects v2-stamped replies).
 struct Outbound {
     resp: WireResponse,
     charge: u64,
+    version: u16,
 }
 
 /// Send a reader-generated response (no byte charge).
-fn send_reply(tx: &mpsc::Sender<Outbound>, resp: WireResponse) {
-    let _ = tx.send(Outbound { resp, charge: 0 });
+fn send_reply(tx: &mpsc::Sender<Outbound>, version: u16, resp: WireResponse) {
+    let _ = tx.send(Outbound { resp, charge: 0, version });
 }
 
 /// One admitted request, owned by a shard queue. `charge` is the byte
 /// span debited from the connection's in-flight byte budget when the
-/// response hits the socket.
+/// response hits the socket; `deadline` (from the wire `deadline_ms`,
+/// measured from frame decode) is checked at dequeue and between batch
+/// items so an expired request never occupies a decode slot.
 struct Job {
     req: Request,
     reply: mpsc::Sender<Outbound>,
     received: Instant,
     charge: u64,
+    deadline: Option<Instant>,
+    /// Protocol version of the originating frame (echoed in the reply).
+    version: u16,
 }
 
 /// Absolute ceiling on unwritten responses per connection (small error
@@ -142,6 +151,12 @@ impl DaemonHandle {
     /// The shared decompressed-chunk cache (hit/miss counters).
     pub fn cache(&self) -> &ChunkCache {
         &self.cache
+    }
+
+    /// Owned handle on the shared cache — outlives `join`/`wait`, so
+    /// callers can report admission/ghost counters after shutdown.
+    pub fn cache_arc(&self) -> Arc<ChunkCache> {
+        self.cache.clone()
     }
 
     /// Snapshot of serving stats with cache counters folded in.
@@ -233,9 +248,10 @@ pub fn start(
     let accept = {
         let reg = registry.clone();
         let sd = shutdown.clone();
+        let cache = cache.clone();
         thread::Builder::new()
             .name("codag-accept".into())
-            .spawn(move || accept_loop(listener, reg, senders, sd, config))?
+            .spawn(move || accept_loop(listener, reg, cache, senders, sd, config))?
     };
     Ok(DaemonHandle {
         addr: local_addr,
@@ -251,6 +267,7 @@ pub fn start(
 fn accept_loop(
     listener: TcpListener,
     registry: Arc<Registry>,
+    cache: Arc<ChunkCache>,
     senders: Vec<SyncSender<Job>>,
     shutdown: Arc<AtomicBool>,
     config: DaemonConfig,
@@ -280,6 +297,7 @@ fn accept_loop(
                     continue;
                 }
                 let reg = registry.clone();
+                let cch = cache.clone();
                 // Per-connection sender clones: no shared reference, so
                 // dropping them (reader exit) is all the bookkeeping
                 // shutdown needs.
@@ -287,7 +305,7 @@ fn accept_loop(
                 let sd = shutdown.clone();
                 match thread::Builder::new()
                     .name("codag-conn".into())
-                    .spawn(move || connection_loop(stream, &reg, &snd, &sd, config))
+                    .spawn(move || connection_loop(stream, &reg, &cch, &snd, &sd, config))
                 {
                     Ok(h) => conns.push(h),
                     Err(e) => eprintln!("codag-serve: connection spawn failed: {e}"),
@@ -307,6 +325,7 @@ fn accept_loop(
 fn connection_loop(
     mut stream: TcpStream,
     registry: &Registry,
+    cache: &ChunkCache,
     senders: &[SyncSender<Job>],
     shutdown: &AtomicBool,
     config: DaemonConfig,
@@ -338,7 +357,7 @@ fn connection_loop(
         let inflight_bytes = inflight_bytes.clone();
         thread::Builder::new().name("codag-conn-writer".into()).spawn(move || {
             while let Ok(out) = rx.recv() {
-                let ok = write_response(&mut wstream, &out.resp).is_ok();
+                let ok = write_response_versioned(&mut wstream, &out.resp, out.version).is_ok();
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 inflight_bytes.fetch_sub(out.charge, Ordering::SeqCst);
                 if !ok {
@@ -364,8 +383,8 @@ fn connection_loop(
         match reader.poll(&mut stream) {
             Ok(ReadEvent::WouldBlock) => {}
             Ok(ReadEvent::Eof) => break,
-            Ok(ReadEvent::Frame(body)) => match decode_request(&body) {
-                Ok(req) => {
+            Ok(ReadEvent::Frame(body)) => match decode_request_versioned(&body) {
+                Ok((req, version)) => {
                     // Charge this request's (single) response up front.
                     let outstanding = inflight.fetch_add(1, Ordering::SeqCst);
                     if outstanding >= conn_hard_cap(&config)
@@ -379,7 +398,9 @@ fn connection_loop(
                     }
                     if !handle_request(
                         req,
+                        version,
                         registry,
+                        cache,
                         senders,
                         &tx,
                         outstanding,
@@ -392,11 +413,17 @@ fn connection_loop(
                 }
                 Err(e) => {
                     // Framing is no longer trustworthy: respond (echo
-                    // the id when the body was long enough to carry
-                    // one), close.
+                    // the id and version when the body was long enough
+                    // to carry them — a strict v1 client can only
+                    // decode a v1-stamped error), close.
                     inflight.fetch_add(1, Ordering::SeqCst);
                     let id = crate::server::proto::request_id_hint(&body);
-                    send_reply(&tx, WireResponse::error(id, Status::BadRequest, e.to_string()));
+                    let version = crate::server::proto::request_version_hint(&body);
+                    send_reply(
+                        &tx,
+                        version,
+                        WireResponse::error(id, Status::BadRequest, e.to_string()),
+                    );
                     break;
                 }
             },
@@ -409,7 +436,7 @@ fn connection_loop(
                     _ => Status::Internal,
                 };
                 inflight.fetch_add(1, Ordering::SeqCst);
-                send_reply(&tx, WireResponse::error(0, status, e.to_string()));
+                send_reply(&tx, WIRE_VERSION, WireResponse::error(0, status, e.to_string()));
                 break;
             }
         }
@@ -425,7 +452,9 @@ fn connection_loop(
 #[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: WireRequest,
+    version: u16,
     registry: &Registry,
+    cache: &ChunkCache,
     senders: &[SyncSender<Job>],
     tx: &mpsc::Sender<Outbound>,
     outstanding: usize,
@@ -442,6 +471,7 @@ fn handle_request(
         WireRequest::Shutdown { id } => {
             send_reply(
                 tx,
+                version,
                 WireResponse { id, status: Status::Ok, payload: b"shutting down".to_vec() },
             );
             shutdown.store(true, Ordering::SeqCst);
@@ -453,22 +483,34 @@ fn handle_request(
             } else {
                 match registry.get(&dataset) {
                     Ok(c) => {
-                        let mut payload = Vec::with_capacity(24);
-                        payload.extend_from_slice(&c.total_uncompressed.to_le_bytes());
-                        payload.extend_from_slice(&(c.chunk_size as u64).to_le_bytes());
+                        // 64-byte v2 Stat payload: dataset dimensions,
+                        // then the daemon-wide cache counters. A v1
+                        // requester gets exactly the 24-byte payload
+                        // its strict decoder expects.
+                        let mut payload = Vec::with_capacity(64);
+                        payload.extend_from_slice(&c.total_uncompressed().to_le_bytes());
+                        payload.extend_from_slice(&(c.chunk_size() as u64).to_le_bytes());
                         payload.extend_from_slice(&(c.n_chunks() as u64).to_le_bytes());
+                        if version >= 2 {
+                            payload.extend_from_slice(&cache.hits().to_le_bytes());
+                            payload.extend_from_slice(&cache.misses().to_le_bytes());
+                            payload.extend_from_slice(&cache.evictions().to_le_bytes());
+                            payload.extend_from_slice(&cache.admit_declines().to_le_bytes());
+                            payload.extend_from_slice(&cache.ghost_hits().to_le_bytes());
+                        }
                         WireResponse { id, status: Status::Ok, payload }
                     }
                     Err(e) => WireResponse::error(id, Status::NotFound, e.to_string()),
                 }
             };
-            send_reply(tx, resp);
+            send_reply(tx, version, resp);
             true
         }
-        WireRequest::Get { id, dataset, offset, len } => {
+        WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
             if over_budget {
                 send_reply(
                     tx,
+                    version,
                     WireResponse::error(id, Status::Busy, "connection in-flight limit"),
                 );
                 return true;
@@ -476,6 +518,7 @@ fn handle_request(
             if shutdown.load(Ordering::SeqCst) {
                 send_reply(
                     tx,
+                    version,
                     WireResponse::error(id, Status::ShuttingDown, "daemon is draining"),
                 );
                 return true;
@@ -483,6 +526,7 @@ fn handle_request(
             let Ok(container) = registry.get(&dataset) else {
                 send_reply(
                     tx,
+                    version,
                     WireResponse::error(
                         id,
                         Status::NotFound,
@@ -496,7 +540,7 @@ fn handle_request(
             // otherwise the writer would fail the oversized frame and
             // drop the connection without an error response.
             let span = {
-                let remaining = container.total_uncompressed.saturating_sub(offset);
+                let remaining = container.total_uncompressed().saturating_sub(offset);
                 if len == 0 {
                     remaining
                 } else {
@@ -506,6 +550,7 @@ fn handle_request(
             if span > (crate::server::proto::MAX_FRAME_LEN as u64).saturating_sub(64) {
                 send_reply(
                     tx,
+                    version,
                     WireResponse::error(
                         id,
                         Status::BadRequest,
@@ -524,6 +569,7 @@ fn handle_request(
             {
                 send_reply(
                     tx,
+                    version,
                     WireResponse::error(id, Status::Busy, "connection byte budget exhausted"),
                 );
                 return true;
@@ -532,11 +578,21 @@ fn handle_request(
             // All requests for one dataset land on one shard: FIFO per
             // dataset is preserved through the bounded queue.
             let si = (fnv1a(dataset.as_bytes()) % senders.len() as u64) as usize;
+            let received = Instant::now();
+            // Relative wire deadline, anchored at frame decode (no
+            // client/daemon clock sync needed); 0 = none.
+            let deadline = if deadline_ms > 0 {
+                received.checked_add(Duration::from_millis(deadline_ms))
+            } else {
+                None
+            };
             let job = Job {
                 req: Request { id, dataset, offset, len },
                 reply: tx.clone(),
-                received: Instant::now(),
+                received,
                 charge: span,
+                deadline,
+                version,
             };
             match senders[si].try_send(job) {
                 Ok(()) => {}
@@ -546,6 +602,7 @@ fn handle_request(
                     // growth.
                     send_reply(
                         tx,
+                        job.version,
                         WireResponse::error(
                             job.req.id,
                             Status::Busy,
@@ -557,6 +614,7 @@ fn handle_request(
                     inflight_bytes.fetch_sub(job.charge, Ordering::SeqCst);
                     send_reply(
                         tx,
+                        job.version,
                         WireResponse::error(
                             job.req.id,
                             Status::ShuttingDown,
@@ -610,20 +668,49 @@ fn shard_loop(
                 Err(_) => break,
             }
         }
+        // Deadline check #1, at dequeue: a job whose deadline lapsed in
+        // the queue is answered `Expired` right here and never enters
+        // the decode batch — an expired request must not consume a
+        // decode slot. The admission byte charge still rides the
+        // response so the connection budget is returned on write.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            if j.deadline.is_some_and(|d| now >= d) {
+                let resp = WireResponse::error(
+                    j.req.id,
+                    Status::Expired,
+                    "deadline expired while queued",
+                );
+                let _ = j.reply.send(Outbound { resp, charge: j.charge, version: j.version });
+            } else {
+                live.push(j);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
         // Hand the owned Requests straight to serve_batch (no per-job
         // clone on the hot path); reply metadata rides alongside.
-        let mut requests = Vec::with_capacity(jobs.len());
-        let mut replies = Vec::with_capacity(jobs.len());
-        for j in jobs {
+        let mut requests = Vec::with_capacity(live.len());
+        let mut replies = Vec::with_capacity(live.len());
+        let mut deadlines = Vec::with_capacity(live.len());
+        for j in live {
             requests.push(j.req);
-            replies.push((j.reply, j.received, j.charge));
+            deadlines.push(j.deadline);
+            replies.push((j.reply, j.received, j.charge, j.version));
         }
-        let (responses, _) = service.serve_batch(&requests);
+        // Deadline check #2, between batch items: the service consults
+        // this probe before decoding each of a request's chunks, so a
+        // deadline lapsing mid-batch stops burning decode work.
+        let (responses, _) = service.serve_batch_with(&requests, |ri| {
+            deadlines[ri].is_some_and(|d| Instant::now() >= d)
+        });
         // Record into a batch-local recorder and take the shared lock
         // once per batch, not once per response — shards must not
         // serialize on the stats mutex in the reply hot path.
         let mut batch_stats = LatencyStats::new();
-        for ((reply, received, charge), resp) in replies.into_iter().zip(responses) {
+        for ((reply, received, charge, version), resp) in replies.into_iter().zip(responses) {
             let wire = match resp.data {
                 Ok(bytes) => {
                     // Admission-to-reply latency (includes queue wait —
@@ -631,9 +718,14 @@ fn shard_loop(
                     batch_stats.record(received.elapsed(), bytes.len() as u64);
                     WireResponse { id: resp.id, status: Status::Ok, payload: bytes }
                 }
+                Err(Error::Runtime(m))
+                    if m == crate::coordinator::service::DEADLINE_EXPIRED =>
+                {
+                    WireResponse::error(resp.id, Status::Expired, m)
+                }
                 Err(e) => WireResponse::error(resp.id, status_for(&e), e.to_string()),
             };
-            let _ = reply.send(Outbound { resp: wire, charge });
+            let _ = reply.send(Outbound { resp: wire, charge, version });
         }
         if batch_stats.count() > 0 {
             stats.lock().unwrap().merge(&batch_stats);

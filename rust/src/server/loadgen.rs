@@ -1,10 +1,19 @@
 //! `codag loadgen` — hammer a running daemon and report latency.
 //!
 //! Opens N connections, each issuing seeded-random ranged reads against
-//! one dataset, and merges per-connection [`LatencyStats`] into a
-//! p50/p90/p99 + throughput report. `Busy` responses (backpressure) are
-//! counted separately from failures so admission-limit sweeps read
-//! directly off the report.
+//! one dataset (optionally pipelined `pipeline` deep), and merges
+//! per-connection [`LatencyStats`] into a p50/p90/p99 + throughput
+//! report. `Busy` (backpressure) and `Expired` (deadline) responses are
+//! counted separately from failures so admission-limit and deadline
+//! sweeps read directly off the report.
+//!
+//! Two extra drivers ride on the same client: [`run_ablation`] sweeps
+//! client pipeline depths {1, 8, 32} — the knob that drives the
+//! daemon's opportunistic shard batching — and emits the §V-F
+//! batching-ablation table for EXPERIMENTS.md, and [`probe_expired`]
+//! deterministically exercises the deadline-expiry path (queue a few
+//! full-range reads, then a 1 ms-deadline read that must come back
+//! [`Status::Expired`]).
 
 use crate::coordinator::stats::LatencyStats;
 use crate::data::Rng;
@@ -13,6 +22,7 @@ use crate::server::proto::{
     WireRequest, WireResponse,
 };
 use crate::{corrupt, invalid, Error, Result};
+use std::collections::HashMap;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -31,6 +41,12 @@ pub struct LoadgenConfig {
     pub max_len: u64,
     /// RNG seed (per-connection streams derive from it).
     pub seed: u64,
+    /// Requests kept in flight per connection (1 = synchronous RPC).
+    /// Deeper pipelines let the daemon's shard workers fold more
+    /// requests into one `serve_batch` call — the §V-F batching knob.
+    pub pipeline: usize,
+    /// Relative deadline attached to every Get (ms; 0 = none).
+    pub deadline_ms: u64,
 }
 
 impl Default for LoadgenConfig {
@@ -42,6 +58,8 @@ impl Default for LoadgenConfig {
             requests: 64,
             max_len: 256 * 1024,
             seed: 0xC0DA_6,
+            pipeline: 1,
+            deadline_ms: 0,
         }
     }
 }
@@ -57,6 +75,8 @@ pub struct LoadgenReport {
     pub ok: u64,
     /// `Busy` responses (admission-limit backpressure).
     pub busy: u64,
+    /// `Expired` responses (the request's deadline lapsed in queue).
+    pub expired: u64,
     /// Everything else: error statuses, mismatched ids, and exchanges
     /// aborted by a dying connection.
     pub failed: u64,
@@ -71,8 +91,8 @@ impl std::fmt::Display for LoadgenReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "requests: sent={} ok={} busy={} failed={} conn-failures={}",
-            self.sent, self.ok, self.busy, self.failed, self.conn_failures
+            "requests: sent={} ok={} busy={} expired={} failed={} conn-failures={}",
+            self.sent, self.ok, self.busy, self.expired, self.failed, self.conn_failures
         )?;
         writeln!(
             f,
@@ -120,7 +140,38 @@ fn rpc(conn: &mut Conn, req: &WireRequest) -> Result<WireResponse> {
 }
 
 /// Query `(total_uncompressed, chunk_size, n_chunks)` for a dataset.
+/// The v2 payload carries daemon-wide cache counters after the first
+/// 24 bytes (see [`stat_full`]); this convenience keeps the v1 view.
 pub fn stat(addr: &str, dataset: &str) -> Result<(u64, u64, u64)> {
+    let s = stat_full(addr, dataset)?;
+    Ok((s.total_uncompressed, s.chunk_size, s.n_chunks))
+}
+
+/// Decoded v2 `Stat` response (24-byte v1 prefix + cache counters).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StatReport {
+    /// Total uncompressed dataset length.
+    pub total_uncompressed: u64,
+    /// Nominal uncompressed chunk size.
+    pub chunk_size: u64,
+    /// Chunk count.
+    pub n_chunks: u64,
+    /// Daemon-wide chunk-cache hits (0 when the daemon predates v2).
+    pub cache_hits: u64,
+    /// Daemon-wide chunk-cache misses.
+    pub cache_misses: u64,
+    /// Daemon-wide chunk-cache evictions.
+    pub cache_evictions: u64,
+    /// Admissions declined (first touch of a key; ghost-LRU).
+    pub cache_admit_declines: u64,
+    /// Admissions granted via the ghost (second touch of a key).
+    pub cache_ghost_hits: u64,
+}
+
+/// Query a dataset's `Stat`, including the v2 cache counters. Accepts
+/// a bare 24-byte v1 payload (counters stay 0) so mixed-version
+/// deployments keep working.
+pub fn stat_full(addr: &str, dataset: &str) -> Result<StatReport> {
     let mut conn = Conn::open(addr)?;
     let resp = rpc(&mut conn, &WireRequest::Stat { id: 0, dataset: dataset.into() })?;
     if resp.status != Status::Ok {
@@ -130,15 +181,25 @@ pub fn stat(addr: &str, dataset: &str) -> Result<(u64, u64, u64)> {
             String::from_utf8_lossy(&resp.payload)
         )));
     }
-    if resp.payload.len() != 24 {
-        return Err(corrupt(format!("stat payload is {} bytes, want 24", resp.payload.len())));
+    if resp.payload.len() < 24 {
+        return Err(corrupt(format!("stat payload is {} bytes, want >= 24", resp.payload.len())));
     }
     let rd = |i: usize| {
         let mut b = [0u8; 8];
         b.copy_from_slice(&resp.payload[i..i + 8]);
         u64::from_le_bytes(b)
     };
-    Ok((rd(0), rd(8), rd(16)))
+    let opt = |i: usize| if resp.payload.len() >= i + 8 { rd(i) } else { 0 };
+    Ok(StatReport {
+        total_uncompressed: rd(0),
+        chunk_size: rd(8),
+        n_chunks: rd(16),
+        cache_hits: opt(24),
+        cache_misses: opt(32),
+        cache_evictions: opt(40),
+        cache_admit_declines: opt(48),
+        cache_ghost_hits: opt(56),
+    })
 }
 
 /// Ask the daemon to drain and exit.
@@ -166,6 +227,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         sent: 0,
         ok: 0,
         busy: 0,
+        expired: 0,
         failed: 0,
         conn_failures: 0,
         wall: Duration::ZERO,
@@ -190,8 +252,9 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         report.stats.merge(&r.stats);
         report.ok += r.ok;
         report.busy += r.busy;
+        report.expired += r.expired;
         report.failed += r.failed;
-        report.sent += r.ok + r.busy + r.failed;
+        report.sent += r.ok + r.busy + r.expired + r.failed;
         report.conn_failures += u64::from(r.died);
     }
     report.wall = t0.elapsed();
@@ -207,10 +270,15 @@ struct ConnOutcome {
     stats: LatencyStats,
     ok: u64,
     busy: u64,
+    expired: u64,
     failed: u64,
     died: bool,
 }
 
+/// Drive one connection, keeping up to `cfg.pipeline` requests in
+/// flight. Responses can arrive out of request order (`Busy`/`Expired`
+/// replies come from the reader/dequeue path, `Ok` from shard
+/// workers), so outstanding sends are matched back by id.
 fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome {
     let mut out = ConnOutcome::default();
     let mut conn = match Conn::open(&cfg.addr) {
@@ -222,34 +290,173 @@ fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome
         }
     };
     let mut rng = Rng::new(cfg.seed ^ (conn_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
-    for r in 0..cfg.requests as u64 {
-        let offset = rng.below(total);
-        let span = if cfg.max_len == 0 { total - offset } else { cfg.max_len.min(total - offset) };
-        let len = 1 + rng.below(span.max(1));
-        let id = (conn_idx << 32) | r;
-        let started = Instant::now();
-        let resp = match rpc(
-            &mut conn,
-            &WireRequest::Get { id, dataset: cfg.dataset.clone(), offset, len },
-        ) {
+    let depth = cfg.pipeline.max(1) as u64;
+    let requests = cfg.requests as u64;
+    let mut outstanding: HashMap<u64, Instant> = HashMap::new();
+    let mut next = 0u64;
+    let mut done = 0u64;
+    while done < requests {
+        // Fill the pipeline window.
+        while next < requests && (outstanding.len() as u64) < depth {
+            let offset = rng.below(total);
+            let span =
+                if cfg.max_len == 0 { total - offset } else { cfg.max_len.min(total - offset) };
+            let len = 1 + rng.below(span.max(1));
+            let id = (conn_idx << 32) | next;
+            let req = WireRequest::Get {
+                id,
+                dataset: cfg.dataset.clone(),
+                offset,
+                len,
+                deadline_ms: cfg.deadline_ms,
+            };
+            let sent = encode_request(&req)
+                .and_then(|body| write_frame(&mut conn.stream, &body))
+                .is_ok();
+            if !sent {
+                eprintln!("loadgen: connection {conn_idx} died after {done} responses");
+                // The failed send plus every in-flight request counts
+                // as attempted, so `sent` reconciles with daemon-side
+                // counters (mirrors the read-failure path below).
+                out.failed += outstanding.len() as u64 + 1;
+                out.died = true;
+                return out;
+            }
+            outstanding.insert(id, Instant::now());
+            next += 1;
+        }
+        let resp = match read_frame_blocking(&mut conn.reader, &mut conn.stream)
+            .and_then(|f| {
+                f.ok_or_else(|| corrupt("daemon closed the connection mid-exchange"))
+            })
+            .and_then(|frame| decode_response(&frame))
+        {
             Ok(resp) => resp,
             Err(e) => {
-                eprintln!("loadgen: connection {conn_idx} died after {r} requests: {e}");
-                // The aborted exchange still counts as an attempt so
-                // `sent` reconciles with daemon-side counters.
-                out.failed += 1;
+                eprintln!("loadgen: connection {conn_idx} died after {done} responses: {e}");
+                // Aborted exchanges still count as attempts so `sent`
+                // reconciles with daemon-side counters.
+                out.failed += outstanding.len() as u64;
                 out.died = true;
-                break;
+                return out;
             }
         };
+        let Some(started) = outstanding.remove(&resp.id) else {
+            out.failed += 1;
+            continue;
+        };
+        done += 1;
         match resp.status {
-            Status::Ok if resp.id == id => {
+            Status::Ok => {
                 out.stats.record(started.elapsed(), resp.payload.len() as u64);
                 out.ok += 1;
             }
             Status::Busy => out.busy += 1,
+            Status::Expired => out.expired += 1,
             _ => out.failed += 1,
         }
     }
     out
+}
+
+/// Pipeline depths swept by [`run_ablation`] (paper §V-F: batch sizes
+/// {1, 8, 32} through the daemon path — the client pipeline depth is
+/// what feeds the shard workers' opportunistic batching).
+pub const ABLATION_DEPTHS: [usize; 3] = [1, 8, 32];
+
+/// Sweep [`ABLATION_DEPTHS`] against a live daemon and render the
+/// §V-F batching-ablation markdown table (EXPERIMENTS.md §4). Each
+/// depth reruns the same seeded workload, so rows differ only in
+/// pipelining.
+pub fn run_ablation(cfg: &LoadgenConfig) -> Result<String> {
+    let mut out = String::new();
+    out.push_str(
+        "| pipeline depth | sent | ok | busy | expired | p50 (us) | p99 (us) | GB/s |\n\
+         |---|---|---|---|---|---|---|---|\n",
+    );
+    for depth in ABLATION_DEPTHS {
+        let mut c = cfg.clone();
+        c.pipeline = depth;
+        let rep = run(&c)?;
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {:.3} |\n",
+            depth,
+            rep.sent,
+            rep.ok,
+            rep.busy,
+            rep.expired,
+            rep.stats.percentile_us(50.0),
+            rep.stats.percentile_us(99.0),
+            rep.stats.throughput_gbps(rep.wall)
+        ));
+    }
+    Ok(out)
+}
+
+/// Deterministically exercise the deadline-expiry path against a live
+/// daemon: queue `HEAD` full-range reads on one connection, then a
+/// read with a 1 ms deadline. Same connection + same dataset ⇒ same
+/// shard FIFO, so the deadline job sits behind the full decodes and
+/// must come back [`Status::Expired`]. Errors if it does not (the CI
+/// smoke gate for the deadline path).
+pub fn probe_expired(addr: &str, dataset: &str) -> Result<()> {
+    // Enough queued decode work that 1 ms is safely stale by the time
+    // the probe job is reached, even for the fastest RLE datasets
+    // (pair with an uncached single-worker daemon for a strict gate).
+    const HEAD: u64 = 16;
+    let (total, _chunk, _n) = stat(addr, dataset)?;
+    if total == 0 {
+        return Err(invalid(format!("dataset '{dataset}' is empty")));
+    }
+    let mut conn = Conn::open(addr)?;
+    // Head reads are capped at 2 MiB so all HEAD + 1 spans (34 MiB)
+    // stay strictly inside the daemon's default 64 MiB per-connection
+    // byte budget even on paper-scale datasets — a Busy head would
+    // dequeue instantly and weaken the queue delay the probe relies
+    // on, and a Busy *probe* would fail it outright.
+    let head_len = total.min(2 * 1024 * 1024);
+    for id in 0..HEAD {
+        let body = encode_request(&WireRequest::Get {
+            id,
+            dataset: dataset.into(),
+            offset: 0,
+            len: head_len,
+            deadline_ms: 0,
+        })?;
+        write_frame(&mut conn.stream, &body)?;
+    }
+    let probe_id = HEAD;
+    let body = encode_request(&WireRequest::Get {
+        id: probe_id,
+        dataset: dataset.into(),
+        offset: 0,
+        len: head_len,
+        deadline_ms: 1,
+    })?;
+    write_frame(&mut conn.stream, &body)?;
+    let mut probe_status = None;
+    for _ in 0..=HEAD {
+        let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)?
+            .ok_or_else(|| corrupt("daemon closed the connection mid-probe"))?;
+        let resp = decode_response(&frame)?;
+        if resp.id == probe_id {
+            probe_status = Some(resp.status);
+        } else if !matches!(resp.status, Status::Ok | Status::Busy) {
+            // Busy heads are tolerated (they only reduce queue delay);
+            // anything else is a real failure.
+            return Err(Error::Runtime(format!(
+                "probe head request {} failed: {}",
+                resp.id,
+                resp.status.label()
+            )));
+        }
+    }
+    match probe_status {
+        Some(Status::Expired) => Ok(()),
+        Some(other) => Err(Error::Runtime(format!(
+            "deadline probe expected Expired, got {}",
+            other.label()
+        ))),
+        None => Err(corrupt("deadline probe got no response")),
+    }
 }

@@ -13,20 +13,29 @@
 //!   workers, bounded admission with explicit `Busy` backpressure, and
 //!   token-based graceful shutdown that joins every thread.
 //! * [`cache`] — sharded byte-budgeted LRU of hot *decompressed*
-//!   chunks keyed by `(dataset, chunk index)`.
+//!   chunks keyed by `(dataset, chunk index)`, with ghost-LRU
+//!   admission (second-chance on key history).
+//! * [`store`] — file-backed datasets: `codag pack`-written container
+//!   files opened with header/index validation and lazy per-chunk
+//!   payload reads (`codag serve --data-dir`, DESIGN.md §8).
 //! * [`loadgen`] — client that hammers a running daemon and reports
-//!   p50/p90/p99 latency and throughput.
+//!   p50/p90/p99 latency and throughput; also the §V-F batching
+//!   ablation driver (`codag loadgen --ablate-batch`) and the
+//!   deadline-expiry probe.
 //!
 //! Driven end-to-end over loopback TCP by
-//! `rust/tests/server_integration.rs`, and from the CLI via
+//! `rust/tests/server_integration.rs` and
+//! `rust/tests/store_integration.rs`, and from the CLI via
 //! `codag serve --port …` / `codag loadgen`.
 
 pub mod cache;
 pub mod daemon;
 pub mod loadgen;
 pub mod proto;
+pub mod store;
 
 pub use cache::ChunkCache;
 pub use daemon::{start, DaemonConfig, DaemonHandle};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use proto::{Status, WireRequest, WireResponse};
+pub use store::{load_dir, FileDataset};

@@ -7,24 +7,27 @@
 //! byte layouts below are frozen in DESIGN.md §6 and pinned by the unit
 //! suite in this module.
 //!
-//! Request body:
-//!
-//! ```text
-//! magic:    u32 = 0xC0DA_5E01
-//! version:  u16 = 1
-//! kind:     u8          (1 = Get, 2 = Stat, 3 = Shutdown)
-//! name_len: u8          (dataset name bytes; 0 for Shutdown)
-//! id:       u64         (caller-assigned, echoed in the response)
-//! offset:   u64         (uncompressed byte offset; Get only, else 0)
-//! len:      u64         (uncompressed byte length, 0 = to end; Get only)
-//! name:     name_len bytes of UTF-8
-//! ```
-//!
-//! Response body:
+//! Request body (v2; a v1 body is identical minus the `deadline_ms`
+//! field and is still accepted — see [`decode_request`]):
 //!
 //! ```text
 //! magic:       u32 = 0xC0DA_5E01
-//! version:     u16 = 1
+//! version:     u16 = 2
+//! kind:        u8          (1 = Get, 2 = Stat, 3 = Shutdown)
+//! name_len:    u8          (dataset name bytes; 0 for Shutdown)
+//! id:          u64         (caller-assigned, echoed in the response)
+//! offset:      u64         (uncompressed byte offset; Get only, else 0)
+//! len:         u64         (uncompressed byte length, 0 = to end; Get only)
+//! deadline_ms: u64         (relative deadline in ms, 0 = none; Get only)
+//! name:        name_len bytes of UTF-8
+//! ```
+//!
+//! Response body (layout unchanged since v1 apart from the version
+//! field and the v2-only `Expired` status):
+//!
+//! ```text
+//! magic:       u32 = 0xC0DA_5E01
+//! version:     u16 = 2
 //! status:      u8       (see `Status`)
 //! reserved:    u8 = 0
 //! id:          u64      (echoed request id)
@@ -32,8 +35,13 @@
 //! payload:     data on Ok, UTF-8 error text otherwise
 //! ```
 //!
-//! A `Stat` response payload is 24 bytes: `total_uncompressed: u64`,
-//! `chunk_size: u64`, `n_chunks: u64` (little-endian).
+//! A v2 `Stat` response payload is 64 bytes: `total_uncompressed: u64`,
+//! `chunk_size: u64`, `n_chunks: u64`, then the daemon-wide chunk-cache
+//! counters `hits`, `misses`, `evictions`, `admit_declines`,
+//! `ghost_hits` (all u64 little-endian). A v1 requester gets exactly
+//! the 24-byte prefix its strict decoder expects (the daemon echoes
+//! both the version stamp and the payload shape of the request's
+//! protocol version).
 
 use crate::{corrupt, invalid, Error, Result};
 use std::io::{ErrorKind, Read, Write};
@@ -41,11 +49,16 @@ use std::io::{ErrorKind, Read, Write};
 /// Magic number opening every request and response body.
 pub const WIRE_MAGIC: u32 = 0xC0DA_5E01;
 /// Protocol version; bumped on any layout change (see DESIGN.md §6).
-pub const WIRE_VERSION: u16 = 1;
+/// v2 added the `deadline_ms` request field, the `Expired` status, and
+/// the extended `Stat` payload; v1 frames are still accepted.
+pub const WIRE_VERSION: u16 = 2;
+/// Oldest protocol version [`decode_request`]/[`decode_response`]
+/// still accept.
+pub const WIRE_VERSION_MIN: u16 = 1;
 /// Upper bound on one frame body (guards allocation on decode).
 pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
 /// Server-side bound on *inbound request* frames. Requests are at most
-/// 32 + 255 bytes, so the daemon reads with this cap instead of
+/// 40 + 255 bytes, so the daemon reads with this cap instead of
 /// [`MAX_FRAME_LEN`] — a hostile length prefix must not make the
 /// server pre-allocate a response-sized buffer.
 pub const MAX_REQUEST_FRAME_LEN: u32 = 4096;
@@ -72,6 +85,10 @@ pub enum Status {
     Internal,
     /// Daemon is draining; no new work accepted.
     ShuttingDown,
+    /// The request's deadline passed before decode work started (v2;
+    /// never sent in reply to a v1 frame, which cannot carry a
+    /// deadline).
+    Expired,
 }
 
 impl Status {
@@ -85,6 +102,7 @@ impl Status {
             Status::Corrupt => 4,
             Status::Internal => 5,
             Status::ShuttingDown => 6,
+            Status::Expired => 7,
         }
     }
 
@@ -98,6 +116,7 @@ impl Status {
             4 => Status::Corrupt,
             5 => Status::Internal,
             6 => Status::ShuttingDown,
+            7 => Status::Expired,
             _ => return None,
         })
     }
@@ -112,6 +131,7 @@ impl Status {
             Status::Corrupt => "corrupt",
             Status::Internal => "internal",
             Status::ShuttingDown => "shutting-down",
+            Status::Expired => "expired",
         }
     }
 }
@@ -129,6 +149,11 @@ pub enum WireRequest {
         offset: u64,
         /// Uncompressed byte length (0 = to end).
         len: u64,
+        /// Relative deadline in milliseconds, measured by the daemon
+        /// from the moment it decodes the frame; 0 = no deadline. A
+        /// request still queued past its deadline is answered
+        /// [`Status::Expired`] instead of being decoded.
+        deadline_ms: u64,
     },
     /// Query dataset metadata (total length, chunk size, chunk count).
     Stat {
@@ -166,21 +191,21 @@ const REQ_KIND_GET: u8 = 1;
 const REQ_KIND_STAT: u8 = 2;
 const REQ_KIND_SHUTDOWN: u8 = 3;
 
-/// Encode a request into a frame body (no length prefix; pair with
+/// Encode a request into a v2 frame body (no length prefix; pair with
 /// [`write_frame`]).
 pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
-    let (kind, id, dataset, offset, len) = match req {
-        WireRequest::Get { id, dataset, offset, len } => {
-            (REQ_KIND_GET, *id, dataset.as_str(), *offset, *len)
+    let (kind, id, dataset, offset, len, deadline_ms) = match req {
+        WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
+            (REQ_KIND_GET, *id, dataset.as_str(), *offset, *len, *deadline_ms)
         }
-        WireRequest::Stat { id, dataset } => (REQ_KIND_STAT, *id, dataset.as_str(), 0, 0),
-        WireRequest::Shutdown { id } => (REQ_KIND_SHUTDOWN, *id, "", 0, 0),
+        WireRequest::Stat { id, dataset } => (REQ_KIND_STAT, *id, dataset.as_str(), 0, 0, 0),
+        WireRequest::Shutdown { id } => (REQ_KIND_SHUTDOWN, *id, "", 0, 0, 0),
     };
     let name = dataset.as_bytes();
     if name.len() > MAX_NAME_LEN {
         return Err(invalid(format!("dataset name too long ({} bytes)", name.len())));
     }
-    let mut out = Vec::with_capacity(32 + name.len());
+    let mut out = Vec::with_capacity(40 + name.len());
     out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
     out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     out.push(kind);
@@ -188,19 +213,29 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
     out.extend_from_slice(&id.to_le_bytes());
     out.extend_from_slice(&offset.to_le_bytes());
     out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&deadline_ms.to_le_bytes());
     out.extend_from_slice(name);
     Ok(out)
 }
 
-/// Decode a request frame body.
+/// Decode a request frame body. Accepts protocol v2 (40-byte header
+/// with `deadline_ms`) and the v1 compat layout (32-byte header; the
+/// deadline defaults to 0 = none).
 pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
+    decode_request_versioned(body).map(|(req, _)| req)
+}
+
+/// [`decode_request`] plus the frame's protocol version, so the daemon
+/// can stamp each response with the version its requester actually
+/// speaks (a v1 client rejects v2-stamped replies).
+pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16)> {
     let mut rd = Rd::new(body);
     let magic = rd.u32()?;
     if magic != WIRE_MAGIC {
         return Err(corrupt(format!("bad request magic {magic:#010x}")));
     }
     let version = rd.u16()?;
-    if version != WIRE_VERSION {
+    if !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&version) {
         return Err(corrupt(format!("unsupported protocol version {version}")));
     }
     let kind = rd.u8()?;
@@ -208,17 +243,19 @@ pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
     let id = rd.u64()?;
     let offset = rd.u64()?;
     let len = rd.u64()?;
+    let deadline_ms = if version >= 2 { rd.u64()? } else { 0 };
     let name = rd.bytes(name_len)?;
     let dataset = std::str::from_utf8(name)
         .map_err(|_| corrupt("dataset name is not UTF-8"))?
         .to_string();
     rd.done()?;
-    match kind {
-        REQ_KIND_GET => Ok(WireRequest::Get { id, dataset, offset, len }),
-        REQ_KIND_STAT => Ok(WireRequest::Stat { id, dataset }),
-        REQ_KIND_SHUTDOWN => Ok(WireRequest::Shutdown { id }),
-        other => Err(corrupt(format!("unknown request kind {other}"))),
-    }
+    let req = match kind {
+        REQ_KIND_GET => WireRequest::Get { id, dataset, offset, len, deadline_ms },
+        REQ_KIND_STAT => WireRequest::Stat { id, dataset },
+        REQ_KIND_SHUTDOWN => WireRequest::Shutdown { id },
+        other => return Err(corrupt(format!("unknown request kind {other}"))),
+    };
+    Ok((req, version))
 }
 
 /// Encode a response into a frame body (no length prefix).
@@ -242,7 +279,7 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
         return Err(corrupt(format!("bad response magic {magic:#010x}")));
     }
     let version = rd.u16()?;
-    if version != WIRE_VERSION {
+    if !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&version) {
         return Err(corrupt(format!("unsupported protocol version {version}")));
     }
     let status_byte = rd.u8()?;
@@ -263,6 +300,18 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
 /// this is the daemon's reply hot path, where the extra
 /// `encode_response` memcpy of a multi-MiB payload matters.
 pub fn write_response(w: &mut impl Write, resp: &WireResponse) -> Result<()> {
+    write_response_versioned(w, resp, WIRE_VERSION)
+}
+
+/// [`write_response`] stamped with an explicit protocol version: the
+/// daemon echoes the version of the request it is answering (v1
+/// clients require v1-stamped replies; the response byte layout is
+/// otherwise identical across versions).
+pub fn write_response_versioned(
+    w: &mut impl Write,
+    resp: &WireResponse,
+    version: u16,
+) -> Result<()> {
     let body_len = 24u64 + resp.payload.len() as u64;
     if body_len > MAX_FRAME_LEN as u64 {
         return Err(invalid(format!("response frame too large ({body_len} bytes)")));
@@ -270,7 +319,7 @@ pub fn write_response(w: &mut impl Write, resp: &WireResponse) -> Result<()> {
     let mut head = [0u8; 28];
     head[0..4].copy_from_slice(&(body_len as u32).to_le_bytes());
     head[4..8].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
-    head[8..10].copy_from_slice(&WIRE_VERSION.to_le_bytes());
+    head[8..10].copy_from_slice(&version.to_le_bytes());
     head[10] = resp.status.as_u8();
     head[11] = 0; // reserved
     head[12..20].copy_from_slice(&resp.id.to_le_bytes());
@@ -289,6 +338,26 @@ pub fn request_id_hint(body: &[u8]) -> u64 {
     match body.get(8..16) {
         Some(s) => u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]),
         None => 0,
+    }
+}
+
+/// Best-effort protocol-version extraction for error responses to
+/// malformed frames (symmetric to [`request_id_hint`]): when the
+/// version field survives and names a supported version, error replies
+/// are stamped with it so a strict v1 client can still decode the
+/// `BadRequest` it caused; anything else falls back to
+/// [`WIRE_VERSION`].
+pub fn request_version_hint(body: &[u8]) -> u16 {
+    match body.get(4..6) {
+        Some(s) => {
+            let v = u16::from_le_bytes([s[0], s[1]]);
+            if (WIRE_VERSION_MIN..=WIRE_VERSION).contains(&v) {
+                v
+            } else {
+                WIRE_VERSION
+            }
+        }
+        None => WIRE_VERSION,
     }
 }
 
@@ -489,8 +558,20 @@ mod tests {
     #[test]
     fn request_roundtrip_all_kinds() {
         let reqs = [
-            WireRequest::Get { id: 7, dataset: "MC0".into(), offset: 1024, len: 4096 },
-            WireRequest::Get { id: u64::MAX, dataset: "x".into(), offset: 0, len: 0 },
+            WireRequest::Get {
+                id: 7,
+                dataset: "MC0".into(),
+                offset: 1024,
+                len: 4096,
+                deadline_ms: 250,
+            },
+            WireRequest::Get {
+                id: u64::MAX,
+                dataset: "x".into(),
+                offset: 0,
+                len: 0,
+                deadline_ms: 0,
+            },
             WireRequest::Stat { id: 3, dataset: "TPC".into() },
             WireRequest::Shutdown { id: 0 },
         ];
@@ -502,35 +583,80 @@ mod tests {
 
     #[test]
     fn response_roundtrip_all_statuses() {
-        for v in 0..=6u8 {
+        for v in 0..=7u8 {
             let status = Status::from_u8(v).unwrap();
             assert_eq!(status.as_u8(), v);
             let resp = WireResponse { id: 42, status, payload: vec![1, 2, 3, v] };
             let body = encode_response(&resp);
             assert_eq!(decode_response(&body).unwrap(), resp);
         }
-        assert!(Status::from_u8(7).is_none());
+        assert!(Status::from_u8(8).is_none());
+        assert_eq!(Status::Expired.as_u8(), 7);
     }
 
     #[test]
     fn request_header_layout_pinned() {
-        // Byte-layout pin: DESIGN.md §6 freezes these offsets.
+        // Byte-layout pin: DESIGN.md §6 freezes these offsets (v2).
         let body = encode_request(&WireRequest::Get {
             id: 0x1122_3344_5566_7788,
             dataset: "ab".into(),
             offset: 0x0102_0304_0506_0708,
             len: 0x1112_1314_1516_1718,
+            deadline_ms: 0x2122_2324_2526_2728,
         })
         .unwrap();
-        assert_eq!(body.len(), 32 + 2);
+        assert_eq!(body.len(), 40 + 2);
         assert_eq!(&body[0..4], &WIRE_MAGIC.to_le_bytes());
-        assert_eq!(&body[4..6], &WIRE_VERSION.to_le_bytes());
+        assert_eq!(&body[4..6], &2u16.to_le_bytes());
         assert_eq!(body[6], 1); // kind = Get
         assert_eq!(body[7], 2); // name_len
         assert_eq!(&body[8..16], &0x1122_3344_5566_7788u64.to_le_bytes());
         assert_eq!(&body[16..24], &0x0102_0304_0506_0708u64.to_le_bytes());
         assert_eq!(&body[24..32], &0x1112_1314_1516_1718u64.to_le_bytes());
-        assert_eq!(&body[32..], b"ab");
+        assert_eq!(&body[32..40], &0x2122_2324_2526_2728u64.to_le_bytes());
+        assert_eq!(&body[40..], b"ab");
+    }
+
+    /// Hand-build a v1 request body (32-byte header, no deadline).
+    fn encode_request_v1(kind: u8, id: u64, dataset: &str, offset: u64, len: u64) -> Vec<u8> {
+        let name = dataset.as_bytes();
+        let mut out = Vec::with_capacity(32 + name.len());
+        out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        out.extend_from_slice(&1u16.to_le_bytes());
+        out.push(kind);
+        out.push(name.len() as u8);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&offset.to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(name);
+        out
+    }
+
+    #[test]
+    fn v1_request_frames_still_accepted() {
+        // The v1 compat path: a 32-byte-header Get decodes with
+        // deadline 0; Stat and Shutdown decode identically.
+        let body = encode_request_v1(1, 9, "MC0", 128, 256);
+        assert_eq!(
+            decode_request(&body).unwrap(),
+            WireRequest::Get { id: 9, dataset: "MC0".into(), offset: 128, len: 256, deadline_ms: 0 }
+        );
+        let body = encode_request_v1(2, 3, "d", 0, 0);
+        let want = WireRequest::Stat { id: 3, dataset: "d".into() };
+        assert_eq!(decode_request(&body).unwrap(), want);
+        let body = encode_request_v1(3, 4, "", 0, 0);
+        assert_eq!(decode_request(&body).unwrap(), WireRequest::Shutdown { id: 4 });
+        // v1 truncations still all error.
+        let good = encode_request_v1(1, 9, "MC0", 128, 256);
+        for cut in 0..good.len() {
+            assert!(decode_request(&good[..cut]).is_err(), "v1 cut at {cut}");
+        }
+        // Versions outside [min, current] are rejected.
+        let mut bad = encode_request_v1(1, 9, "MC0", 128, 256);
+        bad[4] = 0;
+        assert!(decode_request(&bad).is_err());
+        bad[4] = 3;
+        assert!(decode_request(&bad).is_err());
     }
 
     #[test]
@@ -593,6 +719,28 @@ mod tests {
     }
 
     #[test]
+    fn write_response_versioned_stamps_and_roundtrips() {
+        // The daemon echoes the requester's version; both stamps must
+        // decode, differing only in the version field.
+        let resp = WireResponse { id: 5, status: Status::Ok, payload: vec![9; 16] };
+        for version in [1u16, 2] {
+            let mut wire = Vec::new();
+            write_response_versioned(&mut wire, &resp, version).unwrap();
+            // Skip the u32 length prefix; version lives at body[4..6].
+            assert_eq!(&wire[8..10], &version.to_le_bytes());
+            assert_eq!(decode_response(&wire[4..]).unwrap(), resp);
+        }
+    }
+
+    #[test]
+    fn decode_request_versioned_reports_the_frame_version() {
+        let v2 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        assert_eq!(decode_request_versioned(&v2).unwrap().1, 2);
+        let v1 = encode_request_v1(3, 1, "", 0, 0);
+        assert_eq!(decode_request_versioned(&v1).unwrap().1, 1);
+    }
+
+    #[test]
     fn request_id_hint_survives_malformed_kind() {
         // A well-framed request with a bad kind byte still yields its
         // id for error correlation.
@@ -602,6 +750,20 @@ mod tests {
         assert!(decode_request(&body).is_err());
         assert_eq!(request_id_hint(&body), 42);
         assert_eq!(request_id_hint(b"short"), 0);
+    }
+
+    #[test]
+    fn request_version_hint_recovers_supported_versions_only() {
+        let mut v1 = encode_request_v1(1, 1, "d", 0, 0);
+        v1[6] = 99; // malformed kind; version field intact
+        assert_eq!(request_version_hint(&v1), 1);
+        let v2 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        assert_eq!(request_version_hint(&v2), 2);
+        // Garbage or unsupported versions fall back to the current one.
+        let mut bad = v1.clone();
+        bad[4] = 0x7F;
+        assert_eq!(request_version_hint(&bad), WIRE_VERSION);
+        assert_eq!(request_version_hint(b"abc"), WIRE_VERSION);
     }
 
     #[test]
@@ -636,6 +798,7 @@ mod tests {
                 dataset: "MC0".into(),
                 offset: 10,
                 len: 20,
+                deadline_ms: 0,
             })
             .unwrap(),
             encode_request(&WireRequest::Shutdown { id: 2 }).unwrap(),
@@ -687,6 +850,7 @@ mod tests {
             dataset: "n".repeat(MAX_NAME_LEN),
             offset: u64::MAX,
             len: u64::MAX,
+            deadline_ms: u64::MAX,
         })
         .unwrap();
         assert!((widest.len() as u32) <= MAX_REQUEST_FRAME_LEN);

@@ -1,0 +1,416 @@
+//! File-backed datasets: the on-disk side of the serving path.
+//!
+//! Production corpora live as container files on disk (DESIGN.md §8),
+//! not as buffers synthesized at daemon startup. A [`FileDataset`]
+//! opens one `codag pack`-written container file, validates the header
+//! and chunk index up front, and then fetches *compressed chunks
+//! lazily* — the payload section is never resident in memory, only the
+//! chunks a request actually touches are read (std-only: positioned
+//! reads behind a file lock, no mmap). [`load_dir`] scans a
+//! `--data-dir` for `<name>.codag` files and is what `codag serve
+//! --data-dir` feeds into the [`Registry`](crate::coordinator::Registry)
+//! as [`DatasetSource::File`](crate::coordinator::router::DatasetSource)
+//! entries.
+//!
+//! Error taxonomy (pinned by the unit suite): a malformed file —
+//! truncated header/index, bad magic/version/codec, an index entry
+//! pointing outside the payload, inconsistent uncompressed sizes —
+//! is `Error::Corrupt`; an out-of-range chunk request is
+//! `Error::Invalid`; filesystem failures are `Error::Io`. Nothing
+//! panics on hostile files.
+
+use crate::codecs::CodecKind;
+use crate::format::container::{ChunkEntry, MAGIC, VERSION};
+use crate::{corrupt, invalid, Error, Result};
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Fixed container header length (magic + version + codec + chunk_size
+/// + total_uncompressed + n_chunks; see DESIGN.md §2).
+const HEADER_LEN: u64 = 36;
+/// Bytes per chunk index entry (comp_off, comp_len, uncomp_len).
+const ENTRY_LEN: u64 = 24;
+
+/// One container file opened for serving: parsed header + chunk index,
+/// with compressed chunk payloads fetched lazily per request.
+#[derive(Debug)]
+pub struct FileDataset {
+    path: PathBuf,
+    /// Positioned reads go through one lock; chunk fetches are short
+    /// (seek + read of one compressed chunk) and mostly page-cache
+    /// hits, so a plain mutex beats per-shard file handles in
+    /// complexity at this scale.
+    file: Mutex<File>,
+    codec: CodecKind,
+    chunk_size: usize,
+    total_uncompressed: u64,
+    index: Vec<ChunkEntry>,
+    /// File offset where the payload section starts.
+    payload_off: u64,
+    /// Payload section length (file length minus header and index).
+    payload_len: u64,
+    /// Reusable compressed-side read buffers (checked out per decode,
+    /// capacity warm): the daemon's steady state allocates no
+    /// per-request Vec on the file path, mirroring the output-side
+    /// scratch pool in `coordinator::Service` (DESIGN.md §7.3).
+    comp_pool: Mutex<Vec<Vec<u8>>>,
+}
+
+/// Compressed-side buffers retained per dataset (a bound on idle
+/// memory; shard workers are few, so checkout contention is nil).
+const COMP_POOL_CAP: usize = 8;
+
+impl FileDataset {
+    /// Open and validate a container file; the payload stays on disk.
+    pub fn open(path: impl AsRef<Path>) -> Result<FileDataset> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::open(&path)?;
+        let file_len = file.metadata()?.len();
+        let mut head = [0u8; HEADER_LEN as usize];
+        read_exact_or_corrupt(&mut file, &mut head, "container header")?;
+        let magic = u32::from_le_bytes(head[0..4].try_into().unwrap());
+        if magic != MAGIC {
+            return Err(corrupt(format!("{}: bad magic 0x{magic:08X}", path.display())));
+        }
+        let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
+        if version != VERSION {
+            return Err(corrupt(format!(
+                "{}: unsupported container version {version}",
+                path.display()
+            )));
+        }
+        let codec_raw = u32::from_le_bytes(head[8..12].try_into().unwrap());
+        let codec = CodecKind::from_u32(codec_raw)
+            .ok_or_else(|| corrupt(format!("{}: unknown codec {codec_raw}", path.display())))?;
+        let chunk_size = u64::from_le_bytes(head[12..20].try_into().unwrap());
+        let total_uncompressed = u64::from_le_bytes(head[20..28].try_into().unwrap());
+        let n_chunks = u64::from_le_bytes(head[28..36].try_into().unwrap());
+        // The index must fit inside the file before anything is
+        // allocated for it — a hostile n_chunks cannot force a large
+        // allocation.
+        let index_len = n_chunks
+            .checked_mul(ENTRY_LEN)
+            .filter(|&l| l <= file_len.saturating_sub(HEADER_LEN))
+            .ok_or_else(|| corrupt(format!("{}: index larger than file", path.display())))?;
+        if n_chunks > 0 && chunk_size == 0 {
+            return Err(corrupt(format!("{}: zero chunk_size with chunks", path.display())));
+        }
+        let mut index_bytes = vec![0u8; index_len as usize];
+        read_exact_or_corrupt(&mut file, &mut index_bytes, "chunk index")?;
+        let payload_off = HEADER_LEN + index_len;
+        let payload_len = file_len - payload_off;
+        let mut index = Vec::with_capacity(n_chunks as usize);
+        let mut uncomp_sum = 0u64;
+        for (i, e) in index_bytes.chunks_exact(ENTRY_LEN as usize).enumerate() {
+            let entry = ChunkEntry {
+                comp_off: u64::from_le_bytes(e[0..8].try_into().unwrap()),
+                comp_len: u64::from_le_bytes(e[8..16].try_into().unwrap()),
+                uncomp_len: u64::from_le_bytes(e[16..24].try_into().unwrap()),
+            };
+            let end = entry
+                .comp_off
+                .checked_add(entry.comp_len)
+                .ok_or_else(|| corrupt(format!("{}: chunk {i} index overflow", path.display())))?;
+            if end > payload_len {
+                return Err(corrupt(format!(
+                    "{}: chunk {i} extends past the payload section",
+                    path.display()
+                )));
+            }
+            if entry.uncomp_len > chunk_size {
+                return Err(corrupt(format!(
+                    "{}: chunk {i} uncompressed length {} exceeds chunk size {}",
+                    path.display(),
+                    entry.uncomp_len,
+                    chunk_size
+                )));
+            }
+            uncomp_sum = uncomp_sum.checked_add(entry.uncomp_len).ok_or_else(|| {
+                corrupt(format!("{}: uncompressed total overflow", path.display()))
+            })?;
+            index.push(entry);
+        }
+        if uncomp_sum != total_uncompressed {
+            return Err(corrupt(format!(
+                "{}: index sums to {uncomp_sum} uncompressed bytes, header says {total_uncompressed}",
+                path.display()
+            )));
+        }
+        Ok(FileDataset {
+            path,
+            file: Mutex::new(file),
+            codec,
+            chunk_size: chunk_size as usize,
+            total_uncompressed,
+            index,
+            payload_off,
+            payload_len,
+            comp_pool: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Codec every chunk was compressed with.
+    pub fn codec(&self) -> CodecKind {
+        self.codec
+    }
+
+    /// Nominal uncompressed chunk size.
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Total uncompressed length.
+    pub fn total_uncompressed(&self) -> u64 {
+        self.total_uncompressed
+    }
+
+    /// Per-chunk index (validated at open).
+    pub fn index(&self) -> &[ChunkEntry] {
+        &self.index
+    }
+
+    /// Number of chunks.
+    pub fn n_chunks(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Compressed payload bytes on disk.
+    pub fn compressed_len(&self) -> u64 {
+        self.payload_len
+    }
+
+    /// Fetch the compressed bytes of chunk `i` into `buf` (cleared
+    /// first, capacity reused). This is the lazy read: one seek + one
+    /// exact read of the chunk span.
+    pub fn read_chunk_into(&self, i: usize, buf: &mut Vec<u8>) -> Result<()> {
+        let e = *self
+            .index
+            .get(i)
+            .ok_or_else(|| invalid(format!("chunk {i} out of range (have {})", self.index.len())))?;
+        buf.clear();
+        buf.resize(e.comp_len as usize, 0);
+        let mut file = self.file.lock().unwrap();
+        file.seek(SeekFrom::Start(self.payload_off + e.comp_off))?;
+        read_exact_or_corrupt(&mut *file, buf, "compressed chunk (file shrank after open?)")?;
+        Ok(())
+    }
+
+    /// Decompress chunk `i` into a caller-owned buffer (cleared first,
+    /// capacity reused) — the file-backed twin of
+    /// [`Container::decompress_chunk_into`](crate::format::container::Container::decompress_chunk_into).
+    /// The compressed bytes land in a pooled buffer, so the steady
+    /// state is allocation-free on both sides of the decode.
+    pub fn decompress_chunk_into(&self, i: usize, out: &mut Vec<u8>) -> Result<()> {
+        let mut comp = self.comp_pool.lock().unwrap().pop().unwrap_or_default();
+        let decoded = self.decompress_pooled(i, &mut comp, out);
+        comp.clear();
+        let mut pool = self.comp_pool.lock().unwrap();
+        if pool.len() < COMP_POOL_CAP {
+            pool.push(comp);
+        }
+        decoded
+    }
+
+    fn decompress_pooled(&self, i: usize, comp: &mut Vec<u8>, out: &mut Vec<u8>) -> Result<()> {
+        self.read_chunk_into(i, comp)?;
+        let want = self.index[i].uncomp_len as usize;
+        out.clear();
+        out.reserve(want);
+        let mut sink = crate::decomp::ByteSink { out: std::mem::take(out) };
+        let decoded = crate::codecs::decode_into(self.codec, &comp[..], &mut sink);
+        *out = sink.into_bytes();
+        decoded?;
+        if out.len() != want {
+            return Err(corrupt(format!(
+                "{}: chunk {i} decompressed {} bytes, index says {want}",
+                self.path.display(),
+                out.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// `read_exact` that maps a short read to `Corrupt` (truncated file)
+/// instead of a generic I/O error, keeping the error taxonomy typed.
+fn read_exact_or_corrupt(r: &mut impl Read, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            corrupt(format!("truncated {what}"))
+        } else {
+            Error::from(e)
+        }
+    })
+}
+
+/// Scan `dir` for `<name>.codag` container files and open each one,
+/// sorted by name (deterministic registration order). An unreadable
+/// directory is `Io`; a malformed file is `Corrupt` naming the file.
+pub fn load_dir(dir: impl AsRef<Path>) -> Result<Vec<(String, FileDataset)>> {
+    let dir = dir.as_ref();
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("codag") {
+            paths.push(path);
+        }
+    }
+    paths.sort();
+    let mut out = Vec::with_capacity(paths.len());
+    for path in paths {
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| invalid(format!("non-UTF-8 dataset file name: {}", path.display())))?
+            .to_string();
+        out.push((name, FileDataset::open(&path)?));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::format::container::Container;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Unique temp path per test (the suite runs in one process).
+    fn tmp_path(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        std::env::temp_dir().join(format!("codag-store-{}-{tag}-{n}", std::process::id()))
+    }
+
+    fn sample_data() -> Vec<u8> {
+        let mut v = Vec::new();
+        for i in 0..3000u32 {
+            let b = (i % 11) as u8;
+            for _ in 0..(i % 7 + 1) {
+                v.push(b);
+            }
+        }
+        v
+    }
+
+    fn write_sample(tag: &str, codec: CodecKind) -> (PathBuf, Vec<u8>, Container) {
+        let data = sample_data();
+        let c = Container::compress(&data, codec, 4096).unwrap();
+        let path = tmp_path(tag).with_extension("codag");
+        std::fs::write(&path, c.to_bytes()).unwrap();
+        (path, data, c)
+    }
+
+    #[test]
+    fn open_serves_byte_identical_chunks() {
+        for codec in [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate] {
+            let (path, data, c) = write_sample("roundtrip", codec);
+            let fd = FileDataset::open(&path).unwrap();
+            assert_eq!(fd.codec(), codec);
+            assert_eq!(fd.chunk_size(), 4096);
+            assert_eq!(fd.total_uncompressed(), data.len() as u64);
+            assert_eq!(fd.n_chunks(), c.n_chunks());
+            let mut comp = Vec::new();
+            let mut out = Vec::new();
+            let mut all = Vec::new();
+            for i in 0..fd.n_chunks() {
+                // Lazy compressed fetch matches the in-memory payload.
+                fd.read_chunk_into(i, &mut comp).unwrap();
+                assert_eq!(comp, c.chunk_bytes(i).unwrap(), "chunk {i}");
+                fd.decompress_chunk_into(i, &mut out).unwrap();
+                all.extend_from_slice(&out);
+            }
+            assert_eq!(all, data, "{codec:?}");
+            std::fs::remove_file(&path).ok();
+        }
+    }
+
+    #[test]
+    fn out_of_range_chunk_is_invalid_not_panic() {
+        let (path, _, c) = write_sample("range", CodecKind::RleV1);
+        let fd = FileDataset::open(&path).unwrap();
+        let mut buf = Vec::new();
+        let err = fd.read_chunk_into(c.n_chunks() + 3, &mut buf).unwrap_err();
+        assert!(matches!(err, Error::Invalid(_)), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_file_is_corrupt_at_every_cut() {
+        let (path, _, c) = write_sample("trunc", CodecKind::RleV2);
+        let bytes = c.to_bytes();
+        // Cuts through the header and the index must fail at open; cuts
+        // through the payload must fail at open (index past payload) —
+        // never panic, never misreport as Io.
+        let header_and_index = (HEADER_LEN + ENTRY_LEN * c.n_chunks() as u64) as usize;
+        for cut in [0, 4, 12, 35, header_and_index - 1, header_and_index + 1, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = FileDataset::open(&path).unwrap_err();
+            assert!(matches!(err, Error::Corrupt(_)), "cut {cut}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_header_fields_are_corrupt_errors() {
+        let (path, _, c) = write_sample("header", CodecKind::Deflate);
+        let good = c.to_bytes();
+        // (offset, value) mutations: magic, version, codec, hostile
+        // n_chunks, index entry past payload, inconsistent uncomp_len.
+        let mut cases: Vec<Vec<u8>> = Vec::new();
+        let mut m = good.clone();
+        m[0] ^= 0xFF; // magic
+        cases.push(m);
+        let mut m = good.clone();
+        m[4] = 0xEE; // version
+        cases.push(m);
+        let mut m = good.clone();
+        m[8] = 0x7F; // codec
+        cases.push(m);
+        let mut m = good.clone();
+        m[28..36].copy_from_slice(&u64::MAX.to_le_bytes()); // n_chunks
+        cases.push(m);
+        let mut m = good.clone();
+        m[36..44].copy_from_slice(&u64::MAX.to_le_bytes()); // chunk 0 comp_off
+        cases.push(m);
+        let mut m = good.clone();
+        m[52..60].copy_from_slice(&u64::MAX.to_le_bytes()); // chunk 0 uncomp_len
+        cases.push(m);
+        for (i, bad) in cases.into_iter().enumerate() {
+            std::fs::write(&path, &bad).unwrap();
+            let err = FileDataset::open(&path).unwrap_err();
+            assert!(matches!(err, Error::Corrupt(_)), "case {i}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io() {
+        let err = FileDataset::open(tmp_path("missing")).unwrap_err();
+        assert!(matches!(err, Error::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn load_dir_scans_and_sorts() {
+        let dir = tmp_path("dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data = sample_data();
+        for name in ["zeta", "alpha"] {
+            let c = Container::compress(&data, CodecKind::RleV1, 4096).unwrap();
+            std::fs::write(dir.join(format!("{name}.codag")), c.to_bytes()).unwrap();
+        }
+        // Non-container files are ignored.
+        std::fs::write(dir.join("notes.txt"), b"ignored").unwrap();
+        let loaded = load_dir(&dir).unwrap();
+        let names: Vec<&str> = loaded.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha", "zeta"]);
+        assert_eq!(loaded[0].1.total_uncompressed(), data.len() as u64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -108,8 +108,13 @@ fn concurrent_clients_get_byte_identical_ranges() {
                     let offset = rng.below(total);
                     let len = 1 + rng.below((total - offset).min(80_000));
                     let id = (client << 32) | r;
-                    let resp =
-                        conn.rpc(&WireRequest::Get { id, dataset: name.into(), offset, len });
+                    let resp = conn.rpc(&WireRequest::Get {
+                        id,
+                        dataset: name.into(),
+                        offset,
+                        len,
+                        deadline_ms: 0,
+                    });
                     assert_eq!(
                         resp.status,
                         Status::Ok,
@@ -145,26 +150,46 @@ fn repeated_ranged_read_served_from_cache() {
     let cfg = DaemonConfig { shards: 1, cache_bytes: 8 << 20, ..DaemonConfig::default() };
     let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
     let mut conn = Client::connect(handle.addr());
-    // A range inside chunk 1 (64 KiB chunks).
-    let resp =
-        conn.rpc(&WireRequest::Get { id: 1, dataset: "hot".into(), offset: 66_000, len: 1_000 });
-    assert_eq!(resp.status, Status::Ok);
-    assert_eq!(resp.payload, &data[66_000..67_000]);
+    // A range inside chunk 1 (64 KiB chunks). Ghost-LRU admission:
+    // the first touch of the chunk key is declined (recorded in the
+    // ghost), the second touch admits + inserts, the third read hits.
+    let get = |conn: &mut Client, id: u64| {
+        let resp = conn.rpc(&WireRequest::Get {
+            id,
+            dataset: "hot".into(),
+            offset: 66_000,
+            len: 1_000,
+            deadline_ms: 0,
+        });
+        assert_eq!(resp.status, Status::Ok);
+        assert_eq!(resp.payload, &data[66_000..67_000]);
+    };
+    get(&mut conn, 1);
     assert!(handle.cache().misses() >= 1, "first read must miss");
+    assert!(handle.cache().admit_declines() >= 1, "first touch must be declined");
+    get(&mut conn, 2);
+    assert!(handle.cache().ghost_hits() >= 1, "second touch must admit via the ghost");
     let hits_before = handle.cache().hits();
-    let resp =
-        conn.rpc(&WireRequest::Get { id: 2, dataset: "hot".into(), offset: 66_000, len: 1_000 });
-    assert_eq!(resp.status, Status::Ok);
-    assert_eq!(resp.payload, &data[66_000..67_000]);
+    get(&mut conn, 3);
     assert!(
         handle.cache().hits() > hits_before,
-        "repeated ranged read must be served from the chunk cache"
+        "third identical ranged read must be served from the chunk cache"
     );
+    // The v2 Stat payload surfaces the same counters over the wire.
+    let resp = conn.rpc(&WireRequest::Stat { id: 9, dataset: "hot".into() });
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload.len(), 64);
+    let word = |i: usize| u64::from_le_bytes(resp.payload[i..i + 8].try_into().unwrap());
+    assert_eq!(word(0), data.len() as u64);
+    assert_eq!(word(24), handle.cache().hits());
+    assert_eq!(word(32), handle.cache().misses());
+    assert_eq!(word(48), handle.cache().admit_declines());
+    assert_eq!(word(56), handle.cache().ghost_hits());
     // Cache counters surface through the LatencyStats snapshot.
     let stats = handle.join().expect("clean join");
     assert!(stats.cache_hits() >= 1);
     assert!(stats.cache_misses() >= 1);
-    assert_eq!(stats.count(), 2);
+    assert_eq!(stats.count(), 3);
 }
 
 #[test]
@@ -186,7 +211,13 @@ fn flooding_a_shard_yields_busy_without_deadlock() {
     let mut conn = Client::connect(handle.addr());
     const FLOOD: u64 = 48;
     for id in 0..FLOOD {
-        conn.send(&WireRequest::Get { id, dataset: "flood".into(), offset: 0, len: 0 });
+        conn.send(&WireRequest::Get {
+            id,
+            dataset: "flood".into(),
+            offset: 0,
+            len: 0,
+            deadline_ms: 0,
+        });
     }
     let mut statuses: HashMap<u64, Status> = HashMap::new();
     let mut ok = 0u64;
@@ -232,7 +263,13 @@ fn connection_inflight_limit_bounds_response_buffering() {
     let mut conn = Client::connect(handle.addr());
     const PIPELINED: u64 = 32;
     for id in 0..PIPELINED {
-        conn.send(&WireRequest::Get { id, dataset: "big".into(), offset: 0, len: 0 });
+        conn.send(&WireRequest::Get {
+            id,
+            dataset: "big".into(),
+            offset: 0,
+            len: 0,
+            deadline_ms: 0,
+        });
     }
     let (mut ok, mut busy) = (0u64, 0u64);
     for _ in 0..PIPELINED {
@@ -262,8 +299,13 @@ fn protocol_errors_are_reported_not_fatal() {
     {
         let mut conn = Client::connect(addr);
         // Unknown dataset.
-        let resp =
-            conn.rpc(&WireRequest::Get { id: 1, dataset: "nope".into(), offset: 0, len: 1 });
+        let resp = conn.rpc(&WireRequest::Get {
+            id: 1,
+            dataset: "nope".into(),
+            offset: 0,
+            len: 1,
+            deadline_ms: 0,
+        });
         assert_eq!(resp.status, Status::NotFound);
         let resp = conn.rpc(&WireRequest::Stat { id: 2, dataset: "nope".into() });
         assert_eq!(resp.status, Status::NotFound);
@@ -273,6 +315,7 @@ fn protocol_errors_are_reported_not_fatal() {
             dataset: "d".into(),
             offset: u64::MAX,
             len: 1,
+            deadline_ms: 0,
         });
         assert_eq!(resp.status, Status::BadRequest);
         // Hostile length where offset + len overflows u64: must clamp
@@ -282,12 +325,18 @@ fn protocol_errors_are_reported_not_fatal() {
             dataset: "d".into(),
             offset: 1,
             len: u64::MAX,
+            deadline_ms: 0,
         });
         assert_eq!(resp.status, Status::Ok);
         assert_eq!(resp.payload, &data[1..]);
         // A well-formed request still works afterwards.
-        let resp =
-            conn.rpc(&WireRequest::Get { id: 4, dataset: "d".into(), offset: 100, len: 50 });
+        let resp = conn.rpc(&WireRequest::Get {
+            id: 4,
+            dataset: "d".into(),
+            offset: 100,
+            len: 50,
+            deadline_ms: 0,
+        });
         assert_eq!(resp.status, Status::Ok);
         assert_eq!(resp.payload, &data[100..150]);
     }
@@ -317,7 +366,13 @@ fn wire_shutdown_drains_and_joins() {
     let client = std::thread::spawn(move || {
         std::thread::sleep(Duration::from_millis(100));
         let mut conn = Client::connect(addr);
-        let resp = conn.rpc(&WireRequest::Get { id: 1, dataset: "d".into(), offset: 0, len: 0 });
+        let resp = conn.rpc(&WireRequest::Get {
+            id: 1,
+            dataset: "d".into(),
+            offset: 0,
+            len: 0,
+            deadline_ms: 0,
+        });
         assert_eq!(resp.status, Status::Ok);
         let resp = conn.rpc(&WireRequest::Shutdown { id: 2 });
         assert_eq!(resp.status, Status::Ok);

@@ -1,0 +1,245 @@
+//! End-to-end gates for the hardened serving path (DESIGN.md §6 v2 +
+//! §8):
+//!
+//! * a `codag pack`-shaped container *file* served via `--data-dir`
+//!   plumbing (`DatasetSource::File`) returns byte-identical chunks
+//!   over loopback TCP,
+//! * a request whose deadline is already past at dequeue returns
+//!   `Expired` without consuming a decode slot (stats count only the
+//!   decoded requests),
+//! * hand-built protocol-v1 frames (no deadline field) are still
+//!   accepted and served.
+
+use codag::codecs::CodecKind;
+use codag::coordinator::{DatasetSource, Registry};
+use codag::data::Rng;
+use codag::format::container::Container;
+use codag::server::daemon::{start, DaemonConfig};
+use codag::server::proto::{
+    decode_response, encode_request, read_frame_blocking, write_frame, FrameReader, Status,
+    WireRequest, WireResponse,
+};
+use codag::server::store::FileDataset;
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Deterministic mildly-compressible payload.
+fn payload(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        let run = 1 + rng.below(32) as usize;
+        let b = (rng.below(7) * 31) as u8;
+        for _ in 0..run.min(len - out.len()) {
+            out.push(b);
+        }
+    }
+    out
+}
+
+/// Unique temp path per test.
+fn tmp_path(tag: &str) -> PathBuf {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static N: AtomicU64 = AtomicU64::new(0);
+    let n = N.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("codag-storeint-{}-{tag}-{n}", std::process::id()))
+}
+
+struct Client {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        Client { stream: TcpStream::connect(addr).expect("connect"), reader: FrameReader::new() }
+    }
+
+    fn send(&mut self, req: &WireRequest) {
+        let body = encode_request(req).expect("encode");
+        write_frame(&mut self.stream, &body).expect("send frame");
+    }
+
+    fn send_raw(&mut self, body: &[u8]) {
+        write_frame(&mut self.stream, body).expect("send raw frame");
+    }
+
+    fn recv(&mut self) -> WireResponse {
+        let frame = read_frame_blocking(&mut self.reader, &mut self.stream)
+            .expect("read frame")
+            .expect("connection open");
+        decode_response(&frame).expect("decode response")
+    }
+
+    fn rpc(&mut self, req: &WireRequest) -> WireResponse {
+        self.send(req);
+        self.recv()
+    }
+}
+
+#[test]
+fn file_backed_dataset_serves_byte_identical_chunks() {
+    // Pack: exactly what `codag pack` writes — a container file.
+    let data = payload(300 * 1024, 11);
+    let container = Container::compress(&data, CodecKind::RleV2, 32 * 1024).unwrap();
+    let path = tmp_path("filebacked").with_extension("codag");
+    std::fs::write(&path, container.to_bytes()).unwrap();
+    // Serve: open file-backed (payload stays on disk) next to the same
+    // dataset in memory; responses must agree with each other and with
+    // the original data.
+    let fd = FileDataset::open(&path).unwrap();
+    let mut reg = Registry::new();
+    reg.insert_source("fb", DatasetSource::File(fd));
+    reg.insert("mem", container);
+    let cfg = DaemonConfig { shards: 2, ..DaemonConfig::default() };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    let mut rng = Rng::new(0xF11E);
+    for r in 0..40u64 {
+        let total = data.len() as u64;
+        let offset = rng.below(total);
+        let len = 1 + rng.below((total - offset).min(90_000));
+        let want = &data[offset as usize..(offset + len) as usize];
+        for (base, name) in [(0u64, "fb"), (1 << 16, "mem")] {
+            let resp = conn.rpc(&WireRequest::Get {
+                id: base | r,
+                dataset: name.into(),
+                offset,
+                len,
+                deadline_ms: 0,
+            });
+            assert_eq!(resp.status, Status::Ok, "{}", String::from_utf8_lossy(&resp.payload));
+            assert_eq!(resp.payload, want, "{name} [{offset}+{len}]");
+        }
+    }
+    // Stat sees the on-disk dataset's true dimensions.
+    let resp = conn.rpc(&WireRequest::Stat { id: 7, dataset: "fb".into() });
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(&resp.payload[0..8], &(data.len() as u64).to_le_bytes());
+    handle.join().expect("clean join");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn expired_deadline_returns_expired_without_decode_slot() {
+    // One shard, one worker, no cache: full-range decodes serialize,
+    // so a 1 ms deadline queued behind them is guaranteed stale by
+    // dequeue (or by the between-items check if it lands in the same
+    // batch).
+    let data = payload(2 * 1024 * 1024, 12);
+    let container = Container::compress(&data, CodecKind::Deflate, 128 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("big", container);
+    let cfg = DaemonConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        cache_bytes: 0,
+        ..DaemonConfig::default()
+    };
+    let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    const HEAD: u64 = 3;
+    for id in 0..HEAD {
+        conn.send(&WireRequest::Get {
+            id,
+            dataset: "big".into(),
+            offset: 0,
+            len: 0,
+            deadline_ms: 0,
+        });
+    }
+    conn.send(&WireRequest::Get {
+        id: HEAD,
+        dataset: "big".into(),
+        offset: 0,
+        len: 0,
+        deadline_ms: 1,
+    });
+    let mut statuses: HashMap<u64, Status> = HashMap::new();
+    for _ in 0..=HEAD {
+        let resp = conn.recv();
+        statuses.insert(resp.id, resp.status);
+    }
+    for id in 0..HEAD {
+        assert_eq!(statuses[&id], Status::Ok, "head request {id}");
+    }
+    assert_eq!(statuses[&HEAD], Status::Expired, "stale deadline must expire, not decode");
+    // The connection survives an Expired response.
+    let resp = conn.rpc(&WireRequest::Get {
+        id: 99,
+        dataset: "big".into(),
+        offset: 10,
+        len: 100,
+        deadline_ms: 0,
+    });
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload, &data[10..110]);
+    // Expired requests never consumed a decode slot: only the decoded
+    // requests are recorded.
+    let stats = handle.join().expect("clean join");
+    assert_eq!(stats.count() as u64, HEAD + 1);
+}
+
+/// Hand-build a v1 request body (32-byte header, no deadline field;
+/// the magic literal is itself part of the layout pin).
+fn encode_request_v1(kind: u8, id: u64, dataset: &str, offset: u64, len: u64) -> Vec<u8> {
+    let name = dataset.as_bytes();
+    let mut out = Vec::with_capacity(32 + name.len());
+    out.extend_from_slice(&0xC0DA_5E01u32.to_le_bytes());
+    out.extend_from_slice(&1u16.to_le_bytes());
+    out.push(kind);
+    out.push(name.len() as u8);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(name);
+    out
+}
+
+#[test]
+fn v1_clients_are_still_served() {
+    let data = payload(96 * 1024, 13);
+    let container = Container::compress(&data, CodecKind::RleV1, 16 * 1024).unwrap();
+    let mut reg = Registry::new();
+    reg.insert("d", container);
+    let handle = start(Arc::new(reg), DaemonConfig::default(), "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    // v1 Get: decoded with deadline 0 and served normally — and the
+    // response frame is stamped v1 (a real v1 client rejects v2), so
+    // inspect the raw body before decoding it.
+    conn.send_raw(&encode_request_v1(1, 21, "d", 5_000, 2_000));
+    let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)
+        .expect("read frame")
+        .expect("connection open");
+    assert_eq!(&frame[4..6], &1u16.to_le_bytes(), "v1 request must get a v1-stamped reply");
+    let resp = decode_response(&frame).expect("decode v1-stamped response");
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.id, 21);
+    assert_eq!(resp.payload, &data[5_000..7_000]);
+    // v1 Stat: a strict v1 client requires *exactly* the 24-byte
+    // payload it knows (the cache counters are v2-only).
+    conn.send_raw(&encode_request_v1(2, 22, "d", 0, 0));
+    let resp = conn.recv();
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload.len(), 24);
+    assert_eq!(&resp.payload[0..8], &(data.len() as u64).to_le_bytes());
+    // Interleaving v2 frames on the same connection keeps working, and
+    // gets a v2-stamped reply.
+    conn.send(&WireRequest::Get {
+        id: 23,
+        dataset: "d".into(),
+        offset: 0,
+        len: 64,
+        deadline_ms: 0,
+    });
+    let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)
+        .expect("read frame")
+        .expect("connection open");
+    assert_eq!(&frame[4..6], &2u16.to_le_bytes(), "v2 request must get a v2-stamped reply");
+    let resp = decode_response(&frame).expect("decode response");
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload, &data[..64]);
+    handle.join().expect("clean join");
+}

@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Convert a record_baselines.sh capture into machine-readable JSON.
+
+Usage: bench_to_json.py EXPERIMENTS.local.md BENCH_baselines.json
+
+Parses the markdown capture written by scripts/record_baselines.sh into
+a flat metric map so CI can diff runs mechanically
+(scripts/check_baselines.py). Stdlib-only. The parser is tolerant:
+sections it does not recognize are skipped, and only the metrics
+actually found end up in the JSON.
+
+Metric kinds:
+  throughput        wall-clock rate, higher is better (gated at -30%)
+  model-throughput  deterministic simulator rate (same gate; any drift
+                    at all is a semantic change worth reading)
+  latency           lower is better (reported, warned, not gated)
+  info              counters carried along for humans
+"""
+
+import json
+import re
+import sys
+
+
+def _metric(value, unit, kind):
+    return {"value": value, "unit": unit, "kind": kind}
+
+
+def parse_codec_hotpath(lines, scale, metrics):
+    """Rows: dataset codec ratio dec-1thr dec-8thr comp-MB/s."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 6 or parts[0] == "dataset":
+            continue
+        try:
+            ratio, dec1, dec8, comp = (float(x) for x in parts[2:6])
+        except ValueError:
+            continue
+        ds, codec = parts[0], parts[1]
+        base = f"codec_hotpath/{scale}/{ds}/{codec}"
+        metrics[f"{base}/ratio"] = _metric(ratio, "x", "info")
+        metrics[f"{base}/dec1_gbps"] = _metric(dec1, "GB/s", "throughput")
+        metrics[f"{base}/dec8_gbps"] = _metric(dec8, "GB/s", "throughput")
+        metrics[f"{base}/comp_mbps"] = _metric(comp, "MB/s", "throughput")
+
+
+def parse_fig7(lines, scale, metrics):
+    """Rows: codec dataset codag rapids speedup-x (incl. geomean rows)."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 5 or parts[0] == "Codec":
+            continue
+        try:
+            codag = float(parts[2])
+            rapids = float(parts[3])
+        except ValueError:
+            continue
+        codec, ds = parts[0], parts[1]
+        base = f"fig7/{scale}/{ds}/{codec}"
+        metrics[f"{base}/codag_gbps"] = _metric(codag, "GB/s", "model-throughput")
+        metrics[f"{base}/rapids_gbps"] = _metric(rapids, "GB/s", "model-throughput")
+
+
+def parse_loadgen(lines, metrics):
+    """The LoadgenReport Display block (last measured pass wins)."""
+    req = lat = pay = None
+    for ln in lines:
+        if ln.startswith("requests:"):
+            req = ln
+        elif ln.startswith("latency:"):
+            lat = ln
+        elif ln.startswith("payload:"):
+            pay = ln
+    if req:
+        for key in ("sent", "ok", "busy", "expired", "failed"):
+            m = re.search(rf"\b{key}=(\d+)", req)
+            if m:
+                metrics[f"loadgen/{key}"] = _metric(int(m.group(1)), "req", "info")
+    if lat:
+        for pct in ("p50", "p90", "p99"):
+            m = re.search(rf"\b{pct}=(\d+)us", lat)
+            if m:
+                metrics[f"loadgen/{pct}_us"] = _metric(int(m.group(1)), "us", "latency")
+    if pay:
+        m = re.search(r"\(([\d.]+) GB/s\)", pay)
+        if m:
+            metrics["loadgen/gbps"] = _metric(float(m.group(1)), "GB/s", "throughput")
+
+
+def parse_ablation(lines, metrics):
+    """The `codag loadgen --ablate-batch` markdown table."""
+    for ln in lines:
+        if not ln.strip().startswith("|"):
+            continue
+        cells = [c.strip() for c in ln.strip().strip("|").split("|")]
+        if len(cells) != 8 or not cells[0].isdigit():
+            continue
+        depth = cells[0]
+        base = f"ablate_batch/depth{depth}"
+        try:
+            metrics[f"{base}/ok"] = _metric(int(cells[2]), "req", "info")
+            metrics[f"{base}/p50_us"] = _metric(int(cells[5]), "us", "latency")
+            metrics[f"{base}/p99_us"] = _metric(int(cells[6]), "us", "latency")
+            metrics[f"{base}/gbps"] = _metric(float(cells[7]), "GB/s", "throughput")
+        except ValueError:
+            continue
+
+
+SECTION_PARSERS = [
+    ("## codec_hotpath (paper scale", lambda ls, m: parse_codec_hotpath(ls, "paper", m)),
+    ("## codec_hotpath", lambda ls, m: parse_codec_hotpath(ls, "default", m)),
+    ("## fig7_throughput (paper scale", lambda ls, m: parse_fig7(ls, "paper", m)),
+    ("## fig7_throughput", lambda ls, m: parse_fig7(ls, "default", m)),
+    ("## loadgen batching ablation", lambda ls, m: parse_ablation(ls, m)),
+    ("## loadgen", lambda ls, m: parse_loadgen(ls, m)),
+]
+
+
+def parse_capture(text):
+    """Split the capture into `##` sections and run the right parser
+    on each (first matching prefix wins; more specific prefixes are
+    listed first)."""
+    meta = {}
+    for key in ("date", "host", "commit"):
+        m = re.search(rf"^- {key}: (.+)$", text, re.MULTILINE)
+        if m:
+            meta[key] = m.group(1).strip()
+    metrics = {}
+    sections = re.split(r"^(## .+)$", text, flags=re.MULTILINE)
+    # sections = [preamble, header, body, header, body, ...]
+    for header, body in zip(sections[1::2], sections[2::2]):
+        for prefix, parser in SECTION_PARSERS:
+            if header.startswith(prefix):
+                parser(body.splitlines(), metrics)
+                break
+    return {"schema": 1, **meta, "metrics": metrics}
+
+
+def main(argv):
+    if len(argv) != 3:
+        print(__doc__, file=sys.stderr)
+        return 2
+    with open(argv[1], encoding="utf-8") as f:
+        doc = parse_capture(f.read())
+    doc["source"] = argv[1]
+    with open(argv[2], "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    n = len(doc["metrics"])
+    print(f"wrote {n} metrics to {argv[2]}")
+    if n == 0:
+        print("warning: no metrics parsed — capture format drift?", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

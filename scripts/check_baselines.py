@@ -1,0 +1,173 @@
+#!/usr/bin/env python3
+"""Gate CI on perf regressions against checked-in reference baselines.
+
+Usage:
+  check_baselines.py CURRENT.json [--reference scripts/baselines_reference.json]
+                     [--max-regression 0.30]
+  check_baselines.py --write-reference CURRENT.json [--reference ...]
+  check_baselines.py --self-test
+
+CURRENT.json is the BENCH_baselines.json emitted by
+scripts/bench_to_json.py from a record_baselines.sh capture. The
+reference file holds the committed numbers future runs are diffed
+against.
+
+Rules (stdlib-only, importable — python/tests/test_check_baselines.py
+pins them, including the 2x-slowdown negative case):
+  * throughput / model-throughput reference metrics FAIL the job when
+    the current value drops more than --max-regression (default 30%)
+    below the reference, or when the metric disappeared from the
+    current capture (coverage loss hides regressions).
+  * latency metrics only WARN (wall-clock noise on shared runners cuts
+    both ways; the throughput gate is the contract).
+  * an unarmed reference (no numeric throughput entries yet) passes
+    with a notice — arm it from the first trusted CI artifact with
+    --write-reference.
+"""
+
+import argparse
+import json
+import sys
+
+GATED_KINDS = ("throughput", "model-throughput")
+
+
+def compare(reference, current, max_regression=0.30):
+    """Diff two metric maps. Returns (failures, warnings, notes) as
+    lists of human-readable strings; empty failures == gate passes."""
+    failures, warnings, notes = [], [], []
+    ref_metrics = reference.get("metrics", {})
+    cur_metrics = current.get("metrics", {})
+    armed = 0
+    for name, ref in sorted(ref_metrics.items()):
+        value = ref.get("value")
+        kind = ref.get("kind", "info")
+        if value is None:
+            continue
+        cur = cur_metrics.get(name)
+        if kind in GATED_KINDS:
+            armed += 1
+            if cur is None or cur.get("value") is None:
+                failures.append(
+                    f"{name}: missing from current capture (reference {value})"
+                )
+                continue
+            curv = cur["value"]
+            floor = value * (1.0 - max_regression)
+            if curv < floor:
+                drop = 100.0 * (1.0 - curv / value) if value else 0.0
+                failures.append(
+                    f"{name}: {curv:g} {ref.get('unit', '')} is {drop:.1f}% below "
+                    f"reference {value:g} (allowed {100.0 * max_regression:.0f}%)"
+                )
+        elif kind == "latency" and cur is not None and cur.get("value") is not None:
+            if value > 0 and cur["value"] > 2.0 * value:
+                warnings.append(
+                    f"{name}: {cur['value']:g} {ref.get('unit', '')} vs reference "
+                    f"{value:g} (>2x; not gated)"
+                )
+    if armed == 0:
+        notes.append(
+            "reference is not armed (no numeric throughput entries) — record a "
+            "trusted capture and run --write-reference to enable the gate"
+        )
+    return failures, warnings, notes
+
+
+def write_reference(current, ref_path):
+    """Arm the reference: copy every gateable/latency metric's value."""
+    metrics = {}
+    for name, m in sorted(current.get("metrics", {}).items()):
+        if m.get("kind") in GATED_KINDS + ("latency",):
+            metrics[name] = {
+                "value": m.get("value"),
+                "unit": m.get("unit"),
+                "kind": m.get("kind"),
+            }
+    doc = {
+        "schema": 1,
+        "armed_from": {k: current.get(k) for k in ("date", "host", "commit") if k in current},
+        "metrics": metrics,
+    }
+    with open(ref_path, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"armed {ref_path} with {len(metrics)} reference metrics")
+
+
+def self_test():
+    """Pin the checker's own behavior (the committed negative test in
+    python/tests/test_check_baselines.py runs these too, under pytest)."""
+    ref = {
+        "metrics": {
+            "codec_hotpath/default/MC0/rlev2/dec1_gbps": {
+                "value": 10.0, "unit": "GB/s", "kind": "throughput"},
+            "loadgen/p99_us": {"value": 100, "unit": "us", "kind": "latency"},
+        }
+    }
+
+    def cur(thr, lat=100):
+        return {
+            "metrics": {
+                "codec_hotpath/default/MC0/rlev2/dec1_gbps": {
+                    "value": thr, "unit": "GB/s", "kind": "throughput"},
+                "loadgen/p99_us": {"value": lat, "unit": "us", "kind": "latency"},
+            }
+        }
+
+    checks = [
+        ("equal passes", compare(ref, cur(10.0))[0] == []),
+        ("20% drop passes", compare(ref, cur(8.0))[0] == []),
+        ("2x slowdown fails", compare(ref, cur(5.0))[0] != []),
+        ("31% drop fails", compare(ref, cur(6.9))[0] != []),
+        ("missing metric fails", compare(ref, {"metrics": {}})[0] != []),
+        ("latency 3x warns not fails",
+         compare(ref, cur(10.0, 300))[0] == [] and compare(ref, cur(10.0, 300))[1] != []),
+        ("unarmed reference passes with note",
+         compare({"metrics": {}}, cur(10.0))[0] == []
+         and compare({"metrics": {}}, cur(10.0))[2] != []),
+    ]
+    ok = True
+    for name, passed in checks:
+        print(f"  [{'ok' if passed else 'FAIL'}] {name}")
+        ok = ok and passed
+    return ok
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?", help="BENCH_baselines.json from this run")
+    ap.add_argument("--reference", default="scripts/baselines_reference.json")
+    ap.add_argument("--max-regression", type=float, default=0.30)
+    ap.add_argument("--write-reference", action="store_true")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        print("check_baselines self-test:")
+        return 0 if self_test() else 1
+    if not args.current:
+        ap.error("CURRENT.json required unless --self-test")
+    with open(args.current, encoding="utf-8") as f:
+        current = json.load(f)
+    if args.write_reference:
+        write_reference(current, args.reference)
+        return 0
+    with open(args.reference, encoding="utf-8") as f:
+        reference = json.load(f)
+    failures, warnings, notes = compare(reference, current, args.max_regression)
+    for n in notes:
+        print(f"note: {n}")
+    for w in warnings:
+        print(f"warning: {w}")
+    for x in failures:
+        print(f"FAIL: {x}")
+    if failures:
+        print(f"{len(failures)} throughput regression(s) past "
+              f"{100.0 * args.max_regression:.0f}% — failing the baselines job")
+        return 1
+    print("baselines gate: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

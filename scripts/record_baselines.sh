@@ -3,14 +3,19 @@
 #   1. codec_hotpath      — wall-clock CPU codec throughput
 #   2. fig7_throughput    — simulated A100 GB/s (deterministic model)
 #   3. loadgen            — daemon path p50/p99 + GB/s over loopback TCP
+#   4. loadgen --ablate-batch — §V-F batching sweep through the daemon
 #
-# Usage: scripts/record_baselines.sh [out-file]
+# Usage: scripts/record_baselines.sh [out-file] [json-out]
 # Writes a markdown snippet (default: EXPERIMENTS.local.md) whose tables
-# paste directly into EXPERIMENTS.md. Run from the repository root on an
-# otherwise-idle machine; see EXPERIMENTS.md for the recording protocol.
+# paste directly into EXPERIMENTS.md, then converts it into
+# machine-readable metrics (default: BENCH_baselines.json) with
+# scripts/bench_to_json.py — the file scripts/check_baselines.py gates
+# CI on. Run from the repository root on an otherwise-idle machine; see
+# EXPERIMENTS.md for the recording protocol.
 set -euo pipefail
 
 OUT="${1:-EXPERIMENTS.local.md}"
+JSON_OUT="${2:-BENCH_baselines.json}"
 PORT="${CODAG_BASELINE_PORT:-7313}"
 
 echo "building release binaries..." >&2
@@ -62,15 +67,35 @@ cargo build --release --benches >&2
     fi
     sleep 0.2
   done
-  # Warm pass populates the chunk cache, measured pass is the baseline.
-  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
-    --connections 4 --requests 64 >/dev/null
+  # Two warm passes: ghost-LRU admission caches a chunk on its second
+  # touch, so the first pass seeds the ghost and the second populates
+  # the cache. The measured pass is the baseline.
+  for _ in 1 2; do
+    ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+      --connections 4 --requests 64 >/dev/null
+  done
   ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
     --connections 4 --requests 256
+  echo '```'
+  echo
+  echo '## loadgen batching ablation (§V-F)'
+  echo
+  echo '```text'
+  # Same live daemon, pipeline depths {1,8,32}: the client pipeline is
+  # what feeds the shard workers' opportunistic batching.
+  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+    --connections 4 --requests 128 --ablate-batch
+  echo '```'
   ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --shutdown >/dev/null
   wait "$SERVE_PID" 2>/dev/null || true
   trap - EXIT
-  echo '```'
 } > "$OUT"
 
 echo "baselines written to $OUT" >&2
+
+if command -v python3 >/dev/null 2>&1; then
+  python3 scripts/bench_to_json.py "$OUT" "$JSON_OUT" >&2
+  echo "machine-readable metrics written to $JSON_OUT" >&2
+else
+  echo "python3 not found: skipping $JSON_OUT emission" >&2
+fi
