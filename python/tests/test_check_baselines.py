@@ -120,6 +120,15 @@ MC0      rlev1       0.0518         11.914         38.102        310.5
 MC0      deflate     0.0217          1.011          5.704         55.2
 ```
 
+## rle_v2 width sweep
+
+```text
+width  group         ratio     dec GB/s
+w1     direct       0.8102        1.204
+w4     patched      0.5311        2.871
+w8     delta        0.1402        4.466
+```
+
 ## fig7_throughput
 
 ```text
@@ -164,6 +173,11 @@ def test_bench_to_json_parses_all_sections():
     assert m["loadgen/ok"]["value"] == 1024
     assert m["ablate_batch/depth8/gbps"]["value"] == 0.310
     assert m["ablate_batch/depth32/p99_us"]["value"] == 3100
+    # Per-width RLE v2 sweep rows (wide-lane bulk unpack path).
+    assert m["rle2_width/w1/direct/dec_gbps"]["value"] == 1.204
+    assert m["rle2_width/w1/direct/dec_gbps"]["kind"] == "throughput"
+    assert m["rle2_width/w4/patched/ratio"]["value"] == 0.5311
+    assert m["rle2_width/w8/delta/dec_gbps"]["value"] == 4.466
 
 
 def test_gate_passes_on_parsed_capture_roundtrip():

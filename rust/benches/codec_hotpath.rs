@@ -1,11 +1,18 @@
 //! Bench: real wall-clock CPU codec throughput (the L3 hot path the
 //! §Perf pass optimizes). Measures single-threaded decode, 8-worker
 //! parallel decode, and compression, for each dataset × codec.
+//!
+//! With `CODAG_RLE_WIDTH_SWEEP` set, prints the per-width RLE v2 sweep
+//! instead (1/2/4/8-byte elements × direct/patched/delta groups — the
+//! rows quantifying the wide-lane bulk bit-unpacking path;
+//! `scripts/record_baselines.sh` records it as its own section, parsed
+//! by `scripts/bench_to_json.py` into `rle2_width/...` metrics).
 
 use codag::bench_harness::compress_dataset;
-use codag::codecs::CodecKind;
+use codag::codecs::{compress_chunk_with, CodecKind};
 use codag::coordinator::decompress_parallel;
 use codag::data::Dataset;
+use codag::decomp::ByteSink;
 use std::time::Instant;
 
 /// Bytes generated per dataset: a light 2 MiB by default (matching the
@@ -32,12 +39,78 @@ fn best_of<F: FnMut() -> usize>(n: usize, mut f: F) -> (f64, usize) {
     (best, bytes)
 }
 
+/// Synthetic per-width element streams forcing one RLE v2 group kind
+/// each (the sweep's rows measure one packed decode path at a time).
+fn sweep_data(group: &str, width: usize, total: usize) -> Vec<u8> {
+    let n = total / width;
+    let mut out = Vec::with_capacity(total);
+    let mut x = 0x1234_5678_9ABC_DEFu64;
+    let push = |out: &mut Vec<u8>, v: i64| out.extend_from_slice(&v.to_le_bytes()[..width]);
+    match group {
+        // Bounded literal-ish values, no runs: DIRECT groups.
+        "direct" => {
+            for i in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                push(&mut out, ((x % 199) as i64) * if i % 2 == 0 { 1 } else { -1 });
+            }
+        }
+        // Mostly-small values with periodic outliers: PATCHED_BASE.
+        "patched" => {
+            let outlier = 1i64 << (width as i64 * 8 - 2);
+            for i in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                push(&mut out, if i % 64 == 13 { outlier } else { (x % 13) as i64 });
+            }
+        }
+        // Monotonic varying small deltas: packed DELTA groups.
+        _ => {
+            let mut v = 0i64;
+            for _ in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                v += (x >> 61) as i64;
+                push(&mut out, v);
+            }
+        }
+    }
+    out
+}
+
+/// Per-width RLE v2 decode sweep: columns `width group ratio dec GB/s`.
+fn rle_width_sweep(total: usize) {
+    println!("{:6} {:8} {:>10} {:>12}", "width", "group", "ratio", "dec GB/s");
+    for width in [1usize, 2, 4, 8] {
+        for group in ["direct", "patched", "delta"] {
+            let data = sweep_data(group, width, total);
+            let comp = compress_chunk_with(CodecKind::RleV2, &data, width as u8)
+                .expect("sweep compress");
+            let (t, bytes) = best_of(3, || {
+                let mut sink = ByteSink::with_capacity(data.len());
+                codag::codecs::decode_into(CodecKind::RleV2, &comp, &mut sink)
+                    .expect("sweep decode");
+                sink.out.len()
+            });
+            assert_eq!(bytes, data.len());
+            println!(
+                "w{:<5} {:8} {:>10.4} {:>12.3}",
+                width,
+                group,
+                comp.len() as f64 / data.len() as f64,
+                bytes as f64 / t / 1e9,
+            );
+        }
+    }
+}
+
 fn main() {
+    let size = size();
+    if std::env::var("CODAG_RLE_WIDTH_SWEEP").is_ok() {
+        rle_width_sweep(size);
+        return;
+    }
     println!(
         "{:8} {:8} {:>12} {:>14} {:>14} {:>12}",
         "dataset", "codec", "ratio", "dec-1thr GB/s", "dec-8thr GB/s", "comp MB/s"
     );
-    let size = size();
     for d in Dataset::all() {
         let data = d.generate(size);
         for kind in CodecKind::all() {

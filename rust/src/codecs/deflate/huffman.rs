@@ -12,6 +12,7 @@
 //!   encoder: Huffman frequencies → lengths capped at 15 bits with a
 //!   Kraft-sum repair pass (the zlib `gen_bitlen` overflow strategy).
 
+use crate::codecs::deflate::inflate::{DIST_BASE, DIST_EXTRA, LENGTH_BASE, LENGTH_EXTRA};
 use crate::format::bitio::LsbBitReader;
 use crate::{corrupt, Result};
 
@@ -19,6 +20,95 @@ use crate::{corrupt, Result};
 pub const MAX_BITS: usize = 15;
 /// Bits covered by the fast lookup table (trade table size vs hit rate).
 pub const FAST_BITS: u32 = 9;
+
+/// What a table's symbols *mean* in the DEFLATE stream — lets the fast
+/// table pre-resolve each symbol to its final (kind, base, extra-bit
+/// count) at build time, so the decode hot loop never touches the
+/// secondary `LENGTH_BASE`/`DIST_BASE`/`*_EXTRA` arrays (the
+/// single-lookup-table fold of Rivera et al.).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TableRole {
+    /// Symbols are opaque (code-length codes): base = the symbol itself.
+    Plain,
+    /// Literal/length alphabet: 0–255 literals, 256 end-of-block,
+    /// 257–285 match lengths, 286+ invalid.
+    LitLen,
+    /// Distance alphabet: 0–29 distances, 30+ invalid.
+    Dist,
+}
+
+/// Kinds carried by a resolved fast-table entry (see [`resolved_kind`]).
+pub const KIND_LITERAL: u32 = 0;
+/// End-of-block symbol (lit/len 256).
+pub const KIND_END: u32 = 1;
+/// Match half: a length base (lit/len 257–285) or a distance base.
+pub const KIND_MATCH: u32 = 2;
+/// A symbol the role declares illegal (lit/len > 285, distance > 29).
+pub const KIND_INVALID: u32 = 3;
+
+/// Resolved fast-table entry layout (u32; 0 ⇒ miss, i.e. the code is
+/// longer than [`FAST_BITS`] and the caller takes the canonical walk):
+///
+/// ```text
+/// bits  0..=3   code length in bits (1..=FAST_BITS; never 0 in a hit)
+/// bits  4..=8   extra-bit count to read after the code
+/// bits  9..=10  kind (KIND_*)
+/// bits 16..=31  base value (literal byte, LENGTH_BASE, DIST_BASE, or
+///               the symbol itself for Plain tables)
+/// ```
+#[inline]
+pub fn resolved_len(e: u32) -> u32 {
+    e & 0xF
+}
+/// Extra-bit count of a resolved entry.
+#[inline]
+pub fn resolved_extra(e: u32) -> u32 {
+    (e >> 4) & 0x1F
+}
+/// Kind of a resolved entry (one of the `KIND_*` constants).
+#[inline]
+pub fn resolved_kind(e: u32) -> u32 {
+    (e >> 9) & 0x3
+}
+/// Base value of a resolved entry.
+#[inline]
+pub fn resolved_base(e: u32) -> u32 {
+    e >> 16
+}
+
+/// Resolve a lit/len symbol to `(kind, base, extra)` — the mapping the
+/// fast table bakes in at build time; the slow path (codes past
+/// [`FAST_BITS`]) applies it per decoded symbol.
+#[inline]
+pub fn resolve_litlen(sym: u16) -> (u32, u32, u32) {
+    match sym {
+        0..=255 => (KIND_LITERAL, sym as u32, 0),
+        256 => (KIND_END, 0, 0),
+        257..=285 => {
+            let i = (sym - 257) as usize;
+            (KIND_MATCH, LENGTH_BASE[i] as u32, LENGTH_EXTRA[i] as u32)
+        }
+        _ => (KIND_INVALID, 0, 0),
+    }
+}
+
+/// Resolve a distance symbol to `(kind, base, extra)`.
+#[inline]
+pub fn resolve_dist(sym: u16) -> (u32, u32, u32) {
+    if (sym as usize) < DIST_BASE.len() {
+        (KIND_MATCH, DIST_BASE[sym as usize] as u32, DIST_EXTRA[sym as usize] as u32)
+    } else {
+        (KIND_INVALID, 0, 0)
+    }
+}
+
+/// Pack a resolved entry (see the layout above).
+#[inline]
+fn pack_resolved(len: u32, kind: u32, base: u32, extra: u32) -> u32 {
+    debug_assert!((1..=FAST_BITS).contains(&len));
+    debug_assert!(extra <= 31 && kind <= 3 && base <= 0xFFFF);
+    len | (extra << 4) | (kind << 9) | (base << 16)
+}
 
 /// Encoder-side canonical code table.
 #[derive(Debug, Clone)]
@@ -75,6 +165,12 @@ pub struct HuffmanDecoder {
     /// fast[bits] = (symbol << 4) | code_len, or u16::MAX when the code is
     /// longer than FAST_BITS.
     fast: Vec<u16>,
+    /// Role-resolved fast table: `resolved[bits]` packs (kind, base,
+    /// extra-bit count, code length) per the layout at the top of this
+    /// module, 0 on miss. Built alongside `fast` so `inflate_block`'s
+    /// hot loop decodes a symbol *and* its secondary-table metadata
+    /// from one lookup.
+    resolved: Vec<u32>,
     /// Number of codes of each length.
     count: [u16; MAX_BITS + 1],
     /// Symbols sorted by (length, symbol) — canonical order.
@@ -88,13 +184,23 @@ pub struct HuffmanDecoder {
 }
 
 impl HuffmanDecoder {
-    /// Build a decoder from per-symbol code lengths.
+    /// Build a decoder from per-symbol code lengths with the
+    /// [`TableRole::Plain`] resolution (base = symbol).
     ///
     /// Rejects over-subscribed length sets. Incomplete sets are accepted
     /// — DEFLATE's fixed distance table only assigns 30 of 32 5-bit codes
     /// — and decoding a bit pattern that falls in a gap errors out, the
     /// same contract zlib's inflate implements.
     pub fn from_lengths(lens: &[u8]) -> Result<HuffmanDecoder> {
+        Self::from_lengths_role(lens, TableRole::Plain)
+    }
+
+    /// [`from_lengths`](Self::from_lengths) with an explicit
+    /// [`TableRole`] controlling how fast-table entries pre-resolve
+    /// their symbols (the DEFLATE decoder builds its lit/len tables
+    /// with [`TableRole::LitLen`] and distance tables with
+    /// [`TableRole::Dist`]).
+    pub fn from_lengths_role(lens: &[u8], role: TableRole) -> Result<HuffmanDecoder> {
         let mut count = [0u16; MAX_BITS + 1];
         for &l in lens {
             if l as usize > MAX_BITS {
@@ -142,8 +248,11 @@ impl HuffmanDecoder {
                 offs[l as usize] += 1;
             }
         }
-        // Fast table.
+        // Fast tables: the generic (symbol, len) entries and the
+        // role-resolved (kind, base, extra, len) entries, filled from
+        // the same canonical codes in one pass.
         let mut fast = vec![u16::MAX; 1 << FAST_BITS];
+        let mut resolved = vec![0u32; 1 << FAST_BITS];
         {
             let codes = CanonicalCodes::from_lengths(lens)?;
             for (sym, (&rc, &l)) in codes.codes.iter().zip(codes.lens.iter()).enumerate() {
@@ -151,16 +260,33 @@ impl HuffmanDecoder {
                 if l == 0 || l > FAST_BITS {
                     continue;
                 }
+                let (kind, base, extra) = match role {
+                    TableRole::Plain => (KIND_LITERAL, sym as u32, 0),
+                    TableRole::LitLen => resolve_litlen(sym as u16),
+                    TableRole::Dist => resolve_dist(sym as u16),
+                };
+                let entry = pack_resolved(l, kind, base, extra);
                 // Fill every table slot whose low `l` bits equal the code.
                 let step = 1u32 << l;
                 let mut idx = rc as u32;
                 while idx < (1 << FAST_BITS) {
                     fast[idx as usize] = ((sym as u16) << 4) | l as u16;
+                    resolved[idx as usize] = entry;
                     idx += step;
                 }
             }
         }
-        Ok(HuffmanDecoder { fast, count, symbols, first_code, first_sym, max_len })
+        Ok(HuffmanDecoder { fast, resolved, count, symbols, first_code, first_sym, max_len })
+    }
+
+    /// One-lookup resolved decode from a pre-peeked LSB-first window:
+    /// returns the packed (kind, base, extra, len) entry for the next
+    /// code, or 0 when the code is longer than [`FAST_BITS`] (caller
+    /// falls back to [`decode_word`](Self::decode_word) + the
+    /// `resolve_*` mapping). Nothing is consumed.
+    #[inline]
+    pub fn lookup_resolved(&self, word: u64) -> u32 {
+        self.resolved[(word & ((1u64 << FAST_BITS) - 1)) as usize]
     }
 
     /// Decode one symbol from a pre-peeked LSB-first bit window (the
@@ -370,6 +496,61 @@ mod tests {
             assert_eq!((got, len), (sym as u16, codes.lens[sym] as u32));
             assert!(len > FAST_BITS, "symbol {sym} must exercise the slow path");
         }
+    }
+
+    #[test]
+    fn resolved_lut_agrees_with_decode_word_plus_secondary_tables() {
+        use crate::codecs::deflate::inflate::{fixed_dist_decoder, fixed_lit_decoder};
+        // Every 9-bit window over the fixed tables: a resolved hit must
+        // carry exactly what decode_word + resolve_* would compute, and
+        // a miss must mean the code is longer than FAST_BITS.
+        let lit = fixed_lit_decoder();
+        let dist = fixed_dist_decoder();
+        let lit_resolve: fn(u16) -> (u32, u32, u32) = resolve_litlen;
+        let dist_resolve: fn(u16) -> (u32, u32, u32) = resolve_dist;
+        for word in 0u64..(1 << FAST_BITS) {
+            for (dec, resolve) in [(&lit, lit_resolve), (&dist, dist_resolve)] {
+                let e = dec.lookup_resolved(word);
+                match dec.decode_word(word) {
+                    Ok((sym, len)) if len <= FAST_BITS => {
+                        assert_ne!(e, 0, "word {word:#b}: hit expected");
+                        let (kind, base, extra) = resolve(sym);
+                        assert_eq!(resolved_len(e), len, "word {word:#b}");
+                        assert_eq!(resolved_kind(e), kind, "word {word:#b}");
+                        assert_eq!(resolved_base(e), base, "word {word:#b}");
+                        assert_eq!(resolved_extra(e), extra, "word {word:#b}");
+                    }
+                    _ => assert_eq!(e, 0, "word {word:#b}: miss expected"),
+                }
+            }
+        }
+        // The fixed table's invalid symbols (286/287, 8-bit codes) must
+        // be marked invalid *in the LUT*.
+        let mut lens = vec![8u8; 144];
+        lens.extend(vec![9u8; 112]);
+        lens.extend(vec![7u8; 24]);
+        lens.extend(vec![8u8; 8]);
+        let codes = CanonicalCodes::from_lengths(&lens).unwrap();
+        for sym in [286usize, 287] {
+            let e = lit.lookup_resolved(codes.codes[sym] as u64);
+            assert_eq!(resolved_kind(e), KIND_INVALID, "sym {sym}");
+        }
+    }
+
+    #[test]
+    fn resolved_length_codes_match_base_and_extra_tables() {
+        use crate::codecs::deflate::inflate::{LENGTH_BASE, LENGTH_EXTRA};
+        for sym in 257u16..=285 {
+            let (kind, base, extra) = resolve_litlen(sym);
+            assert_eq!(kind, KIND_MATCH);
+            assert_eq!(base, LENGTH_BASE[(sym - 257) as usize] as u32);
+            assert_eq!(extra, LENGTH_EXTRA[(sym - 257) as usize] as u32);
+        }
+        assert_eq!(resolve_litlen(42).0, KIND_LITERAL);
+        assert_eq!(resolve_litlen(256).0, KIND_END);
+        assert_eq!(resolve_litlen(286).0, KIND_INVALID);
+        assert_eq!(resolve_dist(29).0, KIND_MATCH);
+        assert_eq!(resolve_dist(30).0, KIND_INVALID);
     }
 
     #[test]

@@ -11,7 +11,10 @@
 //! dense decode loop CODAG §IV argues the throughput comes from,
 //! instead of a bit-fetch round trip per field.
 
-use crate::codecs::deflate::huffman::HuffmanDecoder;
+use crate::codecs::deflate::huffman::{
+    resolve_dist, resolve_litlen, resolved_base, resolved_extra, resolved_kind, resolved_len,
+    HuffmanDecoder, TableRole, KIND_END, KIND_INVALID, KIND_LITERAL,
+};
 use crate::decomp::{OutputStream, SymbolKind};
 use crate::format::bitio::LsbBitReader;
 use crate::{corrupt, Result};
@@ -44,12 +47,12 @@ pub fn fixed_lit_decoder() -> HuffmanDecoder {
     lens.extend(std::iter::repeat(9u8).take(112));
     lens.extend(std::iter::repeat(7u8).take(24));
     lens.extend(std::iter::repeat(8u8).take(8));
-    HuffmanDecoder::from_lengths(&lens).expect("fixed table is valid")
+    HuffmanDecoder::from_lengths_role(&lens, TableRole::LitLen).expect("fixed table is valid")
 }
 
 /// Build the fixed distance decoder.
 pub fn fixed_dist_decoder() -> HuffmanDecoder {
-    HuffmanDecoder::from_lengths(&[5u8; 30]).expect("fixed table is valid")
+    HuffmanDecoder::from_lengths_role(&[5u8; 30], TableRole::Dist).expect("fixed table is valid")
 }
 
 /// Decode the dynamic-block Huffman tables (RFC 1951 §3.2.7).
@@ -94,14 +97,14 @@ fn read_dynamic_tables(r: &mut LsbBitReader<'_>) -> Result<(HuffmanDecoder, Huff
     if lens[256] == 0 {
         return Err(corrupt("deflate: end-of-block symbol has no code"));
     }
-    let lit = HuffmanDecoder::from_lengths(&lens[..hlit])?;
+    let lit = HuffmanDecoder::from_lengths_role(&lens[..hlit], TableRole::LitLen)?;
     let dist_lens = &lens[hlit..];
     // All-zero distance table means the block has no matches; RFC allows
     // a single zero-length code. Use a dummy 1-symbol decoder.
     let dist = if dist_lens.iter().all(|&l| l == 0) {
-        HuffmanDecoder::from_lengths(&[1u8])?
+        HuffmanDecoder::from_lengths_role(&[1u8], TableRole::Dist)?
     } else {
-        HuffmanDecoder::from_lengths(dist_lens)?
+        HuffmanDecoder::from_lengths_role(dist_lens, TableRole::Dist)?
     };
     Ok((lit, dist))
 }
@@ -176,11 +179,23 @@ fn inflate_block<O: OutputStream>(
         // = 48 bits ≤ 57. Bits past the end of the stream peek as zero;
         // consume_bits rejects any symbol that would overrun them.
         let word = r.peek_bits(57);
-        let (sym, used) = lit.decode_word(word)?;
-        if sym < 256 {
+        // Single-lookup decode: the role-resolved fast table yields
+        // (kind, base, extra-bit count, code length) in one hit, so the
+        // common case never consults LENGTH_BASE/LENGTH_EXTRA. Codes
+        // longer than FAST_BITS take the canonical walk and resolve the
+        // symbol the same way.
+        let e = lit.lookup_resolved(word);
+        let (kind, base, lextra, used) = if e != 0 {
+            (resolved_kind(e), resolved_base(e), resolved_extra(e), resolved_len(e))
+        } else {
+            let (sym, used) = lit.decode_word(word)?;
+            let (kind, base, lextra) = resolve_litlen(sym);
+            (kind, base, lextra, used)
+        };
+        if kind == KIND_LITERAL {
             r.consume_bits(used)?;
             out.on_symbol(SymbolKind::DeflateLiteral, 60, (r.consumed_bits() + 7) / 8);
-            lits[n_lits] = sym as u8;
+            lits[n_lits] = base as u8;
             n_lits += 1;
             if n_lits == LIT_BATCH {
                 out.write_slice(&lits)?;
@@ -193,28 +208,32 @@ fn inflate_block<O: OutputStream>(
             out.write_slice(&lits[..n_lits])?;
             n_lits = 0;
         }
-        if sym == 256 {
+        if kind == KIND_END {
             r.consume_bits(used)?;
             return Ok(());
         }
-        if sym > 285 {
+        if kind == KIND_INVALID {
             return Err(corrupt("deflate: bad literal/length symbol"));
         }
-        let li = (sym - 257) as usize;
-        let lextra = LENGTH_EXTRA[li] as u32;
-        let len = LENGTH_BASE[li] as u64 + ((word >> used) & extra_mask(lextra));
+        let len = base as u64 + ((word >> used) & extra_mask(lextra));
         r.consume_bits(used + lextra)?;
         // The distance code and its extra bits are still in the same
         // peeked word, shifted past the length half.
         let dword = word >> (used + lextra);
-        let (dsym, dused) = dist.decode_word(dword)?;
-        if dsym >= 30 {
+        let de = dist.lookup_resolved(dword);
+        let (dkind, dbase, dextra, dused) = if de != 0 {
+            (resolved_kind(de), resolved_base(de), resolved_extra(de), resolved_len(de))
+        } else {
+            let (dsym, dused) = dist.decode_word(dword)?;
+            let (dkind, dbase, dextra) = resolve_dist(dsym);
+            (dkind, dbase, dextra, dused)
+        };
+        if dkind == KIND_INVALID {
             return Err(corrupt("deflate: bad distance symbol"));
         }
-        let dextra = DIST_EXTRA[dsym as usize] as u32;
-        let d = DIST_BASE[dsym as usize] as u64 + ((dword >> dused) & extra_mask(dextra));
+        let d = dbase as u64 + ((dword >> dused) & extra_mask(dextra));
         r.consume_bits(dused + dextra)?;
-        // Two Huffman walks + extra-bit decodes + copy setup: the
+        // Two Huffman lookups + extra-bit decodes + copy setup: the
         // arithmetic-heavy decode the paper profiles (§III).
         out.on_symbol(SymbolKind::DeflateMatch, 160, (r.consumed_bits() + 7) / 8);
         out.memcpy(d, len)?;

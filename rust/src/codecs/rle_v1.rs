@@ -176,12 +176,20 @@ pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Resu
                 }
                 out.write_slice(bytes)?;
             } else {
-                for _ in 0..len {
+                // Integer literals: decode the group's varints into a
+                // stack element buffer and emit one batched
+                // `write_elems` (DESIGN.md §7.4) instead of a
+                // `write_run` round-trip per element. Symbol accounting
+                // stays per element with unchanged costs and positions.
+                let mut elems = [0u64; MAX_LITERALS];
+                let elems = &mut elems[..len as usize];
+                for e in elems.iter_mut() {
                     let v = input.fetch_svarint()?;
                     let ops = 120 + 40 * uvarint_len(varint::zigzag(v)) as u32;
                     out.on_symbol(SymbolKind::RleLiteral, ops, input.bytes_consumed());
-                    out.write_run(v as u64, 1, 0, width)?;
+                    *e = v as u64;
                 }
+                out.write_elems(elems, width)?;
             }
             produced += len;
         }
@@ -233,6 +241,34 @@ mod tests {
         crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut scalar).unwrap();
         assert_eq!(batched.out, data);
         assert_eq!(batched.out, scalar.out);
+    }
+
+    #[test]
+    fn int_literal_groups_match_scalar_sink_and_run_recorder() {
+        // Batched `write_elems` emission for widths 2/4/8 literal
+        // groups must stay byte-identical to the per-element oracle and
+        // record-identical (width-faithful) for the expand path.
+        use crate::decomp::{ByteSink, RunRecorder, ScalarSink};
+        for width in [2u8, 4, 8] {
+            let w = width as usize;
+            let mut data = Vec::new();
+            let mut x = 0xFEEDu64;
+            for _ in 0..700 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                data.extend_from_slice(&x.to_le_bytes()[..w]);
+            }
+            let comp = compress(&data, width).unwrap();
+            let mut batched = ByteSink::new();
+            crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut batched).unwrap();
+            let mut scalar = ScalarSink::new();
+            crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut scalar).unwrap();
+            assert_eq!(batched.out, data, "w{width}");
+            assert_eq!(batched.out, scalar.out, "w{width}");
+            let mut rec = RunRecorder::new();
+            crate::codecs::decode_into(CodecKind::RleV1, &comp, &mut rec).unwrap();
+            assert_eq!(rec.width, width, "w{width}");
+            assert_eq!(crate::runtime::cpu_expand(&rec.runs, rec.width).unwrap(), data);
+        }
     }
 
     #[test]

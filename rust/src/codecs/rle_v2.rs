@@ -22,7 +22,7 @@
 
 use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header};
 use crate::decomp::{InputStream, OutputStream, SymbolKind};
-use crate::format::bitio::{MsbBitReader, MsbBitWriter};
+use crate::format::bitio::MsbBitWriter;
 use crate::format::varint::{unzigzag, zigzag};
 use crate::{corrupt, Result};
 
@@ -263,22 +263,21 @@ fn emit_delta_packed(vals: &[i64], out: &mut Vec<u8>) {
     crate::format::varint::write_svarint(out, vals[0]);
     crate::format::varint::write_svarint(out, vals[1].wrapping_sub(vals[0]));
     let mut bw = MsbBitWriter::new();
-    let width = decode_width(wc);
-    for &d in deltas.iter().skip(1) {
-        bw.put_bits(d, width);
-    }
+    bw.pack_from(decode_width(wc), &deltas[1..]);
     out.extend_from_slice(&bw.finish());
 }
 
 fn emit_direct(vals: &[i64], out: &mut Vec<u8>) {
+    debug_assert!(vals.len() <= MAX_GROUP);
     let w = vals.iter().map(|&v| bits_for(zigzag(v))).max().unwrap_or(1);
     let wc = encode_width(w);
     push_group_header(SubEncoding::Direct, wc, vals.len(), out);
-    let width = decode_width(wc);
-    let mut bw = MsbBitWriter::new();
-    for &v in vals {
-        bw.put_bits(zigzag(v), width);
+    let mut zz = [0u64; MAX_GROUP];
+    for (z, &v) in zz.iter_mut().zip(vals) {
+        *z = zigzag(v);
     }
+    let mut bw = MsbBitWriter::new();
+    bw.pack_from(decode_width(wc), &zz[..vals.len()]);
     out.extend_from_slice(&bw.finish());
 }
 
@@ -354,12 +353,13 @@ fn emit_patched(vals: &[i64], plan: &PatchPlan, out: &mut Vec<u8>) {
         out.push((base_zz >> (i * 8)) as u8);
     }
     let width = decode_width(wc);
-    let mut packer = MsbBitWriter::new();
-    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
-    for &v in vals {
-        let r = (v as i128 - plan.base as i128) as u64;
-        packer.put_bits(r & mask, width);
+    debug_assert!(vals.len() <= MAX_GROUP);
+    let mut reduced = [0u64; MAX_GROUP];
+    for (r, &v) in reduced.iter_mut().zip(vals) {
+        *r = (v as i128 - plan.base as i128) as u64;
     }
+    let mut packer = MsbBitWriter::new();
+    packer.pack_from(width, &reduced[..vals.len()]);
     out.extend_from_slice(&packer.finish());
     let pw = decode_width(pwc);
     let mut packer = MsbBitWriter::new();
@@ -374,72 +374,13 @@ fn emit_patched(vals: &[i64], plan: &PatchPlan, out: &mut Vec<u8>) {
 // Decoder
 // ---------------------------------------------------------------------
 
-/// Stack buffer batching width-1 unit values into one `write_slice`
-/// per group (≤ [`MAX_GROUP`] values). Wider elements keep per-element
-/// `write_run` so the run-record path ([`crate::decomp::RunRecorder`])
-/// sees the element width.
-struct ByteBatch {
-    buf: [u8; MAX_GROUP],
-    n: usize,
-}
-
-impl ByteBatch {
-    fn new() -> Self {
-        ByteBatch { buf: [0; MAX_GROUP], n: 0 }
-    }
-
-    #[inline]
-    fn push(&mut self, v: u64) {
-        self.buf[self.n] = v as u8;
-        self.n += 1;
-    }
-
-    fn flush<O: OutputStream>(&mut self, out: &mut O) -> Result<()> {
-        if self.n > 0 {
-            out.write_slice(&self.buf[..self.n])?;
-            self.n = 0;
-        }
-        Ok(())
-    }
-}
-
-/// Per-group element emitter shared by the DIRECT/PATCHED/DELTA
-/// decoders: width-1 groups batch bytes into one `write_slice`, wider
-/// widths emit per-element unit `write_run`s — one loop body per
-/// decoder instead of two.
-enum Emitter {
-    Bytes(ByteBatch),
-    Runs { width: u8 },
-}
-
-impl Emitter {
-    fn new(width: u8) -> Self {
-        if width == 1 {
-            Emitter::Bytes(ByteBatch::new())
-        } else {
-            Emitter::Runs { width }
-        }
-    }
-
-    /// Emit one decoded element value.
-    #[inline]
-    fn emit<O: OutputStream>(&mut self, out: &mut O, v: u64) -> Result<()> {
-        match self {
-            Emitter::Bytes(b) => {
-                b.push(v);
-                Ok(())
-            }
-            Emitter::Runs { width } => out.write_run(v, 1, 0, *width),
-        }
-    }
-
-    /// Flush any staged batch at end of group.
-    fn finish<O: OutputStream>(&mut self, out: &mut O) -> Result<()> {
-        match self {
-            Emitter::Bytes(b) => b.flush(out),
-            Emitter::Runs { .. } => Ok(()),
-        }
-    }
+/// Convert a bit count into the rounded-up byte position the MSB reader
+/// reports after consuming it — used to reconstruct per-element
+/// `on_symbol` input positions analytically, so the bulk-unpacked
+/// decode reports the exact positions the element-at-a-time loop did.
+#[inline]
+fn bits_to_pos(bits: u64) -> u64 {
+    (bits + 7) / 8
 }
 
 /// Decode an RLE v2 chunk into `out`.
@@ -506,25 +447,27 @@ fn decode_direct<O: OutputStream>(
     }
     let w = decode_width(wc);
     out.on_symbol(SymbolKind::RleV2Header, 400, input.bytes_consumed());
-    // Per-element symbol accounting (costs, input positions) is
-    // unchanged by batching; only the write calls coalesce.
-    let mut emit = Emitter::new(width);
+    // Bulk path: one wide-lane unpack fills the whole group, the zigzag
+    // unmap runs over the element buffer, and a single `write_elems`
+    // serializes it. Per-element symbol accounting (costs, input
+    // positions) is reconstructed analytically and is unchanged from
+    // the element-at-a-time loop.
+    let mut elems = [0u64; MAX_GROUP];
+    let elems = &mut elems[..len];
     let mut r = input.msb_reader();
-    for _ in 0..len {
-        let zz = r.read_bits(w)?;
-        let v = unzigzag(zz) as u64 & mask;
-        out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
-        emit.emit(out, v)?;
+    r.unpack_into(w, elems)?;
+    let base_pos = input.bytes_consumed();
+    for (i, e) in elems.iter_mut().enumerate() {
+        *e = unzigzag(*e) as u64 & mask;
+        out.on_symbol(
+            SymbolKind::RleLiteral,
+            90 + w / 2,
+            base_pos + bits_to_pos((i as u64 + 1) * w as u64),
+        );
     }
-    emit.finish(out)?;
+    out.write_elems(elems, width)?;
     input.commit_msb(&r);
     Ok(len as u64)
-}
-
-/// Input position accounting for a partially-consumed MSB reader.
-#[inline]
-fn pos_after(input: &InputStream<'_>, r: &MsbBitReader<'_>) -> u64 {
-    input.bytes_consumed() + r.byte_pos() as u64
 }
 
 fn decode_patched<O: OutputStream>(
@@ -552,16 +495,15 @@ fn decode_patched<O: OutputStream>(
     let base = unzigzag(base_zz);
     let w = decode_width(wc);
     out.on_symbol(SymbolKind::RleV2Header, 700, input.bytes_consumed());
-    // Unpack reduced values.
-    let mut reduced = Vec::with_capacity(len);
+    // Bulk-unpack the reduced values into the group element buffer.
+    let mut elems = [0u64; MAX_GROUP];
+    let elems = &mut elems[..len];
     {
         let mut r = input.msb_reader();
-        for _ in 0..len {
-            reduced.push(r.read_bits(w)?);
-        }
+        r.unpack_into(w, elems)?;
         input.commit_msb(&r);
     }
-    // Apply the patch list.
+    // Apply the patch list over the element buffer.
     let pw = decode_width(pwc);
     {
         let mut r = input.msb_reader();
@@ -571,21 +513,26 @@ fn decode_patched<O: OutputStream>(
             let high = r.read_bits(pw)?;
             idx += gap;
             if high != 0 {
-                if idx >= reduced.len() {
+                if idx >= elems.len() {
                     return Err(corrupt("rle_v2: patch index out of range"));
                 }
-                reduced[idx] |= high << w;
+                // w == 64 leaves no headroom for patch bits: the shift
+                // would be out of range, and the reference decoder port
+                // treats such patches as no-ops (bits beyond 64 drop).
+                if w < 64 {
+                    elems[idx] |= high << w;
+                }
             }
         }
         input.commit_msb(&r);
     }
-    let mut emit = Emitter::new(width);
-    for &rv in &reduced {
-        let v = (base as i128 + rv as i128) as u64 & mask;
-        out.on_symbol(SymbolKind::RleLiteral, 110 + w / 2, input.bytes_consumed());
-        emit.emit(out, v)?;
+    // Base-add over the buffer, then one batched element write.
+    let pos = input.bytes_consumed();
+    for e in elems.iter_mut() {
+        *e = (base as i128 + *e as i128) as u64 & mask;
+        out.on_symbol(SymbolKind::RleLiteral, 110 + w / 2, pos);
     }
-    emit.finish(out)?;
+    out.write_elems(elems, width)?;
     Ok(len as u64)
 }
 
@@ -614,21 +561,33 @@ fn decode_delta<O: OutputStream>(
         return Err(corrupt("rle_v2: packed delta group shorter than 2"));
     }
     out.on_symbol(SymbolKind::RleV2Header, 450, input.bytes_consumed());
-    let mut emit = Emitter::new(width);
-    emit.emit(out, base as u64 & mask)?;
+    // Bulk path: unpack the packed deltas into the tail of the group
+    // element buffer, run the prefix-sum transform in place, and emit
+    // the whole group with one `write_elems`.
+    let mut elems = [0u64; MAX_GROUP];
+    let elems = &mut elems[..len];
+    elems[0] = base as u64 & mask;
     let mut prev = base.wrapping_add(d1);
     out.on_symbol(SymbolKind::RleLiteral, 60, input.bytes_consumed());
-    emit.emit(out, prev as u64 & mask)?;
+    elems[1] = prev as u64 & mask;
     let sign: i64 = if d1 < 0 { -1 } else { 1 };
     let mut r = input.msb_reader();
-    for _ in 2..len {
-        let d = r.read_bits(w)? as i64;
-        prev = prev.wrapping_add(sign * d);
-        out.on_symbol(SymbolKind::RleLiteral, 90 + w / 2, pos_after(input, &r));
-        emit.emit(out, prev as u64 & mask)?;
+    r.unpack_into(w, &mut elems[2..])?;
+    let base_pos = input.bytes_consumed();
+    for i in 2..len {
+        // Wrapping throughout (ORC's integer overflow semantics): a
+        // width-64 delta can be i64::MIN, whose negation only exists
+        // under wrapping multiplication.
+        prev = prev.wrapping_add(sign.wrapping_mul(elems[i] as i64));
+        elems[i] = prev as u64 & mask;
+        out.on_symbol(
+            SymbolKind::RleLiteral,
+            90 + w / 2,
+            base_pos + bits_to_pos((i as u64 - 1) * w as u64),
+        );
     }
+    out.write_elems(elems, width)?;
     input.commit_msb(&r);
-    emit.finish(out)?;
     Ok(len as u64)
 }
 
@@ -802,6 +761,75 @@ mod tests {
         crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut scalar).unwrap();
         assert_eq!(batched.out, data);
         assert_eq!(batched.out, scalar.out);
+    }
+
+    #[test]
+    fn all_width_groups_match_scalar_sink_and_run_recorder() {
+        // The bulk path (unpack_into + write_elems) must stay byte-
+        // identical to the per-byte oracle AND record-identical to the
+        // per-element run path at every width, for direct, patched, and
+        // packed-delta groups.
+        use crate::decomp::{ByteSink, RunRecorder, ScalarSink};
+        for width in [1u8, 2, 4, 8] {
+            let w = width as usize;
+            let mut data: Vec<u8> = Vec::new();
+            let mut x = 5u64;
+            let push = |data: &mut Vec<u8>, v: i64| {
+                data.extend_from_slice(&v.to_le_bytes()[..w]);
+            };
+            // Literal-ish values -> DIRECT.
+            for i in 0..300i64 {
+                push(&mut data, (i * 37) % 97 - 48);
+            }
+            // Small values + periodic outliers -> PATCHED_BASE.
+            for i in 0..512i64 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let v = if i % 64 == 13 {
+                    100 + (1 << (w as i64 * 8 - 2))
+                } else {
+                    (x % 13) as i64
+                };
+                push(&mut data, v);
+            }
+            // Monotonic small-delta values -> packed DELTA.
+            let mut v = 0i64;
+            for _ in 0..400 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                v += (x >> 61) as i64;
+                push(&mut data, v);
+            }
+            let comp = compress(&data, width).unwrap();
+            let mut batched = ByteSink::new();
+            crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut batched).unwrap();
+            let mut scalar = ScalarSink::new();
+            crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut scalar).unwrap();
+            assert_eq!(batched.out, data, "w{width}: roundtrip");
+            assert_eq!(batched.out, scalar.out, "w{width}: batched/scalar divergence");
+            // Run records keep the element width and expand back.
+            let mut rec = RunRecorder::new();
+            crate::codecs::decode_into(CodecKind::RleV2, &comp, &mut rec).unwrap();
+            assert_eq!(rec.width, width, "w{width}: run record width");
+            assert_eq!(
+                crate::runtime::cpu_expand(&rec.runs, rec.width).unwrap(),
+                data,
+                "w{width}: run records re-expand"
+            );
+        }
+    }
+
+    #[test]
+    fn direct_w64_extremes_roundtrip() {
+        // Max-width (64-bit) DIRECT group: zigzag of the i64 extremes
+        // needs every bit, driving unpack_into's wide class.
+        let vals = vec![i64::MIN, i64::MAX, -1, 0, 1, i64::MIN >> 1, i64::MAX >> 1];
+        let data = as_bytes_i64(&vals);
+        let comp = compress(&data, 8).unwrap();
+        // Must be a single DIRECT group at width code 31 (64 bits).
+        // (Chunk header is 3 bytes here: width, reserved, uvarint(7).)
+        assert_eq!(comp[3] >> 6, SubEncoding::Direct as u8, "expected DIRECT");
+        assert_eq!((comp[3] >> 1) & 0x1F, 31, "expected width code 31 (64 bits)");
+        let out = decompress_chunk(CodecKind::RleV2, &comp, data.len()).unwrap();
+        assert_eq!(out, data);
     }
 
     #[test]

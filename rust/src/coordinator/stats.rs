@@ -1,5 +1,6 @@
 //! Latency/throughput statistics for the serving path.
 
+use crate::codecs::CodecKind;
 use crate::data::Rng;
 use std::time::Duration;
 
@@ -25,6 +26,10 @@ pub struct LatencyStats {
     total_bytes: u64,
     cache_hits: u64,
     cache_misses: u64,
+    /// Decoded bytes served per codec, indexed by
+    /// [`CodecKind::all`] order — cheap observability for the per-codec
+    /// hot paths (the `codag serve` shutdown summary prints these).
+    codec_bytes: [u64; 3],
     /// Reservoir-replacement RNG (deterministic zero-seeded stream).
     rng: Rng,
 }
@@ -66,6 +71,9 @@ impl LatencyStats {
         self.total_bytes += other.total_bytes;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        for (a, b) in self.codec_bytes.iter_mut().zip(other.codec_bytes.iter()) {
+            *a += b;
+        }
         if self.samples_us.len() + other.samples_us.len() <= RESERVOIR_CAP {
             self.samples_us.extend_from_slice(&other.samples_us);
             return;
@@ -137,6 +145,38 @@ impl LatencyStats {
     /// Chunk-cache misses attributed to this recorder.
     pub fn cache_misses(&self) -> u64 {
         self.cache_misses
+    }
+
+    /// Counter slot for `kind`: its position in [`CodecKind::all`], so
+    /// the counters stay in lockstep with the enum (a codec missing
+    /// from `all()` panics here with a clear message instead of
+    /// silently mis-indexing; the array length is pinned by a test).
+    fn codec_slot(kind: CodecKind) -> usize {
+        CodecKind::all()
+            .iter()
+            .position(|&k| k == kind)
+            .expect("CodecKind missing from CodecKind::all()")
+    }
+
+    /// Attribute `bytes` of decoded payload to `kind` (the daemon's
+    /// shard loops call this alongside [`record`](Self::record)).
+    pub fn add_codec_bytes(&mut self, kind: CodecKind, bytes: u64) {
+        self.codec_bytes[Self::codec_slot(kind)] += bytes;
+    }
+
+    /// Decoded bytes attributed to `kind`.
+    pub fn codec_bytes(&self, kind: CodecKind) -> u64 {
+        self.codec_bytes[Self::codec_slot(kind)]
+    }
+
+    /// `(codec name, decoded bytes)` rows in reporting order, for the
+    /// shutdown summary.
+    pub fn codec_bytes_all(&self) -> [(&'static str, u64); 3] {
+        let mut rows = [("", 0u64); 3];
+        for (row, kind) in rows.iter_mut().zip(CodecKind::all()) {
+            *row = (kind.name(), self.codec_bytes(kind));
+        }
+        rows
     }
 
     /// p-th percentile latency in microseconds (p in [0, 100]).
@@ -259,5 +299,34 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.cache_hits(), 5);
         assert_eq!(a.cache_misses(), 6);
+    }
+
+    #[test]
+    fn codec_counter_array_covers_every_codec() {
+        // The [u64; 3] counter array must stay in lockstep with
+        // CodecKind::all(): growing the enum requires growing the
+        // array (and this pin), not silently truncating attribution.
+        let mut s = LatencyStats::new();
+        assert_eq!(CodecKind::all().len(), s.codec_bytes.len());
+        for kind in CodecKind::all() {
+            s.add_codec_bytes(kind, 1);
+            assert_eq!(s.codec_bytes(kind), 1);
+        }
+    }
+
+    #[test]
+    fn per_codec_byte_counters_record_and_merge() {
+        let mut a = LatencyStats::new();
+        a.add_codec_bytes(CodecKind::RleV2, 100);
+        a.add_codec_bytes(CodecKind::RleV2, 20);
+        a.add_codec_bytes(CodecKind::Deflate, 7);
+        let mut b = LatencyStats::new();
+        b.add_codec_bytes(CodecKind::RleV1, 3);
+        b.add_codec_bytes(CodecKind::RleV2, 1);
+        a.merge(&b);
+        assert_eq!(a.codec_bytes(CodecKind::RleV1), 3);
+        assert_eq!(a.codec_bytes(CodecKind::RleV2), 121);
+        assert_eq!(a.codec_bytes(CodecKind::Deflate), 7);
+        assert_eq!(a.codec_bytes_all(), [("rlev1", 3), ("rlev2", 121), ("deflate", 7)]);
     }
 }

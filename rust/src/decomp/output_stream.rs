@@ -108,6 +108,22 @@ pub trait OutputStream {
         Ok(())
     }
 
+    /// Batched multi-byte-element write (DESIGN.md §7.4): semantically
+    /// identical to calling `write_run(e, 1, 0, width)` once per
+    /// element of `elems`, in order. The RLE decoders stage a whole
+    /// bulk-unpacked group here so materializing sinks serialize the
+    /// fixed-width little-endian elements in one pass instead of a
+    /// `write_run` round-trip per element. The default is exactly the
+    /// per-element loop, so the run-record path ([`RunRecorder`]) and
+    /// the scalar oracle ([`ScalarSink`]) observe element-width-faithful
+    /// unit runs with no override at all.
+    fn write_elems(&mut self, elems: &[u64], width: u8) -> Result<()> {
+        for &e in elems {
+            self.write_run(e, 1, 0, width)?;
+        }
+        Ok(())
+    }
+
     /// Bytes written so far.
     fn bytes_written(&self) -> u64;
 
@@ -118,12 +134,19 @@ pub trait OutputStream {
     fn on_symbol(&mut self, _kind: SymbolKind, _ops: u32, _input_pos: u64) {}
 }
 
+/// Stack staging buffer for batched run/element serialization: 64
+/// 8-byte elements per flush (one cache-line-friendly burst).
+const RUN_STAGE_BYTES: usize = 512;
+
 /// Expansion of a `write_run` into bytes, shared by sinks.
 ///
-/// Hot path of the CPU decode: unit runs (literal elements) take the
-/// early exit, longer runs use per-width monomorphic loops so the
-/// compiler emits straight-line stores instead of a variable-length
-/// `extend_from_slice` per element (§Perf L3, EXPERIMENTS.md).
+/// Hot path of the CPU decode (DESIGN.md §7.4): unit runs (literal
+/// elements) take the early exit; **plain runs** (`delta == 0`) write
+/// the element pattern once and then double it with
+/// `extend_from_within` memcpys (`w, 2w, 4w, …` bytes per pass) instead
+/// of looping per element; **delta runs** serialize elements into a
+/// stack staging buffer and flush it in [`RUN_STAGE_BYTES`] blocks, so
+/// the `Vec` bookkeeping is paid per block, not per element.
 #[inline]
 fn expand_run_into(out: &mut Vec<u8>, init: u64, len: u64, delta: i64, width: u8) {
     let w = width as usize;
@@ -132,34 +155,67 @@ fn expand_run_into(out: &mut Vec<u8>, init: u64, len: u64, delta: i64, width: u8
         out.extend_from_slice(&le[..w]);
         return;
     }
-    out.reserve(len as usize * w);
+    let total = len as usize * w;
+    out.reserve(total);
+    if delta == 0 {
+        // Pattern-doubling memcpy: the copied region is itself the
+        // source of the next copy, so the materialized prefix doubles
+        // per pass (same shape as the §7.2 overlapping-memcpy resolve).
+        let start = out.len();
+        out.extend_from_slice(&init.to_le_bytes()[..w]);
+        let mut have = w;
+        while have < total {
+            let take = (total - have).min(have);
+            out.extend_from_within(start..start + take);
+            have += take;
+        }
+        return;
+    }
+    // 8 bytes of slack so every element is one full-width 8-byte store
+    // (narrow widths overlap into the next slot; the tail overlaps the
+    // slack, never the flushed region).
+    let mut stage = [0u8; RUN_STAGE_BYTES + 8];
+    let per_block = RUN_STAGE_BYTES / w;
     let mut v = init;
     let d = delta as u64;
-    match width {
-        1 => {
-            for _ in 0..len {
-                out.push(v as u8);
-                v = v.wrapping_add(d);
-            }
+    let mut remaining = len as usize;
+    while remaining > 0 {
+        let m = remaining.min(per_block);
+        let mut off = 0usize;
+        for _ in 0..m {
+            stage[off..off + 8].copy_from_slice(&v.to_le_bytes());
+            off += w;
+            v = v.wrapping_add(d);
         }
-        2 => {
-            for _ in 0..len {
-                out.extend_from_slice(&(v as u16).to_le_bytes());
-                v = v.wrapping_add(d);
-            }
+        out.extend_from_slice(&stage[..m * w]);
+        remaining -= m;
+    }
+}
+
+/// Serialize `elems` as `width`-byte little-endian values into `out` —
+/// the native [`OutputStream::write_elems`] implementation shared by
+/// the materializing sinks: one staging pass of overlapping 8-byte
+/// stores per [`RUN_STAGE_BYTES`] block, byte-identical to the
+/// per-element `write_run(e, 1, 0, width)` loop.
+#[inline]
+fn serialize_elems_into(out: &mut Vec<u8>, elems: &[u64], width: u8) {
+    let w = width as usize;
+    out.reserve(elems.len() * w);
+    if w == 8 {
+        for e in elems {
+            out.extend_from_slice(&e.to_le_bytes());
         }
-        4 => {
-            for _ in 0..len {
-                out.extend_from_slice(&(v as u32).to_le_bytes());
-                v = v.wrapping_add(d);
-            }
+        return;
+    }
+    let mut stage = [0u8; RUN_STAGE_BYTES + 8];
+    let per_block = RUN_STAGE_BYTES / w;
+    for block in elems.chunks(per_block) {
+        let mut off = 0usize;
+        for e in block {
+            stage[off..off + 8].copy_from_slice(&e.to_le_bytes());
+            off += w;
         }
-        _ => {
-            for _ in 0..len {
-                out.extend_from_slice(&v.to_le_bytes());
-                v = v.wrapping_add(d);
-            }
-        }
+        out.extend_from_slice(&stage[..block.len() * w]);
     }
 }
 
@@ -234,6 +290,12 @@ impl OutputStream for ByteSink {
     }
 
     #[inline]
+    fn write_elems(&mut self, elems: &[u64], width: u8) -> Result<()> {
+        serialize_elems_into(&mut self.out, elems, width);
+        Ok(())
+    }
+
+    #[inline]
     fn bytes_written(&self) -> u64 {
         self.out.len() as u64
     }
@@ -299,8 +361,9 @@ impl OutputStream for ScalarSink {
         Ok(())
     }
 
-    // No write_slice override: the trait default (write_byte loop) *is*
-    // the scalar semantics under test.
+    // No write_slice/write_elems overrides: the trait defaults
+    // (write_byte loop; per-element unit write_run loop) *are* the
+    // scalar semantics under test.
 
     #[inline]
     fn bytes_written(&self) -> u64 {
@@ -347,6 +410,12 @@ impl OutputStream for CountingSink {
     #[inline]
     fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
         self.len += bytes.len() as u64;
+        Ok(())
+    }
+
+    #[inline]
+    fn write_elems(&mut self, elems: &[u64], width: u8) -> Result<()> {
+        self.len += elems.len() as u64 * width as u64;
         Ok(())
     }
 
@@ -431,7 +500,9 @@ impl OutputStream for RunRecorder {
         // Must stay record-identical to the per-byte path: each byte is
         // a width-1 unit run, subject to the same adjacent-merge rule,
         // so the PJRT expand input does not depend on whether a decoder
-        // batched its literals.
+        // batched its literals. (`write_elems` likewise keeps the trait
+        // default — width-faithful unit runs under the same merge rule
+        // — so the bulk-unpacked RLE groups record identically too.)
         for &b in bytes {
             self.write_run(b as u64, 1, 0, 1)?;
         }
@@ -601,6 +672,14 @@ impl<S: OutputStream> OutputStream for TracingSink<S> {
         Ok(())
     }
 
+    fn write_elems(&mut self, elems: &[u64], width: u8) -> Result<()> {
+        // Same contract as `write_slice`: forward the batch to the
+        // inner sink (native there), account the byte total once.
+        self.inner.write_elems(elems, width)?;
+        self.add_output(elems.len() as u64 * width as u64);
+        Ok(())
+    }
+
     #[inline]
     fn bytes_written(&self) -> u64 {
         self.inner.bytes_written()
@@ -714,6 +793,76 @@ mod tests {
         assert_eq!(sliced.runs, scalar.runs);
         assert_eq!(sliced.bytes_written(), scalar.bytes_written());
         assert_eq!(sliced.width, scalar.width);
+    }
+
+    #[test]
+    fn byte_sink_run_expansion_matches_scalar_all_shapes() {
+        // The doubling-memcpy (delta 0) and block-staged (delta != 0)
+        // expansions must stay byte-identical to the scalar per-element
+        // oracle across widths, lengths straddling the staging block,
+        // and wrapping deltas.
+        for width in [1u8, 2, 4, 8] {
+            for len in [1u64, 2, 3, 63, 64, 65, 511, 512, 513, 2000] {
+                for delta in [0i64, 1, -1, 255, -77777, i64::MIN] {
+                    let init = 0xDEAD_BEEF_CAFE_F00Du64;
+                    let mut b = ByteSink::new();
+                    b.write_run(init, len, delta, width).unwrap();
+                    let mut s = ScalarSink::new();
+                    s.write_run(init, len, delta, width).unwrap();
+                    assert_eq!(b.out, s.out, "w{width} len{len} d{delta}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_elems_matches_per_element_write_run_everywhere() {
+        let elems: Vec<u64> = (0..300u64)
+            .map(|i| i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect();
+        for width in [1u8, 2, 4, 8] {
+            // ByteSink native == ScalarSink default loop.
+            let mut b = ByteSink::new();
+            b.write_elems(&elems, width).unwrap();
+            let mut s = ScalarSink::new();
+            s.write_elems(&elems, width).unwrap();
+            assert_eq!(b.out, s.out, "w{width}");
+            // CountingSink counts the batch.
+            let mut c = CountingSink::new();
+            c.write_elems(&elems, width).unwrap();
+            assert_eq!(c.bytes_written(), elems.len() as u64 * width as u64);
+            // RunRecorder: batch path records exactly what per-element
+            // unit runs record (width-faithful, same merge rule).
+            let mut batched = RunRecorder::new();
+            batched.write_elems(&elems, width).unwrap();
+            let mut scalar = RunRecorder::new();
+            for &e in &elems {
+                scalar.write_run(e, 1, 0, width).unwrap();
+            }
+            assert_eq!(batched.runs, scalar.runs, "w{width}");
+            assert_eq!(batched.width, scalar.width, "w{width}");
+            assert_eq!(batched.bytes_written(), scalar.bytes_written(), "w{width}");
+        }
+    }
+
+    #[test]
+    fn tracing_sink_elems_preserves_byte_totals() {
+        let elems = vec![7u64; 333];
+        let mut batched = TracingSink::codag(CountingSink::new());
+        batched.write_elems(&elems, 4).unwrap();
+        let (bs, bev) = batched.finish();
+        let mut scalar = TracingSink::codag(CountingSink::new());
+        for &e in &elems {
+            scalar.write_run(e, 1, 0, 4).unwrap();
+        }
+        let (ss, sev) = scalar.finish();
+        assert_eq!(bs.bytes_written(), ss.bytes_written());
+        let write_bytes = |evs: &[UnitEvent]| -> u64 {
+            evs.iter()
+                .map(|e| if let UnitEvent::Write { bytes, .. } = e { *bytes as u64 } else { 0 })
+                .sum()
+        };
+        assert_eq!(write_bytes(&bev), write_bytes(&sev));
     }
 
     #[test]

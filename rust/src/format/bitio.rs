@@ -291,6 +291,77 @@ impl<'a> MsbBitReader<'a> {
         let drop = self.nbits % 8;
         self.nbits -= drop;
     }
+
+    /// Bulk-unpack `out.len()` fields of `width` (1..=64) bits MSB-first
+    /// into `out` — the wide-lane half of the RLE v2 decode hot path
+    /// (DESIGN.md §7.4). Semantically identical to calling
+    /// [`read_bits`](Self::read_bits) once per element, including the
+    /// `byte_pos` accounting, but the inner loop loads the input eight
+    /// bytes at a time and drains `⌊nbits/width⌋` elements per load with
+    /// no per-element bounds checks. Width classes:
+    ///
+    /// * `1..=56` — word-at-a-time: one aligned 8-byte load refills the
+    ///   accumulator, then a branch-free shift+mask loop emits every
+    ///   element the accumulator holds.
+    /// * `57..=64` — falls back to per-element `read_bits` (each element
+    ///   needs a two-load assembly; only width 64 is reachable through
+    ///   the ORC closest-fixed-bits table).
+    ///
+    /// On error (stream exhausted mid-group) the reader is left mid-
+    /// stream and `out` partially written; callers propagate the error
+    /// without committing the reader, so the error class is the only
+    /// observable — identical to the scalar loop's.
+    pub fn unpack_into(&mut self, width: u32, out: &mut [u64]) -> Result<()> {
+        debug_assert!((1..=64).contains(&width));
+        if width > 56 {
+            for o in out.iter_mut() {
+                *o = self.read_bits(width)?;
+            }
+            return Ok(());
+        }
+        let mask = mask64(width);
+        let n = out.len();
+        let mut i = 0usize;
+        while i < n {
+            if self.nbits < width {
+                if self.pos + 8 <= self.data.len() {
+                    // Word refill: append as many whole bytes as fit.
+                    // The accumulator's bits above `nbits` are garbage
+                    // (read_bits never looks at them), so shifting them
+                    // out is free.
+                    let w8 = u64::from_be_bytes(
+                        self.data[self.pos..self.pos + 8].try_into().expect("8-byte window"),
+                    );
+                    if self.nbits == 0 {
+                        self.acc = w8;
+                        self.nbits = 64;
+                        self.pos += 8;
+                    } else {
+                        let take = (64 - self.nbits) / 8; // 1..=7 whole bytes
+                        self.acc = (self.acc << (take * 8)) | (w8 >> (64 - take * 8));
+                        self.nbits += take * 8;
+                        self.pos += take as usize;
+                    }
+                } else {
+                    // Tail: byte-granular refill, then the same error
+                    // the scalar reader raises at exhaustion.
+                    self.refill();
+                    if self.nbits < width {
+                        return Err(corrupt("msb reader: bit stream exhausted"));
+                    }
+                }
+            }
+            // Drain every element the accumulator holds (branch-free
+            // shift+mask per element).
+            let m = ((self.nbits / width) as usize).min(n - i);
+            for o in &mut out[i..i + m] {
+                self.nbits -= width;
+                *o = (self.acc >> self.nbits) & mask;
+            }
+            i += m;
+        }
+        Ok(())
+    }
 }
 
 /// Low-`n` bit mask (n in 1..=64).
@@ -349,6 +420,49 @@ impl MsbBitWriter {
             self.out.push(self.cur);
             self.cur = 0;
             self.used = 0;
+        }
+    }
+
+    /// Bulk-pack the low `width` (1..=64) bits of every value in `vals`,
+    /// MSB-first — the encoder-side twin of
+    /// [`MsbBitReader::unpack_into`]. Byte-identical to calling
+    /// [`put_bits`](Self::put_bits) once per value; the fast path (byte-
+    /// aligned writer, width ≤ 56) stages bits in a 64-bit accumulator
+    /// and flushes whole bytes with one big-endian store instead of the
+    /// per-bit-field loop.
+    pub fn pack_from(&mut self, width: u32, vals: &[u64]) {
+        debug_assert!((1..=64).contains(&width));
+        if width > 56 || self.used != 0 {
+            for &v in vals {
+                self.put_bits(v, width);
+            }
+            return;
+        }
+        let mask = mask64(width);
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        for &v in vals {
+            if nbits + width > 64 {
+                // Flush the top whole bytes (nbits > 8 here since
+                // width <= 56), keeping the low `nbits % 8` bits staged.
+                let flush = (nbits / 8) as usize;
+                let top = acc << (64 - nbits);
+                self.out.extend_from_slice(&top.to_be_bytes()[..flush]);
+                nbits -= flush as u32 * 8;
+            }
+            acc = (acc << width) | (v & mask);
+            nbits += width;
+        }
+        // Tail: whole bytes first, then the sub-byte remainder through
+        // the scalar path so `used`/`cur` stay coherent.
+        if nbits > 0 {
+            let flush = (nbits / 8) as usize;
+            let top = acc << (64 - nbits);
+            self.out.extend_from_slice(&top.to_be_bytes()[..flush]);
+            let rem = nbits % 8;
+            if rem > 0 {
+                self.put_bits(acc & ((1u64 << rem) - 1), rem);
+            }
         }
     }
 
@@ -503,6 +617,104 @@ mod tests {
         assert_eq!(r.consumed_bits(), 12, "failed consume must not advance");
         r.consume_bits(4).unwrap();
         assert!(r.is_empty());
+    }
+
+    #[test]
+    fn unpack_into_matches_scalar_read_bits_all_widths() {
+        // Tentpole gate: for every width 1..=64, bulk unpack over a
+        // random stream must yield the same values AND the same
+        // byte_pos accounting as the per-element scalar reader, at
+        // every group length (incl. lengths straddling the 8-byte
+        // refill boundary and a trailing partial byte).
+        let mut x = 0xDEAD_BEEFu64;
+        let bytes: Vec<u8> = (0..519).map(|_| lcg(&mut x) as u8).collect();
+        for width in 1..=64u32 {
+            for n in [0usize, 1, 2, 3, 7, 8, 9, 31, 57, 63] {
+                if n as u64 * width as u64 > bytes.len() as u64 * 8 {
+                    continue;
+                }
+                let mut bulk = MsbBitReader::new(&bytes);
+                let mut scalar = MsbBitReader::new(&bytes);
+                // Start both readers at an unaligned offset to cover
+                // leftover-accumulator entry states.
+                let lead = (width + 3) % 17;
+                if lead > 0 {
+                    assert_eq!(bulk.read_bits(lead).unwrap(), scalar.read_bits(lead).unwrap());
+                }
+                let mut out = vec![0u64; n];
+                bulk.unpack_into(width, &mut out).unwrap();
+                for (k, &got) in out.iter().enumerate() {
+                    let want = scalar.read_bits(width).unwrap();
+                    assert_eq!(got, want, "w{width} n{n} elem {k}");
+                }
+                assert_eq!(bulk.byte_pos(), scalar.byte_pos(), "w{width} n{n}");
+                // Both readers keep decoding identically afterwards.
+                assert_eq!(
+                    bulk.read_bits(13).unwrap(),
+                    scalar.read_bits(13).unwrap(),
+                    "w{width} n{n}: post-group divergence"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unpack_into_errors_at_exhaustion_like_scalar() {
+        for width in [1u32, 3, 7, 24, 33, 56, 64] {
+            let nbytes = 7usize; // 56 bits: never a multiple of 8 groups for most widths
+            let bytes = vec![0xA5u8; nbytes];
+            let fit = (nbytes as u64 * 8 / width as u64) as usize;
+            let mut r = MsbBitReader::new(&bytes);
+            let mut out = vec![0u64; fit + 1];
+            assert!(r.unpack_into(width, &mut out).is_err(), "w{width} must exhaust");
+            let mut r = MsbBitReader::new(&bytes);
+            let mut out = vec![0u64; fit];
+            r.unpack_into(width, &mut out).unwrap();
+        }
+    }
+
+    #[test]
+    fn pack_from_matches_put_bits_loop() {
+        let mut x = 0x1234_5678u64;
+        for width in 1..=64u32 {
+            for n in [0usize, 1, 2, 7, 8, 9, 63, 130] {
+                let vals: Vec<u64> = (0..n).map(|_| lcg(&mut x)).collect();
+                let mask = mask64(width);
+                let mut bulk = MsbBitWriter::new();
+                bulk.pack_from(width, &vals);
+                let mut scalar = MsbBitWriter::new();
+                for &v in &vals {
+                    scalar.put_bits(v & mask, width);
+                }
+                assert_eq!(bulk.finish(), scalar.finish(), "w{width} n{n}");
+            }
+        }
+        // Unaligned writer entry falls back to the scalar path but must
+        // still produce identical bytes.
+        let mut bulk = MsbBitWriter::new();
+        bulk.put_bits(0b101, 3);
+        bulk.pack_from(11, &[0x5A3, 0x7FF, 0x001]);
+        let mut scalar = MsbBitWriter::new();
+        scalar.put_bits(0b101, 3);
+        for v in [0x5A3u64, 0x7FF, 0x001] {
+            scalar.put_bits(v, 11);
+        }
+        assert_eq!(bulk.finish(), scalar.finish());
+    }
+
+    #[test]
+    fn pack_then_unpack_roundtrip() {
+        let mut x = 0x9E1u64;
+        for width in [1u32, 2, 5, 8, 13, 24, 26, 32, 40, 48, 56, 64] {
+            let vals: Vec<u64> = (0..100).map(|_| lcg(&mut x) & mask64(width)).collect();
+            let mut w = MsbBitWriter::new();
+            w.pack_from(width, &vals);
+            let bytes = w.finish();
+            let mut r = MsbBitReader::new(&bytes);
+            let mut out = vec![0u64; vals.len()];
+            r.unpack_into(width, &mut out).unwrap();
+            assert_eq!(out, vals, "w{width}");
+        }
     }
 
     #[test]

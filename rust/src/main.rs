@@ -483,6 +483,13 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         cache.admit_declines(),
         cache.ghost_hits()
     );
+    let per_codec = stats
+        .codec_bytes_all()
+        .iter()
+        .map(|(name, bytes)| format!("{name}={bytes}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    eprintln!("decoded bytes by codec: {per_codec}");
     Ok(())
 }
 

@@ -691,11 +691,15 @@ fn shard_loop(
             continue;
         }
         // Hand the owned Requests straight to serve_batch (no per-job
-        // clone on the hot path); reply metadata rides alongside.
+        // clone on the hot path); reply metadata rides alongside. The
+        // per-request codec is resolved once here, not per response in
+        // the reply loop below.
         let mut requests = Vec::with_capacity(live.len());
         let mut replies = Vec::with_capacity(live.len());
         let mut deadlines = Vec::with_capacity(live.len());
+        let mut codecs = Vec::with_capacity(live.len());
         for j in live {
+            codecs.push(registry.get(&j.req.dataset).map(|s| s.codec()).ok());
             requests.push(j.req);
             deadlines.push(j.deadline);
             replies.push((j.reply, j.received, j.charge, j.version));
@@ -710,12 +714,19 @@ fn shard_loop(
         // once per batch, not once per response — shards must not
         // serialize on the stats mutex in the reply hot path.
         let mut batch_stats = LatencyStats::new();
-        for ((reply, received, charge, version), resp) in replies.into_iter().zip(responses) {
+        for (ri, ((reply, received, charge, version), resp)) in
+            replies.into_iter().zip(responses).enumerate()
+        {
             let wire = match resp.data {
                 Ok(bytes) => {
                     // Admission-to-reply latency (includes queue wait —
                     // the quantity backpressure tuning moves).
                     batch_stats.record(received.elapsed(), bytes.len() as u64);
+                    // Per-codec decoded-byte attribution (shutdown
+                    // summary observability for the codec hot paths).
+                    if let Some(codec) = codecs[ri] {
+                        batch_stats.add_codec_bytes(codec, bytes.len() as u64);
+                    }
                     WireResponse { id: resp.id, status: Status::Ok, payload: bytes }
                 }
                 Err(Error::Runtime(m))

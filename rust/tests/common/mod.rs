@@ -66,6 +66,16 @@ pub fn vectors() -> Vec<GoldenVector> {
         // 6 trailing bits of the patch-list bit-pack.
         golden!("v2_delta_packed_w8", RleV2, 8, false, &[(9, 0x0F)]),
         golden!("v2_patched_base_w8", RleV2, 8, false, &[(19, 0x3F)]),
+        // Bulk bit-unpack gates (ISSUE 5): a max-width (64-bit) DIRECT
+        // group — 7 × 64 bits is an exact byte count, so no pack
+        // padding and no dead bits — and a PATCHED_BASE group at the
+        // max patch width (code 31 = 64 bits over 1-bit packed values).
+        // Its dead bits: the 4 trailing pack-padding bits of the
+        // 20×1-bit reduced section (byte 10), and the MSB of the 64-bit
+        // patch-high field (byte 12), which shifts past bit 63 when the
+        // patch is applied at `high << 1`.
+        golden!("rle2_direct_w64", RleV2, 8, true, &[]),
+        golden!("rle2_patched_maxpatch", RleV2, 8, true, &[(10, 0x0F), (12, 0x80)]),
         // DEFLATE: stored (5 alignment-padding bits after BFINAL/BTYPE),
         // fixed-Huffman, dynamic-Huffman (final-byte padding), a
         // genome-like dynamic stream (five single-bit flips reach

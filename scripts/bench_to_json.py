@@ -44,6 +44,22 @@ def parse_codec_hotpath(lines, scale, metrics):
         metrics[f"{base}/comp_mbps"] = _metric(comp, "MB/s", "throughput")
 
 
+def parse_rle_width_sweep(lines, metrics):
+    """Rows: w{width} group ratio dec-GB/s (the per-width RLE v2 sweep
+    from `CODAG_RLE_WIDTH_SWEEP=1 cargo bench --bench codec_hotpath`)."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 4 or not parts[0].startswith("w") or parts[0] == "width":
+            continue
+        try:
+            ratio, dec = float(parts[2]), float(parts[3])
+        except ValueError:
+            continue
+        base = f"rle2_width/{parts[0]}/{parts[1]}"
+        metrics[f"{base}/ratio"] = _metric(ratio, "x", "info")
+        metrics[f"{base}/dec_gbps"] = _metric(dec, "GB/s", "throughput")
+
+
 def parse_fig7(lines, scale, metrics):
     """Rows: codec dataset codag rapids speedup-x (incl. geomean rows)."""
     for ln in lines:
@@ -109,6 +125,7 @@ def parse_ablation(lines, metrics):
 SECTION_PARSERS = [
     ("## codec_hotpath (paper scale", lambda ls, m: parse_codec_hotpath(ls, "paper", m)),
     ("## codec_hotpath", lambda ls, m: parse_codec_hotpath(ls, "default", m)),
+    ("## rle_v2 width sweep", lambda ls, m: parse_rle_width_sweep(ls, m)),
     ("## fig7_throughput (paper scale", lambda ls, m: parse_fig7(ls, "paper", m)),
     ("## fig7_throughput", lambda ls, m: parse_fig7(ls, "default", m)),
     ("## loadgen batching ablation", lambda ls, m: parse_ablation(ls, m)),

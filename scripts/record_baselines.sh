@@ -42,6 +42,14 @@ cargo build --release --benches >&2
   CODAG_SCALE_MB=8 cargo bench --bench codec_hotpath 2>/dev/null
   echo '```'
   echo
+  echo '## rle_v2 width sweep'
+  echo
+  echo '```text'
+  # Per-width RLE v2 rows (1/2/4/8-byte elements x direct/patched/delta)
+  # quantifying the wide-lane bulk bit-unpacking path.
+  CODAG_RLE_WIDTH_SWEEP=1 cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
   echo '## fig7_throughput'
   echo
   echo '```text'
