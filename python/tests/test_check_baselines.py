@@ -129,6 +129,15 @@ w4     patched      0.5311        2.871
 w8     delta        0.1402        4.466
 ```
 
+## sub-block scaling (container v2 restart split)
+
+```text
+codec     workers  subblocks     dec GB/s
+rlev2           1        128        4.210
+rlev2           4        128       12.530
+deflate         8        128        6.904
+```
+
 ## fig7_throughput
 
 ```text
@@ -178,6 +187,12 @@ def test_bench_to_json_parses_all_sections():
     assert m["rle2_width/w1/direct/dec_gbps"]["kind"] == "throughput"
     assert m["rle2_width/w4/patched/ratio"]["value"] == 0.5311
     assert m["rle2_width/w8/delta/dec_gbps"]["value"] == 4.466
+    # Sub-block scaling sweep rows (container-v2 restart split).
+    assert m["subblock/rlev2/w1/dec_gbps"]["value"] == 4.210
+    assert m["subblock/rlev2/w1/dec_gbps"]["kind"] == "throughput"
+    assert m["subblock/rlev2/w4/dec_gbps"]["value"] == 12.530
+    assert m["subblock/rlev2/w4/subblocks"]["value"] == 128
+    assert m["subblock/deflate/w8/dec_gbps"]["value"] == 6.904
 
 
 def test_gate_passes_on_parsed_capture_roundtrip():

@@ -7,12 +7,19 @@
 //! rows quantifying the wide-lane bulk bit-unpacking path;
 //! `scripts/record_baselines.sh` records it as its own section, parsed
 //! by `scripts/bench_to_json.py` into `rle2_width/...` metrics).
+//!
+//! With `CODAG_SUBBLOCK_SWEEP` set, prints the container-v2 sub-block
+//! scaling sweep instead: one chunk split across its restart table by
+//! 1/2/4/8 stitch workers (`decompress_chunk_split`, DESIGN.md §7.5) —
+//! the single-hot-chunk case chunk-level parallelism can't touch.
+//! Recorded by `record_baselines.sh`, parsed into `subblock/...`.
 
 use codag::bench_harness::compress_dataset;
 use codag::codecs::{compress_chunk_with, CodecKind};
-use codag::coordinator::decompress_parallel;
+use codag::coordinator::{decompress_chunk_split, decompress_parallel};
 use codag::data::Dataset;
 use codag::decomp::ByteSink;
+use codag::format::container::Container;
 use std::time::Instant;
 
 /// Bytes generated per dataset: a light 2 MiB by default (matching the
@@ -101,10 +108,43 @@ fn rle_width_sweep(total: usize) {
     }
 }
 
+/// Sub-block scaling sweep: one chunk, restart table split across 1–8
+/// stitch workers. Columns `codec workers subblocks dec GB/s`.
+fn subblock_sweep(total: usize) {
+    use codag::format::container::DEFAULT_RESTART_INTERVAL;
+    println!("{:8} {:>8} {:>10} {:>12}", "codec", "workers", "subblocks", "dec GB/s");
+    let data = Dataset::Mc0.generate(total);
+    for kind in CodecKind::all() {
+        // A single chunk covering the dataset: the case where a request
+        // lands on one hot chunk and only the restart table offers
+        // parallelism.
+        let c = Container::compress_with_restarts(&data, kind, total, DEFAULT_RESTART_INTERVAL)
+            .expect("sweep compress");
+        let subblocks = c.restart_table(0).len() + 1;
+        for workers in [1usize, 2, 4, 8] {
+            let (t, bytes) = best_of(3, || {
+                decompress_chunk_split(&c, 0, workers).map(|v| v.len()).unwrap_or(0)
+            });
+            assert_eq!(bytes, data.len());
+            println!(
+                "{:8} {:>8} {:>10} {:>12.3}",
+                kind.name(),
+                workers,
+                subblocks,
+                bytes as f64 / t / 1e9,
+            );
+        }
+    }
+}
+
 fn main() {
     let size = size();
     if std::env::var("CODAG_RLE_WIDTH_SWEEP").is_ok() {
         rle_width_sweep(size);
+        return;
+    }
+    if std::env::var("CODAG_SUBBLOCK_SWEEP").is_ok() {
+        subblock_sweep(size);
         return;
     }
     println!(

@@ -44,6 +44,39 @@ pub fn deflate(data: &[u8]) -> Result<Vec<u8>> {
     Ok(w.finish())
 }
 
+/// Compress `data` closing a block every `interval` bytes and recording
+/// the bit position of each boundary as a restart point (container v2).
+///
+/// Each sub-block is tokenized independently, so no back-reference
+/// crosses a boundary and decode can resume at any recorded `bit_pos`.
+/// BFINAL is set only on the last block: the result is one valid RFC
+/// 1951 stream serial decoders consume unchanged (at a small ratio cost
+/// versus [`deflate`] from the lost cross-boundary matches).
+/// `interval == 0`, or data short enough for a single sub-block, falls
+/// back to [`deflate`] byte-identically with no restart points.
+pub fn deflate_with_restarts(
+    data: &[u8],
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<crate::codecs::RestartPoint>)> {
+    if interval == 0 || data.len() <= interval {
+        return Ok((deflate(data)?, Vec::new()));
+    }
+    let mut w = LsbBitWriter::new();
+    let mut points = Vec::with_capacity(data.len() / interval);
+    let n_blocks = (data.len() + interval - 1) / interval;
+    for (bi, sub) in data.chunks(interval).enumerate() {
+        if bi > 0 {
+            points.push(crate::codecs::RestartPoint {
+                bit_pos: w.bit_len(),
+                out_off: (bi * interval) as u64,
+            });
+        }
+        let tokens = tokenize(sub);
+        emit_block(&tokens, sub, bi + 1 == n_blocks, &mut w)?;
+    }
+    Ok((w.finish(), points))
+}
+
 /// Frequencies of literal/length and distance symbols for `tokens`.
 fn frequencies(tokens: &[Token]) -> (Vec<u32>, Vec<u32>) {
     let mut lit = vec![0u32; 286];

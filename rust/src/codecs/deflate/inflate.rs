@@ -139,6 +139,74 @@ pub fn inflate<O: OutputStream>(data: &[u8], out: &mut O) -> Result<()> {
     }
 }
 
+/// Inflate from a restart point until exactly `expect` output bytes are
+/// produced, returning the absolute bit position where decode stopped.
+///
+/// `bit_pos` is a container-v2 restart offset (bits from the start of
+/// `data`); `bit_pos == 0` decodes from the stream head. The caller is
+/// expected to bound `out` to the sub-block (a `SliceSink`), so any
+/// back-reference escaping the sub-block fails there. Block boundaries
+/// inside the range are followed normally; the decode is `Corrupt` if a
+/// block overshoots `expect` (restart offsets must land on block
+/// boundaries by construction) or if BFINAL terminates the stream
+/// before `expect` bytes exist.
+///
+/// `terminal` marks the chunk's last sub-block: the sub-block must then
+/// end on the stream's BFINAL block — and a non-terminal sub-block must
+/// *not* — so a split decode agrees with serial decode about where the
+/// stream ends. Without this, one BFINAL bit flip would truncate serial
+/// output while every bounded sub-block still decoded cleanly (the
+/// differential contract of DESIGN.md §7.5 forbids that divergence).
+pub fn inflate_sub_block<O: OutputStream>(
+    data: &[u8],
+    bit_pos: u64,
+    expect: usize,
+    terminal: bool,
+    out: &mut O,
+) -> Result<u64> {
+    let mut r = LsbBitReader::at_bit_offset(data, bit_pos)?;
+    let base_bits = (bit_pos / 8) * 8;
+    loop {
+        let bfinal = r.fetch_bits(1)?;
+        let btype = r.fetch_bits(2)?;
+        match btype {
+            0 => inflate_stored(&mut r, out)?,
+            1 => {
+                let lit = fixed_lit_decoder();
+                let dist = fixed_dist_decoder();
+                out.on_symbol(SymbolKind::DeflateHeader, 250, (r.consumed_bits() + 7) / 8);
+                inflate_block(&mut r, &lit, &dist, out)?;
+            }
+            2 => {
+                let (lit, dist) = read_dynamic_tables(&mut r)?;
+                out.on_symbol(SymbolKind::DeflateHeader, 3000, (r.consumed_bits() + 7) / 8);
+                inflate_block(&mut r, &lit, &dist, out)?;
+            }
+            _ => return Err(corrupt("deflate: reserved block type")),
+        }
+        let produced = out.bytes_written();
+        if produced > expect as u64 {
+            return Err(corrupt(format!(
+                "deflate: sub-block overshoots restart boundary ({produced} > {expect} bytes)"
+            )));
+        }
+        if produced == expect as u64 {
+            if terminal != (bfinal == 1) {
+                return Err(corrupt(format!(
+                    "deflate: sub-block boundary disagrees with BFINAL \
+                     (terminal={terminal}, bfinal={bfinal})"
+                )));
+            }
+            return Ok(base_bits + r.consumed_bits() as u64);
+        }
+        if bfinal == 1 {
+            return Err(corrupt(format!(
+                "deflate: final block before sub-block filled ({produced} of {expect} bytes)"
+            )));
+        }
+    }
+}
+
 fn inflate_stored<O: OutputStream>(r: &mut LsbBitReader<'_>, out: &mut O) -> Result<()> {
     r.align_byte();
     let len = r.fetch_bits(16)? as usize;

@@ -12,12 +12,24 @@ pub mod inflate;
 pub mod lz77;
 pub mod zlib;
 
+pub use inflate::inflate_sub_block;
+
+use crate::codecs::RestartPoint;
 use crate::decomp::{InputStream, OutputStream};
 use crate::Result;
 
 /// Compress a chunk into a raw DEFLATE stream.
 pub fn compress(chunk: &[u8]) -> Result<Vec<u8>> {
     encoder::deflate(chunk)
+}
+
+/// Compress a chunk closing a block every `interval` output bytes and
+/// recording container-v2 restart points at the boundaries.
+pub fn compress_with_restarts(
+    chunk: &[u8],
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+    encoder::deflate_with_restarts(chunk, interval)
 }
 
 /// Decode a DEFLATE chunk into `out`.

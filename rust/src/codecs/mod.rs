@@ -23,8 +23,67 @@ pub mod deflate;
 pub mod rle_v1;
 pub mod rle_v2;
 
-use crate::decomp::{ByteSink, InputStream, OutputStream, RunRecord, RunRecorder};
+use crate::decomp::{ByteSink, InputStream, OutputStream, RunRecord, RunRecorder, SliceSink};
 use crate::{corrupt, invalid, Result};
+
+/// A point where decode of a chunk can restart mid-stream (container v2).
+///
+/// Recorded at pack time at codec-chosen sub-block boundaries: for the
+/// RLE codecs a group/control-unit boundary (always byte-aligned, so
+/// `bit_pos % 8 == 0`), for DEFLATE a block boundary at an arbitrary bit
+/// position. `bit_pos` counts bits from the start of the compressed
+/// chunk *including* the RLE chunk header; `out_off` is the uncompressed
+/// byte offset the restarted decode produces first. The implicit first
+/// boundary `(0, 0)` is never stored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RestartPoint {
+    /// Bit position in the compressed chunk where decode may resume.
+    pub bit_pos: u64,
+    /// Uncompressed byte offset produced by decode from `bit_pos`.
+    pub out_off: u64,
+}
+
+/// Encoder-side restart recorder: encoders `offer` every decode boundary
+/// they emit and the recorder keeps the first one at or past each
+/// `interval`-byte threshold of uncompressed output. `interval == 0`
+/// disables recording; boundaries at offset 0 or at the end of the chunk
+/// are never stored (they are implicit).
+pub(crate) struct RestartRec {
+    interval: u64,
+    next: u64,
+    total: u64,
+    width: u64,
+    pub(crate) points: Vec<RestartPoint>,
+}
+
+impl RestartRec {
+    pub(crate) fn new(interval: usize, total_out_bytes: u64, width: u8) -> Self {
+        let interval = interval as u64;
+        RestartRec {
+            interval,
+            next: interval,
+            total: total_out_bytes,
+            width: width as u64,
+            points: Vec::new(),
+        }
+    }
+
+    /// Offer a boundary: `elems_done` elements decode from the first
+    /// `stream_bytes` bytes of the stream being built.
+    pub(crate) fn offer(&mut self, stream_bytes: usize, elems_done: u64) {
+        if self.interval == 0 {
+            return;
+        }
+        let out_off = elems_done.saturating_mul(self.width);
+        if out_off == 0 || out_off >= self.total {
+            return;
+        }
+        if out_off >= self.next {
+            self.points.push(RestartPoint { bit_pos: stream_bytes as u64 * 8, out_off });
+            self.next = out_off.saturating_add(self.interval);
+        }
+    }
+}
 
 /// The codec used for a container's chunks.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -92,6 +151,141 @@ pub fn compress_chunk_with(kind: CodecKind, chunk: &[u8], width: u8) -> Result<V
         CodecKind::RleV2 => rle_v2::compress(chunk, width),
         CodecKind::Deflate => deflate::compress(chunk),
     }
+}
+
+/// Compress one chunk with an explicit RLE element width, recording
+/// restart points roughly every `interval` uncompressed bytes (container
+/// v2). `interval == 0` disables recording. For the RLE codecs restart
+/// recording is passive — the compressed bytes are identical to
+/// [`compress_chunk_with`]; DEFLATE closes a block at each boundary so
+/// sub-blocks carry no cross-boundary back-references (the stream stays
+/// a single valid RFC 1951 stream for serial decoders).
+pub fn compress_chunk_with_restarts(
+    kind: CodecKind,
+    chunk: &[u8],
+    width: u8,
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+    match kind {
+        CodecKind::RleV1 => rle_v1::compress_with_restarts(chunk, width, interval),
+        CodecKind::RleV2 => rle_v2::compress_with_restarts(chunk, width, interval),
+        CodecKind::Deflate => deflate::compress_with_restarts(chunk, interval),
+    }
+}
+
+/// Auto-width variant of [`compress_chunk_with_restarts`] — mirrors
+/// [`compress_chunk`]'s width selection (widest of 8/4/2/1 dividing the
+/// chunk with the strictly smallest output).
+pub fn compress_chunk_restarts(
+    kind: CodecKind,
+    chunk: &[u8],
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+    if kind == CodecKind::Deflate {
+        return deflate::compress_with_restarts(chunk, interval);
+    }
+    let mut best: Option<(Vec<u8>, Vec<RestartPoint>)> = None;
+    for &w in VALID_WIDTHS.iter().rev() {
+        if chunk.len() % w as usize != 0 {
+            continue;
+        }
+        let c = compress_chunk_with_restarts(kind, chunk, w, interval)?;
+        if best.as_ref().map_or(true, |b| c.0.len() < b.0.len()) {
+            best = Some(c);
+        }
+    }
+    best.ok_or_else(|| invalid("chunk length not divisible by any element width"))
+}
+
+/// Decode one sub-block of a chunk into a bounded disjoint slice (the
+/// parallel stitch worker path, DESIGN.md §7.5).
+///
+/// `bit_pos == 0` means "start of the chunk" (for RLE codecs: right
+/// after the chunk header); any other value must name a restart point
+/// recorded at pack time. `terminal` marks the chunk's last sub-block
+/// (DEFLATE verifies BFINAL falls exactly there). `out` must be exactly
+/// the sub-block's uncompressed extent — the decode fills it completely
+/// or returns `Corrupt`; it can never write outside it. Returns the bit
+/// position where decode stopped, which stitching validates against the
+/// next restart point.
+pub fn decode_sub_block(
+    kind: CodecKind,
+    comp: &[u8],
+    bit_pos: u64,
+    terminal: bool,
+    out: &mut [u8],
+) -> Result<u64> {
+    let expect = out.len() as u64;
+    let mut sink = SliceSink::new(out);
+    let end = match kind {
+        CodecKind::Deflate => {
+            deflate::inflate_sub_block(comp, bit_pos, expect, terminal, &mut sink)?
+        }
+        CodecKind::RleV1 | CodecKind::RleV2 => {
+            let mut header = InputStream::new(comp);
+            let (width, _n_total) = read_rle_header(&mut header)?;
+            let header_len = header.bytes_consumed() as usize;
+            let start = if bit_pos == 0 {
+                header_len
+            } else {
+                if bit_pos % 8 != 0 {
+                    return Err(corrupt("rle restart point is not byte-aligned"));
+                }
+                let b = (bit_pos / 8) as usize;
+                if b < header_len || b > comp.len() {
+                    return Err(corrupt(format!(
+                        "rle restart point at byte {b} outside stream (header {header_len}, \
+                         len {})",
+                        comp.len()
+                    )));
+                }
+                b
+            };
+            if expect % width as u64 != 0 {
+                return Err(corrupt(format!(
+                    "restart point splits a width-{width} element ({expect} bytes)"
+                )));
+            }
+            let budget = expect / width as u64;
+            let mut input = InputStream::new(&comp[start..]);
+            match kind {
+                CodecKind::RleV1 => rle_v1::decode_elems(&mut input, width, budget, &mut sink)?,
+                _ => rle_v2::decode_elems(&mut input, width, budget, &mut sink)?,
+            }
+            (start as u64 + input.bytes_consumed()) * 8
+        }
+    };
+    if sink.bytes_written() != expect {
+        return Err(corrupt(format!(
+            "sub-block produced {} bytes, expected {expect}",
+            sink.bytes_written()
+        )));
+    }
+    Ok(end)
+}
+
+/// Reject a chunk whose RLE header declares a different uncompressed
+/// size than the container index expects.
+///
+/// Serial decode is driven by the header's element count; split decode
+/// is driven by per-sub-block output budgets and never consults it.
+/// Without this gate a corrupted count field would truncate (or fail)
+/// serial decode while every bounded sub-block still decoded cleanly —
+/// the divergence the stitch contract (DESIGN.md §7.5) forbids. No-op
+/// for DEFLATE, whose length is implicit in the block structure.
+pub fn check_chunk_header(kind: CodecKind, comp: &[u8], uncomp_len: u64) -> Result<()> {
+    if !kind.is_rle() {
+        return Ok(());
+    }
+    let mut header = InputStream::new(comp);
+    let (width, n_total) = read_rle_header(&mut header)?;
+    let declared = n_total.saturating_mul(width as u64);
+    if declared != uncomp_len {
+        return Err(corrupt(format!(
+            "rle chunk header declares {declared} uncompressed bytes, index says {uncomp_len}"
+        )));
+    }
+    Ok(())
 }
 
 /// Compress one chunk, auto-selecting the RLE element width (largest of

@@ -15,7 +15,7 @@
 //! Decoding maps directly onto the CODAG Table II primitives: a run is
 //! one `write_run(init, len, delta)`, a literal group is `len` unit runs.
 
-use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header};
+use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header, RestartPoint, RestartRec};
 use crate::decomp::{InputStream, OutputStream, SymbolKind};
 use crate::format::varint::{self, uvarint_len};
 use crate::{corrupt, Result};
@@ -29,19 +29,31 @@ pub const MAX_LITERALS: usize = 128;
 
 /// Compress `chunk` (raw little-endian bytes) as `width`-byte elements.
 pub fn compress(chunk: &[u8], width: u8) -> Result<Vec<u8>> {
+    compress_with_restarts(chunk, width, 0).map(|(out, _)| out)
+}
+
+/// Compress recording restart points at control-unit boundaries roughly
+/// every `interval` output bytes. Recording is passive: the stream is
+/// byte-identical to [`compress`] for every interval.
+pub fn compress_with_restarts(
+    chunk: &[u8],
+    width: u8,
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
     let elems = bytes_to_elems(chunk, width)?;
     let mut out = Vec::with_capacity(chunk.len() / 2 + 16);
     write_rle_header(&mut out, width, elems.len() as u64);
+    let mut rec = RestartRec::new(interval, chunk.len() as u64, width);
     if width == 1 {
-        compress_bytes(&elems, &mut out);
+        compress_bytes(&elems, &mut out, &mut rec);
     } else {
-        compress_ints(&elems, &mut out);
+        compress_ints(&elems, &mut out, &mut rec);
     }
-    Ok(out)
+    Ok((out, rec.points))
 }
 
 /// Byte RLE: runs have delta 0 and no varints.
-fn compress_bytes(elems: &[u64], out: &mut Vec<u8>) {
+fn compress_bytes(elems: &[u64], out: &mut Vec<u8>, rec: &mut RestartRec) {
     let mut i = 0usize;
     let n = elems.len();
     let mut lit_start = 0usize;
@@ -53,19 +65,26 @@ fn compress_bytes(elems: &[u64], out: &mut Vec<u8>) {
         }
         let run = j - i;
         if run >= MIN_RUN {
-            flush_byte_literals(elems, lit_start, i, out);
+            flush_byte_literals(elems, lit_start, i, out, rec);
             out.push((run - MIN_RUN) as u8);
             out.push(elems[i] as u8);
             i = j;
             lit_start = i;
+            rec.offer(out.len(), i as u64);
         } else {
             i += 1;
         }
     }
-    flush_byte_literals(elems, lit_start, n, out);
+    flush_byte_literals(elems, lit_start, n, out, rec);
 }
 
-fn flush_byte_literals(elems: &[u64], mut start: usize, end: usize, out: &mut Vec<u8>) {
+fn flush_byte_literals(
+    elems: &[u64],
+    mut start: usize,
+    end: usize,
+    out: &mut Vec<u8>,
+    rec: &mut RestartRec,
+) {
     while start < end {
         let n = (end - start).min(MAX_LITERALS);
         out.push((256 - n as i32) as u8);
@@ -73,11 +92,12 @@ fn flush_byte_literals(elems: &[u64], mut start: usize, end: usize, out: &mut Ve
             out.push(elems[k] as u8);
         }
         start += n;
+        rec.offer(out.len(), start as u64);
     }
 }
 
 /// Integer RLE v1: runs carry an i8 delta + zigzag varint base.
-fn compress_ints(elems: &[u64], out: &mut Vec<u8>) {
+fn compress_ints(elems: &[u64], out: &mut Vec<u8>, rec: &mut RestartRec) {
     let mut i = 0usize;
     let n = elems.len();
     let mut lit_start = 0usize;
@@ -99,20 +119,27 @@ fn compress_ints(elems: &[u64], out: &mut Vec<u8>) {
         }
         if run >= MIN_RUN {
             let delta = elems[i + 1].wrapping_sub(elems[i]) as i64;
-            flush_int_literals(elems, lit_start, i, out);
+            flush_int_literals(elems, lit_start, i, out, rec);
             out.push((run - MIN_RUN) as u8);
             out.push(delta as i8 as u8);
             varint::write_svarint(out, elems[i] as i64);
             i += run;
             lit_start = i;
+            rec.offer(out.len(), i as u64);
         } else {
             i += 1;
         }
     }
-    flush_int_literals(elems, lit_start, n, out);
+    flush_int_literals(elems, lit_start, n, out, rec);
 }
 
-fn flush_int_literals(elems: &[u64], mut start: usize, end: usize, out: &mut Vec<u8>) {
+fn flush_int_literals(
+    elems: &[u64],
+    mut start: usize,
+    end: usize,
+    out: &mut Vec<u8>,
+    rec: &mut RestartRec,
+) {
     while start < end {
         let n = (end - start).min(MAX_LITERALS);
         out.push((256 - n as i32) as u8);
@@ -120,12 +147,26 @@ fn flush_int_literals(elems: &[u64], mut start: usize, end: usize, out: &mut Vec
             varint::write_svarint(out, elems[k] as i64);
         }
         start += n;
+        rec.offer(out.len(), start as u64);
     }
 }
 
 /// Decode an RLE v1 chunk into `out`.
 pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     let (width, n_elems) = read_rle_header(input)?;
+    decode_elems(input, width, n_elems, out)
+}
+
+/// Decode exactly `n_elems` elements starting at the cursor — the body
+/// of [`decode`], reused by the sub-block restart path
+/// ([`crate::codecs::decode_sub_block`]) which positions the cursor at a
+/// restart point and bounds the element budget to one sub-block.
+pub(crate) fn decode_elems<O: OutputStream>(
+    input: &mut InputStream<'_>,
+    width: u8,
+    n_elems: u64,
+    out: &mut O,
+) -> Result<()> {
     let mut produced = 0u64;
     while produced < n_elems {
         let ctrl = input.fetch_byte()?;

@@ -20,7 +20,7 @@
 //! stores its base as a zigzag big-endian integer rather than ORC's
 //! sign-magnitude (round-trips identically; simplifies the bit path).
 
-use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header};
+use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header, RestartPoint, RestartRec};
 use crate::decomp::{InputStream, OutputStream, SymbolKind};
 use crate::format::bitio::MsbBitWriter;
 use crate::format::varint::{unzigzag, zigzag};
@@ -100,6 +100,17 @@ fn bits_for(v: u64) -> u32 {
 
 /// Compress `chunk` (little-endian bytes) as `width`-byte elements.
 pub fn compress(chunk: &[u8], width: u8) -> Result<Vec<u8>> {
+    compress_with_restarts(chunk, width, 0).map(|(out, _)| out)
+}
+
+/// Compress recording restart points at group boundaries roughly every
+/// `interval` output bytes. Recording is passive: the stream is
+/// byte-identical to [`compress`] for every interval.
+pub fn compress_with_restarts(
+    chunk: &[u8],
+    width: u8,
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
     let elems = bytes_to_elems(chunk, width)?;
     // Work on sign-extended i64 views for widths < 8 so negative i8/i32
     // columns zigzag compactly; the bit pattern is restored on decode by
@@ -110,11 +121,13 @@ pub fn compress(chunk: &[u8], width: u8) -> Result<Vec<u8>> {
         .collect();
     let mut out = Vec::with_capacity(chunk.len() / 2 + 16);
     write_rle_header(&mut out, width, vals.len() as u64);
+    let mut rec = RestartRec::new(interval, chunk.len() as u64, width);
     let mut i = 0usize;
     while i < vals.len() {
         i += emit_group(&vals[i..], &mut out);
+        rec.offer(out.len(), i as u64);
     }
-    Ok(out)
+    Ok((out, rec.points))
 }
 
 /// Sign-extend the low `width` bytes of `e`.
@@ -386,6 +399,19 @@ fn bits_to_pos(bits: u64) -> u64 {
 /// Decode an RLE v2 chunk into `out`.
 pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     let (width, n_elems) = read_rle_header(input)?;
+    decode_elems(input, width, n_elems, out)
+}
+
+/// Decode exactly `n_elems` elements starting at the cursor — the body
+/// of [`decode`], reused by the sub-block restart path
+/// ([`crate::codecs::decode_sub_block`]) which positions the cursor at a
+/// restart point and bounds the element budget to one sub-block.
+pub(crate) fn decode_elems<O: OutputStream>(
+    input: &mut InputStream<'_>,
+    width: u8,
+    n_elems: u64,
+    out: &mut O,
+) -> Result<()> {
     let mask = if width == 8 { u64::MAX } else { (1u64 << (width as u32 * 8)) - 1 };
     let mut produced = 0u64;
     while produced < n_elems {

@@ -12,10 +12,12 @@
 //!   [`Expander`](crate::runtime::Expander) runs the AOT JAX/Pallas
 //!   expand kernel (the L1/L2 half of the stack).
 
-use crate::codecs::{decode_to_runs, CodecKind};
-use crate::format::container::Container;
+use crate::codecs::{
+    check_chunk_header, decode_sub_block, decode_to_runs, CodecKind, RestartPoint,
+};
+use crate::format::container::{validate_restart_table, ChunkEntry, Container};
 use crate::runtime::Expander;
-use crate::{Error, Result};
+use crate::{corrupt, invalid, Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
@@ -109,6 +111,143 @@ pub fn decode_chunk_hybrid(
     expander.expand(&runs, width, total as usize)
 }
 
+/// One stitch job: a sub-block's disjoint output slice plus the bit
+/// range that must produce it.
+struct StitchJob<'a> {
+    /// Stream-order position (error reporting picks the first).
+    seq: usize,
+    /// Disjoint slice of the chunk's output buffer.
+    out: &'a mut [u8],
+    /// Restart bit position to decode from (0 = chunk start).
+    bit_pos: u64,
+    /// The next sub-block's restart bit position; decode must stop
+    /// exactly there. `None` for the last sub-block.
+    next_bit: Option<u64>,
+}
+
+impl StitchJob<'_> {
+    fn run(self, kind: CodecKind, comp: &[u8]) -> Result<()> {
+        let end = decode_sub_block(kind, comp, self.bit_pos, self.next_bit.is_none(), self.out)?;
+        if let Some(nb) = self.next_bit {
+            if end != nb {
+                return Err(corrupt(format!(
+                    "sub-block {} ended at bit {end}, next restart point says {nb}",
+                    self.seq
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode one chunk by splitting its restart table across `n_workers`
+/// threads, each filling a disjoint slice of `out` (DESIGN.md §7.5).
+///
+/// `out.len()` must be the chunk's exact uncompressed length. The
+/// stitched result is byte-identical to a serial
+/// [`Container::decompress_chunk_into`]; on corrupt input the call may
+/// fail where serial decode would fail (same `Corrupt` class) — it can
+/// reject more, never silently return different bytes. An empty restart
+/// table degrades to a single serial sub-block covering the chunk, so
+/// v1 containers decode unchanged through this path.
+pub fn decode_chunk_parallel(
+    kind: CodecKind,
+    comp: &[u8],
+    restarts: &[RestartPoint],
+    out: &mut [u8],
+    n_workers: usize,
+) -> Result<()> {
+    let total = out.len() as u64;
+    // Structural validation first: a hostile table must fail typed here,
+    // before any slice arithmetic.
+    let entry = ChunkEntry { comp_off: 0, comp_len: comp.len() as u64, uncomp_len: total };
+    validate_restart_table(restarts, &entry)
+        .map_err(|e| corrupt(format!("restart table invalid: {e}")))?;
+    // Sub-block budgets come from the index, not the chunk header —
+    // reject up front if the header disagrees, where serial decode
+    // (header-driven) would produce a different byte count.
+    check_chunk_header(kind, comp, total)?;
+    if restarts.is_empty() {
+        return decode_sub_block(kind, comp, 0, true, out).map(|_| ());
+    }
+    // Carve the output into disjoint sub-block slices.
+    let mut jobs = Vec::with_capacity(restarts.len() + 1);
+    let mut rest = out;
+    let mut prev_off = 0u64;
+    let mut prev_bit = 0u64;
+    for (k, p) in restarts.iter().enumerate() {
+        let (sub, tail) = rest.split_at_mut((p.out_off - prev_off) as usize);
+        jobs.push(StitchJob { seq: k, out: sub, bit_pos: prev_bit, next_bit: Some(p.bit_pos) });
+        rest = tail;
+        prev_off = p.out_off;
+        prev_bit = p.bit_pos;
+    }
+    jobs.push(StitchJob { seq: restarts.len(), out: rest, bit_pos: prev_bit, next_bit: None });
+    let n_jobs = jobs.len();
+    if n_workers <= 1 {
+        // Single worker still exercises the stitch decomposition (the
+        // differential harness relies on this); run jobs in stream order.
+        for job in jobs {
+            job.run(kind, comp)?;
+        }
+        return Ok(());
+    }
+    // Round-robin the jobs over the workers; report the first
+    // stream-order error so parallel and serial agree on which
+    // corruption surfaces.
+    let results: Vec<Mutex<Option<Result<()>>>> = (0..n_jobs).map(|_| Mutex::new(None)).collect();
+    let mut buckets: Vec<Vec<StitchJob<'_>>> =
+        (0..n_workers.min(n_jobs)).map(|_| Vec::new()).collect();
+    for (k, job) in jobs.into_iter().enumerate() {
+        let w = k % buckets.len();
+        buckets[w].push(job);
+    }
+    std::thread::scope(|s| {
+        for bucket in buckets {
+            let results = &results;
+            s.spawn(move || {
+                for job in bucket {
+                    let seq = job.seq;
+                    let r = job.run(kind, comp);
+                    *results[seq].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    for (k, cell) in results.iter().enumerate() {
+        cell.lock()
+            .unwrap()
+            .take()
+            .unwrap_or_else(|| Err(Error::Runtime(format!("sub-block {k} never decoded"))))?;
+    }
+    Ok(())
+}
+
+/// Decompress chunk `i` of `container` through the restart-point
+/// stitcher into a caller-owned buffer (cleared and resized first).
+pub fn decompress_chunk_split_into(
+    container: &Container,
+    i: usize,
+    n_workers: usize,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    let e = *container
+        .index
+        .get(i)
+        .ok_or_else(|| invalid(format!("chunk {i} out of range")))?;
+    let comp = container.chunk_bytes(i)?;
+    out.clear();
+    out.resize(e.uncomp_len as usize, 0);
+    decode_chunk_parallel(container.codec, comp, container.restart_table(i), out, n_workers)
+}
+
+/// Decompress chunk `i` through the stitcher into a fresh buffer.
+pub fn decompress_chunk_split(container: &Container, i: usize, n_workers: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    decompress_chunk_split_into(container, i, n_workers, &mut out)?;
+    Ok(out)
+}
+
 /// Static block partitioning (the "baseline" work division): worker `w`
 /// owns chunks `[w*n/W, (w+1)*n/W)`. Compared in `ablation_batching`.
 pub fn decompress_static_partition(container: &Container, n_workers: usize) -> Result<Vec<u8>> {
@@ -186,5 +325,61 @@ mod tests {
         let (_, c) = container(CodecKind::Deflate);
         let ex = Expander::cpu_only();
         assert!(decompress_hybrid(&c, 2, &ex).is_err());
+    }
+
+    #[test]
+    fn split_decode_matches_serial_all_codecs() {
+        let data = Dataset::Mc0.generate(200 * 1024);
+        for kind in CodecKind::all() {
+            let c = Container::compress_with_restarts(&data, kind, 64 * 1024, 4096).unwrap();
+            assert!(c.restarts.iter().any(|t| !t.is_empty()), "{kind:?}");
+            for i in 0..c.n_chunks() {
+                let serial = c.decompress_chunk(i).unwrap();
+                for workers in [1, 2, 8] {
+                    let par = decompress_chunk_split(&c, i, workers).unwrap();
+                    assert_eq!(par, serial, "{kind:?} chunk {i} workers {workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_decode_without_restarts_matches_serial() {
+        let data = Dataset::Mc0.generate(64 * 1024);
+        for kind in CodecKind::all() {
+            let c = Container::compress_with_restarts(&data, kind, 16 * 1024, 0).unwrap();
+            for i in 0..c.n_chunks() {
+                assert_eq!(
+                    decompress_chunk_split(&c, i, 4).unwrap(),
+                    c.decompress_chunk(i).unwrap(),
+                    "{kind:?} chunk {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn split_decode_rejects_doctored_tables() {
+        let data = Dataset::Mc0.generate(128 * 1024);
+        for kind in CodecKind::all() {
+            let c = Container::compress_with_restarts(&data, kind, 128 * 1024, 4096).unwrap();
+            let comp = c.chunk_bytes(0).unwrap();
+            let table = c.restart_table(0);
+            assert!(table.len() >= 2, "{kind:?}");
+            let serial = c.decompress_chunk(0).unwrap();
+            let mut out = vec![0u8; serial.len()];
+            // Perturbing any coordinate of a restart point must either
+            // fail typed or (never here) still match serial — silence
+            // with different bytes is the one forbidden outcome.
+            for (j, delta) in [(0usize, 8i64), (1, -8), (table.len() - 1, 8)] {
+                let mut t = table.to_vec();
+                t[j].bit_pos = t[j].bit_pos.wrapping_add_signed(delta);
+                match decode_chunk_parallel(kind, comp, &t, &mut out, 4) {
+                    Err(Error::Corrupt(_)) => {}
+                    Err(e) => panic!("{kind:?}: wrong error class {e:?}"),
+                    Ok(()) => assert_eq!(out, serial, "{kind:?}: silent divergence"),
+                }
+            }
+        }
     }
 }

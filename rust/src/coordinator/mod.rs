@@ -17,7 +17,10 @@ pub mod service;
 pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher, ExpandTask};
-pub use engine::{decompress_hybrid, decompress_parallel, decompress_static_partition};
+pub use engine::{
+    decode_chunk_parallel, decompress_chunk_split, decompress_chunk_split_into,
+    decompress_hybrid, decompress_parallel, decompress_static_partition,
+};
 pub use router::{plan, plan_dims, ChunkWork, DatasetSource, LeastLoaded, Registry, Request};
 pub use service::{Response, Service, ServiceConfig};
 pub use stats::LatencyStats;

@@ -2,7 +2,7 @@
 //!
 //! The registry holds loaded dataset sources — in-memory containers or
 //! file-backed [`FileDataset`]s whose compressed chunks stay on disk
-//! until fetched (DESIGN.md §8); the router translates byte-range
+//! until fetched (DESIGN.md §9); the router translates byte-range
 //! requests into chunk lists and picks workers by least outstanding
 //! work — the same shape as a serving router in front of replicated
 //! engines.
@@ -40,7 +40,7 @@ pub struct ChunkWork {
 
 /// One serveable dataset: an in-memory container (the synthetic /
 /// bench path) or a file-backed container whose compressed chunks are
-/// fetched lazily from disk (`codag serve --data-dir`, DESIGN.md §8).
+/// fetched lazily from disk (`codag serve --data-dir`, DESIGN.md §9).
 /// Both expose the same header + index view, so planning and the
 /// decode path are source-agnostic.
 #[derive(Debug)]
@@ -113,6 +113,33 @@ impl DatasetSource {
         match self {
             DatasetSource::Memory(c) => c.decompress_chunk_into(i, out),
             DatasetSource::File(f) => f.decompress_chunk_into(i, out),
+        }
+    }
+
+    /// The restart table of chunk `i` (empty when the source is a v1
+    /// container or the chunk has no recorded boundaries).
+    pub fn restart_table(&self, i: usize) -> &[crate::codecs::RestartPoint] {
+        match self {
+            DatasetSource::Memory(c) => c.restart_table(i),
+            DatasetSource::File(f) => f.restart_table(i),
+        }
+    }
+
+    /// Decompress chunk `i` by splitting its restart table across
+    /// `n_workers` threads (DESIGN.md §7.5); byte-identical to
+    /// [`decompress_chunk_into`](Self::decompress_chunk_into), and
+    /// degrades to serial sub-block decode when the table is empty.
+    pub fn decompress_chunk_split_into(
+        &self,
+        i: usize,
+        n_workers: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        match self {
+            DatasetSource::Memory(c) => {
+                super::engine::decompress_chunk_split_into(c, i, n_workers, out)
+            }
+            DatasetSource::File(f) => f.decompress_chunk_split_into(i, n_workers, out),
         }
     }
 }

@@ -157,12 +157,21 @@ impl<'a> Service<'a> {
         let slots_ref = &slots;
         let expired = &expired;
         if items.len() <= 1 || self.config.workers.max(1) == 1 {
+            // Inline decode leaves the worker pool idle, so hand the
+            // whole worker budget to the restart-point stitcher: a
+            // single hot chunk splits across `workers` threads instead
+            // of decoding on one (DESIGN.md §7.5).
             let mut scratch = self.take_scratch();
             for (i, item) in items.iter().enumerate() {
                 let out = if expired(item.req_idx) {
                     Err(Error::Runtime(DEADLINE_EXPIRED.into()))
                 } else {
-                    self.decode_item(&item.dataset, item.work, &mut scratch)
+                    self.decode_item(
+                        &item.dataset,
+                        item.work,
+                        self.config.workers.max(1),
+                        &mut scratch,
+                    )
                 };
                 *slots_ref[i].lock().unwrap() = Some(out);
             }
@@ -181,7 +190,10 @@ impl<'a> Service<'a> {
                             let out = if expired(item.req_idx) {
                                 Err(Error::Runtime(DEADLINE_EXPIRED.into()))
                             } else {
-                                self.decode_item(&item.dataset, item.work, &mut scratch)
+                                // The pool already saturates the
+                                // workers with chunk-level parallelism;
+                                // each item decodes serially.
+                                self.decode_item(&item.dataset, item.work, 1, &mut scratch)
                             };
                             *slots_ref[i].lock().unwrap() = Some(out);
                         }
@@ -230,7 +242,19 @@ impl<'a> Service<'a> {
     /// output buffer. Chunks the cache retains are copied out of the
     /// scratch into an `Arc<[u8]>` exactly once; everything else is
     /// sliced straight from the scratch into the response.
-    fn decode_item(&self, dataset: &str, w: ChunkWork, scratch: &mut Vec<u8>) -> Result<Vec<u8>> {
+    ///
+    /// `split_workers > 1` routes the decode through the restart-point
+    /// stitcher when the chunk has a restart table (container v2): the
+    /// sub-blocks split across that many threads and land in disjoint
+    /// slices of `scratch`, byte-identical to the serial decode before
+    /// anything reaches the cache or the response.
+    fn decode_item(
+        &self,
+        dataset: &str,
+        w: ChunkWork,
+        split_workers: usize,
+        scratch: &mut Vec<u8>,
+    ) -> Result<Vec<u8>> {
         if let Some(cache) = self.cache {
             if let Some(full) = cache.get(dataset, w.chunk) {
                 return slice_chunk(&full, w);
@@ -255,7 +279,11 @@ impl<'a> Service<'a> {
             }
             return if w.lo == 0 && w.hi == full.len() { Ok(full) } else { slice_chunk(&full, w) };
         }
-        c.decompress_chunk_into(w.chunk, scratch)?;
+        if split_workers > 1 && !c.restart_table(w.chunk).is_empty() {
+            c.decompress_chunk_split_into(w.chunk, split_workers, scratch)?;
+        } else {
+            c.decompress_chunk_into(w.chunk, scratch)?;
+        }
         if let Some(r) = self.try_cache(dataset, w, scratch) {
             return r;
         }
@@ -412,6 +440,26 @@ mod tests {
         let pool = svc.scratch.lock().unwrap();
         assert_eq!(pool.len(), 1);
         assert!(pool[0].capacity() >= 32 * 1024, "scratch capacity should stay warm");
+    }
+
+    #[test]
+    fn single_request_splits_across_workers_byte_identically() {
+        // One request touching one big chunk with a dense restart
+        // table: the inline path hands the worker budget to the
+        // stitcher, and the response must be byte-identical to the
+        // serial decode for every codec.
+        let data = Dataset::Mc0.generate(256 * 1024);
+        for codec in CodecKind::all() {
+            let c =
+                Container::compress_with_restarts(&data, codec, 256 * 1024, 8 * 1024).unwrap();
+            assert!(!c.restart_table(0).is_empty(), "{codec:?}");
+            let mut reg = Registry::new();
+            reg.insert("big", c);
+            let svc = Service::new(&reg, None, ServiceConfig { workers: 8, hybrid: false });
+            let req = Request { id: 1, dataset: "big".into(), offset: 0, len: 0 };
+            let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+            assert_eq!(resp[0].data.as_ref().unwrap(), &data, "{codec:?}");
+        }
     }
 
     #[test]

@@ -34,7 +34,7 @@ pub mod trace;
 
 pub use input_stream::InputStream;
 pub use output_stream::{
-    ByteSink, CountingSink, OutputStream, RunRecord, RunRecorder, ScalarSink, SymbolKind,
-    TracingSink,
+    ByteSink, CountingSink, OutputStream, RunRecord, RunRecorder, ScalarSink, SliceSink,
+    SymbolKind, TracingSink,
 };
 pub use trace::{BarrierScope, UnitEvent, UnitTrace};

@@ -718,9 +718,174 @@ impl<S: OutputStream> OutputStream for TracingSink<S> {
     }
 }
 
+/// Bounded-slice sink: materializes into a caller-owned `&mut [u8]`.
+///
+/// The parallel-stitch sink of the container-v2 restart path (DESIGN.md
+/// §7.5): each worker decodes its sub-block into a *disjoint* slice of
+/// the shared scratch buffer, so every write is bounds-checked against
+/// the slice and any overflow is a typed `Corrupt` — a corrupted
+/// restart table can misroute a worker but can never scribble outside
+/// its slice or silently produce wrong bytes that pass the
+/// `bytes_written == expected` stitch check.
+///
+/// `memcpy` resolves entirely *within* the sub-block: restart-aware
+/// encoders never emit a back-reference that crosses a restart boundary
+/// (each sub-block is tokenized independently), so an offset reaching
+/// before the slice start is corruption, not a window case.
+#[derive(Debug)]
+pub struct SliceSink<'a> {
+    buf: &'a mut [u8],
+    pos: usize,
+}
+
+impl<'a> SliceSink<'a> {
+    /// New sink writing into `buf` from its start.
+    pub fn new(buf: &'a mut [u8]) -> Self {
+        SliceSink { buf, pos: 0 }
+    }
+
+    /// Remaining capacity in bytes.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    #[inline]
+    fn overflow(&self, wanted: u64) -> crate::Error {
+        corrupt(format!(
+            "sub-block write of {wanted} bytes overflows slice ({} of {} used)",
+            self.pos,
+            self.buf.len()
+        ))
+    }
+}
+
+impl OutputStream for SliceSink<'_> {
+    #[inline]
+    fn write_byte(&mut self, b: u8) -> Result<()> {
+        if self.pos >= self.buf.len() {
+            return Err(self.overflow(1));
+        }
+        self.buf[self.pos] = b;
+        self.pos += 1;
+        Ok(())
+    }
+
+    fn write_run(&mut self, init: u64, len: u64, delta: i64, width: u8) -> Result<()> {
+        let w = width as usize;
+        let total = (len as usize).checked_mul(w).filter(|&t| t <= self.remaining());
+        let total = total.ok_or_else(|| self.overflow(len.saturating_mul(w as u64)))?;
+        let end = self.pos + total;
+        if delta == 0 {
+            if w == 1 {
+                self.buf[self.pos..end].fill(init as u8);
+            } else {
+                let le = init.to_le_bytes();
+                for chunk in self.buf[self.pos..end].chunks_exact_mut(w) {
+                    chunk.copy_from_slice(&le[..w]);
+                }
+            }
+            self.pos = end;
+            return Ok(());
+        }
+        let mut v = init;
+        let d = delta as u64;
+        while self.pos < end {
+            let le = v.to_le_bytes();
+            self.buf[self.pos..self.pos + w].copy_from_slice(&le[..w]);
+            self.pos += w;
+            v = v.wrapping_add(d);
+        }
+        Ok(())
+    }
+
+    fn memcpy(&mut self, offset: u64, len: u64) -> Result<()> {
+        let off = offset as usize;
+        let n = len as usize;
+        if off == 0 || off > self.pos {
+            return Err(corrupt(format!(
+                "memcpy offset {off} out of sub-block window (slice pos {})",
+                self.pos
+            )));
+        }
+        if n > self.remaining() {
+            return Err(self.overflow(len));
+        }
+        // Overlapping window semantics (`len > offset` repeats the
+        // window): the scalar loop is the only correct order, and the
+        // per-sub-block slices mean the source always lives in this
+        // sink's own prefix.
+        let src = self.pos - off;
+        for i in 0..n {
+            self.buf[self.pos + i] = self.buf[src + i];
+        }
+        self.pos += n;
+        Ok(())
+    }
+
+    #[inline]
+    fn write_slice(&mut self, bytes: &[u8]) -> Result<()> {
+        if bytes.len() > self.remaining() {
+            return Err(self.overflow(bytes.len() as u64));
+        }
+        self.buf[self.pos..self.pos + bytes.len()].copy_from_slice(bytes);
+        self.pos += bytes.len();
+        Ok(())
+    }
+
+    fn write_elems(&mut self, elems: &[u64], width: u8) -> Result<()> {
+        let w = width as usize;
+        let total = elems.len().checked_mul(w).filter(|&t| t <= self.remaining());
+        if total.is_none() {
+            return Err(self.overflow((elems.len() as u64).saturating_mul(w as u64)));
+        }
+        for e in elems {
+            let le = e.to_le_bytes();
+            self.buf[self.pos..self.pos + w].copy_from_slice(&le[..w]);
+            self.pos += w;
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn bytes_written(&self) -> u64 {
+        self.pos as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slice_sink_bounds_and_window() {
+        let mut buf = [0u8; 8];
+        let mut s = SliceSink::new(&mut buf);
+        s.write_slice(b"ab").unwrap();
+        s.memcpy(2, 4).unwrap(); // window repeat: abab
+        assert_eq!(s.bytes_written(), 6);
+        assert!(s.write_slice(b"xyz").is_err()); // 3 > 2 remaining
+        assert!(s.memcpy(7, 1).is_err()); // reaches before slice start
+        assert!(s.memcpy(0, 1).is_err());
+        s.write_run(7, 2, 0, 1).unwrap();
+        assert!(s.write_byte(0).is_err());
+        drop(s);
+        assert_eq!(&buf, b"ababab\x07\x07");
+    }
+
+    #[test]
+    fn slice_sink_matches_byte_sink_on_runs() {
+        let mut oracle = ByteSink::new();
+        let mut buf = vec![0u8; 64];
+        let mut s = SliceSink::new(&mut buf);
+        for sink in [&mut oracle as &mut dyn OutputStream, &mut s] {
+            sink.write_run(0x0102, 3, 0, 2).unwrap();
+            sink.write_run(10, 4, 3, 1).unwrap();
+            sink.write_elems(&[1, 2, 3], 4).unwrap();
+        }
+        let n = oracle.out.len();
+        assert_eq!(buf[..n], oracle.out[..]);
+    }
 
     #[test]
     fn byte_sink_run_expansion_widths() {

@@ -163,6 +163,30 @@ impl<'a> LsbBitReader<'a> {
     pub fn read_aligned_bytes(&mut self, len: usize) -> Result<Vec<u8>> {
         self.read_aligned_slice(len).map(|s| s.to_vec())
     }
+
+    /// Create a reader positioned `bit_off` bits into `data` — the
+    /// seekable construction container-v2 restart points need. The
+    /// reader is rooted at the containing byte and the sub-byte
+    /// remainder is consumed, so `consumed_bits()` counts from that
+    /// byte boundary: callers recover the absolute stop position as
+    /// `(bit_off / 8) * 8 + consumed_bits()`.
+    pub fn at_bit_offset(data: &'a [u8], bit_off: u64) -> Result<Self> {
+        let rem = (bit_off % 8) as u32;
+        let past_end = bit_off / 8 > data.len() as u64
+            || (rem > 0 && bit_off / 8 >= data.len() as u64);
+        if past_end {
+            return Err(corrupt(format!(
+                "restart point at bit {bit_off} is past the {}-byte stream",
+                data.len()
+            )));
+        }
+        let byte = (bit_off / 8) as usize;
+        let mut r = LsbBitReader::new(&data[byte..]);
+        if rem > 0 {
+            r.fetch_bits(rem)?;
+        }
+        Ok(r)
+    }
 }
 
 /// LSB-first bit writer (DEFLATE convention).

@@ -10,26 +10,61 @@
 //!
 //! ```text
 //! magic: u32 = 0xC0DA_6001
-//! version: u32
+//! version: u32           (1 or 2)
 //! codec: u32 (CodecKind discriminant)
 //! chunk_size: u64        (uncompressed bytes per chunk, last may be short)
 //! total_uncompressed: u64
 //! n_chunks: u64
 //! index: n_chunks × { comp_off: u64, comp_len: u64, uncomp_len: u64 }
+//! -- v2 only: restart section --
+//! per chunk: { n_restarts: u32, n_restarts × { bit_pos: u64, out_off: u64 } }
+//! checksum: u64          (FNV-1a 64 over every restart-section byte above)
+//! -- end v2 section --
 //! payload bytes
 //! ```
 //!
+//! v2 (DESIGN.md §8) appends a **restart table** per chunk: pack-time
+//! sub-block boundaries `(bit_pos, out_off)` — bit position into the
+//! chunk's compressed stream, byte offset into its uncompressed output —
+//! recorded roughly every [`DEFAULT_RESTART_INTERVAL`] output bytes, so
+//! the serving tier can split one chunk across workers
+//! ([`crate::coordinator::engine::decode_chunk_parallel`]). The implicit
+//! starting point `(0, 0)` is never stored. The section is guarded by a
+//! trailing FNV-1a checksum: any single-byte corruption of a restart
+//! table is detected at parse time rather than surfacing as a decode
+//! divergence. v1 files parse unchanged with empty restart tables.
+//!
 //! The 128 KiB default matches the paper's evaluation (§V-B).
 
-use crate::codecs::{compress_chunk, CodecKind};
+use crate::codecs::{compress_chunk_restarts, CodecKind, RestartPoint};
 use crate::{corrupt, invalid, Result};
 
 /// Container magic number ("C0DAG" v1).
 pub const MAGIC: u32 = 0xC0DA_6001;
-/// Current container version.
-pub const VERSION: u32 = 1;
+/// Current container version (written by [`Container::to_bytes`]).
+pub const VERSION: u32 = 2;
+/// First container version, still readable (no restart section).
+pub const VERSION_V1: u32 = 1;
 /// Default chunk size used throughout the paper's evaluation.
 pub const DEFAULT_CHUNK_SIZE: usize = 128 * 1024;
+/// Default restart interval: one sub-block boundary roughly every this
+/// many uncompressed bytes (8 sub-blocks per default 128 KiB chunk).
+pub const DEFAULT_RESTART_INTERVAL: usize = 16 * 1024;
+/// Serialized size of one restart point (`bit_pos` + `out_off`).
+pub(crate) const RESTART_ENTRY_LEN: usize = 16;
+
+/// FNV-1a 64-bit running hash (offset basis seed). Guards the v2
+/// restart section: every input byte both XORs into and multiplies the
+/// state, so any single-byte change yields a different digest.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// Fold `bytes` into an FNV-1a 64 `state` (seed with [`FNV_OFFSET`]).
+pub(crate) fn fnv1a64(mut state: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        state ^= b as u64;
+        state = state.wrapping_mul(0x100_0000_01b3);
+    }
+    state
+}
 
 /// Index entry for one compressed chunk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -53,25 +88,43 @@ pub struct Container {
     pub total_uncompressed: u64,
     /// Per-chunk index.
     pub index: Vec<ChunkEntry>,
+    /// Per-chunk restart tables (parallel to `index`; empty for v1
+    /// files or chunks too small for a sub-block boundary).
+    pub restarts: Vec<Vec<RestartPoint>>,
     /// Concatenated compressed chunk payloads.
     pub payload: Vec<u8>,
 }
 
 impl Container {
-    /// Compress `data` into a container with `chunk_size`-byte chunks.
+    /// Compress `data` into a container with `chunk_size`-byte chunks,
+    /// recording restart points every [`DEFAULT_RESTART_INTERVAL`]
+    /// output bytes.
     pub fn compress(data: &[u8], codec: CodecKind, chunk_size: usize) -> Result<Container> {
+        Self::compress_with_restarts(data, codec, chunk_size, DEFAULT_RESTART_INTERVAL)
+    }
+
+    /// Compress with an explicit restart interval (`0` disables restart
+    /// points; chunks no larger than the interval get none either way).
+    pub fn compress_with_restarts(
+        data: &[u8],
+        codec: CodecKind,
+        chunk_size: usize,
+        restart_interval: usize,
+    ) -> Result<Container> {
         if chunk_size == 0 {
             return Err(invalid("chunk_size must be > 0"));
         }
         let mut index = Vec::new();
+        let mut restarts = Vec::new();
         let mut payload = Vec::new();
         for chunk in data.chunks(chunk_size) {
-            let comp = compress_chunk(codec, chunk)?;
+            let (comp, points) = compress_chunk_restarts(codec, chunk, restart_interval)?;
             index.push(ChunkEntry {
                 comp_off: payload.len() as u64,
                 comp_len: comp.len() as u64,
                 uncomp_len: chunk.len() as u64,
             });
+            restarts.push(points);
             payload.extend_from_slice(&comp);
         }
         Ok(Container {
@@ -79,8 +132,15 @@ impl Container {
             chunk_size,
             total_uncompressed: data.len() as u64,
             index,
+            restarts,
             payload,
         })
+    }
+
+    /// The restart table of chunk `i` (empty when the chunk has no
+    /// recorded sub-block boundaries).
+    pub fn restart_table(&self, i: usize) -> &[RestartPoint] {
+        self.restarts.get(i).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Number of chunks.
@@ -156,7 +216,7 @@ impl Container {
         Ok(out)
     }
 
-    /// Serialize to bytes.
+    /// Serialize to bytes (always written as v2).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(48 + self.index.len() * 24 + self.payload.len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
@@ -170,6 +230,20 @@ impl Container {
             out.extend_from_slice(&e.comp_len.to_le_bytes());
             out.extend_from_slice(&e.uncomp_len.to_le_bytes());
         }
+        // Restart section: one table per chunk (a missing tail table —
+        // e.g. a hand-built struct — serializes as zero restarts), then
+        // the FNV-1a guard over every section byte.
+        let section_start = out.len();
+        for i in 0..self.index.len() {
+            let table = self.restart_table(i);
+            out.extend_from_slice(&(table.len() as u32).to_le_bytes());
+            for p in table {
+                out.extend_from_slice(&p.bit_pos.to_le_bytes());
+                out.extend_from_slice(&p.out_off.to_le_bytes());
+            }
+        }
+        let sum = fnv1a64(FNV_OFFSET, &out[section_start..]);
+        out.extend_from_slice(&sum.to_le_bytes());
         out.extend_from_slice(&self.payload);
         out
     }
@@ -187,7 +261,7 @@ impl Container {
             return Err(corrupt(format!("bad magic 0x{magic:08X}")));
         }
         let version = take_u32(data, &mut pos)?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_V1 {
             return Err(corrupt(format!("unsupported version {version}")));
         }
         let codec_raw = take_u32(data, &mut pos)?;
@@ -213,6 +287,45 @@ impl Container {
                 uncomp_len: take_u64(data, &mut pos)?,
             });
         }
+        // v2: restart section between index and payload, FNV-guarded.
+        let restarts = if version == VERSION_V1 {
+            vec![Vec::new(); n_chunks]
+        } else {
+            let section_start = pos;
+            let mut restarts = Vec::with_capacity(n_chunks);
+            for i in 0..n_chunks {
+                let b = data
+                    .get(pos..pos + 4)
+                    .ok_or_else(|| corrupt("container: truncated restart section"))?;
+                pos += 4;
+                let count = u32::from_le_bytes(b.try_into().unwrap()) as usize;
+                // Alloc cap (same idea as the index cap): the table must
+                // fit in the remaining bytes before reserving for it.
+                if count.saturating_mul(RESTART_ENTRY_LEN) > data.len().saturating_sub(pos) {
+                    return Err(corrupt(format!(
+                        "container: chunk {i} restart table larger than file"
+                    )));
+                }
+                let mut table = Vec::with_capacity(count);
+                for _ in 0..count {
+                    table.push(RestartPoint {
+                        bit_pos: take_u64(data, &mut pos)?,
+                        out_off: take_u64(data, &mut pos)?,
+                    });
+                }
+                restarts.push(table);
+            }
+            let sum = fnv1a64(FNV_OFFSET, &data[section_start..pos]);
+            let stored = take_u64(data, &mut pos)
+                .map_err(|_| corrupt("container: truncated restart checksum"))?;
+            if sum != stored {
+                return Err(corrupt(format!(
+                    "container: restart section checksum mismatch \
+                     (computed {sum:016x}, stored {stored:016x})"
+                )));
+            }
+            restarts
+        };
         let payload = data[pos..].to_vec();
         // Validate index bounds against payload.
         for (i, e) in index.iter().enumerate() {
@@ -221,8 +334,45 @@ impl Container {
                 return Err(corrupt(format!("chunk {i} extends past payload")));
             }
         }
-        Ok(Container { codec, chunk_size, total_uncompressed, index, payload })
+        // Structural validation of restart tables: monotone, in-range
+        // boundaries. The checksum catches bit rot; this catches a
+        // well-formed-but-lying table before it reaches the stitcher.
+        for (i, (table, e)) in restarts.iter().zip(&index).enumerate() {
+            validate_restart_table(table, e).map_err(|err| {
+                corrupt(format!("container: chunk {i} restart table invalid: {err}"))
+            })?;
+        }
+        Ok(Container { codec, chunk_size, total_uncompressed, index, restarts, payload })
     }
+}
+
+/// Check a restart table against its chunk's index entry: strictly
+/// increasing `bit_pos` and `out_off`, offsets inside the chunk (never
+/// 0 or ≥ `uncomp_len` — the implicit start point is not stored), bit
+/// positions inside the compressed stream.
+pub(crate) fn validate_restart_table(table: &[RestartPoint], e: &ChunkEntry) -> Result<()> {
+    let mut prev_bit = 0u64;
+    let mut prev_off = 0u64;
+    for p in table {
+        if p.bit_pos <= prev_bit {
+            return Err(corrupt(format!("bit_pos {} not increasing", p.bit_pos)));
+        }
+        if p.bit_pos > e.comp_len.saturating_mul(8) {
+            return Err(corrupt(format!(
+                "bit_pos {} outside compressed stream ({} bytes)",
+                p.bit_pos, e.comp_len
+            )));
+        }
+        if p.out_off <= prev_off || p.out_off >= e.uncomp_len {
+            return Err(corrupt(format!(
+                "out_off {} outside chunk ({} bytes) or not increasing",
+                p.out_off, e.uncomp_len
+            )));
+        }
+        prev_bit = p.bit_pos;
+        prev_off = p.out_off;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -302,5 +452,97 @@ mod tests {
         let off = 36 + 8;
         bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn restart_tables_survive_serialization() {
+        let data = sample_data();
+        for codec in [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate] {
+            let c = Container::compress_with_restarts(&data, codec, 8192, 512).unwrap();
+            assert!(
+                c.restarts.iter().any(|t| !t.is_empty()),
+                "{codec:?}: expected restart points at interval 512"
+            );
+            let c2 = Container::from_bytes(&c.to_bytes()).unwrap();
+            assert_eq!(c2.restarts, c.restarts, "{codec:?}");
+            assert_eq!(c2.decompress_all().unwrap(), data, "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn zero_interval_disables_restarts() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV2, 4096, 0).unwrap();
+        assert!(c.restarts.iter().all(Vec::is_empty));
+        assert_eq!(c.decompress_all().unwrap(), data);
+    }
+
+    /// Rewrite a serialized container as version 1: keep header + index,
+    /// drop the restart section, patch the version field.
+    fn as_v1_bytes(c: &Container) -> Vec<u8> {
+        let mut out = c.to_bytes()[..36 + c.index.len() * 24].to_vec();
+        out[4..8].copy_from_slice(&VERSION_V1.to_le_bytes());
+        out.extend_from_slice(&c.payload);
+        out
+    }
+
+    #[test]
+    fn v1_container_parses_with_empty_restarts() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::RleV2, 4096).unwrap();
+        let v1 = Container::from_bytes(&as_v1_bytes(&c)).unwrap();
+        assert_eq!(v1.restarts.len(), c.n_chunks());
+        assert!(v1.restarts.iter().all(Vec::is_empty));
+        assert_eq!(v1.decompress_all().unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_restart_section_rejected() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV1, 4096, 256).unwrap();
+        let bytes = c.to_bytes();
+        let section_start = 36 + c.index.len() * 24;
+        let section_len: usize =
+            c.restarts.iter().map(|t| 4 + t.len() * RESTART_ENTRY_LEN).sum::<usize>() + 8;
+        // Every byte of the restart section (counts, entries, checksum)
+        // must be load-bearing: flipping any one of them fails parse.
+        for off in section_start..section_start + section_len {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x01;
+            assert!(
+                Container::from_bytes(&bad).is_err(),
+                "flip at restart-section byte {off} went undetected"
+            );
+        }
+    }
+
+    #[test]
+    fn truncated_restart_section_rejected() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV1, 4096, 256).unwrap();
+        let bytes = c.to_bytes();
+        let section_start = 36 + c.index.len() * 24;
+        for cut in [section_start, section_start + 2, section_start + 11] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn doctored_restart_table_rejected() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV2, 4096, 256).unwrap();
+        let i = c.restarts.iter().position(|t| t.len() >= 2).unwrap();
+        // Re-serialize with a structurally invalid (but checksummed)
+        // table: out of order, zero, and out-of-range boundaries.
+        let break_table = |f: &dyn Fn(&mut Vec<RestartPoint>)| {
+            let mut bad = c.clone();
+            f(&mut bad.restarts[i]);
+            Container::from_bytes(&bad.to_bytes())
+        };
+        assert!(break_table(&|t| t.swap(0, 1)).is_err());
+        assert!(break_table(&|t| t[0].bit_pos = 0).is_err());
+        assert!(break_table(&|t| t[0].out_off = 0).is_err());
+        assert!(break_table(&|t| t[1].out_off = u64::MAX).is_err());
+        assert!(break_table(&|t| t[1].bit_pos = u64::MAX).is_err());
     }
 }

@@ -142,7 +142,7 @@ fn cmd_compress(f: &HashMap<String, String>) -> Result<(), String> {
 }
 
 /// `codag pack`: write a container file into a `--data-dir` that
-/// `codag serve --data-dir` then serves file-backed (DESIGN.md §8).
+/// `codag serve --data-dir` then serves file-backed (DESIGN.md §9).
 /// The payload comes from `--input` (raw bytes on disk, named with
 /// `--name`) or a generated paper dataset (`--dataset`, deterministic).
 fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
@@ -150,6 +150,12 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
     let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
         .ok_or("unknown codec")?;
     let chunk = parse_size(f.get("chunk").map(String::as_str).unwrap_or("131072"))?;
+    // Restart points are on by default (container v2, DESIGN.md §8);
+    // `--restart-interval 0` packs without sub-block boundaries.
+    let restart_interval = match f.get("restart-interval") {
+        Some(s) => parse_size(s)?,
+        None => codag::format::container::DEFAULT_RESTART_INTERVAL,
+    };
     let (name, data) = if let Some(input) = f.get("input") {
         let name = get(f, "name")?.to_string();
         (name, std::fs::read(input).map_err(|e| e.to_string())?)
@@ -158,12 +164,14 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
         let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
         (d.name().to_string(), d.generate(size))
     };
-    let container = Container::compress(&data, codec, chunk).map_err(|e| e.to_string())?;
+    let container = Container::compress_with_restarts(&data, codec, chunk, restart_interval)
+        .map_err(|e| e.to_string())?;
     std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
     let path = dir.join(format!("{name}.codag"));
     std::fs::write(&path, container.to_bytes()).map_err(|e| e.to_string())?;
+    let n_restarts: usize = container.restarts.iter().map(Vec::len).sum();
     println!(
-        "packed {name}: {} -> {} bytes ({}, {} chunks) into {}",
+        "packed {name}: {} -> {} bytes ({}, {} chunks, {n_restarts} restart points) into {}",
         data.len(),
         container.compressed_len(),
         codec.name(),
@@ -173,23 +181,31 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
-/// Compress with a pinned RLE element width.
+/// Compress with a pinned RLE element width (restart points recorded at
+/// the default interval, matching `Container::compress`).
 fn compress_with_width(
     data: &[u8],
     codec: CodecKind,
     chunk: usize,
     width: u8,
 ) -> codag::Result<Container> {
-    use codag::format::container::ChunkEntry;
+    use codag::format::container::{ChunkEntry, DEFAULT_RESTART_INTERVAL};
     let mut index = Vec::new();
+    let mut restarts = Vec::new();
     let mut payload = Vec::new();
     for chunk_bytes in data.chunks(chunk) {
-        let comp = codag::codecs::compress_chunk_with(codec, chunk_bytes, width)?;
+        let (comp, points) = codag::codecs::compress_chunk_with_restarts(
+            codec,
+            chunk_bytes,
+            width,
+            DEFAULT_RESTART_INTERVAL,
+        )?;
         index.push(ChunkEntry {
             comp_off: payload.len() as u64,
             comp_len: comp.len() as u64,
             uncomp_len: chunk_bytes.len() as u64,
         });
+        restarts.push(points);
         payload.extend_from_slice(&comp);
     }
     Ok(Container {
@@ -197,6 +213,7 @@ fn compress_with_width(
         chunk_size: chunk,
         total_uncompressed: data.len() as u64,
         index,
+        restarts,
         payload,
     })
 }

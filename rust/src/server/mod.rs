@@ -17,7 +17,7 @@
 //!   admission (second-chance on key history).
 //! * [`store`] — file-backed datasets: `codag pack`-written container
 //!   files opened with header/index validation and lazy per-chunk
-//!   payload reads (`codag serve --data-dir`, DESIGN.md §8).
+//!   payload reads (`codag serve --data-dir`, DESIGN.md §9).
 //! * [`loadgen`] — client that hammers a running daemon and reports
 //!   p50/p90/p99 latency and throughput; also the §V-F batching
 //!   ablation driver (`codag loadgen --ablate-batch`) and the

@@ -1,6 +1,6 @@
 //! File-backed datasets: the on-disk side of the serving path.
 //!
-//! Production corpora live as container files on disk (DESIGN.md §8),
+//! Production corpora live as container files on disk (DESIGN.md §9),
 //! not as buffers synthesized at daemon startup. A [`FileDataset`]
 //! opens one `codag pack`-written container file, validates the header
 //! and chunk index up front, and then fetches *compressed chunks
@@ -19,8 +19,11 @@
 //! `Error::Invalid`; filesystem failures are `Error::Io`. Nothing
 //! panics on hostile files.
 
-use crate::codecs::CodecKind;
-use crate::format::container::{ChunkEntry, MAGIC, VERSION};
+use crate::codecs::{CodecKind, RestartPoint};
+use crate::format::container::{
+    fnv1a64, validate_restart_table, ChunkEntry, FNV_OFFSET, MAGIC, RESTART_ENTRY_LEN, VERSION,
+    VERSION_V1,
+};
 use crate::{corrupt, invalid, Error, Result};
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
@@ -47,6 +50,10 @@ pub struct FileDataset {
     chunk_size: usize,
     total_uncompressed: u64,
     index: Vec<ChunkEntry>,
+    /// Per-chunk restart tables (empty per chunk for v1 files). Parsed
+    /// and checksum-verified eagerly at open, like the index: the
+    /// serving path never re-reads them per request.
+    restarts: Vec<Vec<RestartPoint>>,
     /// File offset where the payload section starts.
     payload_off: u64,
     /// Payload section length (file length minus header and index).
@@ -75,7 +82,7 @@ impl FileDataset {
             return Err(corrupt(format!("{}: bad magic 0x{magic:08X}", path.display())));
         }
         let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
-        if version != VERSION {
+        if version != VERSION && version != VERSION_V1 {
             return Err(corrupt(format!(
                 "{}: unsupported container version {version}",
                 path.display()
@@ -99,8 +106,60 @@ impl FileDataset {
         }
         let mut index_bytes = vec![0u8; index_len as usize];
         read_exact_or_corrupt(&mut file, &mut index_bytes, "chunk index")?;
-        let payload_off = HEADER_LEN + index_len;
-        let payload_len = file_len - payload_off;
+        // v2: restart section (per-chunk tables + FNV guard) sits
+        // between the index and the payload; stream it with a running
+        // checksum so hostile counts never force a large allocation.
+        let mut restarts = Vec::with_capacity(n_chunks as usize);
+        let mut section_len = 0u64;
+        if version == VERSION {
+            let mut sum = FNV_OFFSET;
+            for i in 0..n_chunks {
+                let mut cnt = [0u8; 4];
+                read_exact_or_corrupt(&mut file, &mut cnt, "restart section")?;
+                sum = fnv1a64(sum, &cnt);
+                let count = u32::from_le_bytes(cnt) as u64;
+                // Same alloc-cap discipline as n_chunks: the table must
+                // fit in the file before anything is reserved for it.
+                let table_len = count
+                    .checked_mul(RESTART_ENTRY_LEN as u64)
+                    .filter(|&l| l <= file_len.saturating_sub(HEADER_LEN + index_len))
+                    .ok_or_else(|| {
+                        corrupt(format!(
+                            "{}: chunk {i} restart table larger than file",
+                            path.display()
+                        ))
+                    })?;
+                let mut table_bytes = vec![0u8; table_len as usize];
+                read_exact_or_corrupt(&mut file, &mut table_bytes, "restart section")?;
+                sum = fnv1a64(sum, &table_bytes);
+                let mut table = Vec::with_capacity(count as usize);
+                for e in table_bytes.chunks_exact(RESTART_ENTRY_LEN) {
+                    table.push(RestartPoint {
+                        bit_pos: u64::from_le_bytes(e[0..8].try_into().unwrap()),
+                        out_off: u64::from_le_bytes(e[8..16].try_into().unwrap()),
+                    });
+                }
+                restarts.push(table);
+                section_len += 4 + table_len;
+            }
+            let mut stored = [0u8; 8];
+            read_exact_or_corrupt(&mut file, &mut stored, "restart checksum")?;
+            let stored = u64::from_le_bytes(stored);
+            if sum != stored {
+                return Err(corrupt(format!(
+                    "{}: restart section checksum mismatch \
+                     (computed {sum:016x}, stored {stored:016x})",
+                    path.display()
+                )));
+            }
+            section_len += 8;
+        } else {
+            restarts.resize_with(n_chunks as usize, Vec::new);
+        }
+        let payload_off = HEADER_LEN + index_len + section_len;
+        let payload_len = file_len.checked_sub(payload_off).ok_or_else(|| {
+            corrupt(format!("{}: restart section extends past file", path.display()))
+        })?;
         let mut index = Vec::with_capacity(n_chunks as usize);
         let mut uncomp_sum = 0u64;
         for (i, e) in index_bytes.chunks_exact(ENTRY_LEN as usize).enumerate() {
@@ -138,6 +197,11 @@ impl FileDataset {
                 path.display()
             )));
         }
+        for (i, (table, e)) in restarts.iter().zip(&index).enumerate() {
+            validate_restart_table(table, e).map_err(|err| {
+                corrupt(format!("{}: chunk {i} restart table invalid: {err}", path.display()))
+            })?;
+        }
         Ok(FileDataset {
             path,
             file: Mutex::new(file),
@@ -145,6 +209,7 @@ impl FileDataset {
             chunk_size: chunk_size as usize,
             total_uncompressed,
             index,
+            restarts,
             payload_off,
             payload_len,
             comp_pool: Mutex::new(Vec::new()),
@@ -174,6 +239,12 @@ impl FileDataset {
     /// Per-chunk index (validated at open).
     pub fn index(&self) -> &[ChunkEntry] {
         &self.index
+    }
+
+    /// The restart table of chunk `i` (empty for v1 files or chunks
+    /// without recorded sub-block boundaries).
+    pub fn restart_table(&self, i: usize) -> &[RestartPoint] {
+        self.restarts.get(i).map(Vec::as_slice).unwrap_or(&[])
     }
 
     /// Number of chunks.
@@ -210,6 +281,37 @@ impl FileDataset {
     pub fn decompress_chunk_into(&self, i: usize, out: &mut Vec<u8>) -> Result<()> {
         let mut comp = self.comp_pool.lock().unwrap().pop().unwrap_or_default();
         let decoded = self.decompress_pooled(i, &mut comp, out);
+        comp.clear();
+        let mut pool = self.comp_pool.lock().unwrap();
+        if pool.len() < COMP_POOL_CAP {
+            pool.push(comp);
+        }
+        decoded
+    }
+
+    /// Restart-point split decode of chunk `i` across `n_workers`
+    /// threads — the file-backed twin of
+    /// [`decompress_chunk_split_into`](crate::coordinator::engine::decompress_chunk_split_into).
+    /// An empty restart table degrades to serial sub-block decode.
+    pub fn decompress_chunk_split_into(
+        &self,
+        i: usize,
+        n_workers: usize,
+        out: &mut Vec<u8>,
+    ) -> Result<()> {
+        let mut comp = self.comp_pool.lock().unwrap().pop().unwrap_or_default();
+        let decoded = (|| {
+            self.read_chunk_into(i, &mut comp)?;
+            out.clear();
+            out.resize(self.index[i].uncomp_len as usize, 0);
+            crate::coordinator::engine::decode_chunk_parallel(
+                self.codec,
+                &comp,
+                self.restart_table(i),
+                out,
+                n_workers,
+            )
+        })();
         comp.clear();
         let mut pool = self.comp_pool.lock().unwrap();
         if pool.len() < COMP_POOL_CAP {
@@ -386,6 +488,101 @@ mod tests {
             std::fs::write(&path, &bad).unwrap();
             let err = FileDataset::open(&path).unwrap_err();
             assert!(matches!(err, Error::Corrupt(_)), "case {i}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_restart_tables_match_in_memory_container() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV2, 4096, 512).unwrap();
+        assert!(c.restarts.iter().any(|t| !t.is_empty()));
+        let path = tmp_path("v2-tables").with_extension("codag");
+        std::fs::write(&path, c.to_bytes()).unwrap();
+        let fd = FileDataset::open(&path).unwrap();
+        for i in 0..c.n_chunks() {
+            assert_eq!(fd.restart_table(i), c.restart_table(i), "chunk {i}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_file_opens_with_empty_restarts() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::RleV1, 4096).unwrap();
+        // Rewrite as v1: header + index + payload, version patched.
+        let mut v1 = c.to_bytes()[..(HEADER_LEN + ENTRY_LEN * c.n_chunks() as u64) as usize]
+            .to_vec();
+        v1[4..8].copy_from_slice(&VERSION_V1.to_le_bytes());
+        v1.extend_from_slice(&c.payload);
+        let path = tmp_path("v1-compat").with_extension("codag");
+        std::fs::write(&path, &v1).unwrap();
+        let fd = FileDataset::open(&path).unwrap();
+        assert!((0..fd.n_chunks()).all(|i| fd.restart_table(i).is_empty()));
+        let mut out = Vec::new();
+        let mut all = Vec::new();
+        for i in 0..fd.n_chunks() {
+            fd.decompress_chunk_into(i, &mut out).unwrap();
+            all.extend_from_slice(&out);
+        }
+        assert_eq!(all, data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hostile_restart_count_is_alloc_capped() {
+        let (path, _, c) = write_sample("hostile-count", CodecKind::RleV1);
+        let mut bytes = c.to_bytes();
+        // First chunk's n_restarts field sits right after the index;
+        // claim a table far larger than the file.
+        let off = (HEADER_LEN + ENTRY_LEN * c.n_chunks() as u64) as usize;
+        bytes[off..off + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = FileDataset::open(&path).unwrap_err();
+        assert!(matches!(err, Error::Corrupt(_)), "{err}");
+        assert!(err.to_string().contains("restart table larger"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_restart_section_rejected_at_open() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::RleV2, 4096, 512).unwrap();
+        let bytes = c.to_bytes();
+        let section_start = (HEADER_LEN + ENTRY_LEN * c.n_chunks() as u64) as usize;
+        let section_len: usize = c
+            .restarts
+            .iter()
+            .map(|t| 4 + t.len() * RESTART_ENTRY_LEN)
+            .sum::<usize>()
+            + 8;
+        let path = tmp_path("bad-restarts").with_extension("codag");
+        // Sample a spread of section bytes (counts, entries, checksum).
+        for off in (section_start..section_start + section_len).step_by(5) {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x01;
+            std::fs::write(&path, &bad).unwrap();
+            let err = FileDataset::open(&path).unwrap_err();
+            assert!(matches!(err, Error::Corrupt(_)), "flip at {off}: {err}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn split_decode_from_file_matches_serial() {
+        let data = sample_data();
+        let c = Container::compress_with_restarts(&data, CodecKind::Deflate, 4096, 512).unwrap();
+        let path = tmp_path("split-file").with_extension("codag");
+        std::fs::write(&path, c.to_bytes()).unwrap();
+        let fd = FileDataset::open(&path).unwrap();
+        let mut serial = Vec::new();
+        let mut split = Vec::new();
+        for i in 0..fd.n_chunks() {
+            fd.decompress_chunk_into(i, &mut serial).unwrap();
+            for workers in [1, 2, 8] {
+                fd.decompress_chunk_split_into(i, workers, &mut split).unwrap();
+                assert_eq!(split, serial, "chunk {i} workers {workers}");
+            }
         }
         std::fs::remove_file(&path).ok();
     }

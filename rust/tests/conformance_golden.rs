@@ -118,16 +118,19 @@ fn golden_coverage_floor() {
 
 #[test]
 fn golden_container_layout_pinned() {
-    // Pins the container serialization (format::container) and the
+    // Pins the container-v2 serialization (format::container) and the
     // auto-width selection of compress_chunk: [42u8; 100] at chunk size
-    // 64 must pick byte-RLE (width 1) for both chunks.
+    // 64 must pick byte-RLE (width 1) for both chunks. Chunks are far
+    // smaller than the default restart interval, so both restart tables
+    // are empty: the v2 section is two zero counts plus the FNV-1a
+    // checksum over those 8 zero bytes.
     let data = vec![42u8; 100];
     let c = Container::compress(&data, CodecKind::RleV1, 64).unwrap();
     let chunk0: [u8; 5] = [1, 0, 64, 61, 42]; // hdr(w=1, n=64) + run(64 x 42)
     let chunk1: [u8; 5] = [1, 0, 36, 33, 42]; // hdr(w=1, n=36) + run(36 x 42)
     let mut want = Vec::new();
     want.extend_from_slice(&0xC0DA_6001u32.to_le_bytes()); // magic
-    want.extend_from_slice(&1u32.to_le_bytes()); // version
+    want.extend_from_slice(&2u32.to_le_bytes()); // version
     want.extend_from_slice(&1u32.to_le_bytes()); // codec = RleV1
     want.extend_from_slice(&64u64.to_le_bytes()); // chunk_size
     want.extend_from_slice(&100u64.to_le_bytes()); // total_uncompressed
@@ -137,15 +140,28 @@ fn golden_container_layout_pinned() {
         want.extend_from_slice(&comp_len.to_le_bytes());
         want.extend_from_slice(&uncomp_len.to_le_bytes());
     }
+    // Restart section: n_restarts = 0 for both chunks, then FNV-1a 64
+    // over the 8 zero bytes (offset basis 0xcbf29ce484222325, prime
+    // 0x100000001b3), computed inline so the constant is independent of
+    // the implementation under test.
+    want.extend_from_slice(&0u32.to_le_bytes());
+    want.extend_from_slice(&0u32.to_le_bytes());
+    let mut sum = 0xcbf2_9ce4_8422_2325u64;
+    for _ in 0..8 {
+        // XOR with 0x00 leaves the state; the multiply still runs.
+        sum = sum.wrapping_mul(0x100_0000_01b3);
+    }
+    want.extend_from_slice(&sum.to_le_bytes());
     want.extend_from_slice(&chunk0);
     want.extend_from_slice(&chunk1);
     assert_eq!(
         hex(&c.to_bytes()),
         hex(&want),
-        "container byte layout changed (header fields, index shape, or \
-         auto-width selection)"
+        "container byte layout changed (header fields, index shape, \
+         restart section, or auto-width selection)"
     );
     // And the parse side accepts exactly this layout.
     let c2 = Container::from_bytes(&want).unwrap();
     assert_eq!(c2.decompress_all().unwrap(), data);
+    assert!(c2.restart_table(0).is_empty() && c2.restart_table(1).is_empty());
 }

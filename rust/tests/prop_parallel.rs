@@ -1,0 +1,364 @@
+//! Differential gate for the parallel stitch path (DESIGN.md §7.5):
+//! split decode over a chunk's restart table must be *observationally
+//! contained* in serial decode — on every input, hostile or not, it
+//! either returns exactly the bytes single-stream decode returns or a
+//! typed `Corrupt` error. It can never return bytes serial decode
+//! wouldn't.
+//!
+//! Four sweeps, all driven by the shared golden-vector registry so new
+//! fixtures automatically join:
+//!
+//! 1. identity — every vector × restart intervals {tiny, default,
+//!    two-sub-block, none} × worker counts {1, 2, 8};
+//! 2. corruption differential — single-bit flips over every compressed
+//!    byte: parallel `Ok` implies serial `Ok` with identical bytes, and
+//!    serial `Err` implies parallel `Err`, both `Corrupt`;
+//! 3. restart-table corruption — every byte of a serialized v2 restart
+//!    section flipped must fail parse as `Corrupt` (FNV-1a guard), and
+//!    doctored in-memory tables must never yield silently wrong bytes;
+//! 4. pinned container fixtures — v2 fixtures split-decode to their
+//!    pinned payloads, v1 fixtures stay readable with empty tables.
+
+mod common;
+
+use codag::codecs::{
+    compress_chunk_with_restarts, decompress_chunk, CodecKind, RestartPoint,
+};
+use codag::coordinator::{decode_chunk_parallel, decompress_chunk_split};
+use codag::format::container::{Container, DEFAULT_RESTART_INTERVAL};
+use codag::Error;
+use common::vectors;
+
+/// Restart intervals per vector: tiny (many sub-blocks), the pack-time
+/// default, roughly two sub-blocks, and disabled.
+fn intervals(input_len: usize) -> [usize; 4] {
+    [8, DEFAULT_RESTART_INTERVAL, (input_len / 2).max(1), 0]
+}
+
+const WORKERS: [usize; 3] = [1, 2, 8];
+
+fn parallel(
+    kind: CodecKind,
+    comp: &[u8],
+    points: &[RestartPoint],
+    len: usize,
+    workers: usize,
+) -> Result<Vec<u8>, Error> {
+    let mut out = vec![0u8; len];
+    decode_chunk_parallel(kind, comp, points, &mut out, workers)?;
+    Ok(out)
+}
+
+#[test]
+fn parallel_matches_serial_on_every_golden_vector() {
+    let mut split_streams = 0usize;
+    for g in vectors() {
+        for interval in intervals(g.input.len()) {
+            let (comp, points) =
+                compress_chunk_with_restarts(g.kind, g.input, g.width, interval)
+                    .unwrap_or_else(|e| panic!("{}: compress failed: {e}", g.name));
+            let serial = decompress_chunk(g.kind, &comp, g.input.len())
+                .unwrap_or_else(|e| panic!("{}: serial decode failed: {e}", g.name));
+            assert_eq!(serial, g.input, "{}: serial oracle diverged", g.name);
+            if !points.is_empty() {
+                split_streams += 1;
+            }
+            for workers in WORKERS {
+                let out = parallel(g.kind, &comp, &points, g.input.len(), workers)
+                    .unwrap_or_else(|e| {
+                        panic!(
+                            "{}: parallel decode failed (interval {interval}, \
+                             {workers} workers, {} restart points): {e}",
+                            g.name,
+                            points.len()
+                        )
+                    });
+                assert_eq!(
+                    out, serial,
+                    "{}: parallel output diverged from serial (interval \
+                     {interval}, {workers} workers)",
+                    g.name
+                );
+            }
+        }
+    }
+    // The sweep must not be vacuous: at the tiny interval most vectors
+    // split into several sub-blocks.
+    assert!(split_streams >= 8, "only {split_streams} split streams swept");
+}
+
+#[test]
+fn parallel_never_returns_bytes_serial_would_not_under_corruption() {
+    // Flip the low and high bit of every compressed byte and compare the
+    // two decode paths. Four legal outcomes per flip; the one the stitch
+    // contract forbids — parallel Ok with bytes serial would not return
+    // — fails the test. Dead bits need no special-casing: a silent flip
+    // changes neither path's output, so the differential still holds.
+    for g in vectors() {
+        let (comp, points) = compress_chunk_with_restarts(g.kind, g.input, g.width, 8)
+            .unwrap_or_else(|e| panic!("{}: compress failed: {e}", g.name));
+        for i in 0..comp.len() {
+            for mask in [0x01u8, 0x80] {
+                let mut bad = comp.clone();
+                bad[i] ^= mask;
+                let serial = decompress_chunk(g.kind, &bad, g.input.len());
+                let par = parallel(g.kind, &bad, &points, g.input.len(), 2);
+                match (&serial, &par) {
+                    (Ok(s), Ok(p)) => assert_eq!(
+                        p, s,
+                        "{}: byte {i} mask {mask:#04x}: parallel bytes diverged \
+                         from serial on a stream both paths accepted",
+                        g.name
+                    ),
+                    // Parallel may be strictly stricter (sub-block budget
+                    // and end-bit checks) — but only with a typed error.
+                    (Ok(_), Err(e)) => assert!(
+                        matches!(e, Error::Corrupt(_)),
+                        "{}: byte {i} mask {mask:#04x}: parallel error not \
+                         Corrupt: {e}",
+                        g.name
+                    ),
+                    // Serial rejecting while parallel accepts would let a
+                    // split decode fabricate bytes — forbidden.
+                    (Err(_), Ok(_)) => panic!(
+                        "{}: byte {i} mask {mask:#04x}: parallel accepted a \
+                         stream serial decode rejects",
+                        g.name
+                    ),
+                    (Err(se), Err(pe)) => {
+                        assert!(
+                            matches!(se, Error::Corrupt(_)),
+                            "{}: byte {i} mask {mask:#04x}: serial error not \
+                             Corrupt: {se}",
+                            g.name
+                        );
+                        assert!(
+                            matches!(pe, Error::Corrupt(_)),
+                            "{}: byte {i} mask {mask:#04x}: parallel error not \
+                             Corrupt: {pe}",
+                            g.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A multi-chunk v2 container over run-structured data (several distinct
+/// restart tables, all non-trivial at the tiny interval).
+fn sweep_container(kind: CodecKind) -> (Vec<u8>, Container) {
+    let data: Vec<u8> = (0..4096u32)
+        .map(|i| if i % 96 < 64 { (i / 96) as u8 } else { (i % 7) as u8 })
+        .collect();
+    let c = Container::compress_with_restarts(&data, kind, 1024, 64).unwrap();
+    assert!(
+        c.restarts.iter().all(|t| !t.is_empty()),
+        "sweep container has an empty restart table — sweep would be vacuous"
+    );
+    (data, c)
+}
+
+#[test]
+fn every_restart_section_byte_flip_fails_parse_as_corrupt() {
+    for kind in CodecKind::all() {
+        let (_, c) = sweep_container(kind);
+        let bytes = c.to_bytes();
+        // v2 layout: 36-byte header, 24-byte index entries, then the
+        // restart section (u32 count + 16-byte entries per chunk, u64
+        // FNV-1a checksum) ahead of the payload.
+        let section_start = 36 + 24 * c.index.len();
+        let section_len: usize =
+            c.restarts.iter().map(|t| 4 + 16 * t.len()).sum::<usize>() + 8;
+        for i in section_start..section_start + section_len {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            match Container::from_bytes(&bad) {
+                Err(Error::Corrupt(_)) => {}
+                Err(e) => panic!(
+                    "{}: restart-section byte {i} flip: error not Corrupt: {e}",
+                    kind.name()
+                ),
+                Ok(_) => panic!(
+                    "{}: restart-section byte {i} flip parsed successfully",
+                    kind.name()
+                ),
+            }
+        }
+        // Unflipped bytes still parse and split-decode to the original.
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        let (data, _) = sweep_container(kind);
+        for i in 0..c2.n_chunks() {
+            let lo = i * 1024;
+            let hi = (lo + 1024).min(data.len());
+            assert_eq!(decompress_chunk_split(&c2, i, 8).unwrap(), &data[lo..hi]);
+        }
+    }
+}
+
+#[test]
+fn sampled_restart_section_flips_fail_file_open() {
+    use codag::server::store::FileDataset;
+    let (_, c) = sweep_container(CodecKind::RleV2);
+    let bytes = c.to_bytes();
+    let section_start = 36 + 24 * c.index.len();
+    let section_len: usize =
+        c.restarts.iter().map(|t| 4 + 16 * t.len()).sum::<usize>() + 8;
+    let dir = std::env::temp_dir().join(format!("codag-prop-parallel-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for i in (section_start..section_start + section_len).step_by(5) {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        let path = dir.join("flip.codag");
+        std::fs::write(&path, &bad).unwrap();
+        match FileDataset::open(&path) {
+            Err(Error::Corrupt(_)) => {}
+            Err(e) => panic!("byte {i} flip: open error not Corrupt: {e}"),
+            Ok(_) => panic!("byte {i} flip: hostile file opened successfully"),
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn doctored_restart_tables_never_yield_wrong_bytes() {
+    // Mutate well-formed tables through every field and check the stitch
+    // either rejects with `Corrupt` or — when the doctored table happens
+    // to still describe the true decode walk — returns exactly the
+    // serial bytes. Silent divergence is the only failing outcome.
+    for g in vectors() {
+        let (comp, points) = compress_chunk_with_restarts(g.kind, g.input, g.width, 8)
+            .unwrap_or_else(|e| panic!("{}: compress failed: {e}", g.name));
+        if points.is_empty() {
+            continue;
+        }
+        let serial = decompress_chunk(g.kind, &comp, g.input.len()).unwrap();
+        let mut doctored: Vec<Vec<RestartPoint>> = Vec::new();
+        for k in 0..points.len() {
+            for (dbit, dout) in
+                [(1i64, 0i64), (-1, 0), (8, 0), (0, 1), (0, -1), (0, 8), (8, 8)]
+            {
+                let mut t = points.clone();
+                t[k].bit_pos = t[k].bit_pos.wrapping_add_signed(dbit);
+                t[k].out_off = t[k].out_off.wrapping_add_signed(dout);
+                doctored.push(t);
+            }
+            // Duplicate and drop entry k (order violations / misaligned
+            // sub-block extents).
+            let mut dup = points.clone();
+            dup.insert(k, points[k]);
+            doctored.push(dup);
+            let mut dropped = points.clone();
+            dropped.remove(k);
+            doctored.push(dropped);
+        }
+        // Fields far outside the stream.
+        let mut far = points.clone();
+        far[0].bit_pos = comp.len() as u64 * 8 + 64;
+        doctored.push(far);
+        let mut huge = points.clone();
+        huge[0].out_off = g.input.len() as u64 + 1;
+        doctored.push(huge);
+        for t in doctored {
+            match parallel(g.kind, &comp, &t, g.input.len(), 2) {
+                Ok(out) => assert_eq!(
+                    out, serial,
+                    "{}: doctored table returned bytes serial decode would not",
+                    g.name
+                ),
+                Err(Error::Corrupt(_)) => {}
+                Err(e) => {
+                    panic!("{}: doctored table error not Corrupt: {e}", g.name)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pinned container fixtures (tests/golden/gen_golden.py)
+// ---------------------------------------------------------------------
+
+struct ContainerFixture {
+    name: &'static str,
+    bytes: &'static [u8],
+    input: &'static [u8],
+    v2: bool,
+}
+
+fn container_fixtures() -> Vec<ContainerFixture> {
+    macro_rules! fixture {
+        ($name:literal, $input:literal, $v2:literal) => {
+            ContainerFixture {
+                name: $name,
+                bytes: include_bytes!(concat!("golden/", $name, ".codag")),
+                input: include_bytes!(concat!("golden/", $input, ".input.bin")),
+                v2: $v2,
+            }
+        };
+    }
+    vec![
+        fixture!("container_v2_rlev2", "container_rle", true),
+        fixture!("container_v2_deflate", "container_df", true),
+        fixture!("container_v1_rlev1", "container_rle", false),
+        fixture!("container_v1_deflate", "container_df", false),
+    ]
+}
+
+#[test]
+fn pinned_container_fixtures_split_decode_to_pinned_payloads() {
+    for f in container_fixtures() {
+        let c = Container::from_bytes(f.bytes)
+            .unwrap_or_else(|e| panic!("{}: fixture failed to parse: {e}", f.name));
+        if f.v2 {
+            assert!(
+                (0..c.n_chunks()).any(|i| !c.restart_table(i).is_empty()),
+                "{}: v2 fixture carries no restart points",
+                f.name
+            );
+        } else {
+            assert!(
+                (0..c.n_chunks()).all(|i| c.restart_table(i).is_empty()),
+                "{}: v1 fixture parsed with restart points",
+                f.name
+            );
+        }
+        assert_eq!(
+            c.decompress_all().unwrap(),
+            f.input,
+            "{}: serial decode diverged from pinned input",
+            f.name
+        );
+        let cs = c.chunk_size;
+        for workers in [2usize, 8] {
+            for i in 0..c.n_chunks() {
+                let lo = i * cs;
+                let hi = (lo + cs).min(f.input.len());
+                assert_eq!(
+                    decompress_chunk_split(&c, i, workers).unwrap(),
+                    &f.input[lo..hi],
+                    "{}: chunk {i} split decode ({workers} workers) diverged",
+                    f.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pinned_v2_rle_container_fixture_is_encoder_pinned() {
+    // The v2 RLE fixture was generated by the Python encoder port with
+    // decode-walk restart derivation; the Rust packer must reproduce it
+    // byte-for-byte (header, index, restart section, checksum, payload).
+    // Regenerate via tests/golden/gen_golden.py --force on an
+    // intentional wire-format change and document it in DESIGN.md.
+    let f = &container_fixtures()[0];
+    let c = Container::compress_with_restarts(f.input, CodecKind::RleV2, 1024, 128).unwrap();
+    let got = c.to_bytes();
+    assert_eq!(
+        got.len(),
+        f.bytes.len(),
+        "container_v2_rlev2: serialized length diverged from fixture"
+    );
+    assert_eq!(got, f.bytes, "container_v2_rlev2: packer output diverged from fixture");
+}

@@ -60,6 +60,25 @@ def parse_rle_width_sweep(lines, metrics):
         metrics[f"{base}/dec_gbps"] = _metric(dec, "GB/s", "throughput")
 
 
+def parse_subblock_sweep(lines, metrics):
+    """Rows: codec workers subblocks dec-GB/s (the container-v2 restart
+    split sweep from `CODAG_SUBBLOCK_SWEEP=1 cargo bench --bench
+    codec_hotpath` — one chunk, 1/2/4/8 stitch workers)."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 4 or parts[0] == "codec":
+            continue
+        try:
+            workers = int(parts[1])
+            subblocks = int(parts[2])
+            dec = float(parts[3])
+        except ValueError:
+            continue
+        base = f"subblock/{parts[0]}/w{workers}"
+        metrics[f"{base}/dec_gbps"] = _metric(dec, "GB/s", "throughput")
+        metrics[f"{base}/subblocks"] = _metric(subblocks, "n", "info")
+
+
 def parse_fig7(lines, scale, metrics):
     """Rows: codec dataset codag rapids speedup-x (incl. geomean rows)."""
     for ln in lines:
@@ -126,6 +145,7 @@ SECTION_PARSERS = [
     ("## codec_hotpath (paper scale", lambda ls, m: parse_codec_hotpath(ls, "paper", m)),
     ("## codec_hotpath", lambda ls, m: parse_codec_hotpath(ls, "default", m)),
     ("## rle_v2 width sweep", lambda ls, m: parse_rle_width_sweep(ls, m)),
+    ("## sub-block scaling", lambda ls, m: parse_subblock_sweep(ls, m)),
     ("## fig7_throughput (paper scale", lambda ls, m: parse_fig7(ls, "paper", m)),
     ("## fig7_throughput", lambda ls, m: parse_fig7(ls, "default", m)),
     ("## loadgen batching ablation", lambda ls, m: parse_ablation(ls, m)),

@@ -50,6 +50,14 @@ cargo build --release --benches >&2
   CODAG_RLE_WIDTH_SWEEP=1 cargo bench --bench codec_hotpath 2>/dev/null
   echo '```'
   echo
+  echo '## sub-block scaling (container v2 restart split)'
+  echo
+  echo '```text'
+  # One chunk split across its restart table by 1/2/4/8 stitch workers:
+  # the single-hot-chunk case chunk-level parallelism cannot reach.
+  CODAG_SUBBLOCK_SWEEP=1 cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
   echo '## fig7_throughput'
   echo
   echo '```text'
