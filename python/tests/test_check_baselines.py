@@ -138,6 +138,15 @@ rlev2           4        128       12.530
 deflate         8        128        6.904
 ```
 
+## obs overhead
+
+```text
+codec      plain GB/s   instr GB/s  delta %
+rlev1          11.820       11.644     1.49
+rlev2           4.105        4.071     0.83
+deflate         1.010        1.004     0.59
+```
+
 ## fig7_throughput
 
 ```text
@@ -193,6 +202,13 @@ def test_bench_to_json_parses_all_sections():
     assert m["subblock/rlev2/w4/dec_gbps"]["value"] == 12.530
     assert m["subblock/rlev2/w4/subblocks"]["value"] == 128
     assert m["subblock/deflate/w8/dec_gbps"]["value"] == 6.904
+    # Instrumentation overhead rows (metrics-on vs bare decode loop).
+    assert m["obs_overhead/rlev1/plain_gbps"]["value"] == 11.820
+    assert m["obs_overhead/rlev1/plain_gbps"]["kind"] == "throughput"
+    assert m["obs_overhead/rlev1/instr_gbps"]["value"] == 11.644
+    assert m["obs_overhead/rlev2/delta_pct"]["value"] == 0.83
+    assert m["obs_overhead/rlev2/delta_pct"]["kind"] == "info"
+    assert m["obs_overhead/deflate/instr_gbps"]["value"] == 1.004
 
 
 def test_gate_passes_on_parsed_capture_roundtrip():

@@ -16,7 +16,9 @@
 
 use codag::bench_harness::compress_dataset;
 use codag::codecs::{compress_chunk_with, CodecKind};
-use codag::coordinator::{decompress_chunk_split, decompress_parallel};
+use codag::coordinator::{
+    decompress_chunk_split, decompress_chunk_split_obs_into, decompress_parallel,
+};
 use codag::data::Dataset;
 use codag::decomp::ByteSink;
 use codag::format::container::Container;
@@ -137,6 +139,85 @@ fn subblock_sweep(total: usize) {
     }
 }
 
+/// Instrumentation-overhead table (`CODAG_OBS_OVERHEAD`): the same
+/// chunk-decode loop run bare and with the full per-request recording
+/// set the daemon performs (counters, gauge, stage histograms, stitch
+/// timers) — both in one binary, so the delta isolates the atomics and
+/// clock reads rather than build differences. The compiled-out case is
+/// covered separately by the CI `--no-default-features` lane.
+/// Columns `codec plain GB/s instr GB/s delta %`.
+fn obs_overhead(total: usize) {
+    use codag::format::container::DEFAULT_RESTART_INTERVAL;
+    use codag::obs::{now_if_enabled, Counter, Gauge, LatencyHisto, Stage, StitchTimers};
+    println!("{:8} {:>12} {:>12} {:>8}", "codec", "plain GB/s", "instr GB/s", "delta %");
+    let data = Dataset::Mc0.generate(total);
+    for kind in CodecKind::all() {
+        let c =
+            Container::compress_with_restarts(&data, kind, 128 * 1024, DEFAULT_RESTART_INTERVAL)
+                .expect("overhead compress");
+        let n = c.n_chunks();
+        let mut out = Vec::new();
+        let (t_plain, b_plain) = best_of(3, || {
+            let mut sum = 0;
+            for i in 0..n {
+                decompress_chunk_split_obs_into(&c, i, 2, &mut out, None).expect("plain decode");
+                sum += out.len();
+            }
+            sum
+        });
+        // The per-request record set the daemon's hot path performs:
+        // admission counter + gauge, queue-wait/lookup/request
+        // histograms, and the stitch fan-out/join timers.
+        let requests = Counter::new();
+        let inflight = Gauge::new();
+        let h_wait = LatencyHisto::new();
+        let h_lookup = LatencyHisto::new();
+        let h_req = LatencyHisto::new();
+        let fanout = LatencyHisto::new();
+        let join = LatencyHisto::new();
+        let (t_instr, b_instr) = best_of(3, || {
+            let mut sum = 0;
+            for i in 0..n {
+                let t0 = now_if_enabled();
+                requests.inc();
+                inflight.inc();
+                h_wait.record_us((i % 7) as u64);
+                h_lookup.record_us((i % 3) as u64);
+                decompress_chunk_split_obs_into(
+                    &c,
+                    i,
+                    2,
+                    &mut out,
+                    Some(StitchTimers { fanout: &fanout, join: &join }),
+                )
+                .expect("instr decode");
+                sum += out.len();
+                if let Some(t0) = t0 {
+                    h_req.record(t0.elapsed());
+                }
+                inflight.dec();
+            }
+            sum
+        });
+        assert_eq!(b_plain, data.len());
+        assert_eq!(b_instr, b_plain);
+        // Keep the recorders observably live so the loop can't be
+        // hoisted; Stage is referenced so the import set matches the
+        // daemon's (and stays compile-checked from the bench).
+        assert!(requests.get() > 0 || !codag::obs::ENABLED);
+        let _ = Stage::DecodeSerial.name();
+        let plain = b_plain as f64 / t_plain / 1e9;
+        let instr = b_instr as f64 / t_instr / 1e9;
+        println!(
+            "{:8} {:>12.3} {:>12.3} {:>8.2}",
+            kind.name(),
+            plain,
+            instr,
+            (plain - instr) / plain * 100.0,
+        );
+    }
+}
+
 fn main() {
     let size = size();
     if std::env::var("CODAG_RLE_WIDTH_SWEEP").is_ok() {
@@ -145,6 +226,10 @@ fn main() {
     }
     if std::env::var("CODAG_SUBBLOCK_SWEEP").is_ok() {
         subblock_sweep(size);
+        return;
+    }
+    if std::env::var("CODAG_OBS_OVERHEAD").is_ok() {
+        obs_overhead(size);
         return;
     }
     println!(

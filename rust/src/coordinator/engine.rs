@@ -16,10 +16,12 @@ use crate::codecs::{
     check_chunk_header, decode_sub_block, decode_to_runs, CodecKind, RestartPoint,
 };
 use crate::format::container::{validate_restart_table, ChunkEntry, Container};
+use crate::obs::{now_if_enabled, StitchTimers};
 use crate::runtime::Expander;
 use crate::{corrupt, invalid, Error, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 /// How chunk decode work is produced.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -157,6 +159,23 @@ pub fn decode_chunk_parallel(
     out: &mut [u8],
     n_workers: usize,
 ) -> Result<()> {
+    decode_chunk_parallel_obs(kind, comp, restarts, out, n_workers, None)
+}
+
+/// [`decode_chunk_parallel`] with optional stitch-phase timing: entry →
+/// spawn-complete lands in `fanout`, spawn-complete → workers joined in
+/// `join` (DESIGN.md §10). The serial degrades (empty table, one
+/// worker) record their whole decode in `fanout` and a zero `join`, so
+/// both histograms stay populated whenever this path runs.
+pub fn decode_chunk_parallel_obs(
+    kind: CodecKind,
+    comp: &[u8],
+    restarts: &[RestartPoint],
+    out: &mut [u8],
+    n_workers: usize,
+    obs: Option<StitchTimers<'_>>,
+) -> Result<()> {
+    let t0 = now_if_enabled().filter(|_| obs.is_some());
     let total = out.len() as u64;
     // Structural validation first: a hostile table must fail typed here,
     // before any slice arithmetic.
@@ -168,7 +187,12 @@ pub fn decode_chunk_parallel(
     // (header-driven) would produce a different byte count.
     check_chunk_header(kind, comp, total)?;
     if restarts.is_empty() {
-        return decode_sub_block(kind, comp, 0, true, out).map(|_| ());
+        decode_sub_block(kind, comp, 0, true, out)?;
+        if let (Some(t0), Some(o)) = (t0, obs) {
+            o.fanout.record(t0.elapsed());
+            o.join.record_us(0);
+        }
+        return Ok(());
     }
     // Carve the output into disjoint sub-block slices.
     let mut jobs = Vec::with_capacity(restarts.len() + 1);
@@ -190,6 +214,10 @@ pub fn decode_chunk_parallel(
         for job in jobs {
             job.run(kind, comp)?;
         }
+        if let (Some(t0), Some(o)) = (t0, obs) {
+            o.fanout.record(t0.elapsed());
+            o.join.record_us(0);
+        }
         return Ok(());
     }
     // Round-robin the jobs over the workers; report the first
@@ -202,6 +230,7 @@ pub fn decode_chunk_parallel(
         let w = k % buckets.len();
         buckets[w].push(job);
     }
+    let mut spawned_at: Option<Instant> = None;
     std::thread::scope(|s| {
         for bucket in buckets {
             let results = &results;
@@ -213,7 +242,14 @@ pub fn decode_chunk_parallel(
                 }
             });
         }
+        // Scope exit joins the workers: everything before this point is
+        // fan-out (carve + spawn), everything after is join.
+        spawned_at = t0.map(|_| Instant::now());
     });
+    if let (Some(t0), Some(at), Some(o)) = (t0, spawned_at, obs) {
+        o.fanout.record(at.duration_since(t0));
+        o.join.record(at.elapsed());
+    }
     for (k, cell) in results.iter().enumerate() {
         cell.lock()
             .unwrap()
@@ -231,6 +267,17 @@ pub fn decompress_chunk_split_into(
     n_workers: usize,
     out: &mut Vec<u8>,
 ) -> Result<()> {
+    decompress_chunk_split_obs_into(container, i, n_workers, out, None)
+}
+
+/// [`decompress_chunk_split_into`] with optional stitch-phase timing.
+pub fn decompress_chunk_split_obs_into(
+    container: &Container,
+    i: usize,
+    n_workers: usize,
+    out: &mut Vec<u8>,
+    obs: Option<StitchTimers<'_>>,
+) -> Result<()> {
     let e = *container
         .index
         .get(i)
@@ -238,7 +285,7 @@ pub fn decompress_chunk_split_into(
     let comp = container.chunk_bytes(i)?;
     out.clear();
     out.resize(e.uncomp_len as usize, 0);
-    decode_chunk_parallel(container.codec, comp, container.restart_table(i), out, n_workers)
+    decode_chunk_parallel_obs(container.codec, comp, container.restart_table(i), out, n_workers, obs)
 }
 
 /// Decompress chunk `i` through the stitcher into a fresh buffer.

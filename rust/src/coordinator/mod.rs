@@ -18,8 +18,9 @@ pub mod stats;
 
 pub use batcher::{BatchPolicy, Batcher, ExpandTask};
 pub use engine::{
-    decode_chunk_parallel, decompress_chunk_split, decompress_chunk_split_into,
-    decompress_hybrid, decompress_parallel, decompress_static_partition,
+    decode_chunk_parallel, decode_chunk_parallel_obs, decompress_chunk_split,
+    decompress_chunk_split_into, decompress_chunk_split_obs_into, decompress_hybrid,
+    decompress_parallel, decompress_static_partition,
 };
 pub use router::{plan, plan_dims, ChunkWork, DatasetSource, LeastLoaded, Registry, Request};
 pub use service::{Response, Service, ServiceConfig};

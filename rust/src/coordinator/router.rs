@@ -135,11 +135,23 @@ impl DatasetSource {
         n_workers: usize,
         out: &mut Vec<u8>,
     ) -> Result<()> {
+        self.decompress_chunk_split_obs_into(i, n_workers, out, None)
+    }
+
+    /// [`decompress_chunk_split_into`](Self::decompress_chunk_split_into)
+    /// with optional stitch fan-out/join timing (DESIGN.md §10).
+    pub fn decompress_chunk_split_obs_into(
+        &self,
+        i: usize,
+        n_workers: usize,
+        out: &mut Vec<u8>,
+        obs: Option<crate::obs::StitchTimers<'_>>,
+    ) -> Result<()> {
         match self {
             DatasetSource::Memory(c) => {
-                super::engine::decompress_chunk_split_into(c, i, n_workers, out)
+                super::engine::decompress_chunk_split_obs_into(c, i, n_workers, out, obs)
             }
-            DatasetSource::File(f) => f.decompress_chunk_split_into(i, n_workers, out),
+            DatasetSource::File(f) => f.decompress_chunk_split_obs_into(i, n_workers, out, obs),
         }
     }
 }
@@ -180,6 +192,12 @@ impl Registry {
         let mut v: Vec<&str> = self.containers.keys().map(|s| s.as_str()).collect();
         v.sort();
         v
+    }
+
+    /// Iterate every registered source (unordered) — the daemon uses
+    /// this to attach per-dataset metrics handles at startup.
+    pub fn sources(&self) -> impl Iterator<Item = (&str, &DatasetSource)> {
+        self.containers.iter().map(|(k, v)| (k.as_str(), v))
     }
 }
 

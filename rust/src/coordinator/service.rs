@@ -8,6 +8,7 @@
 
 use crate::coordinator::router::{ChunkWork, Registry, Request};
 use crate::coordinator::stats::LatencyStats;
+use crate::obs::{now_if_enabled, DatasetMetrics, MetricsRegistry, Stage};
 use crate::runtime::Expander;
 use crate::server::cache::ChunkCache;
 use crate::{Error, Result};
@@ -68,6 +69,10 @@ pub struct Service<'a> {
     /// output `Vec` in steady state: buffers grow to the hot chunk size
     /// once and are recycled across batches.
     scratch: Mutex<Vec<Vec<u8>>>,
+    /// Per-dataset stage metrics (DESIGN.md §10): cache lookup/admit
+    /// timing, serial-decode vs stitch fan-out/join split, decoded-byte
+    /// and hit/miss counters. `None` outside the daemon path.
+    metrics: Option<Arc<MetricsRegistry>>,
 }
 
 /// Scratch buffers retained in the pool (beyond this, returned buffers
@@ -81,7 +86,14 @@ impl<'a> Service<'a> {
         expander: Option<&'a Expander<'a>>,
         config: ServiceConfig,
     ) -> Self {
-        Service { registry, expander, config, cache: None, scratch: Mutex::new(Vec::new()) }
+        Service {
+            registry,
+            expander,
+            config,
+            cache: None,
+            scratch: Mutex::new(Vec::new()),
+            metrics: None,
+        }
     }
 
     /// Check a scratch buffer out of the pool (empty, capacity warm).
@@ -103,6 +115,14 @@ impl<'a> Service<'a> {
     /// `server::daemon`).
     pub fn with_cache(mut self, cache: &'a ChunkCache) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Attach a metrics registry: per-dataset cache lookup/admit,
+    /// serial-decode, and stitch fan-out/join stages are timed on every
+    /// decode (the daemon path — DESIGN.md §10).
+    pub fn with_metrics(mut self, metrics: Arc<MetricsRegistry>) -> Self {
+        self.metrics = Some(metrics);
         self
     }
 
@@ -255,9 +275,27 @@ impl<'a> Service<'a> {
         split_workers: usize,
         scratch: &mut Vec<u8>,
     ) -> Result<Vec<u8>> {
+        // One registry resolve per item; all stage recording below goes
+        // through this lock-free handle.
+        let dm = if crate::obs::ENABLED {
+            self.metrics.as_ref().map(|r| r.dataset(dataset))
+        } else {
+            None
+        };
         if let Some(cache) = self.cache {
-            if let Some(full) = cache.get(dataset, w.chunk) {
+            let t0 = now_if_enabled();
+            let found = cache.get(dataset, w.chunk);
+            if let (Some(t0), Some(m)) = (t0, &dm) {
+                m.stage(Stage::CacheLookup).record(t0.elapsed());
+            }
+            if let Some(full) = found {
+                if let Some(m) = &dm {
+                    m.cache_hits.inc();
+                }
                 return slice_chunk(&full, w);
+            }
+            if let Some(m) = &dm {
+                m.cache_misses.inc();
             }
         }
         let c = self.registry.get(dataset)?;
@@ -269,22 +307,41 @@ impl<'a> Service<'a> {
             // This path is cold by construction (the daemon runs
             // hybrid: false), so the per-item scratch is acceptable.
             let mut comp_scratch = Vec::new();
+            let t0 = now_if_enabled();
             let full = crate::coordinator::engine::decode_chunk_hybrid(
                 c.codec(),
                 c.chunk_bytes(w.chunk, &mut comp_scratch)?,
                 self.expander.expect("checked"),
             )?;
-            if let Some(r) = self.try_cache(dataset, w, &full) {
+            if let (Some(t0), Some(m)) = (t0, &dm) {
+                m.stage(Stage::DecodeSerial).record(t0.elapsed());
+            }
+            if let Some(m) = &dm {
+                m.decoded_bytes.add(full.len() as u64);
+            }
+            if let Some(r) = self.try_cache(dataset, w, &full, dm.as_deref()) {
                 return r;
             }
             return if w.lo == 0 && w.hi == full.len() { Ok(full) } else { slice_chunk(&full, w) };
         }
         if split_workers > 1 && !c.restart_table(w.chunk).is_empty() {
-            c.decompress_chunk_split_into(w.chunk, split_workers, scratch)?;
+            c.decompress_chunk_split_obs_into(
+                w.chunk,
+                split_workers,
+                scratch,
+                dm.as_ref().map(|m| m.stitch_timers()),
+            )?;
         } else {
+            let t0 = now_if_enabled();
             c.decompress_chunk_into(w.chunk, scratch)?;
+            if let (Some(t0), Some(m)) = (t0, &dm) {
+                m.stage(Stage::DecodeSerial).record(t0.elapsed());
+            }
         }
-        if let Some(r) = self.try_cache(dataset, w, scratch) {
+        if let Some(m) = &dm {
+            m.decoded_bytes.add(scratch.len() as u64);
+        }
+        if let Some(r) = self.try_cache(dataset, w, scratch, dm.as_deref()) {
             return r;
         }
         slice_chunk(scratch, w)
@@ -297,13 +354,26 @@ impl<'a> Service<'a> {
     /// from the shared copy. `None` means "not cached; slice from the
     /// decode buffer instead" — keeping both decode paths on the one
     /// documented admission protocol.
-    fn try_cache(&self, dataset: &str, w: ChunkWork, full: &[u8]) -> Option<Result<Vec<u8>>> {
+    fn try_cache(
+        &self,
+        dataset: &str,
+        w: ChunkWork,
+        full: &[u8],
+        dm: Option<&DatasetMetrics>,
+    ) -> Option<Result<Vec<u8>>> {
         let cache = self.cache?;
         if !cache.admit(dataset, w.chunk, full.len()) {
             return None;
         }
+        // The `cache_admit` stage times only admitted inserts (the Arc
+        // build + insert); declined touches cost an admission probe and
+        // are not samples of this histogram.
+        let t0 = now_if_enabled();
         let shared: Arc<[u8]> = Arc::from(full);
         cache.insert(dataset, w.chunk, shared.clone());
+        if let (Some(t0), Some(m)) = (t0, dm) {
+            m.stage(Stage::CacheAdmit).record(t0.elapsed());
+        }
         Some(slice_chunk(&shared, w))
     }
 }

@@ -46,6 +46,7 @@ pub mod data;
 pub mod decomp;
 pub mod format;
 pub mod gpu_sim;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 

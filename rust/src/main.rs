@@ -11,10 +11,11 @@
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
 //! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M]
 //! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (legacy stdin mode: "<id> <offset> <len>" per line)
-//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0]
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0] [--scrape]
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --ablate-batch   (§V-F batching sweep, pipeline depths 1/8/32)
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --probe-expired  (deadline-expiry smoke probe)
 //! codag loadgen    --addr 127.0.0.1:7311 --shutdown   (drain the daemon and exit)
+//! codag stat       --addr 127.0.0.1:7311   (scrape the daemon's metrics exposition, DESIGN.md §10)
 //! ```
 //!
 //! Hand-rolled flag parsing: the offline build environment provides no
@@ -83,7 +84,7 @@ fn parse_size(s: &str) -> Result<usize, String> {
 fn run(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
         return Err(
-            "usage: codag <gen|compress|pack|decompress|simulate|report|serve|loadgen> [flags]"
+            "usage: codag <gen|compress|pack|decompress|simulate|report|serve|loadgen|stat> [flags]"
                 .into(),
         );
     };
@@ -97,6 +98,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "report" => cmd_report(args.get(1).map(|s| s.as_str()).unwrap_or("all"), &f),
         "serve" => cmd_serve(&f),
         "loadgen" => cmd_loadgen(&f),
+        "stat" => cmd_stat(&f),
         other => Err(format!("unknown command '{other}'")),
     }
 }
@@ -486,14 +488,23 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
     );
     eprintln!("stop with: codag loadgen --addr 127.0.0.1:{port} --shutdown");
     let cache = handle.cache_arc();
+    // Grab the registry before `wait` consumes the handle: the shutdown
+    // summary's percentiles come from the daemon-wide request histogram
+    // (DESIGN.md §10) when recording is compiled in, falling back to
+    // the reservoir estimate otherwise.
+    let metrics = handle.metrics_arc();
     let stats = handle.wait().map_err(|e| e.to_string())?;
+    let hist = metrics.request_us();
+    let (p50, p99) = if codag::obs::ENABLED && hist.count() > 0 {
+        (hist.percentile_us(50.0), hist.percentile_us(99.0))
+    } else {
+        (stats.percentile_us(50.0), stats.percentile_us(99.0))
+    };
     eprintln!(
-        "served {} requests, {} bytes: p50={}us p99={}us cache hits={} misses={} \
+        "served {} requests, {} bytes: p50={p50}us p99={p99}us cache hits={} misses={} \
          evictions={} admit-declines={} ghost-hits={}",
         stats.count(),
         stats.total_bytes(),
-        stats.percentile_us(50.0),
-        stats.percentile_us(99.0),
         stats.cache_hits(),
         stats.cache_misses(),
         cache.evictions(),
@@ -507,6 +518,16 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         .collect::<Vec<_>>()
         .join(" ");
     eprintln!("decoded bytes by codec: {per_codec}");
+    Ok(())
+}
+
+/// `codag stat --addr …`: scrape a live daemon's metrics exposition
+/// (the wire `Metrics` request) and print it verbatim — per-dataset
+/// counters, stage histograms, and the slowlog (DESIGN.md §10).
+fn cmd_stat(f: &HashMap<String, String>) -> Result<(), String> {
+    let addr = get(f, "addr")?;
+    let text = loadgen::metrics(addr).map_err(|e| e.to_string())?;
+    print!("{text}");
     Ok(())
 }
 
@@ -551,6 +572,7 @@ fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
     if let Some(s) = f.get("deadline-ms") {
         cfg.deadline_ms = s.parse().map_err(|_| "bad --deadline-ms")?;
     }
+    cfg.scrape = f.contains_key("scrape");
     if f.contains_key("ablate-batch") {
         // §V-F through the daemon: sweep pipeline depths {1, 8, 32}
         // (the shard workers' effective batch size) and emit the
@@ -561,6 +583,12 @@ fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
     }
     let report = loadgen::run(&cfg).map_err(|e| e.to_string())?;
     print!("{report}");
+    if cfg.scrape {
+        match &report.mid_run_metrics {
+            Some(text) => print!("{text}"),
+            None => return Err("every mid-run metrics scrape failed".into()),
+        }
+    }
     // Exit nonzero when nothing succeeded so CI smoke steps that gate
     // on this command actually verify a served request.
     if report.ok == 0 {

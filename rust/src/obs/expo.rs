@@ -1,0 +1,205 @@
+//! Text exposition of the metrics registry (Prometheus-style lines).
+//!
+//! Grammar (pinned by DESIGN.md §10): every non-comment line is
+//! `name value` or `name{label="v",...} value` where `value` is an
+//! unsigned decimal integer; lines starting with `#` are comments
+//! (header + slowlog dump). Labels appear in the fixed order
+//! `dataset`, then `stage`; datasets render in name order and stages
+//! in pipeline order, so the output is byte-stable for a given
+//! registry state.
+//!
+//! Conservation by construction: derived lines are computed from
+//! counter values loaded *once* per render —
+//! `codag_cache_gets_total = hits + misses` uses the same two loads
+//! that the hit/miss lines print, and
+//! `codag_daemon_decoded_bytes_total` sums the per-dataset
+//! `codag_decoded_bytes_total` values as printed. A scrape taken in
+//! the middle of concurrent load therefore always satisfies
+//! `hits + misses == gets` and `sum(per-dataset bytes) == daemon
+//! bytes` exactly, with no stop-the-world snapshot.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use super::registry::{MetricsRegistry, Stage};
+use super::slowlog::SlowLog;
+
+/// Render the full exposition: per-dataset counters + per-stage
+/// histograms, daemon-wide request histogram, and the slowlog as
+/// trailing comment lines.
+pub fn render(reg: &MetricsRegistry, slow: &SlowLog) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("# codag metrics exposition v1\n");
+    let mut daemon_decoded: u64 = 0;
+    for (name, m) in reg.snapshot() {
+        // One load per counter; derived lines reuse these exact values.
+        let hits = m.cache_hits.get();
+        let misses = m.cache_misses.get();
+        let decoded = m.decoded_bytes.get();
+        daemon_decoded += decoded;
+        let d = name.as_str();
+        let _ = writeln!(out, "codag_requests_total{{dataset=\"{d}\"}} {}", m.requests.get());
+        let _ = writeln!(out, "codag_busy_total{{dataset=\"{d}\"}} {}", m.busy.get());
+        let _ = writeln!(out, "codag_expired_total{{dataset=\"{d}\"}} {}", m.expired.get());
+        let _ = writeln!(out, "codag_inflight{{dataset=\"{d}\"}} {}", m.inflight.get());
+        let _ = writeln!(out, "codag_cache_hits_total{{dataset=\"{d}\"}} {hits}");
+        let _ = writeln!(out, "codag_cache_misses_total{{dataset=\"{d}\"}} {misses}");
+        let _ = writeln!(out, "codag_cache_gets_total{{dataset=\"{d}\"}} {}", hits + misses);
+        let _ = writeln!(out, "codag_decoded_bytes_total{{dataset=\"{d}\"}} {decoded}");
+        for s in Stage::all() {
+            let h = m.stage(s);
+            let sn = s.name();
+            let _ = writeln!(
+                out,
+                "codag_stage_count{{dataset=\"{d}\",stage=\"{sn}\"}} {}",
+                h.count()
+            );
+            let _ = writeln!(
+                out,
+                "codag_stage_sum_us{{dataset=\"{d}\",stage=\"{sn}\"}} {}",
+                h.sum_us()
+            );
+            let _ = writeln!(
+                out,
+                "codag_stage_p50_us{{dataset=\"{d}\",stage=\"{sn}\"}} {}",
+                h.percentile_us(50.0)
+            );
+            let _ = writeln!(
+                out,
+                "codag_stage_p99_us{{dataset=\"{d}\",stage=\"{sn}\"}} {}",
+                h.percentile_us(99.0)
+            );
+        }
+    }
+    let _ = writeln!(out, "codag_daemon_decoded_bytes_total {daemon_decoded}");
+    let req = reg.request_us();
+    let _ = writeln!(out, "codag_request_count {}", req.count());
+    let _ = writeln!(out, "codag_request_mean_us {}", req.mean_us());
+    let _ = writeln!(out, "codag_request_p50_us {}", req.percentile_us(50.0));
+    let _ = writeln!(out, "codag_request_p99_us {}", req.percentile_us(99.0));
+    for e in slow.snapshot() {
+        let mut stages = String::new();
+        for (i, (s, at)) in e.stages.iter().enumerate() {
+            if i > 0 {
+                stages.push(',');
+            }
+            let _ = write!(stages, "{}:{at}", s.name());
+        }
+        let _ = writeln!(
+            out,
+            "# slowlog id={} dataset=\"{}\" total_us={} stages={stages}",
+            e.id, e.dataset, e.total_us
+        );
+    }
+    out
+}
+
+/// Parse an exposition back into a `full-line-key -> value` map, where
+/// the key is everything before the final space (`name` or
+/// `name{labels}`). Comment and blank lines are skipped. Used by the
+/// conservation tests and `loadgen --scrape` summaries.
+pub fn parse(text: &str) -> HashMap<String, u64> {
+    text.lines()
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (key, val) = l.rsplit_once(' ')?;
+            Some((key.to_string(), val.parse().ok()?))
+        })
+        .collect()
+}
+
+/// Convenience lookup for `name{dataset="..."}` lines.
+pub fn get_dataset(map: &HashMap<String, u64>, name: &str, dataset: &str) -> Option<u64> {
+    map.get(&format!("{name}{{dataset=\"{dataset}\"}}")).copied()
+}
+
+/// Convenience lookup for `name{dataset="...",stage="..."}` lines.
+pub fn get_stage(
+    map: &HashMap<String, u64>,
+    name: &str,
+    dataset: &str,
+    stage: Stage,
+) -> Option<u64> {
+    map.get(&format!("{name}{{dataset=\"{dataset}\",stage=\"{}\"}}", stage.name())).copied()
+}
+
+#[cfg(all(test, feature = "obs"))]
+mod tests {
+    use super::*;
+    use crate::obs::slowlog::SlowEntry;
+
+    fn sample() -> (MetricsRegistry, SlowLog) {
+        let reg = MetricsRegistry::new();
+        let m = reg.dataset("alpha");
+        m.requests.add(10);
+        m.cache_hits.add(7);
+        m.cache_misses.add(3);
+        m.decoded_bytes.add(4096);
+        m.stage(Stage::QueueWait).record_us(12);
+        m.stage(Stage::DecodeSerial).record_us(200);
+        let b = reg.dataset("beta");
+        b.decoded_bytes.add(1024);
+        reg.request_us().record_us(250);
+        let slow = SlowLog::new(4);
+        slow.offer(SlowEntry {
+            id: 3,
+            dataset: "alpha".to_string(),
+            total_us: 250,
+            stages: vec![(Stage::QueueWait, 12), (Stage::ResponseWrite, 250)],
+        });
+        (reg, slow)
+    }
+
+    #[test]
+    fn render_parse_roundtrip_and_derived_invariants() {
+        let (reg, slow) = sample();
+        let text = render(&reg, &slow);
+        let map = parse(&text);
+        assert_eq!(get_dataset(&map, "codag_requests_total", "alpha"), Some(10));
+        assert_eq!(get_dataset(&map, "codag_cache_hits_total", "alpha"), Some(7));
+        assert_eq!(get_dataset(&map, "codag_cache_misses_total", "alpha"), Some(3));
+        // Derived: gets == hits + misses, by construction.
+        assert_eq!(get_dataset(&map, "codag_cache_gets_total", "alpha"), Some(10));
+        // Derived: daemon-wide decoded bytes == sum of per-dataset.
+        assert_eq!(map["codag_daemon_decoded_bytes_total"], 4096 + 1024);
+        assert_eq!(get_dataset(&map, "codag_decoded_bytes_total", "beta"), Some(1024));
+        assert_eq!(
+            get_stage(&map, "codag_stage_count", "alpha", Stage::DecodeSerial),
+            Some(1)
+        );
+        assert_eq!(
+            get_stage(&map, "codag_stage_p50_us", "alpha", Stage::DecodeSerial),
+            Some(255), // bucket upper bound of 200
+        );
+        assert_eq!(map["codag_request_count"], 1);
+        // Every stage of every dataset renders even at count 0 — the
+        // name set is stable for scrapers/greps.
+        assert_eq!(get_stage(&map, "codag_stage_count", "beta", Stage::StitchJoin), Some(0));
+    }
+
+    #[test]
+    fn output_is_stable_for_a_fixed_registry() {
+        let (reg, slow) = sample();
+        assert_eq!(render(&reg, &slow), render(&reg, &slow));
+        // Datasets render name-sorted.
+        let text = render(&reg, &slow);
+        let alpha = text.find("dataset=\"alpha\"").unwrap();
+        let beta = text.find("dataset=\"beta\"").unwrap();
+        assert!(alpha < beta);
+    }
+
+    #[test]
+    fn slowlog_renders_as_comment_lines() {
+        let (reg, slow) = sample();
+        let text = render(&reg, &slow);
+        let line = text
+            .lines()
+            .find(|l| l.starts_with("# slowlog "))
+            .expect("slowlog comment line");
+        assert!(line.contains("id=3"));
+        assert!(line.contains("dataset=\"alpha\""));
+        assert!(line.contains("stages=queue_wait:12,response_write:250"));
+        // Comment lines must not pollute the parsed map.
+        assert!(parse(&text).keys().all(|k| !k.contains("slowlog")));
+    }
+}

@@ -1,0 +1,322 @@
+//! Lock-free observability primitives: [`Counter`], [`Gauge`], and the
+//! 64-slot log2-bucketed [`LatencyHisto`].
+//!
+//! Everything here is wait-free on the record path (one or two relaxed
+//! atomic RMWs), allocation-free after construction, and mergeable, so
+//! shard workers and connection threads record into shared registries
+//! without taking a lock. When the `obs` cargo feature is disabled
+//! every record method compiles to a no-op behind [`ENABLED`] — the
+//! types and read APIs stay, so call sites need no `cfg` — which is
+//! the "compiled-out" half of the instrumentation-overhead baseline in
+//! EXPERIMENTS.md.
+//!
+//! Bucket layout (pinned by DESIGN.md §10): bucket 0 holds exact-zero
+//! samples; bucket `i` (1 ≤ i ≤ 62) holds values in
+//! `[2^(i-1), 2^i - 1]`; bucket 63 holds everything from `2^62` up.
+//! [`LatencyHisto::percentile_us`] returns the *upper bound* of the
+//! bucket containing the requested rank, so a reported percentile `h`
+//! for a true value `v` satisfies `v <= h < 2*v` — a ≤2× resolution
+//! bound, cross-checked against the exact reservoir in
+//! `histo_percentiles_track_reservoir_within_bucket_resolution`.
+
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::time::Duration;
+
+/// Compile-time master switch: `true` iff the `obs` cargo feature
+/// (default-on) is enabled. Record paths branch on this const so the
+/// optimizer deletes them entirely in `--no-default-features` builds.
+pub const ENABLED: bool = cfg!(feature = "obs");
+
+/// Fixed bucket count of [`LatencyHisto`]; covers the full `u64`
+/// microsecond range in powers of two.
+pub const HISTO_BUCKETS: usize = 64;
+
+/// `Some(Instant::now())` when recording is compiled in, `None`
+/// otherwise — instrumentation sites branch on this so a compiled-out
+/// build takes no clock reads at all.
+pub fn now_if_enabled() -> Option<std::time::Instant> {
+    ENABLED.then(std::time::Instant::now)
+}
+
+/// Monotonically-increasing atomic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, n: u64) {
+        if ENABLED {
+            self.0.fetch_add(n, Relaxed);
+        }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Up/down gauge (e.g. in-flight requests). `dec` saturates at zero so
+/// a racing scrape can never observe a wrapped near-`u64::MAX` value.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self(AtomicU64::new(0))
+    }
+
+    pub fn inc(&self) {
+        if ENABLED {
+            self.0.fetch_add(1, Relaxed);
+        }
+    }
+
+    pub fn dec(&self) {
+        if ENABLED {
+            // fetch_update to saturate rather than wrap on a stray
+            // double-decrement.
+            let _ = self.0.fetch_update(Relaxed, Relaxed, |v| Some(v.saturating_sub(1)));
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Relaxed)
+    }
+}
+
+/// Bucket index for a microsecond value: 0 for 0, else
+/// `min(64 - leading_zeros(v), 63)` so bucket `i` covers
+/// `[2^(i-1), 2^i - 1]`.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HISTO_BUCKETS - 1)
+    }
+}
+
+/// Inclusive upper bound of bucket `i`, used as the reported
+/// percentile value (hence the ≤2× resolution bound).
+pub fn bucket_upper_bound_us(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        _ if i >= HISTO_BUCKETS - 1 => u64::MAX,
+        _ => (1u64 << i) - 1,
+    }
+}
+
+/// Fixed-size log2-bucketed latency histogram.
+///
+/// O(1) wait-free record path (a leading-zeros and three relaxed
+/// `fetch_add`s), no allocation after construction, mergeable across
+/// instances. Unlike `LatencyStats`' reservoir there is no sampling:
+/// every recorded value lands in exactly one bucket, so counts are
+/// exact and conserved — only the *value* resolution is quantized.
+#[derive(Debug)]
+pub struct LatencyHisto {
+    buckets: [AtomicU64; HISTO_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for LatencyHisto {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one microsecond sample. No-op when `obs` is compiled out.
+    pub fn record_us(&self, us: u64) {
+        if ENABLED {
+            self.buckets[bucket_index(us)].fetch_add(1, Relaxed);
+            self.count.fetch_add(1, Relaxed);
+            self.sum_us.fetch_add(us, Relaxed);
+        }
+    }
+
+    /// Record an elapsed [`Duration`] (saturating to `u64` µs).
+    pub fn record(&self, d: Duration) {
+        self.record_us(u64::try_from(d.as_micros()).unwrap_or(u64::MAX));
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Relaxed)
+    }
+
+    pub fn mean_us(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum_us() / n
+        }
+    }
+
+    /// Fold `other`'s samples into `self` (bucket-wise atomic adds).
+    pub fn merge(&self, other: &LatencyHisto) {
+        for (mine, theirs) in self.buckets.iter().zip(&other.buckets) {
+            let n = theirs.load(Relaxed);
+            if n != 0 {
+                mine.fetch_add(n, Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Relaxed), Relaxed);
+        self.sum_us.fetch_add(other.sum_us.load(Relaxed), Relaxed);
+    }
+
+    /// Relaxed snapshot of the bucket counts (for exposition).
+    pub fn snapshot_buckets(&self) -> [u64; HISTO_BUCKETS] {
+        std::array::from_fn(|i| self.buckets[i].load(Relaxed))
+    }
+
+    /// Percentile estimate: the upper bound of the bucket holding the
+    /// requested rank (same nearest-rank convention as
+    /// `LatencyStats::percentile_us`). Returns 0 on an empty histogram.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let counts = self.snapshot_buckets();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p.clamp(0.0, 100.0) / 100.0) * ((total - 1) as f64)).round() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum > rank {
+                return bucket_upper_bound_us(i);
+            }
+        }
+        bucket_upper_bound_us(HISTO_BUCKETS - 1)
+    }
+}
+
+/// Borrowed fan-out/join histogram pair threaded into
+/// `engine::decode_chunk_parallel` so the stitcher can time its two
+/// phases without depending on the registry types.
+#[derive(Clone, Copy)]
+pub struct StitchTimers<'a> {
+    /// Entry → all sub-block jobs carved and spawned (serial fallback
+    /// records its whole decode loop here).
+    pub fanout: &'a LatencyHisto,
+    /// Spawn-complete → all stitch workers joined.
+    pub join: &'a LatencyHisto,
+}
+
+#[cfg(all(test, feature = "obs"))]
+mod tests {
+    use super::*;
+    use crate::coordinator::stats::LatencyStats;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(41);
+        assert_eq!(c.get(), 42);
+
+        let g = Gauge::new();
+        g.inc();
+        g.inc();
+        g.dec();
+        assert_eq!(g.get(), 1);
+        g.dec();
+        g.dec(); // saturates, must not wrap
+        assert_eq!(g.get(), 0);
+    }
+
+    #[test]
+    fn bucket_index_layout_pinned() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), 63);
+        // Every bucket's upper bound maps back into that bucket.
+        for i in 1..HISTO_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_upper_bound_us(i)), i, "bucket {i}");
+            assert_eq!(bucket_index(bucket_upper_bound_us(i) + 1), i + 1, "bucket {i}+1");
+        }
+    }
+
+    #[test]
+    fn histo_counts_are_exact_and_mergeable() {
+        let a = LatencyHisto::new();
+        let b = LatencyHisto::new();
+        for v in 0..1000u64 {
+            a.record_us(v);
+            b.record_us(v * 7);
+        }
+        assert_eq!(a.count(), 1000);
+        assert_eq!(a.sum_us(), (0..1000).sum::<u64>());
+        let merged = LatencyHisto::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged.count(), 2000);
+        assert_eq!(merged.sum_us(), a.sum_us() + b.sum_us());
+        let direct: u64 = merged.snapshot_buckets().iter().sum();
+        assert_eq!(direct, 2000, "bucket counts conserved under merge");
+    }
+
+    #[test]
+    fn percentile_returns_bucket_upper_bound() {
+        let h = LatencyHisto::new();
+        assert_eq!(h.percentile_us(50.0), 0, "empty histogram");
+        for _ in 0..100 {
+            h.record_us(100); // bucket 7 = [64, 127]
+        }
+        assert_eq!(h.percentile_us(50.0), 127);
+        assert_eq!(h.percentile_us(99.0), 127);
+        h.record_us(0);
+        assert_eq!(h.percentile_us(0.0), 0);
+    }
+
+    /// Satellite: cross-check the exact reservoir percentiles of
+    /// `LatencyStats` against the histogram's bucket percentiles on a
+    /// known distribution. The input count stays under the reservoir
+    /// capacity so the reservoir is exact; the histogram then must
+    /// bracket each reservoir percentile within its documented bucket
+    /// resolution: `res <= histo < 2 * res` (upper-bound reporting).
+    #[test]
+    fn histo_percentiles_track_reservoir_within_bucket_resolution() {
+        let mut stats = LatencyStats::new();
+        let histo = LatencyHisto::new();
+        // Uniform 1..=50_000 µs — under RESERVOIR_CAP (64 Ki), so the
+        // reservoir holds every sample and its percentiles are exact.
+        for us in 1..=50_000u64 {
+            stats.record(Duration::from_micros(us), 0);
+            histo.record_us(us);
+        }
+        assert_eq!(histo.count(), stats.count() as u64);
+        for p in [50.0, 90.0, 99.0] {
+            let res = stats.percentile_us(p);
+            let h = histo.percentile_us(p);
+            assert!(
+                h >= res && h < 2 * res.max(1),
+                "p{p}: reservoir={res}us histo={h}us outside [res, 2*res)"
+            );
+        }
+    }
+}

@@ -1,0 +1,29 @@
+//! Stage-level observability for the serving stack (DESIGN.md §10).
+//!
+//! CODAG's central lesson is that throughput claims are only
+//! trustworthy when the measurement shows *where time goes*; this
+//! module gives the daemon that breakdown. It is std-only and built
+//! from three layers:
+//!
+//! - [`histo`] — lock-free primitives: [`Counter`], [`Gauge`], and the
+//!   64-slot log2-bucketed [`LatencyHisto`] (O(1) wait-free record,
+//!   mergeable, allocation-free after startup).
+//! - [`registry`] — [`MetricsRegistry`] keyed by `(dataset, stage)`;
+//!   [`Stage`] covers the full request lifecycle from admission to
+//!   response write, including the parallel-stitch fan-out/join split.
+//! - [`slowlog`] + [`expo`] — a bounded ring of the N slowest requests
+//!   with per-stage breakdowns, and the stable text exposition served
+//!   by the wire `Metrics` request kind / `codag stat`.
+//!
+//! Recording is compiled out (no-op bodies, identical APIs) when the
+//! default `obs` cargo feature is disabled; the measured overhead of
+//! leaving it on is tracked in EXPERIMENTS.md.
+
+pub mod expo;
+pub mod histo;
+pub mod registry;
+pub mod slowlog;
+
+pub use histo::{now_if_enabled, Counter, Gauge, LatencyHisto, StitchTimers, ENABLED, HISTO_BUCKETS};
+pub use registry::{DatasetMetrics, MetricsRegistry, Stage, STAGES};
+pub use slowlog::{SlowEntry, SlowLog, SLOWLOG_CAP};

@@ -1,0 +1,214 @@
+//! Per-(dataset, stage) metrics registry.
+//!
+//! [`MetricsRegistry`] hands out one [`DatasetMetrics`] per dataset
+//! name (get-or-create behind an `RwLock`, read-path fast once a
+//! dataset is warm); each holds a fixed array of [`LatencyHisto`]s
+//! indexed by [`Stage`] plus the request/cache/byte counters the
+//! conservation invariants in DESIGN.md §10 are stated over. The lock
+//! guards only the `HashMap` of `Arc`s — recording into a resolved
+//! `Arc<DatasetMetrics>` is lock-free.
+
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+use super::histo::{Counter, Gauge, LatencyHisto, StitchTimers};
+
+/// Number of lifecycle stages ([`Stage::all`]).
+pub const STAGES: usize = 9;
+
+/// Request lifecycle stages, in pipeline order. Names (snake_case,
+/// [`Stage::name`]) are part of the wire exposition contract — see
+/// DESIGN.md §10 before renaming anything.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Stage {
+    /// Request decode + validation + shard-queue enqueue in the
+    /// connection reader thread.
+    Admission = 0,
+    /// Enqueue → shard-worker dequeue.
+    QueueWait = 1,
+    /// Chunk cache probe (hit or miss).
+    CacheLookup = 2,
+    /// Ghost-LRU admission + insert of a decoded chunk.
+    CacheAdmit = 3,
+    /// Positioned compressed-chunk read in `FileDataset`.
+    FileRead = 4,
+    /// Single-threaded whole-chunk decode.
+    DecodeSerial = 5,
+    /// Parallel stitch: entry → sub-block jobs carved and spawned.
+    StitchFanout = 6,
+    /// Parallel stitch: spawn-complete → all workers joined.
+    StitchJoin = 7,
+    /// Response frame write on the connection writer thread.
+    ResponseWrite = 8,
+}
+
+impl Stage {
+    pub fn all() -> [Stage; STAGES] {
+        [
+            Stage::Admission,
+            Stage::QueueWait,
+            Stage::CacheLookup,
+            Stage::CacheAdmit,
+            Stage::FileRead,
+            Stage::DecodeSerial,
+            Stage::StitchFanout,
+            Stage::StitchJoin,
+            Stage::ResponseWrite,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::QueueWait => "queue_wait",
+            Stage::CacheLookup => "cache_lookup",
+            Stage::CacheAdmit => "cache_admit",
+            Stage::FileRead => "file_read",
+            Stage::DecodeSerial => "decode_serial",
+            Stage::StitchFanout => "stitch_fanout",
+            Stage::StitchJoin => "stitch_join",
+            Stage::ResponseWrite => "response_write",
+        }
+    }
+}
+
+/// All metrics for one dataset: a [`LatencyHisto`] per [`Stage`] plus
+/// the counters the exposition derives its conservation lines from.
+#[derive(Debug, Default)]
+pub struct DatasetMetrics {
+    stages: [LatencyHisto; STAGES],
+    /// Get requests admitted to a shard queue.
+    pub requests: Counter,
+    /// Get requests rejected with `Busy` (queue full / over budget).
+    pub busy: Counter,
+    /// Get requests dropped at dequeue because their deadline passed.
+    pub expired: Counter,
+    /// Chunk-cache lookups that hit.
+    pub cache_hits: Counter,
+    /// Chunk-cache lookups that missed (chunk was decoded).
+    pub cache_misses: Counter,
+    /// Uncompressed bytes produced by cache-miss decodes.
+    pub decoded_bytes: Counter,
+    /// Requests admitted but not yet replied to.
+    pub inflight: Gauge,
+}
+
+impl DatasetMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn stage(&self, s: Stage) -> &LatencyHisto {
+        &self.stages[s as usize]
+    }
+
+    /// The fan-out/join histogram pair for the parallel stitcher.
+    pub fn stitch_timers(&self) -> StitchTimers<'_> {
+        StitchTimers {
+            fanout: self.stage(Stage::StitchFanout),
+            join: self.stage(Stage::StitchJoin),
+        }
+    }
+}
+
+/// Daemon-wide registry: per-dataset metrics keyed by name, plus one
+/// daemon-wide end-to-end request histogram (receipt → reply built)
+/// that the shutdown summary reports from.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    datasets: RwLock<HashMap<String, Arc<DatasetMetrics>>>,
+    request_us: LatencyHisto,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-create the metrics handle for `name`. Callers on hot
+    /// paths should resolve once per request/batch and record through
+    /// the returned `Arc`.
+    pub fn dataset(&self, name: &str) -> Arc<DatasetMetrics> {
+        if let Some(m) = self.datasets.read().unwrap().get(name) {
+            return Arc::clone(m);
+        }
+        let mut w = self.datasets.write().unwrap();
+        Arc::clone(w.entry(name.to_string()).or_default())
+    }
+
+    /// Daemon-wide end-to-end request latency histogram.
+    pub fn request_us(&self) -> &LatencyHisto {
+        &self.request_us
+    }
+
+    /// Name-sorted snapshot of every dataset's metrics handle; the
+    /// exposition iterates this so output ordering is stable.
+    pub fn snapshot(&self) -> Vec<(String, Arc<DatasetMetrics>)> {
+        let mut v: Vec<_> = self
+            .datasets
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, m)| (k.clone(), Arc::clone(m)))
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+}
+
+#[cfg(all(test, feature = "obs"))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_and_order_pinned() {
+        let names: Vec<_> = Stage::all().iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            [
+                "admission",
+                "queue_wait",
+                "cache_lookup",
+                "cache_admit",
+                "file_read",
+                "decode_serial",
+                "stitch_fanout",
+                "stitch_join",
+                "response_write",
+            ]
+        );
+        for (i, s) in Stage::all().into_iter().enumerate() {
+            assert_eq!(s as usize, i, "discriminant order");
+        }
+    }
+
+    #[test]
+    fn registry_returns_same_handle_per_dataset() {
+        let reg = MetricsRegistry::new();
+        let a1 = reg.dataset("alpha");
+        let a2 = reg.dataset("alpha");
+        let b = reg.dataset("beta");
+        assert!(Arc::ptr_eq(&a1, &a2));
+        assert!(!Arc::ptr_eq(&a1, &b));
+        a1.requests.inc();
+        assert_eq!(a2.requests.get(), 1, "shared handle");
+        let snap = reg.snapshot();
+        let names: Vec<_> = snap.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["alpha", "beta"], "sorted snapshot");
+    }
+
+    #[test]
+    fn stage_histograms_are_independent() {
+        let m = DatasetMetrics::new();
+        m.stage(Stage::QueueWait).record_us(5);
+        m.stage(Stage::DecodeSerial).record_us(7);
+        assert_eq!(m.stage(Stage::QueueWait).count(), 1);
+        assert_eq!(m.stage(Stage::DecodeSerial).count(), 1);
+        assert_eq!(m.stage(Stage::CacheLookup).count(), 0);
+        let t = m.stitch_timers();
+        t.fanout.record_us(1);
+        t.join.record_us(2);
+        assert_eq!(m.stage(Stage::StitchFanout).count(), 1);
+        assert_eq!(m.stage(Stage::StitchJoin).count(), 1);
+    }
+}

@@ -1,0 +1,134 @@
+//! Bounded slowlog: the N slowest recent requests with per-stage
+//! breakdowns.
+//!
+//! [`SlowLog::offer`] keeps the entries sorted descending by total
+//! latency and evicts the fastest entry when full, so the ring always
+//! holds the N slowest requests seen so far. Offers take a short
+//! mutex — one lock per *completed request*, not per stage sample —
+//! and bail without locking when the candidate cannot displace the
+//! current minimum is checked under the same lock (the vector is
+//! tiny, default cap 16).
+
+use std::sync::Mutex;
+
+use super::registry::Stage;
+
+/// Default number of retained slowest requests.
+pub const SLOWLOG_CAP: usize = 16;
+
+/// One slow request: identity plus cumulative per-stage timestamps.
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    /// Wire request id.
+    pub id: u64,
+    pub dataset: String,
+    /// End-to-end latency, receipt → reply handed to the writer.
+    pub total_us: u64,
+    /// `(stage, cumulative_us)` pairs in pipeline order: each value is
+    /// the microsecond offset *from request receipt* at which that
+    /// stage finished, so a well-formed entry is monotone
+    /// non-decreasing (asserted by the conservation integration test).
+    pub stages: Vec<(Stage, u64)>,
+}
+
+/// Bounded ring of the slowest requests, ordered slowest-first.
+#[derive(Debug)]
+pub struct SlowLog {
+    cap: usize,
+    entries: Mutex<Vec<SlowEntry>>,
+}
+
+impl SlowLog {
+    pub fn new(cap: usize) -> Self {
+        Self { cap, entries: Mutex::new(Vec::with_capacity(cap)) }
+    }
+
+    /// Offer a completed request; it is retained only if the log has
+    /// room or it is slower than the current fastest retained entry.
+    pub fn offer(&self, e: SlowEntry) {
+        if !super::histo::ENABLED || self.cap == 0 {
+            return;
+        }
+        let mut g = self.entries.lock().unwrap();
+        if g.len() == self.cap {
+            // Sorted descending: the last entry is the fastest.
+            if g.last().is_some_and(|min| min.total_us >= e.total_us) {
+                return;
+            }
+            g.pop();
+        }
+        let pos = g.partition_point(|x| x.total_us >= e.total_us);
+        g.insert(pos, e);
+    }
+
+    /// Snapshot, slowest first.
+    pub fn snapshot(&self) -> Vec<SlowEntry> {
+        self.entries.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(all(test, feature = "obs"))]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, total_us: u64) -> SlowEntry {
+        SlowEntry {
+            id,
+            dataset: "ds".to_string(),
+            total_us,
+            stages: vec![
+                (Stage::QueueWait, total_us / 4),
+                (Stage::DecodeSerial, total_us / 2),
+                (Stage::ResponseWrite, total_us),
+            ],
+        }
+    }
+
+    #[test]
+    fn keeps_the_n_slowest_sorted_descending() {
+        let log = SlowLog::new(4);
+        for (id, us) in [(1, 50), (2, 10), (3, 90), (4, 30), (5, 70), (6, 20)] {
+            log.offer(entry(id, us));
+        }
+        let snap = log.snapshot();
+        let totals: Vec<_> = snap.iter().map(|e| e.total_us).collect();
+        assert_eq!(totals, [90, 70, 50, 30], "four slowest, slowest first");
+        let ids: Vec<_> = snap.iter().map(|e| e.id).collect();
+        assert_eq!(ids, [3, 5, 1, 4]);
+    }
+
+    #[test]
+    fn fast_requests_do_not_displace_slow_ones() {
+        let log = SlowLog::new(2);
+        log.offer(entry(1, 100));
+        log.offer(entry(2, 200));
+        log.offer(entry(3, 50));
+        let totals: Vec<_> = log.snapshot().iter().map(|e| e.total_us).collect();
+        assert_eq!(totals, [200, 100]);
+    }
+
+    #[test]
+    fn zero_cap_log_stays_empty() {
+        let log = SlowLog::new(0);
+        log.offer(entry(1, 100));
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn entry_stages_are_monotone() {
+        let e = entry(1, 400);
+        let mut prev = 0;
+        for (_, at) in &e.stages {
+            assert!(*at >= prev);
+            prev = *at;
+        }
+    }
+}

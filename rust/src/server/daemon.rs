@@ -24,10 +24,13 @@
 //! queue senders drop, shard workers drain what was admitted and exit,
 //! and [`DaemonHandle::join`]/[`DaemonHandle::wait`] joins every thread.
 
-use crate::coordinator::router::Request;
+use crate::coordinator::router::{DatasetSource, Request};
 use crate::coordinator::service::{Service, ServiceConfig};
 use crate::coordinator::stats::LatencyStats;
 use crate::coordinator::Registry;
+use crate::obs::{
+    expo, now_if_enabled, DatasetMetrics, MetricsRegistry, SlowEntry, SlowLog, Stage, SLOWLOG_CAP,
+};
 use crate::server::cache::{fnv1a, ChunkCache};
 use crate::server::proto::{
     decode_request_versioned, write_response_versioned, FrameReader, ReadEvent, Status,
@@ -101,11 +104,25 @@ struct Outbound {
     resp: WireResponse,
     charge: u64,
     version: u16,
+    /// Per-dataset metrics for shard-produced replies: the writer times
+    /// the socket write into the `response_write` stage and decrements
+    /// the in-flight gauge charged at admission. `None` for
+    /// reader-generated error/metadata responses.
+    obs: Option<Arc<DatasetMetrics>>,
 }
 
 /// Send a reader-generated response (no byte charge).
 fn send_reply(tx: &mpsc::Sender<Outbound>, version: u16, resp: WireResponse) {
-    let _ = tx.send(Outbound { resp, charge: 0, version });
+    let _ = tx.send(Outbound { resp, charge: 0, version, obs: None });
+}
+
+/// Shared observability handles threaded through the daemon's threads
+/// (DESIGN.md §10): the per-dataset stage registry and the slowlog the
+/// wire `Metrics` request renders.
+#[derive(Clone)]
+struct Obs {
+    metrics: Arc<MetricsRegistry>,
+    slowlog: Arc<SlowLog>,
 }
 
 /// One admitted request, owned by a shard queue. `charge` is the byte
@@ -121,6 +138,9 @@ struct Job {
     deadline: Option<Instant>,
     /// Protocol version of the originating frame (echoed in the reply).
     version: u16,
+    /// Dataset metrics handle, resolved once at admission (`None` when
+    /// recording is compiled out).
+    dm: Option<Arc<DatasetMetrics>>,
 }
 
 /// Absolute ceiling on unwritten responses per connection (small error
@@ -139,6 +159,8 @@ pub struct DaemonHandle {
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<LatencyStats>>,
     cache: Arc<ChunkCache>,
+    metrics: Arc<MetricsRegistry>,
+    slowlog: Arc<SlowLog>,
     poll_interval: Duration,
 }
 
@@ -159,11 +181,34 @@ impl DaemonHandle {
         self.cache.clone()
     }
 
-    /// Snapshot of serving stats with cache counters folded in.
+    /// Snapshot of serving stats with cache counters folded in. The
+    /// latency lock is held across the cache-counter reads so both
+    /// halves of the snapshot come from one point in time — a scrape
+    /// can never see cache hit/miss totals from after a batch merge it
+    /// did not also see.
     pub fn stats(&self) -> LatencyStats {
-        let mut s = self.stats.lock().unwrap().clone();
+        let guard = self.stats.lock().unwrap();
+        let mut s = guard.clone();
         s.add_cache_counts(self.cache.hits(), self.cache.misses());
+        drop(guard);
         s
+    }
+
+    /// The daemon's metrics registry (per-dataset stage histograms).
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Owned handle on the metrics registry — grab before
+    /// [`wait`](Self::wait)/[`join`](Self::join) (both consume the
+    /// handle) to report the shutdown summary from the histogram.
+    pub fn metrics_arc(&self) -> Arc<MetricsRegistry> {
+        self.metrics.clone()
+    }
+
+    /// Snapshot of the slowlog, slowest request first.
+    pub fn slowlog(&self) -> Vec<SlowEntry> {
+        self.slowlog.snapshot()
     }
 
     /// Trip the shutdown token (idempotent; threads drain and exit).
@@ -228,6 +273,20 @@ pub fn start(
     let n_shards = config.shards.max(1);
     let cache = Arc::new(ChunkCache::new(config.cache_bytes, n_shards));
     let stats = Arc::new(Mutex::new(LatencyStats::new()));
+    let obs = Obs {
+        metrics: Arc::new(MetricsRegistry::new()),
+        slowlog: Arc::new(SlowLog::new(SLOWLOG_CAP)),
+    };
+    // File-backed sources time their positioned reads themselves
+    // (`file_read` stage) — hand each its dataset handle up front so
+    // the hot path never resolves by name.
+    if crate::obs::ENABLED {
+        for (name, src) in registry.sources() {
+            if let DatasetSource::File(f) = src {
+                f.attach_metrics(obs.metrics.dataset(name));
+            }
+        }
+    }
     let mut senders = Vec::with_capacity(n_shards);
     let mut workers = Vec::with_capacity(n_shards);
     for si in 0..n_shards {
@@ -236,9 +295,10 @@ pub fn start(
         let reg = registry.clone();
         let cache = cache.clone();
         let stats = stats.clone();
+        let obs = obs.clone();
         let handle = thread::Builder::new()
             .name(format!("codag-shard-{si}"))
-            .spawn(move || shard_loop(&reg, &cache, config, rx, &stats))?;
+            .spawn(move || shard_loop(&reg, &cache, config, rx, &stats, &obs))?;
         workers.push(handle);
     }
     // The accept thread owns the long-lived queue senders (each
@@ -249,9 +309,10 @@ pub fn start(
         let reg = registry.clone();
         let sd = shutdown.clone();
         let cache = cache.clone();
+        let obs_a = obs.clone();
         thread::Builder::new()
             .name("codag-accept".into())
-            .spawn(move || accept_loop(listener, reg, cache, senders, sd, config))?
+            .spawn(move || accept_loop(listener, reg, cache, senders, sd, config, obs_a))?
     };
     Ok(DaemonHandle {
         addr: local_addr,
@@ -260,6 +321,8 @@ pub fn start(
         workers,
         stats,
         cache,
+        metrics: obs.metrics,
+        slowlog: obs.slowlog,
         poll_interval: config.poll_interval,
     })
 }
@@ -271,6 +334,7 @@ fn accept_loop(
     senders: Vec<SyncSender<Job>>,
     shutdown: Arc<AtomicBool>,
     config: DaemonConfig,
+    obs: Obs,
 ) {
     let mut conns: Vec<JoinHandle<()>> = Vec::new();
     while !shutdown.load(Ordering::SeqCst) {
@@ -303,9 +367,10 @@ fn accept_loop(
                 // shutdown needs.
                 let snd: Vec<SyncSender<Job>> = senders.clone();
                 let sd = shutdown.clone();
+                let obs = obs.clone();
                 match thread::Builder::new()
                     .name("codag-conn".into())
-                    .spawn(move || connection_loop(stream, &reg, &cch, &snd, &sd, config))
+                    .spawn(move || connection_loop(stream, &reg, &cch, &snd, &sd, config, &obs))
                 {
                     Ok(h) => conns.push(h),
                     Err(e) => eprintln!("codag-serve: connection spawn failed: {e}"),
@@ -329,6 +394,7 @@ fn connection_loop(
     senders: &[SyncSender<Job>],
     shutdown: &AtomicBool,
     config: DaemonConfig,
+    obs: &Obs,
 ) {
     // Accepted sockets may inherit the listener's non-blocking flag on
     // some platforms — force blocking + read timeout so this thread
@@ -357,7 +423,17 @@ fn connection_loop(
         let inflight_bytes = inflight_bytes.clone();
         thread::Builder::new().name("codag-conn-writer".into()).spawn(move || {
             while let Ok(out) = rx.recv() {
+                let t0 = now_if_enabled().filter(|_| out.obs.is_some());
                 let ok = write_response_versioned(&mut wstream, &out.resp, out.version).is_ok();
+                if let Some(dm) = &out.obs {
+                    if let Some(t0) = t0 {
+                        dm.stage(Stage::ResponseWrite).record(t0.elapsed());
+                    }
+                    // Balanced against the inc at admission: the request
+                    // is no longer in flight once its frame hits (or
+                    // fails to hit) the socket.
+                    dm.inflight.dec();
+                }
                 inflight.fetch_sub(1, Ordering::SeqCst);
                 inflight_bytes.fetch_sub(out.charge, Ordering::SeqCst);
                 if !ok {
@@ -407,6 +483,7 @@ fn connection_loop(
                         &inflight_bytes,
                         shutdown,
                         config,
+                        obs,
                     ) {
                         break;
                     }
@@ -461,6 +538,7 @@ fn handle_request(
     inflight_bytes: &AtomicU64,
     shutdown: &AtomicBool,
     config: DaemonConfig,
+    obs: &Obs,
 ) -> bool {
     // Backpressure half 2: a pipelining client that does not read its
     // responses stops being served once its unwritten-response budget
@@ -476,6 +554,16 @@ fn handle_request(
             );
             shutdown.store(true, Ordering::SeqCst);
             false
+        }
+        WireRequest::Metrics { id } => {
+            let resp = if over_budget {
+                WireResponse::error(id, Status::Busy, "connection in-flight limit")
+            } else {
+                let text = expo::render(&obs.metrics, &obs.slowlog);
+                WireResponse { id, status: Status::Ok, payload: text.into_bytes() }
+            };
+            send_reply(tx, version, resp);
+            true
         }
         WireRequest::Stat { id, dataset } => {
             let resp = if over_budget {
@@ -507,6 +595,9 @@ fn handle_request(
             true
         }
         WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
+            // Admission-stage clock: started before any checks so the
+            // stage covers the full reader-side admission cost.
+            let t_adm = now_if_enabled();
             if over_budget {
                 send_reply(
                     tx,
@@ -535,6 +626,10 @@ fn handle_request(
                 );
                 return true;
             };
+            // Resolved only after the registry lookup succeeds: hostile
+            // dataset names must not mint registry entries (unbounded
+            // label cardinality).
+            let dm = t_adm.map(|_| obs.metrics.dataset(&dataset));
             // Reject ranges whose response could not be framed (body
             // capped at MAX_FRAME_LEN) before any decode work is done —
             // otherwise the writer would fail the oversized frame and
@@ -567,6 +662,9 @@ fn handle_request(
             if bytes_now > 0
                 && bytes_now.saturating_add(span) > config.max_inflight_bytes_per_conn as u64
             {
+                if let Some(m) = &dm {
+                    m.busy.inc();
+                }
                 send_reply(
                     tx,
                     version,
@@ -593,11 +691,21 @@ fn handle_request(
                 charge: span,
                 deadline,
                 version,
+                dm: dm.clone(),
             };
             match senders[si].try_send(job) {
-                Ok(()) => {}
+                Ok(()) => {
+                    if let (Some(t0), Some(m)) = (t_adm, &dm) {
+                        m.requests.inc();
+                        m.inflight.inc();
+                        m.stage(Stage::Admission).record(t0.elapsed());
+                    }
+                }
                 Err(TrySendError::Full(job)) => {
                     inflight_bytes.fetch_sub(job.charge, Ordering::SeqCst);
+                    if let Some(m) = &dm {
+                        m.busy.inc();
+                    }
                     // Backpressure half 1: explicit Busy, never queue
                     // growth.
                     send_reply(
@@ -637,12 +745,26 @@ fn status_for(e: &Error) -> Status {
     }
 }
 
+/// Reply metadata for one live batch item, carried alongside the owned
+/// `Request` handed to `serve_batch_with`.
+struct ReplyMeta {
+    reply: mpsc::Sender<Outbound>,
+    received: Instant,
+    charge: u64,
+    version: u16,
+    dm: Option<Arc<DatasetMetrics>>,
+    /// Queue wait in µs (admission → dequeue), kept so the slowlog
+    /// entry's stage offsets are cumulative from `received`.
+    wait_us: u64,
+}
+
 fn shard_loop(
     registry: &Registry,
     cache: &ChunkCache,
     config: DaemonConfig,
     rx: Receiver<Job>,
     stats: &Mutex<LatencyStats>,
+    obs: &Obs,
 ) {
     // One Service per shard, constructed once and reused for every
     // batch (plan/cache wiring is long-lived; decode parallelism
@@ -651,7 +773,7 @@ fn shard_loop(
     // cache budget means no cache: don't pay per-chunk lock+miss
     // traffic for a disabled cache.
     let svc_cfg = ServiceConfig { workers: config.workers_per_shard.max(1), hybrid: false };
-    let service = Service::new(registry, None, svc_cfg);
+    let service = Service::new(registry, None, svc_cfg).with_metrics(obs.metrics.clone());
     let service = if config.cache_bytes > 0 { service.with_cache(cache) } else { service };
     loop {
         let first = match rx.recv_timeout(config.poll_interval) {
@@ -676,15 +798,30 @@ fn shard_loop(
         let now = Instant::now();
         let mut live = Vec::with_capacity(jobs.len());
         for j in jobs {
+            // Queue wait (admission → dequeue) is recorded for every
+            // dequeued job, expired ones included — expiry is exactly
+            // the tail this stage exists to expose.
+            let wait_us = now.saturating_duration_since(j.received).as_micros() as u64;
+            if let Some(m) = &j.dm {
+                m.stage(Stage::QueueWait).record_us(wait_us);
+            }
             if j.deadline.is_some_and(|d| now >= d) {
+                if let Some(m) = &j.dm {
+                    m.expired.inc();
+                }
                 let resp = WireResponse::error(
                     j.req.id,
                     Status::Expired,
                     "deadline expired while queued",
                 );
-                let _ = j.reply.send(Outbound { resp, charge: j.charge, version: j.version });
+                let _ = j.reply.send(Outbound {
+                    resp,
+                    charge: j.charge,
+                    version: j.version,
+                    obs: j.dm,
+                });
             } else {
-                live.push(j);
+                live.push((j, wait_us));
             }
         }
         if live.is_empty() {
@@ -698,11 +835,18 @@ fn shard_loop(
         let mut replies = Vec::with_capacity(live.len());
         let mut deadlines = Vec::with_capacity(live.len());
         let mut codecs = Vec::with_capacity(live.len());
-        for j in live {
+        for (j, wait_us) in live {
             codecs.push(registry.get(&j.req.dataset).map(|s| s.codec()).ok());
             requests.push(j.req);
             deadlines.push(j.deadline);
-            replies.push((j.reply, j.received, j.charge, j.version));
+            replies.push(ReplyMeta {
+                reply: j.reply,
+                received: j.received,
+                charge: j.charge,
+                version: j.version,
+                dm: j.dm,
+                wait_us,
+            });
         }
         // Deadline check #2, between batch items: the service consults
         // this probe before decoding each of a request's chunks, so a
@@ -714,29 +858,58 @@ fn shard_loop(
         // once per batch, not once per response — shards must not
         // serialize on the stats mutex in the reply hot path.
         let mut batch_stats = LatencyStats::new();
-        for (ri, ((reply, received, charge, version), resp)) in
-            replies.into_iter().zip(responses).enumerate()
-        {
+        for (ri, (meta, resp)) in replies.into_iter().zip(responses).enumerate() {
             let wire = match resp.data {
                 Ok(bytes) => {
+                    let total = meta.received.elapsed();
                     // Admission-to-reply latency (includes queue wait —
                     // the quantity backpressure tuning moves).
-                    batch_stats.record(received.elapsed(), bytes.len() as u64);
+                    batch_stats.record(total, bytes.len() as u64);
                     // Per-codec decoded-byte attribution (shutdown
                     // summary observability for the codec hot paths).
                     if let Some(codec) = codecs[ri] {
                         batch_stats.add_codec_bytes(codec, bytes.len() as u64);
                     }
+                    if crate::obs::ENABLED && meta.dm.is_some() {
+                        let total_us = total.as_micros() as u64;
+                        obs.metrics.request_us().record_us(total_us);
+                        // Cumulative stage offsets from receipt: wait,
+                        // wait + service-side decode, full round trip.
+                        // Each later offset clamps to total_us so the
+                        // entry is monotone even under clock jitter.
+                        let decode_at = meta
+                            .wait_us
+                            .saturating_add(resp.latency.as_micros() as u64)
+                            .min(total_us);
+                        obs.slowlog.offer(SlowEntry {
+                            id: resp.id,
+                            dataset: requests[ri].dataset.clone(),
+                            total_us,
+                            stages: vec![
+                                (Stage::QueueWait, meta.wait_us.min(total_us)),
+                                (Stage::DecodeSerial, decode_at),
+                                (Stage::ResponseWrite, total_us),
+                            ],
+                        });
+                    }
                     WireResponse { id: resp.id, status: Status::Ok, payload: bytes }
                 }
-                Err(Error::Runtime(m))
-                    if m == crate::coordinator::service::DEADLINE_EXPIRED =>
+                Err(Error::Runtime(msg))
+                    if msg == crate::coordinator::service::DEADLINE_EXPIRED =>
                 {
-                    WireResponse::error(resp.id, Status::Expired, m)
+                    if let Some(m) = &meta.dm {
+                        m.expired.inc();
+                    }
+                    WireResponse::error(resp.id, Status::Expired, msg)
                 }
                 Err(e) => WireResponse::error(resp.id, status_for(&e), e.to_string()),
             };
-            let _ = reply.send(Outbound { resp: wire, charge, version });
+            let _ = meta.reply.send(Outbound {
+                resp: wire,
+                charge: meta.charge,
+                version: meta.version,
+                obs: meta.dm,
+            });
         }
         if batch_stats.count() > 0 {
             stats.lock().unwrap().merge(&batch_stats);

@@ -47,6 +47,10 @@ pub struct LoadgenConfig {
     pub pipeline: usize,
     /// Relative deadline attached to every Get (ms; 0 = none).
     pub deadline_ms: u64,
+    /// Scrape the daemon's metrics exposition mid-run (the wire
+    /// `Metrics` request) and carry the last sample in the report —
+    /// proves the scrape path is non-disruptive under load.
+    pub scrape: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -60,6 +64,7 @@ impl Default for LoadgenConfig {
             seed: 0xC0DA_6,
             pipeline: 1,
             deadline_ms: 0,
+            scrape: false,
         }
     }
 }
@@ -85,6 +90,10 @@ pub struct LoadgenReport {
     pub conn_failures: u64,
     /// Wall-clock for the whole run.
     pub wall: Duration,
+    /// Last metrics exposition sampled while load was in flight
+    /// (`LoadgenConfig::scrape`; `None` when scraping was off or every
+    /// scrape failed).
+    pub mid_run_metrics: Option<String>,
 }
 
 impl std::fmt::Display for LoadgenReport {
@@ -202,6 +211,23 @@ pub fn stat_full(addr: &str, dataset: &str) -> Result<StatReport> {
     })
 }
 
+/// Scrape the daemon's metrics exposition (wire `Metrics` request):
+/// returns the UTF-8 text rendered by `obs::expo::render`. Works over
+/// one short-lived connection — the scrape path a monitoring agent
+/// would use.
+pub fn metrics(addr: &str) -> Result<String> {
+    let mut conn = Conn::open(addr)?;
+    let resp = rpc(&mut conn, &WireRequest::Metrics { id: 0 })?;
+    if resp.status != Status::Ok {
+        return Err(Error::Runtime(format!(
+            "metrics scrape: {} ({})",
+            resp.status.label(),
+            String::from_utf8_lossy(&resp.payload)
+        )));
+    }
+    String::from_utf8(resp.payload).map_err(|_| corrupt("metrics exposition is not UTF-8"))
+}
+
 /// Ask the daemon to drain and exit.
 pub fn shutdown(addr: &str) -> Result<()> {
     let mut conn = Conn::open(addr)?;
@@ -231,12 +257,30 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         failed: 0,
         conn_failures: 0,
         wall: Duration::ZERO,
+        mid_run_metrics: None,
     };
+    // Concurrent scraper (--scrape): samples the metrics exposition on
+    // its own connection while load is in flight, proving a monitoring
+    // agent can scrape a busy daemon. The last sample (taken after the
+    // load threads finish) rides the report.
+    let scrape_done = std::sync::atomic::AtomicBool::new(false);
+    let mid_metrics: std::sync::Mutex<Option<String>> = std::sync::Mutex::new(None);
     let results: Vec<ConnOutcome> = std::thread::scope(|s| {
+        let scraper = cfg.scrape.then(|| {
+            s.spawn(|| loop {
+                if let Ok(text) = metrics(&cfg.addr) {
+                    *mid_metrics.lock().unwrap() = Some(text);
+                }
+                if scrape_done.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                std::thread::sleep(Duration::from_millis(20));
+            })
+        });
         let handles: Vec<_> = (0..cfg.connections)
             .map(|ci| s.spawn(move || connection_run(cfg, ci as u64, total)))
             .collect();
-        handles
+        let results: Vec<ConnOutcome> = handles
             .into_iter()
             .map(|h| {
                 h.join().unwrap_or_else(|_| {
@@ -244,7 +288,12 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                     ConnOutcome { died: true, ..ConnOutcome::default() }
                 })
             })
-            .collect()
+            .collect();
+        scrape_done.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(h) = scraper {
+            let _ = h.join();
+        }
+        results
     });
     // A dead connection loses its remaining requests, not the whole
     // run's measurements.
@@ -258,6 +307,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         report.conn_failures += u64::from(r.died);
     }
     report.wall = t0.elapsed();
+    report.mid_run_metrics = mid_metrics.into_inner().unwrap();
     if report.sent == 0 && report.conn_failures > 0 {
         return Err(Error::Runtime("every loadgen connection failed".into()));
     }

@@ -13,7 +13,7 @@
 //! ```text
 //! magic:       u32 = 0xC0DA_5E01
 //! version:     u16 = 2
-//! kind:        u8          (1 = Get, 2 = Stat, 3 = Shutdown)
+//! kind:        u8          (1 = Get, 2 = Stat, 3 = Shutdown, 4 = Metrics)
 //! name_len:    u8          (dataset name bytes; 0 for Shutdown)
 //! id:          u64         (caller-assigned, echoed in the response)
 //! offset:      u64         (uncompressed byte offset; Get only, else 0)
@@ -167,6 +167,14 @@ pub enum WireRequest {
         /// Caller-assigned id, echoed back.
         id: u64,
     },
+    /// Scrape the daemon's metrics: the `Ok` payload is the UTF-8 text
+    /// exposition rendered by `obs::expo::render` (DESIGN.md §10). The
+    /// request layout is the common header with kind 4 and an empty
+    /// dataset name — wire-compatible with v1 and v2 framing.
+    Metrics {
+        /// Caller-assigned id, echoed back.
+        id: u64,
+    },
 }
 
 /// A response frame.
@@ -190,6 +198,7 @@ impl WireResponse {
 const REQ_KIND_GET: u8 = 1;
 const REQ_KIND_STAT: u8 = 2;
 const REQ_KIND_SHUTDOWN: u8 = 3;
+const REQ_KIND_METRICS: u8 = 4;
 
 /// Encode a request into a v2 frame body (no length prefix; pair with
 /// [`write_frame`]).
@@ -200,6 +209,7 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
         }
         WireRequest::Stat { id, dataset } => (REQ_KIND_STAT, *id, dataset.as_str(), 0, 0, 0),
         WireRequest::Shutdown { id } => (REQ_KIND_SHUTDOWN, *id, "", 0, 0, 0),
+        WireRequest::Metrics { id } => (REQ_KIND_METRICS, *id, "", 0, 0, 0),
     };
     let name = dataset.as_bytes();
     if name.len() > MAX_NAME_LEN {
@@ -253,6 +263,7 @@ pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16)> {
         REQ_KIND_GET => WireRequest::Get { id, dataset, offset, len, deadline_ms },
         REQ_KIND_STAT => WireRequest::Stat { id, dataset },
         REQ_KIND_SHUTDOWN => WireRequest::Shutdown { id },
+        REQ_KIND_METRICS => WireRequest::Metrics { id },
         other => return Err(corrupt(format!("unknown request kind {other}"))),
     };
     Ok((req, version))
@@ -574,6 +585,7 @@ mod tests {
             },
             WireRequest::Stat { id: 3, dataset: "TPC".into() },
             WireRequest::Shutdown { id: 0 },
+            WireRequest::Metrics { id: 12 },
         ];
         for req in &reqs {
             let body = encode_request(req).unwrap();
@@ -646,6 +658,9 @@ mod tests {
         assert_eq!(decode_request(&body).unwrap(), want);
         let body = encode_request_v1(3, 4, "", 0, 0);
         assert_eq!(decode_request(&body).unwrap(), WireRequest::Shutdown { id: 4 });
+        // Metrics (kind 4) rides the same header, so a v1 frame works.
+        let body = encode_request_v1(4, 5, "", 0, 0);
+        assert_eq!(decode_request(&body).unwrap(), WireRequest::Metrics { id: 5 });
         // v1 truncations still all error.
         let good = encode_request_v1(1, 9, "MC0", 128, 256);
         for cut in 0..good.len() {
@@ -657,6 +672,18 @@ mod tests {
         assert!(decode_request(&bad).is_err());
         bad[4] = 3;
         assert!(decode_request(&bad).is_err());
+    }
+
+    #[test]
+    fn metrics_request_kind_pinned() {
+        // Kind discriminant 4 is frozen (DESIGN.md §10): a scrape
+        // client built against this version must interoperate with any
+        // later daemon.
+        let body = encode_request(&WireRequest::Metrics { id: 6 }).unwrap();
+        assert_eq!(body[6], 4); // kind = Metrics
+        assert_eq!(body[7], 0); // name_len: no dataset label
+        assert_eq!(&body[8..16], &6u64.to_le_bytes());
+        assert_eq!(decode_request(&body).unwrap(), WireRequest::Metrics { id: 6 });
     }
 
     #[test]

@@ -24,11 +24,12 @@ use crate::format::container::{
     fnv1a64, validate_restart_table, ChunkEntry, FNV_OFFSET, MAGIC, RESTART_ENTRY_LEN, VERSION,
     VERSION_V1,
 };
+use crate::obs::{now_if_enabled, DatasetMetrics, Stage, StitchTimers};
 use crate::{corrupt, invalid, Error, Result};
 use std::fs::File;
 use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Fixed container header length (magic + version + codec + chunk_size
 /// + total_uncompressed + n_chunks; see DESIGN.md §2).
@@ -63,6 +64,10 @@ pub struct FileDataset {
     /// per-request Vec on the file path, mirroring the output-side
     /// scratch pool in `coordinator::Service` (DESIGN.md §7.3).
     comp_pool: Mutex<Vec<Vec<u8>>>,
+    /// Per-dataset metrics handle, attached once by the daemon at
+    /// startup (`attach_metrics`); when set, `read_chunk_into` times
+    /// each positioned read into the `file_read` stage histogram.
+    metrics: OnceLock<Arc<DatasetMetrics>>,
 }
 
 /// Compressed-side buffers retained per dataset (a bound on idle
@@ -213,7 +218,14 @@ impl FileDataset {
             payload_off,
             payload_len,
             comp_pool: Mutex::new(Vec::new()),
+            metrics: OnceLock::new(),
         })
+    }
+
+    /// Attach the dataset's metrics handle (daemon startup; later
+    /// attaches are ignored — the handle is write-once).
+    pub fn attach_metrics(&self, m: Arc<DatasetMetrics>) {
+        let _ = self.metrics.set(m);
     }
 
     /// Backing file path.
@@ -267,9 +279,14 @@ impl FileDataset {
             .ok_or_else(|| invalid(format!("chunk {i} out of range (have {})", self.index.len())))?;
         buf.clear();
         buf.resize(e.comp_len as usize, 0);
+        let t0 = now_if_enabled().filter(|_| self.metrics.get().is_some());
         let mut file = self.file.lock().unwrap();
         file.seek(SeekFrom::Start(self.payload_off + e.comp_off))?;
         read_exact_or_corrupt(&mut *file, buf, "compressed chunk (file shrank after open?)")?;
+        drop(file);
+        if let (Some(t0), Some(m)) = (t0, self.metrics.get()) {
+            m.stage(Stage::FileRead).record(t0.elapsed());
+        }
         Ok(())
     }
 
@@ -299,17 +316,30 @@ impl FileDataset {
         n_workers: usize,
         out: &mut Vec<u8>,
     ) -> Result<()> {
+        self.decompress_chunk_split_obs_into(i, n_workers, out, None)
+    }
+
+    /// [`decompress_chunk_split_into`](Self::decompress_chunk_split_into)
+    /// with optional stitch fan-out/join timing (DESIGN.md §10).
+    pub fn decompress_chunk_split_obs_into(
+        &self,
+        i: usize,
+        n_workers: usize,
+        out: &mut Vec<u8>,
+        obs: Option<StitchTimers<'_>>,
+    ) -> Result<()> {
         let mut comp = self.comp_pool.lock().unwrap().pop().unwrap_or_default();
         let decoded = (|| {
             self.read_chunk_into(i, &mut comp)?;
             out.clear();
             out.resize(self.index[i].uncomp_len as usize, 0);
-            crate::coordinator::engine::decode_chunk_parallel(
+            crate::coordinator::engine::decode_chunk_parallel_obs(
                 self.codec,
                 &comp,
                 self.restart_table(i),
                 out,
                 n_workers,
+                obs,
             )
         })();
         comp.clear();

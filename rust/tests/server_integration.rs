@@ -352,6 +352,189 @@ fn protocol_errors_are_reported_not_fatal() {
     handle.join().expect("clean join");
 }
 
+/// Conservation invariants under concurrent load (DESIGN.md §10): a
+/// wire `Metrics` scrape taken while requests are in flight must
+/// satisfy `cache_hits + cache_misses == cache_gets` per dataset and
+/// `sum(per-dataset decoded bytes) == daemon-wide decoded bytes`
+/// exactly (the exposition derives both from single counter loads, so
+/// no quiescence is needed), the stage histograms must cover both
+/// cache-miss decode paths (serial and restart-point stitch), and
+/// every slowlog entry's cumulative stage offsets must be monotone.
+#[cfg(feature = "obs")]
+mod obs_conservation {
+    use super::*;
+    use codag::obs::{expo, Stage};
+    use codag::server::loadgen;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Invariants that must hold on *every* scrape, mid-load included.
+    /// Early scrapes can predate a dataset's first admitted request
+    /// (its registry entry is minted at admission), so per-dataset
+    /// lines are optional; the daemon-wide total is always present.
+    fn assert_conserved(text: &str) {
+        let map = expo::parse(text);
+        let mut decoded_sum = 0u64;
+        for ds in ["alpha", "gamma"] {
+            let hits = expo::get_dataset(&map, "codag_cache_hits_total", ds);
+            let misses = expo::get_dataset(&map, "codag_cache_misses_total", ds);
+            let gets = expo::get_dataset(&map, "codag_cache_gets_total", ds);
+            if let (Some(h), Some(m), Some(g)) = (hits, misses, gets) {
+                assert_eq!(h + m, g, "{ds}: hits + misses must equal gets in one scrape");
+            }
+            decoded_sum += expo::get_dataset(&map, "codag_decoded_bytes_total", ds).unwrap_or(0);
+        }
+        assert_eq!(
+            map["codag_daemon_decoded_bytes_total"], decoded_sum,
+            "daemon-wide decoded bytes must equal the per-dataset sum in one scrape"
+        );
+    }
+
+    #[test]
+    fn metrics_scrape_under_concurrent_load_is_conserved() {
+        // alpha: packed without restart points → every cache miss takes
+        // the serial decode path (decode_serial stage).
+        let a_data = payload(256 * 1024, 11);
+        let c_alpha =
+            Container::compress_with_restarts(&a_data, CodecKind::RleV1, 32 * 1024, 0).unwrap();
+        assert!(c_alpha.restarts.iter().all(Vec::is_empty), "alpha must have no restarts");
+        // gamma: dense restart points → single-item batches split the
+        // chunk across the shard's worker budget (stitch fan-out/join).
+        let g_data = payload(256 * 1024, 12);
+        let c_gamma =
+            Container::compress_with_restarts(&g_data, CodecKind::RleV2, 64 * 1024, 4096)
+                .unwrap();
+        assert!(
+            c_gamma.restarts.iter().any(|r| !r.is_empty()),
+            "gamma must carry restart tables"
+        );
+        let mut reg = Registry::new();
+        reg.insert("alpha", c_alpha);
+        reg.insert("gamma", c_gamma);
+        let cfg = DaemonConfig {
+            shards: 2,
+            workers_per_shard: 2,
+            cache_bytes: 8 << 20,
+            ..DaemonConfig::default()
+        };
+        let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+        let addr = handle.addr();
+        let addr_s = addr.to_string();
+        let fixed_get = |conn: &mut Client, id: u64, dataset: &str, offset: u64, len: u64| {
+            let resp = conn.rpc(&WireRequest::Get {
+                id,
+                dataset: dataset.into(),
+                offset,
+                len,
+                deadline_ms: 0,
+            });
+            assert_eq!(resp.status, Status::Ok, "{}", String::from_utf8_lossy(&resp.payload));
+        };
+        // Solo warm-up: one synchronous client guarantees single-item
+        // batches, so gamma's decodes are forced through the stitch
+        // path while nothing else can be folded into the batch.
+        const WARMUP: u64 = 4;
+        {
+            let mut conn = Client::connect(addr);
+            for i in 0..WARMUP {
+                fixed_get(&mut conn, i, "gamma", 70_000, 2_000);
+                fixed_get(&mut conn, 100 + i, "alpha", 40_000, 2_000);
+            }
+        }
+        // Concurrent phase: 4 clients × 24 synchronous ranged reads,
+        // alternating datasets and revisiting one fixed range so the
+        // cache sees enough touches to admit and then hit.
+        const CLIENTS: u64 = 4;
+        const REQUESTS: u64 = 24;
+        let remaining = AtomicUsize::new(CLIENTS as usize);
+        std::thread::scope(|s| {
+            for client in 0..CLIENTS {
+                let (remaining, a_data, g_data) = (&remaining, &a_data, &g_data);
+                s.spawn(move || {
+                    let mut conn = Client::connect(addr);
+                    let mut rng = Rng::new(0x0B5_C0 + client);
+                    for r in 0..REQUESTS {
+                        let id = (client << 32) | r;
+                        let (name, data) =
+                            if r % 2 == 0 { ("alpha", a_data) } else { ("gamma", g_data) };
+                        if r % 4 < 2 {
+                            // Fixed range: repeated touches drive
+                            // ghost-admission and then cache hits.
+                            fixed_get(&mut conn, id, name, 40_000, 2_000);
+                        } else {
+                            let total = data.len() as u64;
+                            let offset = rng.below(total);
+                            let len = 1 + rng.below((total - offset).min(60_000));
+                            fixed_get(&mut conn, id, name, offset, len);
+                        }
+                    }
+                    remaining.fetch_sub(1, Ordering::SeqCst);
+                });
+            }
+            // Mid-run scrapes from the main thread: conservation must
+            // hold on every sample taken while load is in flight.
+            let mut scrapes = 0u32;
+            while remaining.load(Ordering::SeqCst) > 0 {
+                let text = loadgen::metrics(&addr_s).expect("mid-run scrape");
+                assert_conserved(&text);
+                scrapes += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(scrapes > 0, "at least one scrape must land mid-run");
+        });
+        // Final scrape: totals settled, stage coverage assertable.
+        let text = loadgen::metrics(&addr_s).expect("final scrape");
+        assert_conserved(&text);
+        let map = expo::parse(&text);
+        let total_reqs = WARMUP * 2 + CLIENTS * REQUESTS;
+        let reqs: u64 = ["alpha", "gamma"]
+            .iter()
+            .map(|ds| expo::get_dataset(&map, "codag_requests_total", ds).unwrap())
+            .sum();
+        assert_eq!(reqs, total_reqs, "every admitted Get must be counted exactly once");
+        assert_eq!(map["codag_request_count"], total_reqs, "request histogram counts Ok replies");
+        for ds in ["alpha", "gamma"] {
+            for stage in
+                [Stage::Admission, Stage::QueueWait, Stage::CacheLookup, Stage::ResponseWrite]
+            {
+                let n = expo::get_stage(&map, "codag_stage_count", ds, stage).unwrap();
+                assert!(n > 0, "{ds}/{} must have samples", stage.name());
+            }
+            assert!(
+                expo::get_dataset(&map, "codag_cache_hits_total", ds).unwrap() > 0,
+                "{ds}: repeated fixed range must produce cache hits"
+            );
+        }
+        // The two cache-miss decode paths: alpha (no restarts) decodes
+        // serially; gamma (dense restarts) fans out across sub-blocks.
+        assert!(
+            expo::get_stage(&map, "codag_stage_count", "alpha", Stage::DecodeSerial).unwrap() > 0,
+            "alpha misses must take the serial decode stage"
+        );
+        for stage in [Stage::StitchFanout, Stage::StitchJoin] {
+            assert!(
+                expo::get_stage(&map, "codag_stage_count", "gamma", stage).unwrap() > 0,
+                "gamma misses must record {}", stage.name()
+            );
+        }
+        // Slowlog: entries present, cumulative stage offsets monotone,
+        // closing at the entry's total.
+        let slow = handle.slowlog();
+        assert!(!slow.is_empty(), "a loaded daemon must retain slowlog entries");
+        for e in &slow {
+            let mut prev = 0u64;
+            for (_, at) in &e.stages {
+                assert!(
+                    *at >= prev,
+                    "slowlog id={} stages must be monotone ({:?})", e.id, e.stages
+                );
+                prev = *at;
+            }
+            assert_eq!(e.stages.last().unwrap().1, e.total_us);
+        }
+        handle.join().expect("clean join");
+    }
+}
+
 #[test]
 fn wire_shutdown_drains_and_joins() {
     let data = payload(64 * 1024, 6);

@@ -79,6 +79,24 @@ def parse_subblock_sweep(lines, metrics):
         metrics[f"{base}/subblocks"] = _metric(subblocks, "n", "info")
 
 
+def parse_obs_overhead(lines, metrics):
+    """Rows: codec plain-GB/s instr-GB/s delta-% (the instrumentation
+    overhead table from `CODAG_OBS_OVERHEAD=1 cargo bench --bench
+    codec_hotpath` — metrics-on decode vs the bare loop)."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 4 or parts[0] == "codec":
+            continue
+        try:
+            plain, instr, delta = (float(x) for x in parts[1:4])
+        except ValueError:
+            continue
+        base = f"obs_overhead/{parts[0]}"
+        metrics[f"{base}/plain_gbps"] = _metric(plain, "GB/s", "throughput")
+        metrics[f"{base}/instr_gbps"] = _metric(instr, "GB/s", "throughput")
+        metrics[f"{base}/delta_pct"] = _metric(delta, "%", "info")
+
+
 def parse_fig7(lines, scale, metrics):
     """Rows: codec dataset codag rapids speedup-x (incl. geomean rows)."""
     for ln in lines:
@@ -146,6 +164,7 @@ SECTION_PARSERS = [
     ("## codec_hotpath", lambda ls, m: parse_codec_hotpath(ls, "default", m)),
     ("## rle_v2 width sweep", lambda ls, m: parse_rle_width_sweep(ls, m)),
     ("## sub-block scaling", lambda ls, m: parse_subblock_sweep(ls, m)),
+    ("## obs overhead", lambda ls, m: parse_obs_overhead(ls, m)),
     ("## fig7_throughput (paper scale", lambda ls, m: parse_fig7(ls, "paper", m)),
     ("## fig7_throughput", lambda ls, m: parse_fig7(ls, "default", m)),
     ("## loadgen batching ablation", lambda ls, m: parse_ablation(ls, m)),

@@ -58,6 +58,16 @@ cargo build --release --benches >&2
   CODAG_SUBBLOCK_SWEEP=1 cargo bench --bench codec_hotpath 2>/dev/null
   echo '```'
   echo
+  echo '## obs overhead'
+  echo
+  echo '```text'
+  # Instrumentation overhead: the same chunk-decode loop bare vs with
+  # the daemon's full per-request record set (counters, gauge, stage
+  # histograms, stitch timers). The metrics-on pass IS the baseline —
+  # EXPERIMENTS.md gates the delta column at <5%.
+  CODAG_OBS_OVERHEAD=1 cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
   echo '## fig7_throughput'
   echo
   echo '```text'
