@@ -173,6 +173,19 @@ payload:  134217728 bytes in 1.10s (0.122 GB/s)
 | 8 | 256 | 256 | 0 | 0 | 450 | 1600 | 0.310 |
 | 32 | 256 | 250 | 6 | 0 | 900 | 3100 | 0.360 |
 ```
+
+## conn scaling
+
+```text
+conns=16
+requests: sent=512 ok=512 busy=0 expired=0 failed=0 conn-failures=0
+latency:  p50=150us p90=300us p99=650us mean=190us
+payload:  16777216 bytes in 0.40s (0.042 GB/s)
+conns=256
+requests: sent=8192 ok=8192 busy=0 expired=0 failed=0 conn-failures=0
+latency:  p50=900us p90=2400us p99=5100us mean=1200us
+payload:  268435456 bytes in 2.10s (0.128 GB/s)
+```
 """
 
 
@@ -209,6 +222,14 @@ def test_bench_to_json_parses_all_sections():
     assert m["obs_overhead/rlev2/delta_pct"]["value"] == 0.83
     assert m["obs_overhead/rlev2/delta_pct"]["kind"] == "info"
     assert m["obs_overhead/deflate/instr_gbps"]["value"] == 1.004
+    # Connection-scaling sweep rows (evented net front, DESIGN.md §11):
+    # `conns=N` markers scope each LoadgenReport block to its row.
+    assert m["conn_scaling/c16/ok"]["value"] == 512
+    assert m["conn_scaling/c16/p99_us"] == {"value": 650, "unit": "us", "kind": "latency"}
+    assert m["conn_scaling/c16/gbps"]["value"] == 0.042
+    assert m["conn_scaling/c256/p50_us"]["value"] == 900
+    assert m["conn_scaling/c256/gbps"]["value"] == 0.128
+    assert m["conn_scaling/c256/gbps"]["kind"] == "throughput"
 
 
 def test_gate_passes_on_parsed_capture_roundtrip():

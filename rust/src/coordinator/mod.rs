@@ -23,5 +23,5 @@ pub use engine::{
     decompress_parallel, decompress_static_partition,
 };
 pub use router::{plan, plan_dims, ChunkWork, DatasetSource, LeastLoaded, Registry, Request};
-pub use service::{Response, Service, ServiceConfig};
+pub use service::{Payload, Response, Service, ServiceConfig, SharedResponse};
 pub use stats::LatencyStats;

@@ -34,6 +34,100 @@ pub struct Response {
     pub latency: std::time::Duration,
 }
 
+/// A response payload: either an owned buffer or a borrowed span of a
+/// cached decompressed chunk (`Arc<[u8]>` plus a `lo..hi` range).
+///
+/// The shared form is what makes the daemon's cache-hit path zero-copy
+/// end to end: the bytes travel from the chunk cache to the socket
+/// (one vectored write of header + payload, DESIGN.md §11) without an
+/// intermediate per-response assembly buffer. Constructors uphold
+/// `lo <= hi <= chunk.len()`, so `as_slice` cannot panic.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// An owned buffer (multi-chunk assembly, uncached decode slices).
+    Owned(Vec<u8>),
+    /// A span of a shared decompressed chunk.
+    Shared {
+        /// The full decoded chunk, shared with the cache.
+        chunk: Arc<[u8]>,
+        /// Span start (inclusive byte offset into `chunk`).
+        lo: usize,
+        /// Span end (exclusive byte offset into `chunk`).
+        hi: usize,
+    },
+}
+
+impl Payload {
+    /// An empty owned payload.
+    pub fn empty() -> Payload {
+        Payload::Owned(Vec::new())
+    }
+
+    /// The payload bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared { chunk, lo, hi } => &chunk[*lo..*hi],
+        }
+    }
+
+    /// Payload length in bytes.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Owned(v) => v.len(),
+            Payload::Shared { lo, hi, .. } => hi - lo,
+        }
+    }
+
+    /// True when the payload carries no bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Convert into an owned `Vec` (copies only the shared form).
+    pub fn into_vec(self) -> Vec<u8> {
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared { chunk, lo, hi } => chunk[lo..hi].to_vec(),
+        }
+    }
+
+    /// Mutable access to an owned buffer, converting a shared span
+    /// into an owned copy first (the multi-chunk assembly path).
+    fn owned_mut(&mut self) -> &mut Vec<u8> {
+        let copied = match self {
+            Payload::Owned(_) => None,
+            Payload::Shared { chunk, lo, hi } => Some(chunk[*lo..*hi].to_vec()),
+        };
+        if let Some(v) = copied {
+            *self = Payload::Owned(v);
+        }
+        match self {
+            Payload::Owned(v) => v,
+            Payload::Shared { .. } => unreachable!("converted to owned above"),
+        }
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        Payload::Owned(v)
+    }
+}
+
+/// A completed response whose payload may borrow a cached chunk
+/// ([`Payload::Shared`]) — the form the daemon's evented write path
+/// consumes. [`Response`] is the owned-`Vec` compatibility view.
+#[derive(Debug)]
+pub struct SharedResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// The decompressed byte range (or error).
+    pub data: Result<Payload>,
+    /// Service-side latency.
+    pub latency: std::time::Duration,
+}
+
 /// Service configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServiceConfig {
@@ -145,6 +239,29 @@ impl<'a> Service<'a> {
     where
         F: Fn(usize) -> bool + Sync,
     {
+        let (shared, stats) = self.serve_batch_shared_with(requests, expired);
+        let responses = shared
+            .into_iter()
+            .map(|r| Response { id: r.id, data: r.data.map(Payload::into_vec), latency: r.latency })
+            .collect();
+        (responses, stats)
+    }
+
+    /// The core of [`Service::serve_batch_with`], returning
+    /// [`SharedResponse`]s: a request whose span lives in exactly one
+    /// chunk passes its payload through un-assembled, so a cache hit
+    /// stays a shared `Arc` slice ([`Payload::Shared`]) all the way to
+    /// the caller — the daemon's evented front writes it straight to
+    /// the socket with no assembly copy. Multi-chunk requests
+    /// concatenate into an owned buffer as before.
+    pub fn serve_batch_shared_with<F>(
+        &self,
+        requests: &[Request],
+        expired: F,
+    ) -> (Vec<SharedResponse>, LatencyStats)
+    where
+        F: Fn(usize) -> bool + Sync,
+    {
         // Plan every request into (request, chunk work) units.
         #[derive(Debug)]
         struct Item {
@@ -171,7 +288,7 @@ impl<'a> Service<'a> {
         // loops call this per batch, and a thread spawn/join per
         // request would dominate small-request latency.
         let cursor = std::sync::atomic::AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<Result<Vec<u8>>>>> =
+        let slots: Vec<Mutex<Option<Result<Payload>>>> =
             items.iter().map(|_| Mutex::new(None)).collect();
         let items = &items;
         let slots_ref = &slots;
@@ -222,11 +339,13 @@ impl<'a> Service<'a> {
                 }
             });
         }
-        // Assemble responses in request order.
-        let mut per_req: Vec<Result<Vec<u8>>> = plans
+        // Assemble responses in request order. A single-chunk request
+        // adopts its one piece unconverted (the zero-copy pass-through);
+        // multi-chunk requests concatenate into an owned accumulator.
+        let mut per_req: Vec<Result<Payload>> = plans
             .iter()
             .map(|p| match p {
-                Ok(_) => Ok(Vec::new()),
+                Ok(_) => Ok(Payload::empty()),
                 Err(e) => Err(e.clone()),
             })
             .collect();
@@ -236,15 +355,17 @@ impl<'a> Service<'a> {
                 .unwrap()
                 .take()
                 .unwrap_or_else(|| Err(Error::Runtime("missing piece".into())));
+            let single = matches!(plans[item.req_idx], Ok(1));
             if let Ok(acc) = per_req[item.req_idx].as_mut() {
                 match piece {
-                    Ok(bytes) => acc.extend_from_slice(&bytes),
+                    Ok(p) if single => *acc = p,
+                    Ok(p) => acc.owned_mut().extend_from_slice(p.as_slice()),
                     Err(e) => per_req[item.req_idx] = Err(e),
                 }
             }
         }
         let mut stats = LatencyStats::new();
-        let responses: Vec<Response> = per_req
+        let responses: Vec<SharedResponse> = per_req
             .into_iter()
             .enumerate()
             .map(|(ri, data)| {
@@ -252,7 +373,7 @@ impl<'a> Service<'a> {
                 if let Ok(d) = &data {
                     stats.record(latency, d.len() as u64);
                 }
-                Response { id: requests[ri].id, data, latency }
+                SharedResponse { id: requests[ri].id, data, latency }
             })
             .collect();
         (responses, stats)
@@ -260,8 +381,10 @@ impl<'a> Service<'a> {
 
     /// Decode one chunk work item, reusing `scratch` as the decode
     /// output buffer. Chunks the cache retains are copied out of the
-    /// scratch into an `Arc<[u8]>` exactly once; everything else is
-    /// sliced straight from the scratch into the response.
+    /// scratch into an `Arc<[u8]>` exactly once, and both the cache-hit
+    /// and the freshly-admitted paths return a shared span of that
+    /// `Arc` ([`Payload::Shared`] — no per-response slice copy);
+    /// uncached decodes slice the span out of the scratch.
     ///
     /// `split_workers > 1` routes the decode through the restart-point
     /// stitcher when the chunk has a restart table (container v2): the
@@ -274,7 +397,7 @@ impl<'a> Service<'a> {
         w: ChunkWork,
         split_workers: usize,
         scratch: &mut Vec<u8>,
-    ) -> Result<Vec<u8>> {
+    ) -> Result<Payload> {
         // One registry resolve per item; all stage recording below goes
         // through this lock-free handle.
         let dm = if crate::obs::ENABLED {
@@ -292,7 +415,7 @@ impl<'a> Service<'a> {
                 if let Some(m) = &dm {
                     m.cache_hits.inc();
                 }
-                return slice_chunk(&full, w);
+                return shared_slice(&full, w);
             }
             if let Some(m) = &dm {
                 m.cache_misses.inc();
@@ -322,7 +445,11 @@ impl<'a> Service<'a> {
             if let Some(r) = self.try_cache(dataset, w, &full, dm.as_deref()) {
                 return r;
             }
-            return if w.lo == 0 && w.hi == full.len() { Ok(full) } else { slice_chunk(&full, w) };
+            return if w.lo == 0 && w.hi == full.len() {
+                Ok(Payload::Owned(full))
+            } else {
+                slice_chunk(&full, w)
+            };
         }
         if split_workers > 1 && !c.restart_table(w.chunk).is_empty() {
             c.decompress_chunk_split_obs_into(
@@ -350,17 +477,17 @@ impl<'a> Service<'a> {
     /// Shared caching tail of [`Service::decode_item`]: when the
     /// admission policy retains this freshly decoded chunk (ghost-LRU:
     /// second touch of a key admits — see `server::cache`), pay the
-    /// `Arc` build exactly once, insert, and slice the response span
-    /// from the shared copy. `None` means "not cached; slice from the
-    /// decode buffer instead" — keeping both decode paths on the one
-    /// documented admission protocol.
+    /// `Arc` build exactly once, insert, and return the response span
+    /// as a shared slice of that `Arc` (no second copy). `None` means
+    /// "not cached; slice from the decode buffer instead" — keeping
+    /// both decode paths on the one documented admission protocol.
     fn try_cache(
         &self,
         dataset: &str,
         w: ChunkWork,
         full: &[u8],
         dm: Option<&DatasetMetrics>,
-    ) -> Option<Result<Vec<u8>>> {
+    ) -> Option<Result<Payload>> {
         let cache = self.cache?;
         if !cache.admit(dataset, w.chunk, full.len()) {
             return None;
@@ -374,15 +501,26 @@ impl<'a> Service<'a> {
         if let (Some(t0), Some(m)) = (t0, dm) {
             m.stage(Stage::CacheAdmit).record(t0.elapsed());
         }
-        Some(slice_chunk(&shared, w))
+        Some(shared_slice(&shared, w))
     }
 }
 
 /// Copy the requested sub-range out of a decoded chunk.
-fn slice_chunk(full: &[u8], w: ChunkWork) -> Result<Vec<u8>> {
+fn slice_chunk(full: &[u8], w: ChunkWork) -> Result<Payload> {
     full.get(w.lo..w.hi)
-        .map(|s| s.to_vec())
+        .map(|s| Payload::Owned(s.to_vec()))
         .ok_or_else(|| Error::Runtime("range outside decoded chunk".into()))
+}
+
+/// Borrow the requested sub-range of a shared decoded chunk without
+/// copying (the zero-copy cache path; same bounds rule and error as
+/// [`slice_chunk`]).
+fn shared_slice(full: &Arc<[u8]>, w: ChunkWork) -> Result<Payload> {
+    if w.lo <= w.hi && w.hi <= full.len() {
+        Ok(Payload::Shared { chunk: Arc::clone(full), lo: w.lo, hi: w.hi })
+    } else {
+        Err(Error::Runtime("range outside decoded chunk".into()))
+    }
 }
 
 /// Convenience: run requests through a fresh service via channels — the
@@ -477,6 +615,39 @@ mod tests {
         let (resp, _) = svc.serve_batch(&[req]);
         assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
         assert!(cache.hits() > before_hits, "third identical read must hit the cache");
+    }
+
+    #[test]
+    fn cache_hit_passes_shared_payload_through_unassembled() {
+        // The zero-copy contract (DESIGN.md §11): a single-chunk cache
+        // hit must surface as a `Payload::Shared` span of the cached
+        // Arc (no assembly copy), while a request spanning two chunks
+        // assembles into an owned buffer. Three touches: decline,
+        // admit, hit (ghost-LRU).
+        let (data, reg) = registry();
+        let cache = ChunkCache::new(8 << 20, 2);
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false })
+            .with_cache(&cache);
+        let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
+        for _ in 0..2 {
+            let (resp, _) = svc.serve_batch_shared_with(std::slice::from_ref(&req), |_| false);
+            assert_eq!(resp[0].data.as_ref().unwrap().as_slice(), &data[40_000..48_000]);
+        }
+        // Third read: a hit, and the admitted insert means the whole
+        // span is one shared slice of the cached chunk.
+        let (resp, _) = svc.serve_batch_shared_with(std::slice::from_ref(&req), |_| false);
+        let payload = resp[0].data.as_ref().unwrap();
+        assert_eq!(payload.as_slice(), &data[40_000..48_000]);
+        assert!(
+            matches!(payload, Payload::Shared { .. }),
+            "single-chunk cache hit must stay a shared span, got {payload:?}"
+        );
+        // A span crossing a 32 KiB chunk boundary assembles owned.
+        let wide = Request { id: 2, dataset: "tpc".into(), offset: 30_000, len: 8_000 };
+        let (resp, _) = svc.serve_batch_shared_with(std::slice::from_ref(&wide), |_| false);
+        let payload = resp[0].data.as_ref().unwrap();
+        assert_eq!(payload.as_slice(), &data[30_000..38_000]);
+        assert!(matches!(payload, Payload::Owned(_)), "multi-chunk spans assemble owned");
     }
 
     #[test]

@@ -9,7 +9,7 @@
 //! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
 //! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
-//! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M]
+//! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M] [--net-model evented|threads]
 //! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (legacy stdin mode: "<id> <offset> <len>" per line)
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0] [--scrape]
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --ablate-batch   (§V-F batching sweep, pipeline depths 1/8/32)
@@ -445,6 +445,10 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
     if let Some(s) = f.get("cache") {
         config.cache_bytes = parse_size(s)?;
     }
+    if let Some(s) = f.get("net-model") {
+        config.net_model = daemon::NetModel::parse(s)
+            .ok_or_else(|| format!("bad --net-model '{s}' (want evented|threads)"))?;
+    }
     // Loopback by default: the wire protocol has no auth (Shutdown is a
     // single unauthenticated frame), so exposing it wider is opt-in.
     let bind = f.get("bind").map(String::as_str).unwrap_or("127.0.0.1");
@@ -479,12 +483,17 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
     let handle =
         daemon::start(Arc::new(registry), config, &addr).map_err(|e| e.to_string())?;
     eprintln!(
-        "codag-serve listening on {} ({} shards, depth {}, {} workers/shard, cache {} MiB)",
+        "codag-serve listening on {} ({} shards, depth {}, {} workers/shard, cache {} MiB, \
+         {} net front)",
         handle.addr(),
         config.shards,
         config.queue_depth,
         config.workers_per_shard,
-        config.cache_bytes / (1024 * 1024)
+        config.cache_bytes / (1024 * 1024),
+        match config.net_model {
+            daemon::NetModel::Evented => "evented",
+            daemon::NetModel::Threads => "threaded",
+        }
     );
     eprintln!("stop with: codag loadgen --addr 127.0.0.1:{port} --shutdown");
     let cache = handle.cache_arc();

@@ -77,6 +77,17 @@ pub fn render(reg: &MetricsRegistry, slow: &SlowLog) -> String {
     let _ = writeln!(out, "codag_request_mean_us {}", req.mean_us());
     let _ = writeln!(out, "codag_request_p50_us {}", req.percentile_us(50.0));
     let _ = writeln!(out, "codag_request_p99_us {}", req.percentile_us(99.0));
+    // Network-front block (DESIGN.md §10): rendered unconditionally so
+    // the name set is identical under both net models — a threaded
+    // daemon simply reports ring depths of 0 and an empty loop histo.
+    let net = reg.net();
+    let _ = writeln!(out, "codag_connections_open {}", net.connections_open.get());
+    let _ = writeln!(out, "codag_submission_ring_depth {}", net.submission_ring_depth.get());
+    let _ = writeln!(out, "codag_completion_ring_depth {}", net.completion_ring_depth.get());
+    let _ = writeln!(out, "codag_net_loop_count {}", net.net_loop_us.count());
+    let _ = writeln!(out, "codag_net_loop_mean_us {}", net.net_loop_us.mean_us());
+    let _ = writeln!(out, "codag_net_loop_p50_us {}", net.net_loop_us.percentile_us(50.0));
+    let _ = writeln!(out, "codag_net_loop_p99_us {}", net.net_loop_us.percentile_us(99.0));
     for e in slow.snapshot() {
         let mut stages = String::new();
         for (i, (s, at)) in e.stages.iter().enumerate() {
@@ -140,6 +151,10 @@ mod tests {
         let b = reg.dataset("beta");
         b.decoded_bytes.add(1024);
         reg.request_us().record_us(250);
+        reg.net().connections_open.inc();
+        reg.net().connections_open.inc();
+        reg.net().submission_ring_depth.inc();
+        reg.net().net_loop_us.record_us(40);
         let slow = SlowLog::new(4);
         slow.offer(SlowEntry {
             id: 3,
@@ -175,6 +190,13 @@ mod tests {
         // Every stage of every dataset renders even at count 0 — the
         // name set is stable for scrapers/greps.
         assert_eq!(get_stage(&map, "codag_stage_count", "beta", Stage::StitchJoin), Some(0));
+        // Net-front lines render under both net models (depths 0 /
+        // empty histo when threaded), so their presence is pinned.
+        assert_eq!(map["codag_connections_open"], 2);
+        assert_eq!(map["codag_submission_ring_depth"], 1);
+        assert_eq!(map["codag_completion_ring_depth"], 0);
+        assert_eq!(map["codag_net_loop_count"], 1);
+        assert_eq!(map["codag_net_loop_p50_us"], 63); // bucket bound of 40
     }
 
     #[test]

@@ -25,5 +25,5 @@ pub mod registry;
 pub mod slowlog;
 
 pub use histo::{now_if_enabled, Counter, Gauge, LatencyHisto, StitchTimers, ENABLED, HISTO_BUCKETS};
-pub use registry::{DatasetMetrics, MetricsRegistry, Stage, STAGES};
+pub use registry::{DatasetMetrics, MetricsRegistry, NetMetrics, Stage, STAGES};
 pub use slowlog::{SlowEntry, SlowLog, SLOWLOG_CAP};

@@ -111,13 +111,37 @@ impl DatasetMetrics {
     }
 }
 
+/// Daemon-wide network-front metrics (DESIGN.md §10): these are not a
+/// [`Stage`] — stages are per-(dataset, request) lifecycle phases,
+/// while these describe the daemon's connection fabric as a whole —
+/// so the `STAGES` array and its pinned name set stay untouched.
+#[derive(Debug, Default)]
+pub struct NetMetrics {
+    /// Currently accepted, not-yet-closed connections (both net
+    /// models).
+    pub connections_open: Gauge,
+    /// Requests sitting in shard submission rings, admitted but not
+    /// yet dequeued by a worker (evented model only; 0 under
+    /// `--net-model threads`).
+    pub submission_ring_depth: Gauge,
+    /// Responses sitting in shard completion rings, produced but not
+    /// yet collected by the net loop (evented model only).
+    pub completion_ring_depth: Gauge,
+    /// Net-loop iteration processing time (poll(2) return → all ready
+    /// events handled), recorded only for iterations that had ready
+    /// events — idle ticks would drown the signal.
+    pub net_loop_us: LatencyHisto,
+}
+
 /// Daemon-wide registry: per-dataset metrics keyed by name, plus one
 /// daemon-wide end-to-end request histogram (receipt → reply built)
-/// that the shutdown summary reports from.
+/// that the shutdown summary reports from, plus the network-front
+/// gauges.
 #[derive(Debug, Default)]
 pub struct MetricsRegistry {
     datasets: RwLock<HashMap<String, Arc<DatasetMetrics>>>,
     request_us: LatencyHisto,
+    net: NetMetrics,
 }
 
 impl MetricsRegistry {
@@ -139,6 +163,11 @@ impl MetricsRegistry {
     /// Daemon-wide end-to-end request latency histogram.
     pub fn request_us(&self) -> &LatencyHisto {
         &self.request_us
+    }
+
+    /// Daemon-wide network-front metrics.
+    pub fn net(&self) -> &NetMetrics {
+        &self.net
     }
 
     /// Name-sorted snapshot of every dataset's metrics handle; the
@@ -195,6 +224,22 @@ mod tests {
         let snap = reg.snapshot();
         let names: Vec<_> = snap.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, ["alpha", "beta"], "sorted snapshot");
+    }
+
+    #[test]
+    fn net_metrics_live_beside_stages_not_in_them() {
+        // NetMetrics must not grow the pinned Stage set; it hangs off
+        // the registry directly and is shared across datasets.
+        let reg = MetricsRegistry::new();
+        reg.net().connections_open.inc();
+        reg.net().submission_ring_depth.inc();
+        reg.net().submission_ring_depth.dec();
+        reg.net().net_loop_us.record_us(15);
+        assert_eq!(reg.net().connections_open.get(), 1);
+        assert_eq!(reg.net().submission_ring_depth.get(), 0);
+        assert_eq!(reg.net().completion_ring_depth.get(), 0);
+        assert_eq!(reg.net().net_loop_us.count(), 1);
+        assert_eq!(Stage::all().len(), STAGES, "stage set unchanged");
     }
 
     #[test]

@@ -1,40 +1,61 @@
 //! The long-lived `codag-serve` daemon.
 //!
-//! Architecture (DESIGN.md §6):
+//! Architecture (DESIGN.md §6, §11): one shard-worker decode pool
+//! behind either of two interchangeable network fronts.
 //!
 //! ```text
-//! TcpListener (non-blocking accept loop)
-//!   └─ per-connection reader thread ── FrameReader → decode_request
-//!        ├─ admission: hash(dataset) → shard queue (bounded sync
-//!        │  channel; `try_send` full ⇒ immediate `Busy` response) and
-//!        │  a per-connection in-flight response budget (pipelining
-//!        │  without reading ⇒ `Busy`) — never unbounded buffering on
-//!        │  either side
-//!        └─ per-connection writer thread (response channel → socket,
-//!           debits the in-flight budget as responses are written)
-//! shard worker threads (one per shard, long-lived)
+//! evented (default, unix — DESIGN.md §11)
+//!   TcpListener + every connection socket, nonblocking, owned by ONE
+//!   poll-based net-loop thread
+//!     ├─ readable ⇒ FrameReader → decode_request → admit()
+//!     │    └─ submission ring per shard (bounded SPSC; `try_push`
+//!     │       full ⇒ immediate `Busy` response)
+//!     └─ completion rings ⇒ per-connection write queues, flushed as
+//!        one vectored write (28-byte stack header + shared payload)
+//!        with partial-write resumption
+//!
+//! threads (`--net-model threads`, any platform)
+//!   TcpListener (non-blocking accept loop)
+//!     └─ per-connection reader thread ── FrameReader → admit()
+//!          ├─ bounded sync-channel shard queue (`try_send` full ⇒
+//!          │  immediate `Busy` response)
+//!          └─ per-connection writer thread (response channel → socket)
+//!
+//! shard worker threads (one per shard, long-lived, front-agnostic)
 //!   └─ own a reused `Service` (+ shared `ChunkCache`); drain their
-//!      queue in FIFO order, opportunistically batching up to
+//!      job source in FIFO order, opportunistically batching up to
 //!      `DaemonConfig::batch` requests per `serve_batch` call
 //! ```
 //!
+//! Both fronts run the same [`admit`] decision function, so the
+//! admission contract — per-connection in-flight response and byte
+//! budgets, per-shard queue depth, `Busy` instead of buffering — is
+//! identical by construction; `rust/tests/net_evented.rs` pins
+//! byte-identity between them.
+//!
 //! All requests for one dataset hash to one shard, so per-dataset FIFO
-//! order is preserved end to end. Shutdown is a shared token: the
-//! accept loop stops, reader threads notice on their next read timeout,
-//! queue senders drop, shard workers drain what was admitted and exit,
-//! and [`DaemonHandle::join`]/[`DaemonHandle::wait`] joins every thread.
+//! order is preserved end to end. Shutdown is a shared token: the net
+//! front stops admitting, shard workers drain what was admitted and
+//! exit, in-flight responses flush, and
+//! [`DaemonHandle::join`]/[`DaemonHandle::wait`] joins every thread.
 
 use crate::coordinator::router::{DatasetSource, Request};
-use crate::coordinator::service::{Service, ServiceConfig};
+use crate::coordinator::service::{Payload, Service, ServiceConfig};
 use crate::coordinator::stats::LatencyStats;
 use crate::coordinator::Registry;
 use crate::obs::{
     expo, now_if_enabled, DatasetMetrics, MetricsRegistry, SlowEntry, SlowLog, Stage, SLOWLOG_CAP,
 };
 use crate::server::cache::{fnv1a, ChunkCache};
+#[cfg(unix)]
+use crate::server::net::{
+    self,
+    ring::{Pop, Ring},
+    Waker,
+};
 use crate::server::proto::{
-    decode_request_versioned, write_response_versioned, FrameReader, ReadEvent, Status,
-    WireRequest, WireResponse, WIRE_VERSION,
+    decode_request_versioned, write_response_parts, FrameReader, ReadEvent, Status, WireRequest,
+    WIRE_VERSION,
 };
 use crate::{Error, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -44,12 +65,36 @@ use std::sync::{Arc, Mutex};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
+/// Which network front multiplexes the sockets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NetModel {
+    /// One poll-based event-loop thread owning every connection
+    /// (unix; silently falls back to `Threads` elsewhere).
+    #[default]
+    Evented,
+    /// Two OS threads (reader + writer) per connection — the legacy
+    /// model, kept for differential testing (`--net-model threads`).
+    Threads,
+}
+
+impl NetModel {
+    /// Parse a `--net-model` CLI value.
+    pub fn parse(s: &str) -> Option<NetModel> {
+        match s {
+            "evented" => Some(NetModel::Evented),
+            "threads" | "threaded" => Some(NetModel::Threads),
+            _ => None,
+        }
+    }
+}
+
 /// Daemon tuning knobs.
 #[derive(Debug, Clone, Copy)]
 pub struct DaemonConfig {
     /// Shard queues / long-lived shard worker threads.
     pub shards: usize,
-    /// Admission limit: queued requests per shard before `Busy`.
+    /// Admission limit: queued requests per shard before `Busy`
+    /// (sync-channel bound or submission-ring capacity).
     pub queue_depth: usize,
     /// Decode workers inside each shard's `Service`.
     pub workers_per_shard: usize,
@@ -67,15 +112,18 @@ pub struct DaemonConfig {
     /// budget plus one frame).
     pub max_inflight_bytes_per_conn: usize,
     /// Concurrent connections accepted; excess connects are closed
-    /// immediately (each connection costs two threads).
+    /// immediately.
     pub max_connections: usize,
     /// Total decompressed-chunk cache budget (0 disables the cache).
     pub cache_bytes: usize,
-    /// Read-timeout granularity at which blocked threads poll the
-    /// shutdown token.
+    /// Read-timeout / poll granularity at which blocked threads check
+    /// the shutdown token.
     pub poll_interval: Duration,
-    /// Socket write timeout (a stuck peer cannot wedge shutdown).
+    /// Socket write timeout (threads) / write-stall bound (evented): a
+    /// stuck peer cannot wedge shutdown.
     pub write_timeout: Duration,
+    /// Network front (see [`NetModel`]).
+    pub net_model: NetModel,
 }
 
 impl Default for DaemonConfig {
@@ -91,38 +139,113 @@ impl Default for DaemonConfig {
             cache_bytes: 64 * 1024 * 1024,
             poll_interval: Duration::from_millis(50),
             write_timeout: Duration::from_secs(5),
+            net_model: NetModel::default(),
         }
     }
 }
 
-/// One response travelling to a connection's writer thread, carrying
-/// the byte charge taken at admission (debited once written; 0 for
+/// One response travelling back to its connection — over the writer
+/// channel (threads) or a completion ring (evented). Carries the byte
+/// charge taken at admission (debited once written; 0 for
 /// reader-generated error/metadata responses) and the protocol version
 /// to stamp on the wire (echoing the requester's version — a v1 client
-/// rejects v2-stamped replies).
-struct Outbound {
-    resp: WireResponse,
-    charge: u64,
-    version: u16,
-    /// Per-dataset metrics for shard-produced replies: the writer times
-    /// the socket write into the `response_write` stage and decrements
-    /// the in-flight gauge charged at admission. `None` for
+/// rejects v2-stamped replies). The payload is a [`Payload`], so a
+/// cache-hit span rides as a shared `Arc<[u8]>` slice all the way to
+/// the socket write.
+pub(crate) struct Outbound {
+    pub(crate) id: u64,
+    pub(crate) status: Status,
+    pub(crate) version: u16,
+    pub(crate) payload: Payload,
+    pub(crate) charge: u64,
+    /// Per-dataset metrics for shard-produced replies: the write side
+    /// times the socket write into the `response_write` stage and
+    /// decrements the in-flight gauge charged at admission. `None` for
     /// reader-generated error/metadata responses.
-    obs: Option<Arc<DatasetMetrics>>,
+    pub(crate) obs: Option<Arc<DatasetMetrics>>,
 }
 
-/// Send a reader-generated response (no byte charge).
-fn send_reply(tx: &mpsc::Sender<Outbound>, version: u16, resp: WireResponse) {
-    let _ = tx.send(Outbound { resp, charge: 0, version, obs: None });
+/// Send a reader-generated response (no byte charge) down the threaded
+/// writer channel.
+fn send_reply(tx: &mpsc::Sender<Outbound>, version: u16, id: u64, status: Status, payload: Vec<u8>) {
+    let _ = tx.send(Outbound {
+        id,
+        status,
+        version,
+        payload: Payload::Owned(payload),
+        charge: 0,
+        obs: None,
+    });
 }
 
 /// Shared observability handles threaded through the daemon's threads
 /// (DESIGN.md §10): the per-dataset stage registry and the slowlog the
 /// wire `Metrics` request renders.
 #[derive(Clone)]
-struct Obs {
-    metrics: Arc<MetricsRegistry>,
-    slowlog: Arc<SlowLog>,
+pub(crate) struct Obs {
+    pub(crate) metrics: Arc<MetricsRegistry>,
+    pub(crate) slowlog: Arc<SlowLog>,
+}
+
+/// One finished response on a completion ring, routed back to its
+/// connection by the opaque token the net loop minted at admission
+/// (slot index + generation, so a reused slot never receives a dead
+/// connection's response).
+#[cfg(unix)]
+pub(crate) struct Completion {
+    pub(crate) token: u64,
+    pub(crate) out: Outbound,
+}
+
+/// Where a shard worker delivers a finished response: the threaded
+/// per-connection writer channel, or the evented completion ring (plus
+/// the waker that pops the net loop out of `poll`).
+pub(crate) enum ReplySink {
+    Channel(mpsc::Sender<Outbound>),
+    #[cfg(unix)]
+    Ring {
+        token: u64,
+        ring: Arc<Ring<Completion>>,
+        waker: Arc<Waker>,
+    },
+}
+
+impl ReplySink {
+    /// Deliver one response. Both arms share drop semantics: a
+    /// destination that no longer exists (disconnected channel, closed
+    /// ring) swallows the response, releasing its in-flight gauge.
+    pub(crate) fn send(&self, out: Outbound, obs: &Obs) {
+        match self {
+            ReplySink::Channel(tx) => {
+                // A disconnected receiver means the connection's writer
+                // exited; it already debited nothing for this response,
+                // and its conn-local counters died with the connection.
+                if let Err(e) = tx.send(out) {
+                    if let Some(dm) = e.0.obs {
+                        dm.inflight.dec();
+                    }
+                }
+            }
+            #[cfg(unix)]
+            ReplySink::Ring { token, ring, waker } => {
+                let nm = obs.metrics.net();
+                // Gauge before push: `Gauge::dec` saturates at zero, so
+                // the inc must precede the net loop's pop-side dec.
+                nm.completion_ring_depth.inc();
+                match ring.push_blocking(Completion { token: *token, out }) {
+                    Ok(()) => waker.wake(),
+                    Err(comp) => {
+                        // Ring closed: the net loop has exited, the
+                        // response has no destination.
+                        nm.completion_ring_depth.dec();
+                        if let Some(dm) = comp.out.obs {
+                            dm.inflight.dec();
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// One admitted request, owned by a shard queue. `charge` is the byte
@@ -130,24 +253,79 @@ struct Obs {
 /// response hits the socket; `deadline` (from the wire `deadline_ms`,
 /// measured from frame decode) is checked at dequeue and between batch
 /// items so an expired request never occupies a decode slot.
-struct Job {
-    req: Request,
-    reply: mpsc::Sender<Outbound>,
-    received: Instant,
-    charge: u64,
-    deadline: Option<Instant>,
+pub(crate) struct Job {
+    pub(crate) req: Request,
+    pub(crate) reply: ReplySink,
+    pub(crate) received: Instant,
+    pub(crate) charge: u64,
+    pub(crate) deadline: Option<Instant>,
     /// Protocol version of the originating frame (echoed in the reply).
-    version: u16,
+    pub(crate) version: u16,
     /// Dataset metrics handle, resolved once at admission (`None` when
     /// recording is compiled out).
-    dm: Option<Arc<DatasetMetrics>>,
+    pub(crate) dm: Option<Arc<DatasetMetrics>>,
+}
+
+/// Outcome of one [`JobSource`] fetch.
+enum Fetch {
+    Job(Job),
+    Timeout,
+    /// Producer gone (channel disconnected / ring closed) and the queue
+    /// fully drained: the shard worker's exit signal.
+    Closed,
+}
+
+/// Where a shard worker pulls admitted jobs from: the threaded bounded
+/// sync channel, or the evented submission ring. Both drain completely
+/// before reporting closure, so admitted work is never dropped at
+/// shutdown.
+enum JobSource {
+    Channel(Receiver<Job>),
+    #[cfg(unix)]
+    Ring(Arc<Ring<Job>>),
+}
+
+impl JobSource {
+    fn recv_timeout(&self, timeout: Duration, obs: &Obs) -> Fetch {
+        match self {
+            JobSource::Channel(rx) => match rx.recv_timeout(timeout) {
+                Ok(j) => Fetch::Job(j),
+                Err(RecvTimeoutError::Timeout) => Fetch::Timeout,
+                Err(RecvTimeoutError::Disconnected) => Fetch::Closed,
+            },
+            #[cfg(unix)]
+            JobSource::Ring(ring) => match ring.pop_timeout(timeout) {
+                Pop::Item(j) => {
+                    obs.metrics.net().submission_ring_depth.dec();
+                    Fetch::Job(j)
+                }
+                Pop::Timeout => Fetch::Timeout,
+                Pop::Closed => Fetch::Closed,
+            },
+        }
+    }
+
+    /// Non-blocking fetch for opportunistic batching.
+    fn try_recv(&self, obs: &Obs) -> Option<Job> {
+        match self {
+            JobSource::Channel(rx) => rx.try_recv().ok(),
+            #[cfg(unix)]
+            JobSource::Ring(ring) => {
+                let j = ring.try_pop();
+                if j.is_some() {
+                    obs.metrics.net().submission_ring_depth.dec();
+                }
+                j
+            }
+        }
+    }
 }
 
 /// Absolute ceiling on unwritten responses per connection (small error
 /// responses included): past this the connection is closed instead of
 /// buffered. The floor keeps bursty-but-honest pipelining clients off
 /// the ceiling when `max_inflight_per_conn` is configured very low.
-fn conn_hard_cap(config: &DaemonConfig) -> usize {
+pub(crate) fn conn_hard_cap(config: &DaemonConfig) -> usize {
     config.max_inflight_per_conn.max(1).saturating_mul(4).max(256)
 }
 
@@ -155,6 +333,8 @@ fn conn_hard_cap(config: &DaemonConfig) -> usize {
 pub struct DaemonHandle {
     addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    /// The socket-owning thread: the accept loop (threads model) or the
+    /// net event loop (evented).
     accept: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     stats: Arc<Mutex<LatencyStats>>,
@@ -237,15 +417,16 @@ impl DaemonHandle {
     }
 
     fn join_threads(&mut self) -> Result<LatencyStats> {
-        // Order matters: the accept thread joins reader/writer threads,
-        // whose exit drops the last queue senders, which lets shard
+        // Order matters: the socket-owning thread flushes and closes
+        // every connection, and its exit drops the last job-source
+        // producers (queue senders / ring closure), which lets shard
         // workers drain and observe disconnect. Every thread is joined
         // even if an earlier one panicked — shutdown is total; the
         // first failure is reported after.
         let mut first_err: Option<Error> = None;
         if let Some(h) = self.accept.take() {
             if h.join().is_err() {
-                first_err.get_or_insert(Error::Runtime("accept thread panicked".into()));
+                first_err.get_or_insert(Error::Runtime("net front thread panicked".into()));
             }
         }
         for h in self.workers.drain(..) {
@@ -287,33 +468,39 @@ pub fn start(
             }
         }
     }
-    let mut senders = Vec::with_capacity(n_shards);
-    let mut workers = Vec::with_capacity(n_shards);
-    for si in 0..n_shards {
-        let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth.max(1));
-        senders.push(tx);
-        let reg = registry.clone();
-        let cache = cache.clone();
-        let stats = stats.clone();
-        let obs = obs.clone();
-        let handle = thread::Builder::new()
-            .name(format!("codag-shard-{si}"))
-            .spawn(move || shard_loop(&reg, &cache, config, rx, &stats, &obs))?;
-        workers.push(handle);
-    }
-    // The accept thread owns the long-lived queue senders (each
-    // connection gets its own clone); when it and the readers it joins
-    // exit, every sender is dropped and workers see disconnect after
-    // draining — the drain half of graceful shutdown.
-    let accept = {
-        let reg = registry.clone();
-        let sd = shutdown.clone();
-        let cache = cache.clone();
-        let obs_a = obs.clone();
-        thread::Builder::new()
-            .name("codag-accept".into())
-            .spawn(move || accept_loop(listener, reg, cache, senders, sd, config, obs_a))?
+    #[cfg(unix)]
+    let (accept, workers) = match config.net_model {
+        NetModel::Evented => spawn_evented(
+            listener,
+            registry,
+            cache.clone(),
+            stats.clone(),
+            obs.clone(),
+            shutdown.clone(),
+            config,
+        )?,
+        NetModel::Threads => spawn_threaded(
+            listener,
+            registry,
+            cache.clone(),
+            stats.clone(),
+            obs.clone(),
+            shutdown.clone(),
+            config,
+        )?,
     };
+    // Off unix there is no poll shim: both models run the threaded
+    // front (same wire behavior, different scaling).
+    #[cfg(not(unix))]
+    let (accept, workers) = spawn_threaded(
+        listener,
+        registry,
+        cache.clone(),
+        stats.clone(),
+        obs.clone(),
+        shutdown.clone(),
+        config,
+    )?;
     Ok(DaemonHandle {
         addr: local_addr,
         shutdown,
@@ -325,6 +512,96 @@ pub fn start(
         slowlog: obs.slowlog,
         poll_interval: config.poll_interval,
     })
+}
+
+/// Spawn shard workers fed by bounded sync channels plus the threaded
+/// accept loop (two threads per connection).
+fn spawn_threaded(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    cache: Arc<ChunkCache>,
+    stats: Arc<Mutex<LatencyStats>>,
+    obs: Obs,
+    shutdown: Arc<AtomicBool>,
+    config: DaemonConfig,
+) -> Result<(JoinHandle<()>, Vec<JoinHandle<()>>)> {
+    let n_shards = config.shards.max(1);
+    let mut senders = Vec::with_capacity(n_shards);
+    let mut workers = Vec::with_capacity(n_shards);
+    for si in 0..n_shards {
+        let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth.max(1));
+        senders.push(tx);
+        let reg = registry.clone();
+        let cache = cache.clone();
+        let stats = stats.clone();
+        let obs = obs.clone();
+        let handle = thread::Builder::new()
+            .name(format!("codag-shard-{si}"))
+            .spawn(move || {
+                shard_loop(&reg, &cache, config, JobSource::Channel(rx), &stats, &obs)
+            })?;
+        workers.push(handle);
+    }
+    // The accept thread owns the long-lived queue senders (each
+    // connection gets its own clone); when it and the readers it joins
+    // exit, every sender is dropped and workers see disconnect after
+    // draining — the drain half of graceful shutdown.
+    let accept = thread::Builder::new().name("codag-accept".into()).spawn(move || {
+        accept_loop(listener, registry, cache, senders, shutdown, config, obs)
+    })?;
+    Ok((accept, workers))
+}
+
+/// Spawn shard workers fed by submission rings plus the single
+/// net-event-loop thread that owns every socket (DESIGN.md §11).
+#[cfg(unix)]
+fn spawn_evented(
+    listener: TcpListener,
+    registry: Arc<Registry>,
+    cache: Arc<ChunkCache>,
+    stats: Arc<Mutex<LatencyStats>>,
+    obs: Obs,
+    shutdown: Arc<AtomicBool>,
+    config: DaemonConfig,
+) -> Result<(JoinHandle<()>, Vec<JoinHandle<()>>)> {
+    let n_shards = config.shards.max(1);
+    // Submission capacity = the threaded model's sync-channel bound, so
+    // ring-full hits at exactly the queue depth `Busy` always hit at.
+    // Completion rings get headroom for a full queue plus one in-flight
+    // batch, keeping the worker's blocking push a cold path.
+    let submission: Vec<Arc<Ring<Job>>> = (0..n_shards)
+        .map(|_| Arc::new(Ring::new(config.queue_depth.max(1))))
+        .collect();
+    let completion: Vec<Arc<Ring<Completion>>> = (0..n_shards)
+        .map(|_| Arc::new(Ring::new(config.queue_depth.saturating_add(config.batch).max(8))))
+        .collect();
+    let waker = Arc::new(Waker::new()?);
+    let mut workers = Vec::with_capacity(n_shards);
+    for si in 0..n_shards {
+        let source = JobSource::Ring(submission[si].clone());
+        let reg = registry.clone();
+        let cache = cache.clone();
+        let stats = stats.clone();
+        let obs = obs.clone();
+        let handle = thread::Builder::new()
+            .name(format!("codag-shard-{si}"))
+            .spawn(move || shard_loop(&reg, &cache, config, source, &stats, &obs))?;
+        workers.push(handle);
+    }
+    let nl = net::NetLoop {
+        listener,
+        registry,
+        cache,
+        submission,
+        completion,
+        waker,
+        shutdown,
+        config,
+        obs,
+    };
+    let accept =
+        thread::Builder::new().name("codag-net".into()).spawn(move || net::net_loop(nl))?;
+    Ok((accept, workers))
 }
 
 fn accept_loop(
@@ -387,6 +664,17 @@ fn accept_loop(
     }
 }
 
+/// RAII step-down for the `connections_open` gauge: a connection thread
+/// has several exit paths (setup failure, EOF, protocol error, hard
+/// cap), and every one of them must release the slot it counted.
+struct OpenConnGuard(Arc<MetricsRegistry>);
+
+impl Drop for OpenConnGuard {
+    fn drop(&mut self) {
+        self.0.net().connections_open.dec();
+    }
+}
+
 fn connection_loop(
     mut stream: TcpStream,
     registry: &Registry,
@@ -396,6 +684,8 @@ fn connection_loop(
     config: DaemonConfig,
     obs: &Obs,
 ) {
+    obs.metrics.net().connections_open.inc();
+    let _open = OpenConnGuard(obs.metrics.clone());
     // Accepted sockets may inherit the listener's non-blocking flag on
     // some platforms — force blocking + read timeout so this thread
     // sleeps in `read` and still polls the shutdown token; write
@@ -424,7 +714,14 @@ fn connection_loop(
         thread::Builder::new().name("codag-conn-writer".into()).spawn(move || {
             while let Ok(out) = rx.recv() {
                 let t0 = now_if_enabled().filter(|_| out.obs.is_some());
-                let ok = write_response_versioned(&mut wstream, &out.resp, out.version).is_ok();
+                let ok = write_response_parts(
+                    &mut wstream,
+                    out.version,
+                    out.status,
+                    out.id,
+                    out.payload.as_slice(),
+                )
+                .is_ok();
                 if let Some(dm) = &out.obs {
                     if let Some(t0) = t0 {
                         dm.stage(Stage::ResponseWrite).record(t0.elapsed());
@@ -496,11 +793,7 @@ fn connection_loop(
                     inflight.fetch_add(1, Ordering::SeqCst);
                     let id = crate::server::proto::request_id_hint(&body);
                     let version = crate::server::proto::request_version_hint(&body);
-                    send_reply(
-                        &tx,
-                        version,
-                        WireResponse::error(id, Status::BadRequest, e.to_string()),
-                    );
+                    send_reply(&tx, version, id, Status::BadRequest, e.to_string().into_bytes());
                     break;
                 }
             },
@@ -513,7 +806,7 @@ fn connection_loop(
                     _ => Status::Internal,
                 };
                 inflight.fetch_add(1, Ordering::SeqCst);
-                send_reply(&tx, WIRE_VERSION, WireResponse::error(0, status, e.to_string()));
+                send_reply(&tx, WIRE_VERSION, 0, status, e.to_string().into_bytes());
                 break;
             }
         }
@@ -522,10 +815,204 @@ fn connection_loop(
     let _ = writer.join();
 }
 
-/// Dispatch one decoded request; returns false to close the connection.
-/// `outstanding` is the connection's unwritten-response count at the
-/// moment this request was charged (the reader increments it, the
-/// writer decrements it as frames reach the socket).
+/// A fully-specified admitted request, produced by [`admit`]: the
+/// caller charges `charge` to the connection's byte budget, wraps this
+/// in a [`Job`] with its reply route, and pushes it at shard `si`.
+pub(crate) struct JobSpec {
+    pub(crate) req: Request,
+    pub(crate) received: Instant,
+    pub(crate) charge: u64,
+    pub(crate) deadline: Option<Instant>,
+    pub(crate) version: u16,
+    pub(crate) dm: Option<Arc<DatasetMetrics>>,
+    /// Admission-stage clock start (recorded by the caller once the
+    /// queue push succeeds, so the stage covers the push too).
+    pub(crate) t_adm: Option<Instant>,
+    /// Target shard: `fnv1a(dataset) % n_shards`.
+    pub(crate) si: usize,
+}
+
+/// The admission decision for one decoded request — every policy check
+/// both network fronts share, with queue-push mechanics left to the
+/// caller. Keeping this a pure function of (request, connection
+/// counters, daemon state) is what makes the two fronts byte-identical:
+/// there is one copy of the contract.
+///
+/// `outstanding`/`bytes_now` are the connection's unwritten-response
+/// count and admitted-but-unwritten payload bytes at the moment the
+/// frame was charged.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn admit(
+    req: WireRequest,
+    version: u16,
+    registry: &Registry,
+    cache: &ChunkCache,
+    n_shards: usize,
+    outstanding: usize,
+    bytes_now: u64,
+    shutdown: &AtomicBool,
+    config: &DaemonConfig,
+    obs: &Obs,
+) -> Admit {
+    // Backpressure half 2: a pipelining client that does not read its
+    // responses stops being served once its unwritten-response budget
+    // is spent (Shutdown stays exempt so a draining admin always gets
+    // through; the hard cap bounds even Busy floods).
+    let over_budget = outstanding >= config.max_inflight_per_conn.max(1);
+    match req {
+        WireRequest::Shutdown { id } => {
+            Admit::Shutdown { id, payload: b"shutting down".to_vec() }
+        }
+        WireRequest::Metrics { id } => {
+            if over_budget {
+                return Admit::Reply {
+                    id,
+                    status: Status::Busy,
+                    payload: b"connection in-flight limit".to_vec(),
+                };
+            }
+            let text = expo::render(&obs.metrics, &obs.slowlog);
+            Admit::Reply { id, status: Status::Ok, payload: text.into_bytes() }
+        }
+        WireRequest::Stat { id, dataset } => {
+            if over_budget {
+                return Admit::Reply {
+                    id,
+                    status: Status::Busy,
+                    payload: b"connection in-flight limit".to_vec(),
+                };
+            }
+            match registry.get(&dataset) {
+                Ok(c) => {
+                    // 64-byte v2 Stat payload: dataset dimensions, then
+                    // the daemon-wide cache counters. A v1 requester
+                    // gets exactly the 24-byte payload its strict
+                    // decoder expects.
+                    let mut payload = Vec::with_capacity(64);
+                    payload.extend_from_slice(&c.total_uncompressed().to_le_bytes());
+                    payload.extend_from_slice(&(c.chunk_size() as u64).to_le_bytes());
+                    payload.extend_from_slice(&(c.n_chunks() as u64).to_le_bytes());
+                    if version >= 2 {
+                        payload.extend_from_slice(&cache.hits().to_le_bytes());
+                        payload.extend_from_slice(&cache.misses().to_le_bytes());
+                        payload.extend_from_slice(&cache.evictions().to_le_bytes());
+                        payload.extend_from_slice(&cache.admit_declines().to_le_bytes());
+                        payload.extend_from_slice(&cache.ghost_hits().to_le_bytes());
+                    }
+                    Admit::Reply { id, status: Status::Ok, payload }
+                }
+                Err(e) => Admit::Reply {
+                    id,
+                    status: Status::NotFound,
+                    payload: e.to_string().into_bytes(),
+                },
+            }
+        }
+        WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
+            // Admission-stage clock: started before any checks so the
+            // stage covers the full admission cost.
+            let t_adm = now_if_enabled();
+            if over_budget {
+                return Admit::Reply {
+                    id,
+                    status: Status::Busy,
+                    payload: b"connection in-flight limit".to_vec(),
+                };
+            }
+            if shutdown.load(Ordering::SeqCst) {
+                return Admit::Reply {
+                    id,
+                    status: Status::ShuttingDown,
+                    payload: b"daemon is draining".to_vec(),
+                };
+            }
+            let Ok(container) = registry.get(&dataset) else {
+                return Admit::Reply {
+                    id,
+                    status: Status::NotFound,
+                    payload: format!("dataset '{dataset}' not registered").into_bytes(),
+                };
+            };
+            // Resolved only after the registry lookup succeeds: hostile
+            // dataset names must not mint registry entries (unbounded
+            // label cardinality).
+            let dm = t_adm.map(|_| obs.metrics.dataset(&dataset));
+            // Reject ranges whose response could not be framed (body
+            // capped at MAX_FRAME_LEN) before any decode work is done —
+            // otherwise the write side would fail the oversized frame
+            // and drop the connection without an error response.
+            let span = {
+                let remaining = container.total_uncompressed().saturating_sub(offset);
+                if len == 0 {
+                    remaining
+                } else {
+                    len.min(remaining)
+                }
+            };
+            if span > (crate::server::proto::MAX_FRAME_LEN as u64).saturating_sub(64) {
+                return Admit::Reply {
+                    id,
+                    status: Status::BadRequest,
+                    payload: format!("range of {span} bytes exceeds the max response frame")
+                        .into_bytes(),
+                };
+            }
+            // Byte half of the connection budget: admitted payload
+            // bytes not yet written to the socket. One request is
+            // always admitted when nothing is outstanding, so the true
+            // bound is the budget plus one frame.
+            if bytes_now > 0
+                && bytes_now.saturating_add(span) > config.max_inflight_bytes_per_conn as u64
+            {
+                if let Some(m) = &dm {
+                    m.busy.inc();
+                }
+                return Admit::Reply {
+                    id,
+                    status: Status::Busy,
+                    payload: b"connection byte budget exhausted".to_vec(),
+                };
+            }
+            // All requests for one dataset land on one shard: FIFO per
+            // dataset is preserved through the bounded queue.
+            let si = (fnv1a(dataset.as_bytes()) % n_shards.max(1) as u64) as usize;
+            let received = Instant::now();
+            // Relative wire deadline, anchored at frame decode (no
+            // client/daemon clock sync needed); 0 = none.
+            let deadline = if deadline_ms > 0 {
+                received.checked_add(Duration::from_millis(deadline_ms))
+            } else {
+                None
+            };
+            Admit::Enqueue(JobSpec {
+                req: Request { id, dataset, offset, len },
+                received,
+                charge: span,
+                deadline,
+                version,
+                dm,
+                t_adm,
+                si,
+            })
+        }
+    }
+}
+
+/// What [`admit`] decided for one request.
+pub(crate) enum Admit {
+    /// Answer immediately with this response (no byte charge).
+    Reply { id: u64, status: Status, payload: Vec<u8> },
+    /// Admitted for decode: charge the byte budget and push to a shard.
+    Enqueue(JobSpec),
+    /// A shutdown frame: ack with `Ok`, trip the token, stop reading.
+    Shutdown { id: u64, payload: Vec<u8> },
+}
+
+/// Dispatch one decoded request on the threaded front; returns false to
+/// close the connection. `outstanding` is the connection's
+/// unwritten-response count at the moment this request was charged (the
+/// reader increments it, the writer decrements it as frames reach the
+/// socket).
 #[allow(clippy::too_many_arguments)]
 fn handle_request(
     req: WireRequest,
@@ -540,158 +1027,41 @@ fn handle_request(
     config: DaemonConfig,
     obs: &Obs,
 ) -> bool {
-    // Backpressure half 2: a pipelining client that does not read its
-    // responses stops being served once its unwritten-response budget
-    // is spent (Shutdown stays exempt so a draining admin always gets
-    // through; the reader's hard cap bounds even Busy floods).
-    let over_budget = outstanding >= config.max_inflight_per_conn.max(1);
-    match req {
-        WireRequest::Shutdown { id } => {
-            send_reply(
-                tx,
-                version,
-                WireResponse { id, status: Status::Ok, payload: b"shutting down".to_vec() },
-            );
+    let bytes_now = inflight_bytes.load(Ordering::SeqCst);
+    match admit(
+        req,
+        version,
+        registry,
+        cache,
+        senders.len(),
+        outstanding,
+        bytes_now,
+        shutdown,
+        &config,
+        obs,
+    ) {
+        Admit::Shutdown { id, payload } => {
+            send_reply(tx, version, id, Status::Ok, payload);
             shutdown.store(true, Ordering::SeqCst);
             false
         }
-        WireRequest::Metrics { id } => {
-            let resp = if over_budget {
-                WireResponse::error(id, Status::Busy, "connection in-flight limit")
-            } else {
-                let text = expo::render(&obs.metrics, &obs.slowlog);
-                WireResponse { id, status: Status::Ok, payload: text.into_bytes() }
-            };
-            send_reply(tx, version, resp);
+        Admit::Reply { id, status, payload } => {
+            send_reply(tx, version, id, status, payload);
             true
         }
-        WireRequest::Stat { id, dataset } => {
-            let resp = if over_budget {
-                WireResponse::error(id, Status::Busy, "connection in-flight limit")
-            } else {
-                match registry.get(&dataset) {
-                    Ok(c) => {
-                        // 64-byte v2 Stat payload: dataset dimensions,
-                        // then the daemon-wide cache counters. A v1
-                        // requester gets exactly the 24-byte payload
-                        // its strict decoder expects.
-                        let mut payload = Vec::with_capacity(64);
-                        payload.extend_from_slice(&c.total_uncompressed().to_le_bytes());
-                        payload.extend_from_slice(&(c.chunk_size() as u64).to_le_bytes());
-                        payload.extend_from_slice(&(c.n_chunks() as u64).to_le_bytes());
-                        if version >= 2 {
-                            payload.extend_from_slice(&cache.hits().to_le_bytes());
-                            payload.extend_from_slice(&cache.misses().to_le_bytes());
-                            payload.extend_from_slice(&cache.evictions().to_le_bytes());
-                            payload.extend_from_slice(&cache.admit_declines().to_le_bytes());
-                            payload.extend_from_slice(&cache.ghost_hits().to_le_bytes());
-                        }
-                        WireResponse { id, status: Status::Ok, payload }
-                    }
-                    Err(e) => WireResponse::error(id, Status::NotFound, e.to_string()),
-                }
-            };
-            send_reply(tx, version, resp);
-            true
-        }
-        WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
-            // Admission-stage clock: started before any checks so the
-            // stage covers the full reader-side admission cost.
-            let t_adm = now_if_enabled();
-            if over_budget {
-                send_reply(
-                    tx,
-                    version,
-                    WireResponse::error(id, Status::Busy, "connection in-flight limit"),
-                );
-                return true;
-            }
-            if shutdown.load(Ordering::SeqCst) {
-                send_reply(
-                    tx,
-                    version,
-                    WireResponse::error(id, Status::ShuttingDown, "daemon is draining"),
-                );
-                return true;
-            }
-            let Ok(container) = registry.get(&dataset) else {
-                send_reply(
-                    tx,
-                    version,
-                    WireResponse::error(
-                        id,
-                        Status::NotFound,
-                        format!("dataset '{dataset}' not registered"),
-                    ),
-                );
-                return true;
-            };
-            // Resolved only after the registry lookup succeeds: hostile
-            // dataset names must not mint registry entries (unbounded
-            // label cardinality).
-            let dm = t_adm.map(|_| obs.metrics.dataset(&dataset));
-            // Reject ranges whose response could not be framed (body
-            // capped at MAX_FRAME_LEN) before any decode work is done —
-            // otherwise the writer would fail the oversized frame and
-            // drop the connection without an error response.
-            let span = {
-                let remaining = container.total_uncompressed().saturating_sub(offset);
-                if len == 0 {
-                    remaining
-                } else {
-                    len.min(remaining)
-                }
-            };
-            if span > (crate::server::proto::MAX_FRAME_LEN as u64).saturating_sub(64) {
-                send_reply(
-                    tx,
-                    version,
-                    WireResponse::error(
-                        id,
-                        Status::BadRequest,
-                        format!("range of {span} bytes exceeds the max response frame"),
-                    ),
-                );
-                return true;
-            }
-            // Byte half of the connection budget: admitted payload
-            // bytes not yet written to the socket. One request is
-            // always admitted when nothing is outstanding, so the true
-            // bound is the budget plus one frame.
-            let bytes_now = inflight_bytes.load(Ordering::SeqCst);
-            if bytes_now > 0
-                && bytes_now.saturating_add(span) > config.max_inflight_bytes_per_conn as u64
-            {
-                if let Some(m) = &dm {
-                    m.busy.inc();
-                }
-                send_reply(
-                    tx,
-                    version,
-                    WireResponse::error(id, Status::Busy, "connection byte budget exhausted"),
-                );
-                return true;
-            }
-            inflight_bytes.fetch_add(span, Ordering::SeqCst);
-            // All requests for one dataset land on one shard: FIFO per
-            // dataset is preserved through the bounded queue.
-            let si = (fnv1a(dataset.as_bytes()) % senders.len() as u64) as usize;
-            let received = Instant::now();
-            // Relative wire deadline, anchored at frame decode (no
-            // client/daemon clock sync needed); 0 = none.
-            let deadline = if deadline_ms > 0 {
-                received.checked_add(Duration::from_millis(deadline_ms))
-            } else {
-                None
-            };
+        Admit::Enqueue(spec) => {
+            let si = spec.si;
+            let t_adm = spec.t_adm;
+            let dm = spec.dm.clone();
+            inflight_bytes.fetch_add(spec.charge, Ordering::SeqCst);
             let job = Job {
-                req: Request { id, dataset, offset, len },
-                reply: tx.clone(),
-                received,
-                charge: span,
-                deadline,
-                version,
-                dm: dm.clone(),
+                req: spec.req,
+                reply: ReplySink::Channel(tx.clone()),
+                received: spec.received,
+                charge: spec.charge,
+                deadline: spec.deadline,
+                version: spec.version,
+                dm: spec.dm,
             };
             match senders[si].try_send(job) {
                 Ok(()) => {
@@ -711,11 +1081,9 @@ fn handle_request(
                     send_reply(
                         tx,
                         job.version,
-                        WireResponse::error(
-                            job.req.id,
-                            Status::Busy,
-                            format!("shard {si} queue at admission limit"),
-                        ),
+                        job.req.id,
+                        Status::Busy,
+                        format!("shard {si} queue at admission limit").into_bytes(),
                     );
                 }
                 Err(TrySendError::Disconnected(job)) => {
@@ -723,11 +1091,9 @@ fn handle_request(
                     send_reply(
                         tx,
                         job.version,
-                        WireResponse::error(
-                            job.req.id,
-                            Status::ShuttingDown,
-                            "daemon is shutting down",
-                        ),
+                        job.req.id,
+                        Status::ShuttingDown,
+                        b"daemon is shutting down".to_vec(),
                     );
                 }
             }
@@ -746,9 +1112,9 @@ fn status_for(e: &Error) -> Status {
 }
 
 /// Reply metadata for one live batch item, carried alongside the owned
-/// `Request` handed to `serve_batch_with`.
+/// `Request` handed to `serve_batch_shared_with`.
 struct ReplyMeta {
-    reply: mpsc::Sender<Outbound>,
+    reply: ReplySink,
     received: Instant,
     charge: u64,
     version: u16,
@@ -762,7 +1128,7 @@ fn shard_loop(
     registry: &Registry,
     cache: &ChunkCache,
     config: DaemonConfig,
-    rx: Receiver<Job>,
+    source: JobSource,
     stats: &Mutex<LatencyStats>,
     obs: &Obs,
 ) {
@@ -776,18 +1142,18 @@ fn shard_loop(
     let service = Service::new(registry, None, svc_cfg).with_metrics(obs.metrics.clone());
     let service = if config.cache_bytes > 0 { service.with_cache(cache) } else { service };
     loop {
-        let first = match rx.recv_timeout(config.poll_interval) {
-            Ok(j) => j,
-            Err(RecvTimeoutError::Timeout) => continue,
-            // All senders dropped (accept loop + readers exited) and
-            // the queue is fully drained: graceful exit.
-            Err(RecvTimeoutError::Disconnected) => break,
+        let first = match source.recv_timeout(config.poll_interval, obs) {
+            Fetch::Job(j) => j,
+            Fetch::Timeout => continue,
+            // Producers gone (threaded: senders dropped; evented: ring
+            // closed) and the queue fully drained: graceful exit.
+            Fetch::Closed => break,
         };
         let mut jobs = vec![first];
         while jobs.len() < config.batch.max(1) {
-            match rx.try_recv() {
-                Ok(j) => jobs.push(j),
-                Err(_) => break,
+            match source.try_recv(obs) {
+                Some(j) => jobs.push(j),
+                None => break,
             }
         }
         // Deadline check #1, at dequeue: a job whose deadline lapsed in
@@ -809,17 +1175,15 @@ fn shard_loop(
                 if let Some(m) = &j.dm {
                     m.expired.inc();
                 }
-                let resp = WireResponse::error(
-                    j.req.id,
-                    Status::Expired,
-                    "deadline expired while queued",
-                );
-                let _ = j.reply.send(Outbound {
-                    resp,
-                    charge: j.charge,
+                let out = Outbound {
+                    id: j.req.id,
+                    status: Status::Expired,
                     version: j.version,
+                    payload: Payload::Owned(b"deadline expired while queued".to_vec()),
+                    charge: j.charge,
                     obs: j.dm,
-                });
+                };
+                j.reply.send(out, obs);
             } else {
                 live.push((j, wait_us));
             }
@@ -850,8 +1214,11 @@ fn shard_loop(
         }
         // Deadline check #2, between batch items: the service consults
         // this probe before decoding each of a request's chunks, so a
-        // deadline lapsing mid-batch stops burning decode work.
-        let (responses, _) = service.serve_batch_with(&requests, |ri| {
+        // deadline lapsing mid-batch stops burning decode work. The
+        // shared variant keeps cache-hit spans as `Arc<[u8]>` slices —
+        // the zero-copy half of the evented front's vectored writes
+        // (the threaded writer shares the same payload type).
+        let (responses, _) = service.serve_batch_shared_with(&requests, |ri| {
             deadlines[ri].is_some_and(|d| Instant::now() >= d)
         });
         // Record into a batch-local recorder and take the shared lock
@@ -859,16 +1226,16 @@ fn shard_loop(
         // serialize on the stats mutex in the reply hot path.
         let mut batch_stats = LatencyStats::new();
         for (ri, (meta, resp)) in replies.into_iter().zip(responses).enumerate() {
-            let wire = match resp.data {
-                Ok(bytes) => {
+            let out = match resp.data {
+                Ok(payload) => {
                     let total = meta.received.elapsed();
                     // Admission-to-reply latency (includes queue wait —
                     // the quantity backpressure tuning moves).
-                    batch_stats.record(total, bytes.len() as u64);
+                    batch_stats.record(total, payload.len() as u64);
                     // Per-codec decoded-byte attribution (shutdown
                     // summary observability for the codec hot paths).
                     if let Some(codec) = codecs[ri] {
-                        batch_stats.add_codec_bytes(codec, bytes.len() as u64);
+                        batch_stats.add_codec_bytes(codec, payload.len() as u64);
                     }
                     if crate::obs::ENABLED && meta.dm.is_some() {
                         let total_us = total.as_micros() as u64;
@@ -892,7 +1259,14 @@ fn shard_loop(
                             ],
                         });
                     }
-                    WireResponse { id: resp.id, status: Status::Ok, payload: bytes }
+                    Outbound {
+                        id: resp.id,
+                        status: Status::Ok,
+                        version: meta.version,
+                        payload,
+                        charge: meta.charge,
+                        obs: meta.dm,
+                    }
                 }
                 Err(Error::Runtime(msg))
                     if msg == crate::coordinator::service::DEADLINE_EXPIRED =>
@@ -900,16 +1274,25 @@ fn shard_loop(
                     if let Some(m) = &meta.dm {
                         m.expired.inc();
                     }
-                    WireResponse::error(resp.id, Status::Expired, msg)
+                    Outbound {
+                        id: resp.id,
+                        status: Status::Expired,
+                        version: meta.version,
+                        payload: Payload::Owned(msg.into_bytes()),
+                        charge: meta.charge,
+                        obs: meta.dm,
+                    }
                 }
-                Err(e) => WireResponse::error(resp.id, status_for(&e), e.to_string()),
+                Err(e) => Outbound {
+                    id: resp.id,
+                    status: status_for(&e),
+                    version: meta.version,
+                    payload: Payload::Owned(e.to_string().into_bytes()),
+                    charge: meta.charge,
+                    obs: meta.dm,
+                },
             };
-            let _ = meta.reply.send(Outbound {
-                resp: wire,
-                charge: meta.charge,
-                version: meta.version,
-                obs: meta.dm,
-            });
+            meta.reply.send(out, obs);
         }
         if batch_stats.count() > 0 {
             stats.lock().unwrap().merge(&batch_stats);
@@ -923,6 +1306,8 @@ mod tests {
 
     #[test]
     fn idle_daemon_starts_and_joins() {
+        // Default = evented on unix: the net loop must come up and tear
+        // down cleanly with zero connections.
         let registry = Arc::new(Registry::new());
         let handle =
             start(registry, DaemonConfig::default(), "127.0.0.1:0").expect("bind loopback");
@@ -930,5 +1315,23 @@ mod tests {
         assert!(!handle.is_shutting_down());
         let stats = handle.join().expect("clean join");
         assert_eq!(stats.count(), 0);
+    }
+
+    #[test]
+    fn idle_daemon_starts_and_joins_threaded() {
+        let registry = Arc::new(Registry::new());
+        let config = DaemonConfig { net_model: NetModel::Threads, ..DaemonConfig::default() };
+        let handle = start(registry, config, "127.0.0.1:0").expect("bind loopback");
+        let stats = handle.join().expect("clean join");
+        assert_eq!(stats.count(), 0);
+    }
+
+    #[test]
+    fn net_model_parses_cli_values() {
+        assert_eq!(NetModel::parse("evented"), Some(NetModel::Evented));
+        assert_eq!(NetModel::parse("threads"), Some(NetModel::Threads));
+        assert_eq!(NetModel::parse("threaded"), Some(NetModel::Threads));
+        assert_eq!(NetModel::parse("epoll"), None);
+        assert_eq!(NetModel::default(), NetModel::Evented);
     }
 }

@@ -14,6 +14,17 @@
 //! deterministically exercises the deadline-expiry path (queue a few
 //! full-range reads, then a 1 ms-deadline read that must come back
 //! [`Status::Expired`]).
+//!
+//! Up to [`MAX_CLIENT_THREADS`] connections each get their own blocking
+//! driver thread. Above that (`--connections 256`, `1024`, …) the
+//! client switches to a multiplexed mode on unix: a few driver threads
+//! share the connections over nonblocking sockets and the same
+//! `poll(2)` shim the daemon's evented front uses, so the *client* is
+//! not the scaling bottleneck when probing connection counts the
+//! thread-per-connection model could never reach. Request streams are
+//! identical in both modes — same per-connection seeds, ids, and range
+//! sequences — so reports are comparable across the switch. (Mind the
+//! process fd limit: 1024 connections need `ulimit -n` headroom.)
 
 use crate::coordinator::stats::LatencyStats;
 use crate::data::Rng;
@@ -25,6 +36,13 @@ use crate::{corrupt, invalid, Error, Result};
 use std::collections::HashMap;
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
+
+/// Largest connection count driven thread-per-connection; above this
+/// the client multiplexes (see the module docs).
+pub const MAX_CLIENT_THREADS: usize = 32;
+
+/// Driver threads used by the multiplexed client.
+const MUX_DRIVERS: usize = 8;
 
 /// Load-generator knobs.
 #[derive(Debug, Clone)]
@@ -277,18 +295,42 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
                 std::thread::sleep(Duration::from_millis(20));
             })
         });
-        let handles: Vec<_> = (0..cfg.connections)
-            .map(|ci| s.spawn(move || connection_run(cfg, ci as u64, total)))
-            .collect();
-        let results: Vec<ConnOutcome> = handles
-            .into_iter()
-            .map(|h| {
-                h.join().unwrap_or_else(|_| {
-                    eprintln!("loadgen: connection thread panicked");
-                    ConnOutcome { died: true, ..ConnOutcome::default() }
+        let drivers = mux_drivers(cfg.connections);
+        let results: Vec<ConnOutcome> = if drivers > 0 {
+            // Multiplexed mode: each driver thread owns connections
+            // `di, di + drivers, …` (round-robin keeps slices balanced
+            // for any count). A panicking driver forfeits its whole
+            // slice as connection failures.
+            let handles: Vec<_> = (0..drivers)
+                .map(|di| s.spawn(move || mux_drive(cfg, di, drivers, total)))
+                .collect();
+            handles
+                .into_iter()
+                .enumerate()
+                .flat_map(|(di, h)| {
+                    h.join().unwrap_or_else(|_| {
+                        eprintln!("loadgen: multiplexed driver thread panicked");
+                        let slice_len = (di..cfg.connections).step_by(drivers).count();
+                        (0..slice_len)
+                            .map(|_| ConnOutcome { died: true, ..ConnOutcome::default() })
+                            .collect()
+                    })
                 })
-            })
-            .collect();
+                .collect()
+        } else {
+            let handles: Vec<_> = (0..cfg.connections)
+                .map(|ci| s.spawn(move || connection_run(cfg, ci as u64, total)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        eprintln!("loadgen: connection thread panicked");
+                        ConnOutcome { died: true, ..ConnOutcome::default() }
+                    })
+                })
+                .collect()
+        };
         scrape_done.store(true, std::sync::atomic::Ordering::SeqCst);
         if let Some(h) = scraper {
             let _ = h.join();
@@ -407,6 +449,212 @@ fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome
         }
     }
     out
+}
+
+/// Driver threads for the multiplexed client; 0 means stay
+/// thread-per-connection (few connections, or no `poll(2)` shim on
+/// this platform).
+fn mux_drivers(connections: usize) -> usize {
+    if cfg!(unix) && connections > MAX_CLIENT_THREADS {
+        MUX_DRIVERS.min(connections)
+    } else {
+        0
+    }
+}
+
+/// One multiplexed driver: owns connections `di, di + drivers, …` as
+/// nonblocking sockets polled together through the same shim the
+/// daemon's evented front uses. Every connection runs the request
+/// stream [`connection_run`] would give it — same seed, ids, pipeline
+/// window, and outcome accounting — but sends are staged into a write
+/// buffer with a partial-write cursor and responses are matched back
+/// by id out of one shared poll loop, so 1024 connections cost this
+/// process eight threads instead of a thousand.
+#[cfg(unix)]
+fn mux_drive(cfg: &LoadgenConfig, di: usize, drivers: usize, total: u64) -> Vec<ConnOutcome> {
+    use crate::server::net::sys::{self, PollFd};
+    use crate::server::proto::ReadEvent;
+    use std::io::{ErrorKind, Write};
+    use std::os::fd::AsRawFd;
+
+    /// One multiplexed connection's in-flight state.
+    struct Mux {
+        conn_idx: u64,
+        stream: TcpStream,
+        reader: FrameReader,
+        rng: Rng,
+        /// Staged request frames; bytes below `sent_off` are on the
+        /// wire already (partial-write cursor).
+        outbuf: Vec<u8>,
+        sent_off: usize,
+        outstanding: HashMap<u64, Instant>,
+        next: u64,
+        done: u64,
+        out: ConnOutcome,
+    }
+
+    /// Retire a dying connection, charging its in-flight exchanges as
+    /// failures (mirrors [`connection_run`]'s read-failure path).
+    fn kill(finished: &mut Vec<ConnOutcome>, mut c: Mux, why: &str) {
+        eprintln!("loadgen: connection {} died after {} responses: {why}", c.conn_idx, c.done);
+        c.out.failed += c.outstanding.len() as u64;
+        c.out.died = true;
+        finished.push(c.out);
+    }
+
+    let requests = cfg.requests as u64;
+    let depth = cfg.pipeline.max(1) as u64;
+    let mut finished: Vec<ConnOutcome> = Vec::new();
+    let mut conns: Vec<Mux> = Vec::new();
+    for ci in (di..cfg.connections).step_by(drivers.max(1)) {
+        let conn_idx = ci as u64;
+        let opened = TcpStream::connect(&cfg.addr).and_then(|s| {
+            let _ = s.set_nodelay(true);
+            s.set_nonblocking(true)?;
+            Ok(s)
+        });
+        match opened {
+            Ok(stream) => conns.push(Mux {
+                conn_idx,
+                stream,
+                reader: FrameReader::new(),
+                rng: Rng::new(cfg.seed ^ (conn_idx.wrapping_mul(0x9E37_79B9_7F4A_7C15))),
+                outbuf: Vec::new(),
+                sent_off: 0,
+                outstanding: HashMap::new(),
+                next: 0,
+                done: 0,
+                out: ConnOutcome::default(),
+            }),
+            Err(e) => {
+                eprintln!("loadgen: connection {conn_idx} failed to connect: {e}");
+                finished.push(ConnOutcome { died: true, ..ConnOutcome::default() });
+            }
+        }
+    }
+
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    while !conns.is_empty() {
+        // Advance every connection as far as its socket allows: top up
+        // the pipeline window once the previous staging fully drained,
+        // flush staged bytes, then drain decodable responses.
+        let mut i = 0;
+        while i < conns.len() {
+            let c = &mut conns[i];
+            let mut dead: Option<String> = None;
+            if c.sent_off == c.outbuf.len() {
+                c.outbuf.clear();
+                c.sent_off = 0;
+                while c.next < requests && (c.outstanding.len() as u64) < depth {
+                    let offset = c.rng.below(total);
+                    let span = if cfg.max_len == 0 {
+                        total - offset
+                    } else {
+                        cfg.max_len.min(total - offset)
+                    };
+                    let len = 1 + c.rng.below(span.max(1));
+                    let id = (c.conn_idx << 32) | c.next;
+                    let req = WireRequest::Get {
+                        id,
+                        dataset: cfg.dataset.clone(),
+                        offset,
+                        len,
+                        deadline_ms: cfg.deadline_ms,
+                    };
+                    match encode_request(&req) {
+                        Ok(body) => {
+                            c.outbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
+                            c.outbuf.extend_from_slice(&body);
+                            c.outstanding.insert(id, Instant::now());
+                            c.next += 1;
+                        }
+                        Err(e) => {
+                            dead = Some(format!("encode failed: {e}"));
+                            break;
+                        }
+                    }
+                }
+            }
+            while dead.is_none() && c.sent_off < c.outbuf.len() {
+                match c.stream.write(&c.outbuf[c.sent_off..]) {
+                    Ok(0) => dead = Some("socket wrote zero bytes".into()),
+                    Ok(n) => c.sent_off += n,
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => dead = Some(format!("send failed: {e}")),
+                }
+            }
+            while dead.is_none() && c.done < requests {
+                match c.reader.poll(&mut c.stream) {
+                    Ok(ReadEvent::WouldBlock) => break,
+                    Ok(ReadEvent::Eof) => {
+                        dead = Some("daemon closed the connection mid-exchange".into());
+                    }
+                    Ok(ReadEvent::Frame(frame)) => match decode_response(&frame) {
+                        Ok(resp) => {
+                            let Some(started) = c.outstanding.remove(&resp.id) else {
+                                c.out.failed += 1;
+                                continue;
+                            };
+                            c.done += 1;
+                            match resp.status {
+                                Status::Ok => {
+                                    c.out
+                                        .stats
+                                        .record(started.elapsed(), resp.payload.len() as u64);
+                                    c.out.ok += 1;
+                                }
+                                Status::Busy => c.out.busy += 1,
+                                Status::Expired => c.out.expired += 1,
+                                _ => c.out.failed += 1,
+                            }
+                        }
+                        Err(e) => dead = Some(format!("bad response frame: {e}")),
+                    },
+                    Err(e) => dead = Some(format!("read failed: {e}")),
+                }
+            }
+            if let Some(why) = dead {
+                let c = conns.swap_remove(i);
+                kill(&mut finished, c, &why);
+                continue; // swapped-in connection now occupies slot i
+            }
+            if conns[i].done == requests {
+                let c = conns.swap_remove(i);
+                finished.push(c.out);
+                continue;
+            }
+            i += 1;
+        }
+        if conns.is_empty() {
+            break;
+        }
+        // Sleep until any socket is readable — or writable, for the
+        // ones with staged bytes the kernel pushed back on. The
+        // timeout only bounds the wait when nothing happens.
+        pollfds.clear();
+        for c in &conns {
+            let mut events = sys::POLLIN;
+            if c.sent_off < c.outbuf.len() {
+                events |= sys::POLLOUT;
+            }
+            pollfds.push(PollFd::new(c.stream.as_raw_fd(), events));
+        }
+        if let Err(e) = sys::poll_fds(&mut pollfds, Duration::from_millis(100)) {
+            eprintln!("loadgen: poll failed: {e}");
+            for c in conns.drain(..) {
+                kill(&mut finished, c, "poll failed");
+            }
+        }
+    }
+    finished
+}
+
+/// Unreachable on non-unix: [`mux_drivers`] returns 0 there, keeping
+/// every connection on its own blocking thread.
+#[cfg(not(unix))]
+fn mux_drive(_cfg: &LoadgenConfig, _di: usize, _drivers: usize, _total: u64) -> Vec<ConnOutcome> {
+    unreachable!("multiplexed loadgen client is unix-only")
 }
 
 /// Pipeline depths swept by [`run_ablation`] (paper §V-F: batch sizes

@@ -8,10 +8,16 @@
 //! * [`proto`] — length-prefixed little-endian wire protocol
 //!   (request/response framing, status codes; layout frozen in
 //!   DESIGN.md §6 and pinned by unit tests).
-//! * [`daemon`] — `TcpListener` daemon: per-connection reader/writer
-//!   threads, per-dataset shard queues over long-lived `Service`
-//!   workers, bounded admission with explicit `Busy` backpressure, and
-//!   token-based graceful shutdown that joins every thread.
+//! * [`daemon`] — `TcpListener` daemon: per-dataset shard queues over
+//!   long-lived `Service` workers, bounded admission with explicit
+//!   `Busy` backpressure, and token-based graceful shutdown that joins
+//!   every thread. Two network fronts share that decode pool: the
+//!   default poll-based event loop in [`net`] (one thread multiplexing
+//!   every socket) and the legacy two-threads-per-connection model
+//!   (`--net-model threads`), kept for differential testing.
+//! * [`net`] — the evented front (unix): `poll(2)` shim, fixed-size
+//!   submission/completion rings, and the event loop with zero-copy
+//!   vectored response writes (DESIGN.md §11).
 //! * [`cache`] — sharded byte-budgeted LRU of hot *decompressed*
 //!   chunks keyed by `(dataset, chunk index)`, with ghost-LRU
 //!   admission (second-chance on key history).
@@ -31,11 +37,13 @@
 pub mod cache;
 pub mod daemon;
 pub mod loadgen;
+#[cfg(unix)]
+pub mod net;
 pub mod proto;
 pub mod store;
 
 pub use cache::ChunkCache;
-pub use daemon::{start, DaemonConfig, DaemonHandle};
+pub use daemon::{start, DaemonConfig, DaemonHandle, NetModel};
 pub use loadgen::{LoadgenConfig, LoadgenReport};
 pub use proto::{Status, WireRequest, WireResponse};
 pub use store::{load_dir, FileDataset};

@@ -1,0 +1,627 @@
+//! The poll-based event loop: one thread owning every connection
+//! socket (DESIGN.md §11).
+//!
+//! This is CODAG's many-independent-streams discipline applied at the
+//! network tier: instead of dedicating a reader and a writer thread to
+//! each connection, a single scheduler multiplexes all of them over
+//! `poll(2)`, with fixed-size rings decoupling socket I/O from the
+//! shard decode pool (the virtqueue/completion-queue idiom). Per
+//! iteration:
+//!
+//! 1. `poll` on the listener, the [`Waker`] pipe, and every connection
+//!    (`POLLIN` unless the connection is draining, `POLLOUT` iff its
+//!    write queue is non-empty).
+//! 2. Readable connections run the incremental `FrameReader`; each
+//!    complete frame goes through the same `admit` decision function as
+//!    the threaded model, then `try_push` onto the shard's submission
+//!    ring (`Full` ⇒ `Busy`, byte-identical backpressure).
+//! 3. Completion rings are drained; responses land on per-connection
+//!    write queues as a 28-byte stack-built head plus the payload —
+//!    shared cache spans ride as `Payload::Shared` (`Arc<[u8]>`), no
+//!    assembly buffer anywhere.
+//! 4. Every non-empty write queue is flushed until `WouldBlock`: one
+//!    vectored write of head + payload, with a byte cursor resuming
+//!    partial writes for slow readers.
+//! 5. Finished connections are reaped: transport errors, drained
+//!    (EOF/error/hard-cap) connections with nothing left in flight, and
+//!    writers stalled past `write_timeout`.
+//!
+//! Shutdown ordering: the loop observes the token, stops accepting,
+//! closes the submission rings (workers drain what was admitted, then
+//! exit), marks every connection draining, flushes all in-flight
+//! responses, and exits once the last connection closes — then closes
+//! the completion rings so a worker mid-push for a dead connection
+//! unblocks (its completion drops, like a send on a disconnected
+//! channel).
+
+use crate::coordinator::service::Payload;
+use crate::coordinator::Registry;
+use crate::obs::{now_if_enabled, DatasetMetrics, Stage};
+use crate::server::cache::ChunkCache;
+use crate::server::daemon::{
+    admit, conn_hard_cap, Admit, Completion, DaemonConfig, Job, Obs, Outbound, ReplySink,
+};
+use crate::server::net::ring::{PushError, Ring};
+use crate::server::net::sys::{self, PollFd};
+use crate::server::proto::{
+    decode_request_versioned, request_id_hint, request_version_hint, response_head, FrameReader,
+    ReadEvent, Status, WireRequest, WIRE_VERSION,
+};
+use crate::Error;
+use std::collections::VecDeque;
+use std::io::{self, IoSlice, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Length of the stacked length-prefix + response header
+/// (`proto::response_head`).
+const HEAD_LEN: usize = 28;
+
+/// Wakes the net loop out of `poll` when a shard worker publishes a
+/// completion: a byte written to a socketpair whose read end sits in
+/// the poll set. Writes are non-blocking and best-effort — a full pipe
+/// means wakeups are already pending, which is all a wakeup means.
+#[derive(Debug)]
+pub struct Waker {
+    tx: UnixStream,
+    rx: UnixStream,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let (tx, rx) = UnixStream::pair()?;
+        tx.set_nonblocking(true)?;
+        rx.set_nonblocking(true)?;
+        Ok(Waker { tx, rx })
+    }
+
+    /// Nudge the poll loop (any thread).
+    pub fn wake(&self) {
+        // WouldBlock = the pipe already carries pending wakeups.
+        let _ = (&self.tx).write(&[1u8]);
+    }
+
+    /// The fd the loop registers for `POLLIN`.
+    pub fn fd(&self) -> RawFd {
+        self.rx.as_raw_fd()
+    }
+
+    /// Swallow all pending wakeup bytes (loop thread only).
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while matches!((&self.rx).read(&mut buf), Ok(n) if n > 0) {}
+    }
+}
+
+/// One queued response frame: the stack-built head plus the payload it
+/// borrows (shared cache span or owned error text), with the write
+/// cursor held by the connection.
+struct PendingWrite {
+    head: [u8; HEAD_LEN],
+    payload: Payload,
+    /// Byte-budget charge taken at admission, returned once the frame
+    /// is fully written (0 for error/metadata replies).
+    charge: u64,
+    dm: Option<Arc<DatasetMetrics>>,
+    /// Set when the flusher first touches this frame; the
+    /// `response_write` stage spans first write attempt → frame
+    /// complete, mirroring the threaded writer's per-response timing.
+    t0: Option<Instant>,
+}
+
+/// Per-connection state owned by the loop. The counters mirror the
+/// threaded model's `inflight` / `inflight_bytes` atomics exactly —
+/// they just don't need to be atomic, because one thread owns them.
+struct Conn {
+    stream: TcpStream,
+    /// Generation tag baked into completion tokens: a completion for a
+    /// closed connection whose slot was reused must not be delivered
+    /// to the newcomer.
+    gen: u32,
+    reader: FrameReader,
+    wq: VecDeque<PendingWrite>,
+    /// Bytes of `wq.front()` already written (across head + payload).
+    written: usize,
+    /// Unwritten responses charged to this connection (every decoded
+    /// frame yields exactly one response).
+    outstanding: usize,
+    /// Admitted-but-unwritten payload bytes (the byte budget).
+    bytes: u64,
+    /// Reads stopped (EOF, protocol error, hard cap, or daemon
+    /// shutdown); the connection closes once `outstanding` responses
+    /// have flushed.
+    draining: bool,
+    /// Transport failure: close without flushing.
+    dead: bool,
+    /// Last write progress; guards against a peer that stops reading.
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn token(&self, idx: usize) -> u64 {
+        ((self.gen as u64) << 32) | idx as u64
+    }
+
+    /// Queue a response frame. The head is built once, here; an
+    /// oversized frame is impossible for admitted work (the span was
+    /// checked against `MAX_FRAME_LEN` at admission), so a failure
+    /// here is an internal inconsistency and kills the connection
+    /// rather than desyncing its stream.
+    fn enqueue(&mut self, out: Outbound) {
+        match response_head(out.version, out.status, out.id, out.payload.len() as u64) {
+            Ok(head) => {
+                if self.wq.is_empty() {
+                    // The stall guard measures from when the queue
+                    // became non-empty, not from the last frame ages
+                    // ago.
+                    self.last_progress = Instant::now();
+                }
+                self.wq.push_back(PendingWrite {
+                    head,
+                    payload: out.payload,
+                    charge: out.charge,
+                    dm: out.obs,
+                    t0: None,
+                });
+            }
+            Err(_) => {
+                if let Some(dm) = out.obs {
+                    dm.inflight.dec();
+                }
+                self.dead = true;
+            }
+        }
+    }
+
+    fn enqueue_reply(&mut self, version: u16, id: u64, status: Status, payload: Vec<u8>) {
+        self.enqueue(Outbound {
+            id,
+            status,
+            version,
+            payload: Payload::Owned(payload),
+            charge: 0,
+            obs: None,
+        });
+    }
+}
+
+/// Everything the loop needs, bundled so the per-frame path isn't a
+/// dozen-argument function.
+pub(crate) struct NetLoop {
+    pub listener: TcpListener,
+    pub registry: Arc<Registry>,
+    pub cache: Arc<ChunkCache>,
+    pub submission: Vec<Arc<Ring<Job>>>,
+    pub completion: Vec<Arc<Ring<Completion>>>,
+    pub waker: Arc<Waker>,
+    pub shutdown: Arc<AtomicBool>,
+    pub config: DaemonConfig,
+    pub obs: Obs,
+}
+
+pub(crate) fn run(nl: NetLoop) {
+    let mut slots: Vec<Option<Conn>> = Vec::new();
+    let mut next_gen: u32 = 1;
+    let mut draining_all = false;
+    let mut pollfds: Vec<PollFd> = Vec::new();
+    // Slot index behind each conn pollfd (parallel to `pollfds[base..]`).
+    let mut poll_slots: Vec<usize> = Vec::new();
+    loop {
+        if !draining_all && nl.shutdown.load(Ordering::SeqCst) {
+            draining_all = true;
+            // Stop admitting: workers drain what's queued, then exit.
+            for r in &nl.submission {
+                r.close();
+            }
+            for c in slots.iter_mut().flatten() {
+                c.draining = true;
+            }
+        }
+        if draining_all && slots.iter().all(Option::is_none) {
+            break;
+        }
+
+        pollfds.clear();
+        poll_slots.clear();
+        let listen_at = if draining_all {
+            None
+        } else {
+            pollfds.push(PollFd::new(nl.listener.as_raw_fd(), sys::POLLIN));
+            Some(pollfds.len() - 1)
+        };
+        pollfds.push(PollFd::new(nl.waker.fd(), sys::POLLIN));
+        let waker_at = pollfds.len() - 1;
+        let base = pollfds.len();
+        for (idx, slot) in slots.iter().enumerate() {
+            if let Some(c) = slot {
+                let mut events = 0i16;
+                if !c.draining {
+                    events |= sys::POLLIN;
+                }
+                if !c.wq.is_empty() {
+                    events |= sys::POLLOUT;
+                }
+                // events == 0 is legal: POLLERR/POLLHUP/POLLNVAL are
+                // always reported, which is exactly what a draining
+                // connection with an empty queue still cares about.
+                pollfds.push(PollFd::new(c.stream.as_raw_fd(), events));
+                poll_slots.push(idx);
+            }
+        }
+
+        let n_ready = match sys::poll_fds(&mut pollfds, nl.config.poll_interval) {
+            Ok(n) => n,
+            Err(_) => {
+                // poll itself failing (e.g. transient ENOMEM) must not
+                // spin the loop hot.
+                thread::sleep(Duration::from_millis(1));
+                0
+            }
+        };
+        // Iteration-processing clock: only iterations with ready
+        // events are recorded — idle 50 ms ticks would drown the
+        // signal the net_loop histogram exists for.
+        let t_iter = if n_ready > 0 { now_if_enabled() } else { None };
+        if pollfds[waker_at].ready() {
+            nl.waker.drain();
+        }
+
+        // 1. Readable connections: frames → admit → rings / replies.
+        for (pi, &idx) in poll_slots.iter().enumerate() {
+            let pf = pollfds[base + pi];
+            if !pf.ready() {
+                continue;
+            }
+            let Some(conn) = slots[idx].as_mut() else { continue };
+            if pf.failed() {
+                conn.dead = true;
+                continue;
+            }
+            if pf.readable() && !conn.draining {
+                read_conn(&nl, conn, idx);
+            }
+        }
+
+        // 2. Shard completions → per-connection write queues.
+        drain_completions(&nl, &mut slots);
+
+        // 3. Flush everything with bytes pending, straight away: a
+        //    response queued this iteration usually fits the socket
+        //    buffer, so it goes out now instead of waiting one poll
+        //    round for POLLOUT.
+        for slot in slots.iter_mut() {
+            if let Some(conn) = slot {
+                if !conn.dead && !conn.wq.is_empty() && flush_conn(conn).is_err() {
+                    conn.dead = true;
+                }
+            }
+        }
+
+        // 4. Accept (after processing, so the open-connection count the
+        //    cap check sees is current).
+        if let Some(li) = listen_at {
+            if pollfds[li].ready() {
+                accept_ready(&nl, &mut slots, &mut next_gen);
+            }
+        }
+
+        // 5. Reap.
+        for slot in slots.iter_mut() {
+            let done = match slot {
+                Some(c) => {
+                    let stalled = !c.wq.is_empty()
+                        && c.last_progress.elapsed() > nl.config.write_timeout;
+                    c.dead || stalled || (c.draining && c.outstanding == 0 && c.wq.is_empty())
+                }
+                None => false,
+            };
+            if done {
+                close_conn(slot, &nl.obs);
+            }
+        }
+
+        if let Some(t0) = t_iter {
+            nl.obs.metrics.net().net_loop_us.record(t0.elapsed());
+        }
+    }
+    // All connections are gone; unblock any worker still pushing a
+    // completion for one of them. A push on a closed ring hands the
+    // completion back and the worker drops it — the ring analogue of
+    // `let _ = tx.send(..)` on a disconnected channel. Completions that
+    // made it in before the close are drained here so their in-flight
+    // gauge charges are released rather than dropped silently.
+    for r in &nl.completion {
+        r.close();
+        while let Some(comp) = r.try_pop() {
+            nl.obs.metrics.net().completion_ring_depth.dec();
+            if let Some(dm) = comp.out.obs {
+                dm.inflight.dec();
+            }
+        }
+    }
+}
+
+fn accept_ready(nl: &NetLoop, slots: &mut Vec<Option<Conn>>, next_gen: &mut u32) {
+    loop {
+        match nl.listener.accept() {
+            Ok((stream, _peer)) => {
+                let open = slots.iter().filter(|s| s.is_some()).count();
+                if open >= nl.config.max_connections.max(1) {
+                    // Hard cap, same policy as the threaded accept
+                    // loop: refuse (close) rather than accumulate.
+                    drop(stream);
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                // Header and payload are separate writes on the slow
+                // (non-vectored resume) path: NODELAY, as everywhere
+                // else in the daemon.
+                let _ = stream.set_nodelay(true);
+                let gen = *next_gen;
+                *next_gen = next_gen.wrapping_add(1);
+                let conn = Conn {
+                    stream,
+                    gen,
+                    reader: FrameReader::for_requests(),
+                    wq: VecDeque::new(),
+                    written: 0,
+                    outstanding: 0,
+                    bytes: 0,
+                    draining: false,
+                    dead: false,
+                    last_progress: Instant::now(),
+                };
+                match slots.iter_mut().position(Option::is_none) {
+                    Some(i) => slots[i] = Some(conn),
+                    None => slots.push(Some(conn)),
+                }
+                nl.obs.metrics.net().connections_open.inc();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Pull every frame currently buffered on a readable connection. The
+/// kernel's receive buffer bounds how much one call can consume, and
+/// the hard cap bounds how many responses it can queue, so one noisy
+/// connection cannot monopolize an iteration.
+fn read_conn(nl: &NetLoop, conn: &mut Conn, idx: usize) {
+    loop {
+        match conn.reader.poll(&mut conn.stream) {
+            Ok(ReadEvent::WouldBlock) => break,
+            Ok(ReadEvent::Eof) => {
+                // Mirror the threaded reader's EOF path: stop reading,
+                // flush everything already admitted, then close.
+                conn.draining = true;
+                break;
+            }
+            Ok(ReadEvent::Frame(body)) => {
+                if !handle_frame(nl, conn, idx, body) {
+                    conn.draining = true;
+                    break;
+                }
+            }
+            Err(e) => {
+                // Broken framing (oversized prefix, mid-frame close) is
+                // the client's fault; anything else is transport. Same
+                // classification as the threaded reader.
+                let status = match &e {
+                    Error::Corrupt(_) => Status::BadRequest,
+                    _ => Status::Internal,
+                };
+                conn.outstanding += 1;
+                conn.enqueue_reply(WIRE_VERSION, 0, status, e.to_string().into_bytes());
+                conn.draining = true;
+                break;
+            }
+        }
+    }
+}
+
+/// One decoded frame through the shared admission path. Returns false
+/// when the connection must start draining (shutdown frame, hard cap,
+/// or protocol error).
+fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> bool {
+    let (req, version) = match decode_request_versioned(&body) {
+        Ok(rv) => rv,
+        Err(e) => {
+            conn.outstanding += 1;
+            let id = request_id_hint(&body);
+            let version = request_version_hint(&body);
+            conn.enqueue_reply(version, id, Status::BadRequest, e.to_string().into_bytes());
+            return false;
+        }
+    };
+    // Charge the (single) response up front, exactly like the threaded
+    // reader's `inflight.fetch_add`.
+    let outstanding = conn.outstanding;
+    conn.outstanding += 1;
+    if outstanding >= conn_hard_cap(&nl.config) && !matches!(req, WireRequest::Shutdown { .. }) {
+        // Pipelining without reading even small responses: close
+        // (the uncharged response is returned), flushing what's queued.
+        conn.outstanding -= 1;
+        return false;
+    }
+    match admit(
+        req,
+        version,
+        &nl.registry,
+        &nl.cache,
+        nl.submission.len(),
+        outstanding,
+        conn.bytes,
+        &nl.shutdown,
+        &nl.config,
+        &nl.obs,
+    ) {
+        Admit::Shutdown { id, payload } => {
+            conn.enqueue_reply(version, id, Status::Ok, payload);
+            nl.shutdown.store(true, Ordering::SeqCst);
+            false
+        }
+        Admit::Reply { id, status, payload } => {
+            conn.enqueue_reply(version, id, status, payload);
+            true
+        }
+        Admit::Enqueue(spec) => {
+            let si = spec.si;
+            let t_adm = spec.t_adm;
+            let dm = spec.dm.clone();
+            conn.bytes = conn.bytes.saturating_add(spec.charge);
+            let job = Job {
+                req: spec.req,
+                reply: ReplySink::Ring {
+                    token: conn.token(idx),
+                    ring: Arc::clone(&nl.completion[si]),
+                    waker: Arc::clone(&nl.waker),
+                },
+                received: spec.received,
+                charge: spec.charge,
+                deadline: spec.deadline,
+                version: spec.version,
+                dm: spec.dm,
+            };
+            // Gauge before push: `Gauge::dec` saturates at zero, so the
+            // inc must be visible before the shard worker's pop-side
+            // dec can possibly run.
+            nl.obs.metrics.net().submission_ring_depth.inc();
+            match nl.submission[si].try_push(job) {
+                Ok(()) => {
+                    if let (Some(t0), Some(m)) = (t_adm, &dm) {
+                        m.requests.inc();
+                        m.inflight.inc();
+                        m.stage(Stage::Admission).record(t0.elapsed());
+                    }
+                }
+                Err(PushError::Full(job)) => {
+                    // The ring-full Busy site — byte-for-byte the
+                    // threaded model's `TrySendError::Full` arm.
+                    nl.obs.metrics.net().submission_ring_depth.dec();
+                    conn.bytes = conn.bytes.saturating_sub(job.charge);
+                    if let Some(m) = &dm {
+                        m.busy.inc();
+                    }
+                    conn.enqueue_reply(
+                        job.version,
+                        job.req.id,
+                        Status::Busy,
+                        format!("shard {si} queue at admission limit").into_bytes(),
+                    );
+                }
+                Err(PushError::Closed(job)) => {
+                    nl.obs.metrics.net().submission_ring_depth.dec();
+                    conn.bytes = conn.bytes.saturating_sub(job.charge);
+                    conn.enqueue_reply(
+                        job.version,
+                        job.req.id,
+                        Status::ShuttingDown,
+                        b"daemon is shutting down".to_vec(),
+                    );
+                }
+            }
+            true
+        }
+    }
+}
+
+fn drain_completions(nl: &NetLoop, slots: &mut [Option<Conn>]) {
+    for ring in &nl.completion {
+        while let Some(comp) = ring.try_pop() {
+            nl.obs.metrics.net().completion_ring_depth.dec();
+            let idx = (comp.token & u32::MAX as u64) as usize;
+            let gen = (comp.token >> 32) as u32;
+            match slots.get_mut(idx).and_then(Option::as_mut) {
+                Some(conn) if conn.gen == gen => conn.enqueue(comp.out),
+                // The connection closed while its request decoded: the
+                // response has nowhere to go; release the in-flight
+                // gauge it charged at admission.
+                _ => {
+                    if let Some(dm) = comp.out.obs {
+                        dm.inflight.dec();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Write queued frames until the socket would block. The front frame's
+/// progress lives in `conn.written`, a cursor across the 28-byte head
+/// plus the payload: while any head bytes remain, head tail + payload
+/// go out as one vectored write; once the head is down, the payload
+/// remainder is written directly from the (possibly shared) buffer.
+fn flush_conn(conn: &mut Conn) -> io::Result<()> {
+    loop {
+        let total = {
+            let Some(front) = conn.wq.front_mut() else { return Ok(()) };
+            if front.t0.is_none() && front.dm.is_some() {
+                front.t0 = now_if_enabled();
+            }
+            HEAD_LEN + front.payload.len()
+        };
+        while conn.written < total {
+            let res = {
+                let front = conn.wq.front().expect("checked above");
+                let payload = front.payload.as_slice();
+                if conn.written < HEAD_LEN {
+                    let bufs =
+                        [IoSlice::new(&front.head[conn.written..]), IoSlice::new(payload)];
+                    conn.stream.write_vectored(&bufs)
+                } else {
+                    conn.stream.write(&payload[conn.written - HEAD_LEN..])
+                }
+            };
+            match res {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ));
+                }
+                Ok(n) => {
+                    conn.written += n;
+                    conn.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        let pw = conn.wq.pop_front().expect("frame just completed");
+        conn.written = 0;
+        if let Some(dm) = &pw.dm {
+            if let Some(t0) = pw.t0 {
+                dm.stage(Stage::ResponseWrite).record(t0.elapsed());
+            }
+            // Balanced against the inc at admission, same point in the
+            // response lifecycle as the threaded writer.
+            dm.inflight.dec();
+        }
+        conn.outstanding = conn.outstanding.saturating_sub(1);
+        conn.bytes = conn.bytes.saturating_sub(pw.charge);
+    }
+}
+
+/// Drop a connection and release everything it still holds: queued
+/// responses return their in-flight gauge charges (their byte charges
+/// die with the connection state), and the open-connections gauge
+/// steps down.
+fn close_conn(slot: &mut Option<Conn>, obs: &Obs) {
+    if let Some(conn) = slot.take() {
+        for pw in conn.wq {
+            if let Some(dm) = pw.dm {
+                dm.inflight.dec();
+            }
+        }
+        obs.metrics.net().connections_open.dec();
+    }
+}

@@ -1,0 +1,28 @@
+//! Event-driven network front (unix-only): nonblocking sockets behind
+//! a single poll-based event loop, decoupled from the shard decode
+//! pool by fixed-size submission/completion rings (DESIGN.md §11).
+//!
+//! The threaded front spends two OS threads per connection; CODAG's
+//! answer to many independent streams is one small scheduler
+//! multiplexing all of them. This module is that scheduler, built
+//! std-only in three layers:
+//!
+//! * [`sys`] — minimal FFI shim over `poll(2)` (`repr(C)` pollfd +
+//!   event-bit helpers); the only platform code, kept inside this
+//!   module.
+//! * [`ring`] — bounded lock-light SPSC rings carrying admitted jobs
+//!   to shard workers and finished responses back; `Full` on push is
+//!   the evented `Busy` site, preserving the threaded backpressure
+//!   contract bit-for-bit.
+//! * [`event_loop`] — the loop itself: owns every connection socket,
+//!   drives the incremental `FrameReader` on readable events, and
+//!   flushes responses as one vectored write of a stack-built header
+//!   plus the (possibly cache-shared) payload, with partial-write
+//!   resumption for slow readers.
+
+pub mod event_loop;
+pub mod ring;
+pub mod sys;
+
+pub use event_loop::Waker;
+pub(crate) use event_loop::{run as net_loop, NetLoop};

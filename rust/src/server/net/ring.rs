@@ -1,0 +1,327 @@
+//! Fixed-size submission/completion rings between the net loop and the
+//! shard decode workers (DESIGN.md §11).
+//!
+//! Each ring is strictly SPSC — exactly one producer thread and one
+//! consumer thread, which is what the daemon wiring guarantees: the net
+//! loop is the sole producer of every submission ring and the sole
+//! consumer of every completion ring; each shard thread is the sole
+//! consumer of its submission ring and sole producer of its completion
+//! ring. Under that discipline the hot path is lock-light: capacity
+//! checks are two atomic loads on monotonic head/tail counters, and the
+//! per-slot `Mutex<Option<T>>` is only ever taken uncontended (it
+//! exists to make the value hand-off safe without `unsafe` cells, and
+//! turns any accidental discipline violation into a stall rather than
+//! undefined behavior).
+//!
+//! Backpressure and shutdown semantics mirror the bounded
+//! `mpsc::sync_channel` the threaded net model uses, so the daemon's
+//! admission contract is preserved verbatim:
+//!
+//! * [`Ring::try_push`] on a full ring returns [`PushError::Full`] —
+//!   the net loop's `Busy` site, exactly like `try_send`.
+//! * [`Ring::close`] + drain: a closed ring keeps yielding queued items
+//!   until empty, then [`Pop::Closed`] — like senders dropping on a
+//!   `sync_channel`, so admitted work is never lost at shutdown.
+//! * [`Ring::push_blocking`] parks until space or close — the shard
+//!   side of completion delivery, like the blocking `Sender::send`.
+
+use std::sync::atomic::{
+    AtomicBool, AtomicUsize,
+    Ordering::{Acquire, Release},
+};
+use std::sync::Mutex;
+use std::thread::{self, Thread};
+use std::time::Duration;
+
+/// Why a [`Ring::try_push`] was refused; the value comes back in both
+/// cases so the caller can answer `Busy`/`ShuttingDown` with it.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The ring is at capacity (the admission-limit `Busy` site).
+    Full(T),
+    /// The ring was closed; no more items will ever be accepted.
+    Closed(T),
+}
+
+/// Outcome of a [`Ring::pop_timeout`].
+#[derive(Debug)]
+pub enum Pop<T> {
+    Item(T),
+    Timeout,
+    /// Closed *and* fully drained (queued items are always delivered
+    /// before this is reported).
+    Closed,
+}
+
+/// Bounded SPSC ring. See the module docs for the ownership discipline.
+#[derive(Debug)]
+pub struct Ring<T> {
+    slots: Vec<Mutex<Option<T>>>,
+    /// Monotonic pop count; `head % slots.len()` is the next slot out.
+    head: AtomicUsize,
+    /// Monotonic push count; `tail % slots.len()` is the next slot in.
+    tail: AtomicUsize,
+    closed: AtomicBool,
+    /// Parked consumer waiting for an item (at most one — SPSC).
+    pop_waiter: Mutex<Option<Thread>>,
+    /// Parked producer waiting for space (at most one — SPSC).
+    push_waiter: Mutex<Option<Thread>>,
+}
+
+/// Backstop park bound: waiters also re-check their condition at this
+/// interval, so a lost wakeup can only ever cost one short nap, never a
+/// hang.
+const PARK_BACKSTOP: Duration = Duration::from_millis(50);
+
+impl<T> Ring<T> {
+    pub fn new(capacity: usize) -> Ring<T> {
+        let capacity = capacity.max(1);
+        Ring {
+            slots: (0..capacity).map(|_| Mutex::new(None)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            pop_waiter: Mutex::new(None),
+            push_waiter: Mutex::new(None),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Queued items right now (approximate under concurrency; exact
+    /// from either endpoint thread). Feeds the ring-depth gauges.
+    pub fn len(&self) -> usize {
+        self.tail.load(Acquire).wrapping_sub(self.head.load(Acquire))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Acquire)
+    }
+
+    /// Non-blocking push (producer thread only).
+    pub fn try_push(&self, value: T) -> Result<(), PushError<T>> {
+        if self.closed.load(Acquire) {
+            return Err(PushError::Closed(value));
+        }
+        let head = self.head.load(Acquire);
+        let tail = self.tail.load(Acquire);
+        if tail.wrapping_sub(head) >= self.slots.len() {
+            return Err(PushError::Full(value));
+        }
+        *self.slots[tail % self.slots.len()].lock().unwrap() = Some(value);
+        // Publish after the slot is filled: the consumer acquires
+        // `tail` and can then safely take the slot.
+        self.tail.store(tail.wrapping_add(1), Release);
+        Self::wake(&self.pop_waiter);
+        Ok(())
+    }
+
+    /// Blocking push (producer thread only): parks until space frees up
+    /// or the ring closes; `Err(value)` on close.
+    pub fn push_blocking(&self, value: T) -> Result<(), T> {
+        let mut value = value;
+        loop {
+            match self.try_push(value) {
+                Ok(()) => return Ok(()),
+                Err(PushError::Closed(v)) => return Err(v),
+                Err(PushError::Full(v)) => value = v,
+            }
+            *self.push_waiter.lock().unwrap() = Some(thread::current());
+            // Re-check between registration and park: a pop (or close)
+            // landing in that window already consumed our wakeup.
+            if self.len() < self.slots.len() || self.closed.load(Acquire) {
+                self.push_waiter.lock().unwrap().take();
+                continue;
+            }
+            thread::park_timeout(PARK_BACKSTOP);
+            self.push_waiter.lock().unwrap().take();
+        }
+    }
+
+    /// Non-blocking pop (consumer thread only). Keeps yielding queued
+    /// items after close until the ring is drained.
+    pub fn try_pop(&self) -> Option<T> {
+        let head = self.head.load(Acquire);
+        let tail = self.tail.load(Acquire);
+        if head == tail {
+            return None;
+        }
+        let value = self.slots[head % self.slots.len()].lock().unwrap().take();
+        debug_assert!(value.is_some(), "SPSC discipline violated: empty published slot");
+        self.head.store(head.wrapping_add(1), Release);
+        Self::wake(&self.push_waiter);
+        value
+    }
+
+    /// Pop with a bounded wait (consumer thread only): an item if one
+    /// arrives within `timeout`, [`Pop::Closed`] only once the ring is
+    /// closed *and* drained.
+    pub fn pop_timeout(&self, timeout: Duration) -> Pop<T> {
+        if let Some(v) = self.try_pop() {
+            return Pop::Item(v);
+        }
+        if self.closed.load(Acquire) {
+            // One more look: a final push may have raced the close.
+            return match self.try_pop() {
+                Some(v) => Pop::Item(v),
+                None => Pop::Closed,
+            };
+        }
+        *self.pop_waiter.lock().unwrap() = Some(thread::current());
+        // Same lost-wakeup window as push_blocking: re-check after
+        // registering, then park.
+        if self.is_empty() && !self.closed.load(Acquire) {
+            thread::park_timeout(timeout.min(PARK_BACKSTOP));
+        }
+        self.pop_waiter.lock().unwrap().take();
+        match self.try_pop() {
+            Some(v) => Pop::Item(v),
+            None if self.closed.load(Acquire) => Pop::Closed,
+            None => Pop::Timeout,
+        }
+    }
+
+    /// Close the ring: pushes start failing, queued items stay poppable,
+    /// and both parked sides wake so nobody sleeps through shutdown.
+    pub fn close(&self) {
+        self.closed.store(true, Release);
+        Self::wake(&self.pop_waiter);
+        Self::wake(&self.push_waiter);
+    }
+
+    fn wake(waiter: &Mutex<Option<Thread>>) {
+        if let Some(t) = waiter.lock().unwrap().take() {
+            t.unpark();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_push_pop_and_full() {
+        let r: Ring<u32> = Ring::new(2);
+        assert_eq!(r.capacity(), 2);
+        assert!(r.is_empty());
+        r.try_push(1).unwrap();
+        r.try_push(2).unwrap();
+        assert_eq!(r.len(), 2);
+        match r.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            other => panic!("expected Full(3), got {other:?}"),
+        }
+        assert_eq!(r.try_pop(), Some(1));
+        r.try_push(3).unwrap();
+        assert_eq!(r.try_pop(), Some(2));
+        assert_eq!(r.try_pop(), Some(3));
+        assert_eq!(r.try_pop(), None);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let r: Ring<u8> = Ring::new(0);
+        assert_eq!(r.capacity(), 1);
+        r.try_push(9).unwrap();
+        assert!(matches!(r.try_push(10), Err(PushError::Full(10))));
+    }
+
+    #[test]
+    fn close_drains_queued_items_then_reports_closed() {
+        let r: Ring<u32> = Ring::new(4);
+        r.try_push(1).unwrap();
+        r.try_push(2).unwrap();
+        r.close();
+        assert!(matches!(r.try_push(3), Err(PushError::Closed(3))));
+        // Queued work survives the close — the drain half of graceful
+        // shutdown.
+        assert!(matches!(r.pop_timeout(Duration::from_millis(10)), Pop::Item(1)));
+        assert!(matches!(r.pop_timeout(Duration::from_millis(10)), Pop::Item(2)));
+        assert!(matches!(r.pop_timeout(Duration::from_millis(10)), Pop::Closed));
+    }
+
+    #[test]
+    fn pop_timeout_times_out_when_open_and_empty() {
+        let r: Ring<u32> = Ring::new(1);
+        assert!(matches!(r.pop_timeout(Duration::from_millis(10)), Pop::Timeout));
+    }
+
+    #[test]
+    fn push_blocking_unblocks_when_consumer_pops() {
+        let r: Arc<Ring<u32>> = Arc::new(Ring::new(1));
+        r.try_push(1).unwrap();
+        let producer = {
+            let r = Arc::clone(&r);
+            thread::spawn(move || r.push_blocking(2))
+        };
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(r.try_pop(), Some(1));
+        producer.join().unwrap().unwrap();
+        assert_eq!(r.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn push_blocking_errors_out_on_close() {
+        let r: Arc<Ring<u32>> = Arc::new(Ring::new(1));
+        r.try_push(1).unwrap();
+        let producer = {
+            let r = Arc::clone(&r);
+            thread::spawn(move || r.push_blocking(2))
+        };
+        thread::sleep(Duration::from_millis(20));
+        r.close();
+        assert_eq!(producer.join().unwrap(), Err(2));
+    }
+
+    #[test]
+    fn pop_timeout_wakes_on_push_from_producer_thread() {
+        let r: Arc<Ring<u32>> = Arc::new(Ring::new(4));
+        let consumer = {
+            let r = Arc::clone(&r);
+            thread::spawn(move || {
+                // Generous bound: the wake should land in microseconds.
+                match r.pop_timeout(Duration::from_secs(5)) {
+                    Pop::Item(v) => v,
+                    other => panic!("expected item, got {other:?}"),
+                }
+            })
+        };
+        thread::sleep(Duration::from_millis(20));
+        r.try_push(42).unwrap();
+        assert_eq!(consumer.join().unwrap(), 42);
+    }
+
+    #[test]
+    fn spsc_stress_preserves_order_and_count() {
+        const N: usize = 10_000;
+        let r: Arc<Ring<usize>> = Arc::new(Ring::new(8));
+        let producer = {
+            let r = Arc::clone(&r);
+            thread::spawn(move || {
+                for i in 0..N {
+                    r.push_blocking(i).unwrap();
+                }
+                r.close();
+            })
+        };
+        let mut got = Vec::with_capacity(N);
+        loop {
+            match r.pop_timeout(Duration::from_millis(100)) {
+                Pop::Item(v) => got.push(v),
+                Pop::Timeout => {}
+                Pop::Closed => break,
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(got.len(), N);
+        assert!(got.iter().enumerate().all(|(i, &v)| i == v), "FIFO order");
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal FFI shim over `poll(2)` — the one platform call the evented
+//! front needs beyond what std exposes.
+//!
+//! The crate's no-external-deps discipline rules out the `libc` crate,
+//! but on unix std itself links the platform C library, so declaring
+//! the `poll` symbol here resolves against the exact same library std
+//! already uses. The `pollfd` layout and event bits below are fixed by
+//! POSIX and identical across the unix targets we build for; the only
+//! platform wrinkle is the `nfds_t` width (unsigned long on Linux,
+//! unsigned int elsewhere).
+
+use std::io;
+use std::os::fd::RawFd;
+use std::time::Duration;
+
+/// POSIX `struct pollfd`: `int fd; short events; short revents;`.
+#[repr(C)]
+#[derive(Debug, Clone, Copy)]
+pub struct PollFd {
+    pub fd: RawFd,
+    pub events: i16,
+    pub revents: i16,
+}
+
+/// Data may be read without blocking.
+pub const POLLIN: i16 = 0x001;
+/// Data may be written without blocking.
+pub const POLLOUT: i16 = 0x004;
+/// Error condition (always polled, regardless of `events`).
+pub const POLLERR: i16 = 0x008;
+/// Peer hung up (always polled).
+pub const POLLHUP: i16 = 0x010;
+/// `fd` is not an open descriptor (always polled).
+pub const POLLNVAL: i16 = 0x020;
+
+impl PollFd {
+    pub fn new(fd: RawFd, events: i16) -> PollFd {
+        PollFd { fd, events, revents: 0 }
+    }
+
+    /// The kernel reported any condition at all on this fd.
+    pub fn ready(&self) -> bool {
+        self.revents != 0
+    }
+
+    /// A read will make progress: data, EOF (`POLLHUP` delivers
+    /// buffered bytes then 0), or an error a read will surface.
+    pub fn readable(&self) -> bool {
+        self.revents & (POLLIN | POLLHUP | POLLERR) != 0
+    }
+
+    /// A write will make progress (or surface its error).
+    pub fn writable(&self) -> bool {
+        self.revents & (POLLOUT | POLLERR | POLLHUP) != 0
+    }
+
+    /// The descriptor is unusable; no read/write will recover it.
+    pub fn failed(&self) -> bool {
+        self.revents & (POLLERR | POLLNVAL) != 0
+    }
+}
+
+#[cfg(target_os = "linux")]
+type NfdsT = core::ffi::c_ulong;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = core::ffi::c_uint;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: core::ffi::c_int) -> core::ffi::c_int;
+}
+
+/// Wait until at least one fd in `fds` is ready or `timeout` elapses.
+/// Returns the number of ready fds (0 = timeout). `EINTR` is retried
+/// internally so callers never see a spurious error from a signal.
+pub fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> io::Result<usize> {
+    let ms = i32::try_from(timeout.as_millis()).unwrap_or(i32::MAX);
+    loop {
+        // SAFETY: `PollFd` is `repr(C)` with the POSIX `pollfd` layout;
+        // the pointer and length come from a live mutable slice, and
+        // poll(2) writes only within `fds[..nfds]`.
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let err = io::Error::last_os_error();
+        if err.kind() != io::ErrorKind::Interrupted {
+            return Err(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+    use std::os::fd::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn poll_reports_readable_after_write() {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        // Nothing to read yet: times out with zero ready fds.
+        let n = poll_fds(&mut fds, Duration::from_millis(10)).unwrap();
+        assert_eq!(n, 0);
+        assert!(!fds[0].ready());
+        a.write_all(&[7]).unwrap();
+        fds[0].revents = 0;
+        let n = poll_fds(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].readable());
+        assert!(!fds[0].failed());
+    }
+
+    #[test]
+    fn poll_reports_hup_on_peer_drop() {
+        let (a, b) = UnixStream::pair().unwrap();
+        drop(a);
+        let mut fds = [PollFd::new(b.as_raw_fd(), POLLIN)];
+        let n = poll_fds(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        // Hang-up surfaces as readable (the read then returns 0/EOF).
+        assert!(fds[0].readable());
+    }
+
+    #[test]
+    fn poll_reports_writable_socket() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut fds = [PollFd::new(a.as_raw_fd(), POLLOUT)];
+        let n = poll_fds(&mut fds, Duration::from_millis(1000)).unwrap();
+        assert_eq!(n, 1);
+        assert!(fds[0].writable());
+    }
+}

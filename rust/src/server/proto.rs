@@ -323,7 +323,18 @@ pub fn write_response_versioned(
     resp: &WireResponse,
     version: u16,
 ) -> Result<()> {
-    let body_len = 24u64 + resp.payload.len() as u64;
+    write_response_parts(w, version, resp.status, resp.id, &resp.payload)
+}
+
+/// Build the 28-byte stack head of a response frame: the u32 length
+/// prefix followed by the frozen 24-byte response header. The evented
+/// writer queues this head beside a borrowed payload and issues both as
+/// one vectored write with no assembly buffer (DESIGN.md §11);
+/// [`write_response_versioned`] shares it so both net models emit
+/// byte-identical frames. Errors when the frame would exceed
+/// [`MAX_FRAME_LEN`].
+pub fn response_head(version: u16, status: Status, id: u64, payload_len: u64) -> Result<[u8; 28]> {
+    let body_len = 24u64 + payload_len;
     if body_len > MAX_FRAME_LEN as u64 {
         return Err(invalid(format!("response frame too large ({body_len} bytes)")));
     }
@@ -331,12 +342,28 @@ pub fn write_response_versioned(
     head[0..4].copy_from_slice(&(body_len as u32).to_le_bytes());
     head[4..8].copy_from_slice(&WIRE_MAGIC.to_le_bytes());
     head[8..10].copy_from_slice(&version.to_le_bytes());
-    head[10] = resp.status.as_u8();
+    head[10] = status.as_u8();
     head[11] = 0; // reserved
-    head[12..20].copy_from_slice(&resp.id.to_le_bytes());
-    head[20..28].copy_from_slice(&(resp.payload.len() as u64).to_le_bytes());
+    head[12..20].copy_from_slice(&id.to_le_bytes());
+    head[20..28].copy_from_slice(&payload_len.to_le_bytes());
+    Ok(head)
+}
+
+/// Write one response frame from borrowed parts (head + payload, no
+/// intermediate copy). This is [`write_response_versioned`] without
+/// requiring the payload to live in a `WireResponse`-owned `Vec` — the
+/// threaded writer calls it with `Payload::as_slice()` so shared cache
+/// spans go to the socket uncopied.
+pub fn write_response_parts(
+    w: &mut impl Write,
+    version: u16,
+    status: Status,
+    id: u64,
+    payload: &[u8],
+) -> Result<()> {
+    let head = response_head(version, status, id, payload.len() as u64)?;
     w.write_all(&head)?;
-    w.write_all(&resp.payload)?;
+    w.write_all(payload)?;
     Ok(())
 }
 
@@ -757,6 +784,32 @@ mod tests {
             assert_eq!(&wire[8..10], &version.to_le_bytes());
             assert_eq!(decode_response(&wire[4..]).unwrap(), resp);
         }
+    }
+
+    #[test]
+    fn response_head_matches_framed_encode_response() {
+        // The vectored-write head must be byte-for-byte the first 28
+        // bytes of the classic framed encoding for every status and
+        // both protocol stamps — the evented path reuses frozen bytes,
+        // it does not define new ones.
+        for v in 0..=7u8 {
+            let status = Status::from_u8(v).unwrap();
+            for version in [1u16, 2] {
+                let resp = WireResponse { id: 77, status, payload: vec![v; 13] };
+                let mut framed = Vec::new();
+                framed.extend_from_slice(&(24u32 + 13).to_le_bytes());
+                let mut body = encode_response(&resp);
+                body[4..6].copy_from_slice(&version.to_le_bytes());
+                framed.extend_from_slice(&body);
+                let head = response_head(version, status, 77, 13).unwrap();
+                assert_eq!(&head[..], &framed[..28]);
+                let mut parts = Vec::new();
+                write_response_parts(&mut parts, version, status, 77, &resp.payload).unwrap();
+                assert_eq!(parts, framed);
+            }
+        }
+        // The frame cap still applies at head-build time.
+        assert!(response_head(2, Status::Ok, 1, MAX_FRAME_LEN as u64).is_err());
     }
 
     #[test]

@@ -492,6 +492,15 @@ mod obs_conservation {
             .sum();
         assert_eq!(reqs, total_reqs, "every admitted Get must be counted exactly once");
         assert_eq!(map["codag_request_count"], total_reqs, "request histogram counts Ok replies");
+        // Net-front exposition (§11). The gauges render on every model;
+        // with the load fully acknowledged both rings must have drained
+        // back to empty, and on unix — where the evented front is the
+        // default — the loop must have recorded iterations.
+        assert!(map.contains_key("codag_connections_open"));
+        assert_eq!(map["codag_submission_ring_depth"], 0, "submission rings drain at quiescence");
+        assert_eq!(map["codag_completion_ring_depth"], 0, "completion rings drain at quiescence");
+        #[cfg(unix)]
+        assert!(map["codag_net_loop_count"] > 0, "evented net loop must record iterations");
         for ds in ["alpha", "gamma"] {
             for stage in
                 [Stage::Admission, Stage::QueueWait, Stage::CacheLookup, Stage::ResponseWrite]

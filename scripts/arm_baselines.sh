@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Arm the CI perf gate from a trusted capture — honestly.
+#
+# Usage: scripts/arm_baselines.sh BENCH_baselines.json
+#
+# The committed reference (scripts/baselines_reference.json) ships
+# unarmed: its metrics map is empty, so scripts/check_baselines.py
+# passes with a notice instead of gating. Numbers must never be typed
+# into the reference by hand — the only honest source is a real capture
+# produced by scripts/record_baselines.sh on the machine class CI runs
+# on. The CI baselines job uploads exactly that as the
+# `baselines-candidate` artifact (baselines_reference.candidate.json);
+# download it, inspect it, and feed it here.
+#
+# This helper only wires together the existing mechanics:
+#   1. sanity-checks the capture actually parsed metrics (an empty
+#      capture would arm a gate that can never fail — worse than none),
+#   2. verifies the capture passes against itself (parser round-trip),
+#   3. writes the reference via check_baselines.py --write-reference,
+#   4. reminds you to review and commit the diff.
+set -euo pipefail
+
+if [ $# -ne 1 ]; then
+  sed -n '2,16p' "$0" | sed 's/^# \{0,1\}//'
+  exit 2
+fi
+
+CAPTURE="$1"
+REF="scripts/baselines_reference.json"
+
+python3 - "$CAPTURE" <<'PY'
+import json, sys
+with open(sys.argv[1], encoding="utf-8") as f:
+    doc = json.load(f)
+metrics = doc.get("metrics", {})
+gated = [k for k, m in metrics.items()
+         if m.get("kind") in ("throughput", "model-throughput")]
+if not gated:
+    sys.exit(f"refusing to arm: {sys.argv[1]} has no gateable throughput "
+             "metrics (empty or drifted capture)")
+missing = [k for k in ("date", "commit") if not doc.get(k)]
+if missing:
+    sys.exit(f"refusing to arm: capture lacks provenance fields {missing}")
+print(f"capture ok: {len(gated)} gateable metrics, "
+      f"recorded {doc['date']} at commit {doc['commit']}")
+PY
+
+# Round-trip: the capture must pass the gate against itself before it
+# becomes the thing other runs are judged by.
+python3 scripts/check_baselines.py "$CAPTURE" --reference <(python3 - "$CAPTURE" <<'PY'
+import json, sys
+with open(sys.argv[1], encoding="utf-8") as f:
+    print(json.dumps(json.load(f)))
+PY
+)
+
+python3 scripts/check_baselines.py --write-reference "$CAPTURE" --reference "$REF"
+
+echo
+echo "reference armed. Review and commit it:"
+echo "  git diff $REF"
+echo "  git add $REF && git commit"

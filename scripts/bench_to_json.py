@@ -159,7 +159,35 @@ def parse_ablation(lines, metrics):
             continue
 
 
+def parse_conn_scaling(lines, metrics):
+    """The connection-scaling sweep: `conns=N` marker lines, each
+    followed by one LoadgenReport block (EXPERIMENTS.md §6)."""
+    conns = None
+    for ln in lines:
+        m = re.match(r"conns=(\d+)$", ln.strip())
+        if m:
+            conns = m.group(1)
+            continue
+        if conns is None:
+            continue
+        base = f"conn_scaling/c{conns}"
+        if ln.startswith("requests:"):
+            m = re.search(r"\bok=(\d+)", ln)
+            if m:
+                metrics[f"{base}/ok"] = _metric(int(m.group(1)), "req", "info")
+        elif ln.startswith("latency:"):
+            for pct in ("p50", "p99"):
+                m = re.search(rf"\b{pct}=(\d+)us", ln)
+                if m:
+                    metrics[f"{base}/{pct}_us"] = _metric(int(m.group(1)), "us", "latency")
+        elif ln.startswith("payload:"):
+            m = re.search(r"\(([\d.]+) GB/s\)", ln)
+            if m:
+                metrics[f"{base}/gbps"] = _metric(float(m.group(1)), "GB/s", "throughput")
+
+
 SECTION_PARSERS = [
+    ("## conn scaling", lambda ls, m: parse_conn_scaling(ls, m)),
     ("## codec_hotpath (paper scale", lambda ls, m: parse_codec_hotpath(ls, "paper", m)),
     ("## codec_hotpath", lambda ls, m: parse_codec_hotpath(ls, "default", m)),
     ("## rle_v2 width sweep", lambda ls, m: parse_rle_width_sweep(ls, m)),

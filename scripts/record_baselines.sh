@@ -115,6 +115,37 @@ cargo build --release --benches >&2
   ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --shutdown >/dev/null
   wait "$SERVE_PID" 2>/dev/null || true
   trap - EXIT
+  echo
+  echo '## conn scaling'
+  echo
+  echo '```text'
+  # Connection-scaling sweep (EXPERIMENTS.md §6): a fresh evented
+  # daemon with deep queues (--depth 2048 makes Busy structurally
+  # impossible, so rows measure scheduling, not admission) swept at
+  # 16/64/256/1024 connections. Above 32 connections the loadgen
+  # client multiplexes sockets over a small thread pool; the top row
+  # needs fd headroom on both sides, hence the ulimit bump.
+  ulimit -n 4096 2>/dev/null || true
+  ./target/release/codag serve --port "$PORT" --datasets MC0 --size 8M \
+    --cache 64M --depth 2048 2>/dev/null &
+  SERVE_PID=$!
+  trap 'kill "$SERVE_PID" 2>/dev/null || true' EXIT
+  for i in $(seq 1 50); do
+    if ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+        --connections 1 --requests 1 >/dev/null 2>&1; then
+      break
+    fi
+    sleep 0.2
+  done
+  for N in 16 64 256 1024; do
+    echo "conns=$N"
+    ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --dataset MC0 \
+      --connections "$N" --requests 32 --pipeline 4 --maxlen 64K
+  done
+  echo '```'
+  ./target/release/codag loadgen --addr "127.0.0.1:$PORT" --shutdown >/dev/null
+  wait "$SERVE_PID" 2>/dev/null || true
+  trap - EXIT
 } > "$OUT"
 
 echo "baselines written to $OUT" >&2
