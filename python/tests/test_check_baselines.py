@@ -118,6 +118,7 @@ SAMPLE_CAPTURE = """# Baseline capture
 dataset  codec        ratio  dec-1thr GB/s  dec-8thr GB/s    comp MB/s
 MC0      rlev1       0.0518         11.914         38.102        310.5
 MC0      deflate     0.0217          1.011          5.704         55.2
+MC0      lzss        0.1103          2.412          9.820        120.4
 ```
 
 ## rle_v2 width sweep
@@ -196,6 +197,12 @@ def test_bench_to_json_parses_all_sections():
     assert m["codec_hotpath/default/MC0/rlev1/dec1_gbps"]["value"] == 11.914
     assert m["codec_hotpath/default/MC0/rlev1/dec1_gbps"]["kind"] == "throughput"
     assert m["codec_hotpath/default/MC0/deflate/dec8_gbps"]["value"] == 5.704
+    # LZSS rows (wire id 4, registry-driven `CodecKind::all()` loop in
+    # the hotpath bench) flow through the same parser untouched.
+    assert m["codec_hotpath/default/MC0/lzss/dec1_gbps"]["value"] == 2.412
+    assert m["codec_hotpath/default/MC0/lzss/dec1_gbps"]["kind"] == "throughput"
+    assert m["codec_hotpath/default/MC0/lzss/ratio"]["value"] == 0.1103
+    assert m["codec_hotpath/default/MC0/lzss/comp_mbps"]["value"] == 120.4
     assert m["fig7/default/MC0/rlev1/codag_gbps"]["value"] == 41.20
     assert m["fig7/default/MC0/rlev1/codag_gbps"]["kind"] == "model-throughput"
     assert m["fig7/default/geomean/rlev1/codag_gbps"]["value"] == 30.00

@@ -78,8 +78,14 @@ pub fn paper_table5_ratio(d: crate::data::Dataset, kind: CodecKind) -> f64 {
         (Hrg, CodecKind::RleV1) => 0.975,
         (Hrg, CodecKind::RleV2) => 0.972,
         (Hrg, CodecKind::Deflate) => 0.305,
+        // Codecs the paper did not evaluate (LZSS) have no reference
+        // column; NaN renders as "-" in the side-by-side.
+        _ => f64::NAN,
     }
 }
+
+/// The three codecs the paper's Table V evaluates, in column order.
+const PAPER_CODECS: [CodecKind; 3] = [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate];
 
 /// One Table V row: measured ratios + avg symbol lengths vs paper.
 #[derive(Debug, Clone)]
@@ -88,6 +94,9 @@ pub struct Table5Row {
     pub dataset: &'static str,
     /// (measured, paper) ratio per codec in [v1, v2, deflate] order.
     pub ratios: [(f64, f64); 3],
+    /// Measured LZSS ratio (no paper reference: LZSS is this repo's
+    /// GPULZ-style addition, not a paper Table V column).
+    pub ratio_lzss: f64,
     /// Average symbol length (elements) for RLE v1 and Deflate.
     pub sym_len_v1: f64,
     /// Average symbol length (bytes) for Deflate.
@@ -99,7 +108,7 @@ pub fn table5_rows(workloads: &[Workload]) -> Result<Vec<Table5Row>> {
     let mut rows = Vec::new();
     for w in workloads {
         let mut ratios = [(0.0, 0.0); 3];
-        for (i, kind) in CodecKind::all().into_iter().enumerate() {
+        for (i, kind) in PAPER_CODECS.into_iter().enumerate() {
             ratios[i] = (w.ratio(kind), paper_table5_ratio(w.dataset, kind));
         }
         // Avg symbol length over the first few chunks (stable enough).
@@ -115,6 +124,7 @@ pub fn table5_rows(workloads: &[Workload]) -> Result<Vec<Table5Row>> {
         rows.push(Table5Row {
             dataset: w.dataset.name(),
             ratios,
+            ratio_lzss: w.ratio(CodecKind::Lzss),
             sym_len_v1: sym(CodecKind::RleV1)?,
             sym_len_deflate: sym(CodecKind::Deflate)?,
         });
@@ -125,12 +135,13 @@ pub fn table5_rows(workloads: &[Workload]) -> Result<Vec<Table5Row>> {
 /// Render Table V.
 pub fn table5(workloads: &[Workload]) -> Result<String> {
     let rows = table5_rows(workloads)?;
-    let widths = [8usize, 16, 16, 16, 12, 12];
+    let widths = [8usize, 16, 16, 16, 10, 12, 12];
     let mut s = String::from(
         "Table V — Compression ratios (measured | paper) and avg symbol length\n",
     );
     s.push_str(&fmt_row(
-        &["Dataset", "RLEv1", "RLEv2", "Deflate", "SymV1", "SymDefl"].map(String::from),
+        &["Dataset", "RLEv1", "RLEv2", "Deflate", "LZSS", "SymV1", "SymDefl"]
+            .map(String::from),
         &widths,
     ));
     s.push('\n');
@@ -141,6 +152,7 @@ pub fn table5(workloads: &[Workload]) -> Result<String> {
                 format!("{:.3}|{:.3}", r.ratios[0].0, r.ratios[0].1),
                 format!("{:.3}|{:.3}", r.ratios[1].0, r.ratios[1].1),
                 format!("{:.3}|{:.3}", r.ratios[2].0, r.ratios[2].1),
+                format!("{:.3}|-", r.ratio_lzss),
                 format!("{:.1}", r.sym_len_v1),
                 format!("{:.1}", r.sym_len_deflate),
             ],

@@ -110,7 +110,7 @@ fn read_dynamic_tables(r: &mut LsbBitReader<'_>) -> Result<(HuffmanDecoder, Huff
 }
 
 /// Inflate one DEFLATE bit stream into `out`.
-pub fn inflate<O: OutputStream>(data: &[u8], out: &mut O) -> Result<()> {
+pub fn inflate<O: OutputStream + ?Sized>(data: &[u8], out: &mut O) -> Result<()> {
     let mut r = LsbBitReader::new(data);
     loop {
         let bfinal = r.fetch_bits(1)?;
@@ -157,7 +157,7 @@ pub fn inflate<O: OutputStream>(data: &[u8], out: &mut O) -> Result<()> {
 /// stream ends. Without this, one BFINAL bit flip would truncate serial
 /// output while every bounded sub-block still decoded cleanly (the
 /// differential contract of DESIGN.md §7.5 forbids that divergence).
-pub fn inflate_sub_block<O: OutputStream>(
+pub fn inflate_sub_block<O: OutputStream + ?Sized>(
     data: &[u8],
     bit_pos: u64,
     expect: usize,
@@ -207,7 +207,7 @@ pub fn inflate_sub_block<O: OutputStream>(
     }
 }
 
-fn inflate_stored<O: OutputStream>(r: &mut LsbBitReader<'_>, out: &mut O) -> Result<()> {
+fn inflate_stored<O: OutputStream + ?Sized>(r: &mut LsbBitReader<'_>, out: &mut O) -> Result<()> {
     r.align_byte();
     let len = r.fetch_bits(16)? as usize;
     let nlen = r.fetch_bits(16)? as usize;
@@ -233,7 +233,7 @@ fn extra_mask(n: u32) -> u64 {
     (1u64 << n) - 1
 }
 
-fn inflate_block<O: OutputStream>(
+fn inflate_block<O: OutputStream + ?Sized>(
     r: &mut LsbBitReader<'_>,
     lit: &HuffmanDecoder,
     dist: &HuffmanDecoder,

@@ -14,9 +14,60 @@ pub mod zlib;
 
 pub use inflate::inflate_sub_block;
 
-use crate::codecs::RestartPoint;
-use crate::decomp::{InputStream, OutputStream};
-use crate::Result;
+use crate::codecs::{Codec, RestartPoint};
+use crate::decomp::{InputStream, OutputStream, SliceSink};
+use crate::{corrupt, Result};
+
+/// The registry entry for DEFLATE (wire id 3).
+pub struct DeflateCodec;
+
+impl Codec for DeflateCodec {
+    fn name(&self) -> &'static str {
+        "deflate"
+    }
+    fn wire_id(&self) -> u32 {
+        3
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["zlib"]
+    }
+    fn block_width(&self) -> u32 {
+        128
+    }
+    fn compress(&self, chunk: &[u8], _width: u8) -> Result<Vec<u8>> {
+        compress(chunk)
+    }
+    fn compress_with_restarts(
+        &self,
+        chunk: &[u8],
+        _width: u8,
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+        compress_with_restarts(chunk, interval)
+    }
+    fn decompress_into(&self, comp: &[u8], out: &mut dyn OutputStream) -> Result<()> {
+        let mut input = InputStream::new(comp);
+        decode(&mut input, out)
+    }
+    fn decode_sub_block(
+        &self,
+        comp: &[u8],
+        bit_pos: u64,
+        terminal: bool,
+        out: &mut [u8],
+    ) -> Result<u64> {
+        let expect = out.len() as u64;
+        let mut sink = SliceSink::new(out);
+        let end = inflate_sub_block(comp, bit_pos, expect, terminal, &mut sink)?;
+        if sink.bytes_written() != expect {
+            return Err(corrupt(format!(
+                "sub-block produced {} bytes, expected {expect}",
+                sink.bytes_written()
+            )));
+        }
+        Ok(end)
+    }
+}
 
 /// Compress a chunk into a raw DEFLATE stream.
 pub fn compress(chunk: &[u8]) -> Result<Vec<u8>> {
@@ -33,7 +84,7 @@ pub fn compress_with_restarts(
 }
 
 /// Decode a DEFLATE chunk into `out`.
-pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+pub fn decode<O: OutputStream + ?Sized>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     // The bit reader borrows from the input's current position; DEFLATE
     // consumes the whole chunk.
     let data = input.fetch_bytes(input.remaining())?;

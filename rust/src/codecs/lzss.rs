@@ -1,0 +1,510 @@
+//! LZSS byte-match compression (wire id 4).
+//!
+//! The GPULZ-style (arXiv 2304.07342) workload class the RLE codecs
+//! lose on: text and binary data with multi-byte repeats but few literal
+//! element runs. The decode loop maps directly onto the batched CODAG
+//! sinks — literal runs are one `write_slice`, matches are one `memcpy`
+//! resolved by the doubling `extend_from_within` path (DESIGN.md §7.2).
+//!
+//! ## Chunk payload format
+//!
+//! Header: `uvarint n` (uncompressed byte length), then `uvarint seg`
+//! (segment size; `0` = one segment covering the whole chunk). The body
+//! is a sequence of *segments*, each producing exactly
+//! `min(seg, remaining)` bytes. A segment is a sequence of flag-grouped
+//! tokens:
+//!
+//! * one **flag byte**, LSB-first: bit *i* describes token *i* of the
+//!   group (`1` = match, `0` = literal run); a group holds up to 8
+//!   tokens and a fresh group starts at every segment boundary;
+//! * **literal run**: `uvarint len` (≥ 1) followed by `len` raw bytes;
+//! * **match**: `uvarint len` (≥ [`MIN_MATCH`]) then `uvarint dist`
+//!   (≥ 1); copies `len` bytes starting `dist` bytes back, `len > dist`
+//!   wraps (overlapping run, Algorithm 2's special case).
+//!
+//! A group is cut short only by the end of its segment, and the unused
+//! high flag bits must be zero (checked — they'd otherwise be dead bits
+//! under the corruption sweeps). Matches never reference output before
+//! their segment, so every segment boundary is a valid container-v2
+//! restart point: the stitch worker decodes into a disjoint slice that
+//! starts at the boundary ([`SliceSink`] cannot reach further back).
+
+use crate::codecs::{Codec, RestartPoint, RestartRec};
+use crate::decomp::{InputStream, OutputStream, SliceSink, SymbolKind};
+use crate::format::varint::write_uvarint;
+use crate::{corrupt, Result};
+
+/// Minimum encodable match length (shorter repeats ship as literals).
+pub const MIN_MATCH: usize = 4;
+
+/// Hash-table bits for the encoder's 4-byte-prefix match finder.
+const HASH_BITS: u32 = 15;
+
+/// Sentinel for an empty match-finder slot.
+const EMPTY: usize = usize::MAX;
+
+/// The registry entry for LZSS (wire id 4).
+pub struct LzssCodec;
+
+impl Codec for LzssCodec {
+    fn name(&self) -> &'static str {
+        "lzss"
+    }
+    fn wire_id(&self) -> u32 {
+        4
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["lz"]
+    }
+    fn block_width(&self) -> u32 {
+        128
+    }
+    fn compress(&self, chunk: &[u8], _width: u8) -> Result<Vec<u8>> {
+        compress(chunk)
+    }
+    fn compress_with_restarts(
+        &self,
+        chunk: &[u8],
+        _width: u8,
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+        compress_with_restarts(chunk, interval)
+    }
+    fn decompress_into(&self, comp: &[u8], out: &mut dyn OutputStream) -> Result<()> {
+        let mut input = InputStream::new(comp);
+        decode(&mut input, out)
+    }
+    fn decode_sub_block(
+        &self,
+        comp: &[u8],
+        bit_pos: u64,
+        _terminal: bool,
+        out: &mut [u8],
+    ) -> Result<u64> {
+        let expect = out.len() as u64;
+        let mut header = InputStream::new(comp);
+        let (n, seg) = read_header(&mut header)?;
+        let header_len = header.bytes_consumed() as usize;
+        let start = if bit_pos == 0 {
+            header_len
+        } else {
+            if bit_pos % 8 != 0 {
+                return Err(corrupt("lzss restart point is not byte-aligned"));
+            }
+            let b = (bit_pos / 8) as usize;
+            if b < header_len || b > comp.len() {
+                return Err(corrupt(format!(
+                    "lzss restart point at byte {b} outside stream (header {header_len}, \
+                     len {})",
+                    comp.len()
+                )));
+            }
+            b
+        };
+        let seg_size = if seg == 0 { n } else { seg };
+        let mut sink = SliceSink::new(out);
+        let mut input = InputStream::new(&comp[start..]);
+        decode_segments(&mut input, seg_size, expect, &mut sink)?;
+        if sink.bytes_written() != expect {
+            return Err(corrupt(format!(
+                "sub-block produced {} bytes, expected {expect}",
+                sink.bytes_written()
+            )));
+        }
+        Ok((start as u64 + input.bytes_consumed()) * 8)
+    }
+    fn check_chunk_header(&self, comp: &[u8], uncomp_len: u64) -> Result<()> {
+        let mut header = InputStream::new(comp);
+        let (n, _seg) = read_header(&mut header)?;
+        if n != uncomp_len {
+            return Err(corrupt(format!(
+                "lzss chunk header declares {n} uncompressed bytes, index says {uncomp_len}"
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Compress a chunk as a single segment.
+pub fn compress(chunk: &[u8]) -> Result<Vec<u8>> {
+    compress_with_restarts(chunk, 0).map(|(out, _)| out)
+}
+
+/// Compress cutting a segment every `interval` uncompressed bytes and
+/// recording a container-v2 restart point at each boundary. Matches are
+/// confined to their segment, so each recorded point starts an
+/// independently decodable suffix (the stitch contract, DESIGN.md §7.5).
+pub fn compress_with_restarts(
+    chunk: &[u8],
+    interval: usize,
+) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+    let n = chunk.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    write_uvarint(&mut out, n as u64);
+    write_uvarint(&mut out, interval as u64);
+    let mut rec = RestartRec::new(interval, n as u64, 1);
+    let seg_size = if interval == 0 { n } else { interval };
+    let mut head = vec![EMPTY; 1usize << HASH_BITS];
+    let mut pos = 0usize;
+    while pos < n {
+        if pos > 0 {
+            rec.offer(out.len(), pos as u64);
+        }
+        let end = (pos + seg_size).min(n);
+        head.fill(EMPTY);
+        encode_segment(&chunk[pos..end], &mut head, &mut out);
+        pos = end;
+    }
+    Ok((out, rec.points))
+}
+
+/// Multiplicative hash of a 4-byte prefix (Knuth's 2654435761).
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+/// Flag-group accumulator: payloads buffer until the group's 8 tokens
+/// (or the segment) complete, then the flag byte and payloads flush.
+struct Group {
+    flags: u8,
+    n_tokens: u8,
+    payload: Vec<u8>,
+}
+
+impl Group {
+    fn new() -> Self {
+        Group { flags: 0, n_tokens: 0, payload: Vec::new() }
+    }
+
+    fn push_literal(&mut self, bytes: &[u8], out: &mut Vec<u8>) {
+        write_uvarint(&mut self.payload, bytes.len() as u64);
+        self.payload.extend_from_slice(bytes);
+        self.advance(out);
+    }
+
+    fn push_match(&mut self, len: usize, dist: usize, out: &mut Vec<u8>) {
+        self.flags |= 1 << self.n_tokens;
+        write_uvarint(&mut self.payload, len as u64);
+        write_uvarint(&mut self.payload, dist as u64);
+        self.advance(out);
+    }
+
+    fn advance(&mut self, out: &mut Vec<u8>) {
+        self.n_tokens += 1;
+        if self.n_tokens == 8 {
+            self.flush(out);
+        }
+    }
+
+    fn flush(&mut self, out: &mut Vec<u8>) {
+        if self.n_tokens > 0 {
+            out.push(self.flags);
+            out.extend_from_slice(&self.payload);
+            self.flags = 0;
+            self.n_tokens = 0;
+            self.payload.clear();
+        }
+    }
+}
+
+/// Greedy single-probe match finder over one segment. Deterministic —
+/// the Python reference port (`gen_golden.py`) mirrors it exactly, and
+/// the LZSS golden vectors are encoder-pinned.
+fn encode_segment(data: &[u8], head: &mut [usize], out: &mut Vec<u8>) {
+    let n = data.len();
+    let mut grp = Group::new();
+    let mut i = 0usize;
+    let mut lit_start = 0usize;
+    while i < n {
+        let mut best_len = 0usize;
+        let mut best_dist = 0usize;
+        if i + MIN_MATCH <= n {
+            let h = hash4(&data[i..]);
+            let cand = head[h];
+            if cand != EMPTY {
+                let mut l = 0usize;
+                while i + l < n && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    best_len = l;
+                    best_dist = i - cand;
+                }
+            }
+            head[h] = i;
+        }
+        if best_len > 0 {
+            if lit_start < i {
+                grp.push_literal(&data[lit_start..i], out);
+            }
+            grp.push_match(best_len, best_dist, out);
+            let end = i + best_len;
+            i += 1;
+            while i < end && i + MIN_MATCH <= n {
+                head[hash4(&data[i..])] = i;
+                i += 1;
+            }
+            i = end;
+            lit_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    if lit_start < n {
+        grp.push_literal(&data[lit_start..n], out);
+    }
+    grp.flush(out);
+}
+
+/// Read and validate the chunk header; returns `(n, segment_size)`.
+pub(crate) fn read_header(input: &mut InputStream<'_>) -> Result<(u64, u64)> {
+    let n = input.fetch_uvarint()?;
+    let seg = input.fetch_uvarint()?;
+    Ok((n, seg))
+}
+
+/// Decode an LZSS chunk into `out`.
+pub fn decode<O: OutputStream + ?Sized>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+    let (n, seg) = read_header(input)?;
+    let seg_size = if seg == 0 { n } else { seg };
+    decode_segments(input, seg_size, n, out)
+}
+
+/// Decode `expect` bytes as a sequence of whole segments starting at the
+/// cursor — shared by serial decode (`expect = n`) and the sub-block
+/// restart path (cursor at a segment boundary, `expect` = the sub-block
+/// extent).
+fn decode_segments<O: OutputStream + ?Sized>(
+    input: &mut InputStream<'_>,
+    seg_size: u64,
+    expect: u64,
+    out: &mut O,
+) -> Result<()> {
+    let mut produced = 0u64;
+    while produced < expect {
+        let target = (expect - produced).min(seg_size);
+        decode_one_segment(input, target, out)?;
+        produced += target;
+    }
+    Ok(())
+}
+
+/// Decode exactly `target` bytes of one segment. Match distances are
+/// validated against the bytes produced *within the segment*, keeping
+/// serial decode (which could legally reach further back in a
+/// materializing sink) byte-identical to the bounded sub-block path.
+fn decode_one_segment<O: OutputStream + ?Sized>(
+    input: &mut InputStream<'_>,
+    target: u64,
+    out: &mut O,
+) -> Result<()> {
+    let mut sp = 0u64;
+    while sp < target {
+        let flags = input.fetch_byte()?;
+        let mut bit = 0u32;
+        while bit < 8 {
+            if sp == target {
+                if flags >> bit != 0 {
+                    return Err(corrupt("lzss: flag bits set past segment end"));
+                }
+                break;
+            }
+            if (flags >> bit) & 1 == 1 {
+                let len = input.fetch_uvarint()?;
+                let dist = input.fetch_uvarint()?;
+                if len < MIN_MATCH as u64 {
+                    return Err(corrupt(format!("lzss: match of {len} below minimum")));
+                }
+                if dist == 0 || dist > sp {
+                    return Err(corrupt(format!(
+                        "lzss: match distance {dist} outside segment ({sp} produced)"
+                    )));
+                }
+                if len > target - sp {
+                    return Err(corrupt("lzss: match overruns segment"));
+                }
+                out.on_symbol(SymbolKind::LzMatch, 160, input.bytes_consumed());
+                out.memcpy(dist, len)?;
+                sp += len;
+            } else {
+                let len = input.fetch_uvarint()?;
+                if len == 0 {
+                    return Err(corrupt("lzss: empty literal run"));
+                }
+                if len > target - sp {
+                    return Err(corrupt("lzss: literal run overruns segment"));
+                }
+                let bytes = input.fetch_bytes(len as usize)?;
+                out.on_symbol(
+                    SymbolKind::LzLiteralRun,
+                    20 + 3 * len as u32,
+                    input.bytes_consumed(),
+                );
+                out.write_slice(bytes)?;
+                sp += len;
+            }
+            bit += 1;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codecs::{
+        compress_chunk_with_restarts, decode_sub_block, decompress_chunk, CodecKind,
+    };
+
+    fn roundtrip(data: &[u8]) -> usize {
+        let comp = compress(data).unwrap();
+        let out = decompress_chunk(CodecKind::Lzss, &comp, data.len()).unwrap();
+        assert_eq!(out, data);
+        comp.len()
+    }
+
+    fn lcg_bytes(seed: u64, n: usize) -> Vec<u8> {
+        let mut x = seed;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        roundtrip(&[]);
+        for s in ["a", "ab", "abc", "abcd", "aaaa", "hello world"] {
+            roundtrip(s.as_bytes());
+        }
+    }
+
+    #[test]
+    fn repeated_text_compresses() {
+        let data = "the quick brown fox jumps over the lazy dog. ".repeat(200);
+        let clen = roundtrip(data.as_bytes());
+        assert!(clen < data.len() / 5, "clen={clen} of {}", data.len());
+    }
+
+    #[test]
+    fn overlapping_match_run() {
+        // 100k identical bytes: one literal + wrapping matches.
+        let data = vec![0x41u8; 100_000];
+        let clen = roundtrip(&data);
+        assert!(clen < 100, "clen={clen}");
+    }
+
+    #[test]
+    fn incompressible_data_bounded_expansion() {
+        let data = lcg_bytes(77, 10_000);
+        let clen = roundtrip(&data);
+        // Literal runs cost a flag bit + a uvarint per run.
+        assert!(clen <= data.len() + 64, "clen={clen}");
+    }
+
+    #[test]
+    fn segmented_stream_decodes_identically() {
+        let data = "abcabcabc-segment-crossing-material-".repeat(300);
+        let plain = compress(data.as_bytes()).unwrap();
+        for interval in [64usize, 256, 1024, 16 * 1024] {
+            let (seg, points) =
+                compress_with_restarts(data.as_bytes(), interval).unwrap();
+            let out = decompress_chunk(CodecKind::Lzss, &seg, data.len()).unwrap();
+            assert_eq!(out.as_slice(), data.as_bytes(), "interval {interval}");
+            if interval < data.len() {
+                assert!(!points.is_empty(), "interval {interval} recorded no points");
+            }
+            for p in &points {
+                assert_eq!(p.bit_pos % 8, 0);
+                assert_eq!(p.out_off % interval as u64, 0);
+            }
+            // Segment isolation costs ratio but never correctness.
+            assert!(seg.len() >= plain.len());
+        }
+    }
+
+    #[test]
+    fn sub_blocks_stitch_to_serial_output() {
+        let data = "stitchable stitchable stitchable data ".repeat(400);
+        let (comp, points) =
+            compress_chunk_with_restarts(CodecKind::Lzss, data.as_bytes(), 1, 2048).unwrap();
+        assert!(!points.is_empty());
+        let mut out = vec![0u8; data.len()];
+        let mut bounds = vec![(0u64, 0u64)];
+        bounds.extend(points.iter().map(|p| (p.bit_pos, p.out_off)));
+        for (i, &(bit_pos, out_off)) in bounds.iter().enumerate() {
+            let end_off =
+                bounds.get(i + 1).map_or(data.len() as u64, |&(_, o)| o);
+            let terminal = i + 1 == bounds.len();
+            let end_bit = decode_sub_block(
+                CodecKind::Lzss,
+                &comp,
+                bit_pos,
+                terminal,
+                &mut out[out_off as usize..end_off as usize],
+            )
+            .unwrap();
+            let next_bit =
+                bounds.get(i + 1).map_or(comp.len() as u64 * 8, |&(b, _)| b);
+            assert_eq!(end_bit, next_bit, "sub-block {i} end bit");
+        }
+        assert_eq!(out.as_slice(), data.as_bytes());
+    }
+
+    #[test]
+    fn truncations_and_doctored_streams_are_corrupt() {
+        let data = "truncate me truncate me truncate me".repeat(40);
+        let comp = compress(data.as_bytes()).unwrap();
+        for cut in [1usize, 2, comp.len() / 2, comp.len() - 1] {
+            assert!(
+                decompress_chunk(CodecKind::Lzss, &comp[..cut], data.len()).is_err(),
+                "cut at {cut}"
+            );
+        }
+        // A match with distance 0 is never emitted and always rejected.
+        let mut bad = Vec::new();
+        write_uvarint(&mut bad, 8);
+        write_uvarint(&mut bad, 0);
+        bad.push(0b0000_0010); // literal run then match
+        write_uvarint(&mut bad, 4);
+        bad.extend_from_slice(b"abcd");
+        write_uvarint(&mut bad, 4); // match len
+        write_uvarint(&mut bad, 0); // dist 0
+        assert!(decompress_chunk(CodecKind::Lzss, &bad, 8).is_err());
+        // Flag bits set past the end of the chunk are rejected.
+        let mut tail = Vec::new();
+        write_uvarint(&mut tail, 3);
+        write_uvarint(&mut tail, 0);
+        tail.push(0b0000_0010); // token 0 literal, token 1 claims a match
+        write_uvarint(&mut tail, 3);
+        tail.extend_from_slice(b"xyz");
+        assert!(decompress_chunk(CodecKind::Lzss, &tail, 3).is_err());
+    }
+
+    #[test]
+    fn header_length_cross_check() {
+        let data = b"check the header declared length".repeat(8);
+        let comp = compress(&data).unwrap();
+        assert!(LzssCodec.check_chunk_header(&comp, data.len() as u64).is_ok());
+        assert!(LzssCodec.check_chunk_header(&comp, data.len() as u64 + 1).is_err());
+    }
+
+    #[test]
+    fn batched_sinks_match_scalar_oracle() {
+        use crate::decomp::{ByteSink, ScalarSink};
+        let mut data = lcg_bytes(3, 2000);
+        data.extend_from_slice(&data.clone()[..1500]);
+        data.extend(vec![7u8; 500]);
+        let comp = compress(&data).unwrap();
+        let mut batched = ByteSink::new();
+        crate::codecs::decode_into(CodecKind::Lzss, &comp, &mut batched).unwrap();
+        let mut scalar = ScalarSink::new();
+        crate::codecs::decode_into(CodecKind::Lzss, &comp, &mut scalar).unwrap();
+        assert_eq!(batched.out, data);
+        assert_eq!(batched.out, scalar.out);
+    }
+}

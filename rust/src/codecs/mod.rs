@@ -1,5 +1,6 @@
-//! The three encoding techniques the paper evaluates, implemented from
-//! scratch: ORC RLE v1, ORC RLE v2, and DEFLATE (§II-A, §V-A).
+//! The encoding techniques the paper evaluates — ORC RLE v1, ORC RLE
+//! v2, DEFLATE (§II-A, §V-A) — plus the LZSS byte-match codec (GPULZ,
+//! arXiv 2304.07342), behind an object-safe [`Codec`] registry.
 //!
 //! Every decoder is written once against the CODAG
 //! [`OutputStream`](crate::decomp::OutputStream) abstraction and is
@@ -11,30 +12,44 @@
 //! * the hybrid PJRT expand path (RLE codecs decoding to
 //!   [`RunRecord`](crate::decomp::RunRecord)s).
 //!
-//! ## Chunk payload format
+//! ## The registry
+//!
+//! Each codec implements the [`Codec`] trait in its own module and is
+//! registered exactly once in [`CODECS`], the registry's static table.
+//! Everything else — container parse, coordinator dispatch, stats
+//! slots, CLI name parsing, benches — goes through [`CodecRegistry`],
+//! so adding a codec is a one-file change plus one table entry.
+//! [`CodecKind`] survives as the wire-id newtype stored in container
+//! headers; an id the registry does not know yields
+//! [`Error::UnknownCodec`](crate::Error::UnknownCodec).
+//!
+//! ## Chunk payload formats
 //!
 //! RLE chunks carry a 2-byte header — `[element_width, reserved]` —
 //! followed by `n_elems` as a uvarint and the RLE byte stream. DEFLATE
-//! chunks are a raw RFC 1951 bit stream. (The paper uses ORC files and
-//! zlib; we keep the same encodings but a minimal framing, documented in
+//! chunks are a raw RFC 1951 bit stream. LZSS chunks are flag-grouped
+//! byte tokens (see [`lzss`]). (The paper uses ORC files and zlib; we
+//! keep the same encodings but a minimal framing, documented in
 //! DESIGN.md.)
 
 pub mod deflate;
+pub mod lzss;
 pub mod rle_v1;
 pub mod rle_v2;
 
 use crate::decomp::{ByteSink, InputStream, OutputStream, RunRecord, RunRecorder, SliceSink};
-use crate::{corrupt, invalid, Result};
+use crate::{corrupt, invalid, Error, Result};
 
 /// A point where decode of a chunk can restart mid-stream (container v2).
 ///
 /// Recorded at pack time at codec-chosen sub-block boundaries: for the
 /// RLE codecs a group/control-unit boundary (always byte-aligned, so
 /// `bit_pos % 8 == 0`), for DEFLATE a block boundary at an arbitrary bit
-/// position. `bit_pos` counts bits from the start of the compressed
-/// chunk *including* the RLE chunk header; `out_off` is the uncompressed
-/// byte offset the restarted decode produces first. The implicit first
-/// boundary `(0, 0)` is never stored.
+/// position, for LZSS a segment boundary (byte-aligned). `bit_pos`
+/// counts bits from the start of the compressed chunk *including* the
+/// chunk header; `out_off` is the uncompressed byte offset the restarted
+/// decode produces first. The implicit first boundary `(0, 0)` is never
+/// stored.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RestartPoint {
     /// Bit position in the compressed chunk where decode may resume.
@@ -85,129 +100,285 @@ impl RestartRec {
     }
 }
 
-/// The codec used for a container's chunks.
+/// The wire-format codec id stored in a container header (and, for
+/// mixed containers, per chunk).
+///
+/// A plain newtype over the on-disk `u32`: the set of *known* ids lives
+/// in the [`CodecRegistry`], not here, so a new codec never adds a
+/// match arm to this type. The associated constants keep the familiar
+/// `CodecKind::Deflate`-style spelling working everywhere.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
-pub enum CodecKind {
+pub struct CodecKind(pub u32);
+
+#[allow(non_upper_case_globals)]
+impl CodecKind {
     /// ORC run-length encoding v1 (byte RLE for width-1, integer RLE else).
-    RleV1 = 1,
+    pub const RleV1: CodecKind = CodecKind(1);
     /// ORC run-length encoding v2 (short-repeat / direct / patched-base /
     /// delta sub-encodings).
-    RleV2 = 2,
+    pub const RleV2: CodecKind = CodecKind(2);
     /// DEFLATE (RFC 1951): LZ77 + fixed/dynamic Huffman.
-    Deflate = 3,
-}
+    pub const Deflate: CodecKind = CodecKind(3);
+    /// LZSS byte-match compression (flag-grouped literal runs + matches).
+    pub const Lzss: CodecKind = CodecKind(4);
 
-impl CodecKind {
-    /// Parse the container-format discriminant.
+    /// Parse the container-format discriminant (registered ids only).
     pub fn from_u32(v: u32) -> Option<CodecKind> {
-        match v {
-            1 => Some(CodecKind::RleV1),
-            2 => Some(CodecKind::RleV2),
-            3 => Some(CodecKind::Deflate),
-            _ => None,
-        }
+        CodecRegistry::by_id(v).map(|c| CodecKind(c.wire_id()))
     }
 
-    /// Short lowercase name (CLI / reports).
+    /// Short lowercase name (CLI / reports); `"unknown"` for an id the
+    /// registry does not know.
     pub fn name(&self) -> &'static str {
-        match self {
-            CodecKind::RleV1 => "rlev1",
-            CodecKind::RleV2 => "rlev2",
-            CodecKind::Deflate => "deflate",
-        }
+        CodecRegistry::get(*self).map_or("unknown", |c| c.name())
     }
 
-    /// Parse a CLI name.
+    /// Parse a CLI name or alias via the registry.
     pub fn parse(s: &str) -> Option<CodecKind> {
-        match s.to_ascii_lowercase().as_str() {
-            "rlev1" | "rle1" | "rle_v1" => Some(CodecKind::RleV1),
-            "rlev2" | "rle2" | "rle_v2" => Some(CodecKind::RleV2),
-            "deflate" | "zlib" => Some(CodecKind::Deflate),
-            _ => None,
-        }
+        CodecRegistry::by_name(s).map(|c| CodecKind(c.wire_id()))
     }
 
-    /// All codecs, in the paper's reporting order.
-    pub fn all() -> [CodecKind; 3] {
-        [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate]
+    /// All registered codecs, in registry (reporting) order.
+    pub fn all() -> [CodecKind; N_CODECS] {
+        let mut out = [CodecKind(0); N_CODECS];
+        for (i, c) in CODECS.iter().enumerate() {
+            out[i] = CodecKind(c.wire_id());
+        }
+        out
     }
 
     /// True for the run-structured codecs eligible for the PJRT expand path.
     pub fn is_rle(&self) -> bool {
-        matches!(self, CodecKind::RleV1 | CodecKind::RleV2)
+        CodecRegistry::get(*self).is_some_and(|c| c.is_rle())
     }
 }
 
 /// Valid element widths for the RLE codecs.
 pub const VALID_WIDTHS: [u8; 4] = [1, 2, 4, 8];
 
+/// An object-safe codec: one implementation per wire format, registered
+/// in [`CODECS`]. All methods take `&self` on a zero-sized registrant
+/// struct; dispatch everywhere is through `&'static dyn Codec`.
+///
+/// Contract (DESIGN.md §12): `wire_id` and `name` are stable forever;
+/// `decompress_into` must be a pure function of `comp` (same bytes in,
+/// same bytes out, on every sink); `decode_sub_block` must fill its
+/// slice exactly and report the bit position it stopped at, so the
+/// parallel stitch can validate adjacency; `compress_with_restarts` may
+/// only emit restart points whose suffix decodes without referencing
+/// output before the point (the stitch worker writes into a disjoint
+/// slice and cannot see earlier output).
+pub trait Codec: Sync {
+    /// Short lowercase canonical name (CLI / reports / stats rows).
+    fn name(&self) -> &'static str;
+
+    /// The stable container-format discriminant.
+    fn wire_id(&self) -> u32;
+
+    /// Extra accepted CLI spellings (lowercase).
+    fn aliases(&self) -> &'static [&'static str] {
+        &[]
+    }
+
+    /// True for run-structured codecs: width-aware compression and the
+    /// PJRT run-record expand path apply.
+    fn is_rle(&self) -> bool {
+        false
+    }
+
+    /// Decode-unit width in threads for the GPU-simulator engines
+    /// (paper §IV: RLE decodes in 1024-thread units, DEFLATE in 128).
+    fn block_width(&self) -> u32;
+
+    /// Compress one chunk with an explicit RLE element width (ignored
+    /// by byte-oriented codecs).
+    fn compress(&self, chunk: &[u8], width: u8) -> Result<Vec<u8>>;
+
+    /// Compress one chunk, recording restart points roughly every
+    /// `interval` uncompressed bytes (container v2). `interval == 0`
+    /// disables recording.
+    fn compress_with_restarts(
+        &self,
+        chunk: &[u8],
+        width: u8,
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)>;
+
+    /// Decode one whole chunk into any [`OutputStream`].
+    fn decompress_into(&self, comp: &[u8], out: &mut dyn OutputStream) -> Result<()>;
+
+    /// Decode one sub-block into a bounded disjoint slice (the parallel
+    /// stitch worker path, DESIGN.md §7.5). See [`decode_sub_block`].
+    fn decode_sub_block(
+        &self,
+        comp: &[u8],
+        bit_pos: u64,
+        terminal: bool,
+        out: &mut [u8],
+    ) -> Result<u64>;
+
+    /// Reject a chunk whose header declares a different uncompressed
+    /// size than the container index expects (no-op for codecs whose
+    /// length is implicit in the stream structure).
+    fn check_chunk_header(&self, _comp: &[u8], _uncomp_len: u64) -> Result<()> {
+        Ok(())
+    }
+
+    /// Compress auto-selecting the RLE element width (largest of
+    /// 8/4/2/1 that divides the chunk length and yields the strictly
+    /// smallest output — mirrors how an ORC writer picks a column's
+    /// physical type). Byte-oriented codecs compress directly.
+    fn compress_auto(&self, chunk: &[u8]) -> Result<Vec<u8>> {
+        if !self.is_rle() {
+            return self.compress(chunk, 1);
+        }
+        let mut best: Option<Vec<u8>> = None;
+        for &w in VALID_WIDTHS.iter().rev() {
+            if chunk.len() % w as usize != 0 {
+                continue;
+            }
+            let c = self.compress(chunk, w)?;
+            if best.as_ref().map_or(true, |b| c.len() < b.len()) {
+                best = Some(c);
+            }
+        }
+        best.ok_or_else(|| invalid("chunk length not divisible by any element width"))
+    }
+
+    /// Auto-width variant of
+    /// [`compress_with_restarts`](Codec::compress_with_restarts) —
+    /// same width selection as [`compress_auto`](Codec::compress_auto).
+    fn compress_auto_with_restarts(
+        &self,
+        chunk: &[u8],
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+        if !self.is_rle() {
+            return self.compress_with_restarts(chunk, 1, interval);
+        }
+        let mut best: Option<(Vec<u8>, Vec<RestartPoint>)> = None;
+        for &w in VALID_WIDTHS.iter().rev() {
+            if chunk.len() % w as usize != 0 {
+                continue;
+            }
+            let c = self.compress_with_restarts(chunk, w, interval)?;
+            if best.as_ref().map_or(true, |b| c.0.len() < b.0.len()) {
+                best = Some(c);
+            }
+        }
+        best.ok_or_else(|| invalid("chunk length not divisible by any element width"))
+    }
+}
+
+/// Number of registered codecs (the length of [`CODECS`]).
+pub const N_CODECS: usize = 4;
+
+/// The registry's static table — the single registration point. Order
+/// is the reporting order (stats slots, bench rows, `CodecKind::all()`)
+/// and is pinned by a unit test; append only.
+static CODECS: [&'static dyn Codec; N_CODECS] =
+    [&rle_v1::RleV1Codec, &rle_v2::RleV2Codec, &deflate::DeflateCodec, &lzss::LzssCodec];
+
+/// Lookup facade over [`CODECS`]: wire ids and names to
+/// `&'static dyn Codec`.
+pub struct CodecRegistry;
+
+impl CodecRegistry {
+    /// All registered codecs in registration (reporting) order.
+    pub fn codecs() -> &'static [&'static dyn Codec] {
+        &CODECS
+    }
+
+    /// Number of registered codecs.
+    pub const fn len() -> usize {
+        N_CODECS
+    }
+
+    /// Look up by wire id.
+    pub fn by_id(id: u32) -> Option<&'static dyn Codec> {
+        CODECS.iter().copied().find(|c| c.wire_id() == id)
+    }
+
+    /// Look up by canonical name or alias (case-insensitive).
+    pub fn by_name(name: &str) -> Option<&'static dyn Codec> {
+        let n = name.to_ascii_lowercase();
+        CODECS
+            .iter()
+            .copied()
+            .find(|c| c.name() == n || c.aliases().contains(&n.as_str()))
+    }
+
+    /// Look up by [`CodecKind`]; `None` for unregistered ids.
+    pub fn get(kind: CodecKind) -> Option<&'static dyn Codec> {
+        Self::by_id(kind.0)
+    }
+
+    /// Look up by [`CodecKind`], failing with the typed
+    /// [`Error::UnknownCodec`] for unregistered ids.
+    pub fn by_kind(kind: CodecKind) -> Result<&'static dyn Codec> {
+        Self::by_id(kind.0).ok_or(Error::UnknownCodec(kind.0))
+    }
+
+    /// Registry position of a codec (the per-codec stats slot).
+    pub fn slot(kind: CodecKind) -> Option<usize> {
+        CODECS.iter().position(|c| c.wire_id() == kind.0)
+    }
+
+    /// Canonical names in registry order (CLI error messages).
+    pub fn names() -> [&'static str; N_CODECS] {
+        let mut out = [""; N_CODECS];
+        for (i, c) in CODECS.iter().enumerate() {
+            out[i] = c.name();
+        }
+        out
+    }
+}
+
 /// Compress one chunk with an explicit RLE element width.
 ///
 /// `width` must divide `chunk.len()` for RLE codecs; it is ignored for
-/// DEFLATE.
+/// the byte-oriented codecs (DEFLATE, LZSS).
 pub fn compress_chunk_with(kind: CodecKind, chunk: &[u8], width: u8) -> Result<Vec<u8>> {
-    match kind {
-        CodecKind::RleV1 => rle_v1::compress(chunk, width),
-        CodecKind::RleV2 => rle_v2::compress(chunk, width),
-        CodecKind::Deflate => deflate::compress(chunk),
-    }
+    CodecRegistry::by_kind(kind)?.compress(chunk, width)
 }
 
 /// Compress one chunk with an explicit RLE element width, recording
 /// restart points roughly every `interval` uncompressed bytes (container
 /// v2). `interval == 0` disables recording. For the RLE codecs restart
 /// recording is passive — the compressed bytes are identical to
-/// [`compress_chunk_with`]; DEFLATE closes a block at each boundary so
-/// sub-blocks carry no cross-boundary back-references (the stream stays
-/// a single valid RFC 1951 stream for serial decoders).
+/// [`compress_chunk_with`]; DEFLATE closes a block and LZSS a segment at
+/// each boundary so sub-blocks carry no cross-boundary back-references
+/// (the stream stays decodable by the serial path).
 pub fn compress_chunk_with_restarts(
     kind: CodecKind,
     chunk: &[u8],
     width: u8,
     interval: usize,
 ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
-    match kind {
-        CodecKind::RleV1 => rle_v1::compress_with_restarts(chunk, width, interval),
-        CodecKind::RleV2 => rle_v2::compress_with_restarts(chunk, width, interval),
-        CodecKind::Deflate => deflate::compress_with_restarts(chunk, interval),
-    }
+    CodecRegistry::by_kind(kind)?.compress_with_restarts(chunk, width, interval)
 }
 
 /// Auto-width variant of [`compress_chunk_with_restarts`] — mirrors
-/// [`compress_chunk`]'s width selection (widest of 8/4/2/1 dividing the
-/// chunk with the strictly smallest output).
+/// [`compress_chunk`]'s width selection.
 pub fn compress_chunk_restarts(
     kind: CodecKind,
     chunk: &[u8],
     interval: usize,
 ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
-    if kind == CodecKind::Deflate {
-        return deflate::compress_with_restarts(chunk, interval);
-    }
-    let mut best: Option<(Vec<u8>, Vec<RestartPoint>)> = None;
-    for &w in VALID_WIDTHS.iter().rev() {
-        if chunk.len() % w as usize != 0 {
-            continue;
-        }
-        let c = compress_chunk_with_restarts(kind, chunk, w, interval)?;
-        if best.as_ref().map_or(true, |b| c.0.len() < b.0.len()) {
-            best = Some(c);
-        }
-    }
-    best.ok_or_else(|| invalid("chunk length not divisible by any element width"))
+    CodecRegistry::by_kind(kind)?.compress_auto_with_restarts(chunk, interval)
 }
 
 /// Decode one sub-block of a chunk into a bounded disjoint slice (the
 /// parallel stitch worker path, DESIGN.md §7.5).
 ///
-/// `bit_pos == 0` means "start of the chunk" (for RLE codecs: right
-/// after the chunk header); any other value must name a restart point
-/// recorded at pack time. `terminal` marks the chunk's last sub-block
-/// (DEFLATE verifies BFINAL falls exactly there). `out` must be exactly
-/// the sub-block's uncompressed extent — the decode fills it completely
-/// or returns `Corrupt`; it can never write outside it. Returns the bit
-/// position where decode stopped, which stitching validates against the
-/// next restart point.
+/// `bit_pos == 0` means "start of the chunk" (for headered codecs:
+/// right after the chunk header); any other value must name a restart
+/// point recorded at pack time. `terminal` marks the chunk's last
+/// sub-block (DEFLATE verifies BFINAL falls exactly there). `out` must
+/// be exactly the sub-block's uncompressed extent — the decode fills it
+/// completely or returns `Corrupt`; it can never write outside it.
+/// Returns the bit position where decode stopped, which stitching
+/// validates against the next restart point.
 pub fn decode_sub_block(
     kind: CodecKind,
     comp: &[u8],
@@ -215,68 +386,72 @@ pub fn decode_sub_block(
     terminal: bool,
     out: &mut [u8],
 ) -> Result<u64> {
+    CodecRegistry::by_kind(kind)?.decode_sub_block(comp, bit_pos, terminal, out)
+}
+
+/// Shared sub-block decoder for the headered byte-aligned codecs (both
+/// RLEs): positions the input at the restart byte, hands the per-element
+/// decode loop a bounded budget, and verifies the slice was filled
+/// exactly.
+pub(crate) fn decode_rle_sub_block(
+    comp: &[u8],
+    bit_pos: u64,
+    out: &mut [u8],
+    decode: impl FnOnce(&mut InputStream<'_>, u8, u64, &mut SliceSink<'_>) -> Result<()>,
+) -> Result<u64> {
     let expect = out.len() as u64;
     let mut sink = SliceSink::new(out);
-    let end = match kind {
-        CodecKind::Deflate => {
-            deflate::inflate_sub_block(comp, bit_pos, expect, terminal, &mut sink)?
+    let mut header = InputStream::new(comp);
+    let (width, _n_total) = read_rle_header(&mut header)?;
+    let header_len = header.bytes_consumed() as usize;
+    let start = if bit_pos == 0 {
+        header_len
+    } else {
+        if bit_pos % 8 != 0 {
+            return Err(corrupt("rle restart point is not byte-aligned"));
         }
-        CodecKind::RleV1 | CodecKind::RleV2 => {
-            let mut header = InputStream::new(comp);
-            let (width, _n_total) = read_rle_header(&mut header)?;
-            let header_len = header.bytes_consumed() as usize;
-            let start = if bit_pos == 0 {
-                header_len
-            } else {
-                if bit_pos % 8 != 0 {
-                    return Err(corrupt("rle restart point is not byte-aligned"));
-                }
-                let b = (bit_pos / 8) as usize;
-                if b < header_len || b > comp.len() {
-                    return Err(corrupt(format!(
-                        "rle restart point at byte {b} outside stream (header {header_len}, \
-                         len {})",
-                        comp.len()
-                    )));
-                }
-                b
-            };
-            if expect % width as u64 != 0 {
-                return Err(corrupt(format!(
-                    "restart point splits a width-{width} element ({expect} bytes)"
-                )));
-            }
-            let budget = expect / width as u64;
-            let mut input = InputStream::new(&comp[start..]);
-            match kind {
-                CodecKind::RleV1 => rle_v1::decode_elems(&mut input, width, budget, &mut sink)?,
-                _ => rle_v2::decode_elems(&mut input, width, budget, &mut sink)?,
-            }
-            (start as u64 + input.bytes_consumed()) * 8
+        let b = (bit_pos / 8) as usize;
+        if b < header_len || b > comp.len() {
+            return Err(corrupt(format!(
+                "rle restart point at byte {b} outside stream (header {header_len}, \
+                 len {})",
+                comp.len()
+            )));
         }
+        b
     };
+    if expect % width as u64 != 0 {
+        return Err(corrupt(format!(
+            "restart point splits a width-{width} element ({expect} bytes)"
+        )));
+    }
+    let budget = expect / width as u64;
+    let mut input = InputStream::new(&comp[start..]);
+    decode(&mut input, width, budget, &mut sink)?;
     if sink.bytes_written() != expect {
         return Err(corrupt(format!(
             "sub-block produced {} bytes, expected {expect}",
             sink.bytes_written()
         )));
     }
-    Ok(end)
+    Ok((start as u64 + input.bytes_consumed()) * 8)
 }
 
-/// Reject a chunk whose RLE header declares a different uncompressed
-/// size than the container index expects.
+/// Reject a chunk whose header declares a different uncompressed size
+/// than the container index expects.
 ///
-/// Serial decode is driven by the header's element count; split decode
+/// Serial decode is driven by the header's declared count; split decode
 /// is driven by per-sub-block output budgets and never consults it.
 /// Without this gate a corrupted count field would truncate (or fail)
 /// serial decode while every bounded sub-block still decoded cleanly —
 /// the divergence the stitch contract (DESIGN.md §7.5) forbids. No-op
 /// for DEFLATE, whose length is implicit in the block structure.
 pub fn check_chunk_header(kind: CodecKind, comp: &[u8], uncomp_len: u64) -> Result<()> {
-    if !kind.is_rle() {
-        return Ok(());
-    }
+    CodecRegistry::by_kind(kind)?.check_chunk_header(comp, uncomp_len)
+}
+
+/// Reusable element-count check for the headered RLE codecs.
+pub(crate) fn check_rle_chunk_header(comp: &[u8], uncomp_len: u64) -> Result<()> {
     let mut header = InputStream::new(comp);
     let (width, n_total) = read_rle_header(&mut header)?;
     let declared = n_total.saturating_mul(width as u64);
@@ -288,24 +463,9 @@ pub fn check_chunk_header(kind: CodecKind, comp: &[u8], uncomp_len: u64) -> Resu
     Ok(())
 }
 
-/// Compress one chunk, auto-selecting the RLE element width (largest of
-/// 8/4/2/1 that divides the chunk length and yields the smallest output —
-/// mirrors how an ORC writer picks a column's physical type).
+/// Compress one chunk, auto-selecting the RLE element width.
 pub fn compress_chunk(kind: CodecKind, chunk: &[u8]) -> Result<Vec<u8>> {
-    if kind == CodecKind::Deflate {
-        return deflate::compress(chunk);
-    }
-    let mut best: Option<Vec<u8>> = None;
-    for &w in VALID_WIDTHS.iter().rev() {
-        if chunk.len() % w as usize != 0 {
-            continue;
-        }
-        let c = compress_chunk_with(kind, chunk, w)?;
-        if best.as_ref().map_or(true, |b| c.len() < b.len()) {
-            best = Some(c);
-        }
-    }
-    best.ok_or_else(|| invalid("chunk length not divisible by any element width"))
+    CodecRegistry::by_kind(kind)?.compress_auto(chunk)
 }
 
 /// Decompress one chunk into a fresh buffer.
@@ -321,12 +481,7 @@ pub fn decompress_chunk(kind: CodecKind, comp: &[u8], size_hint: usize) -> Resul
 /// Decode one chunk into any [`OutputStream`] — the single decode entry
 /// point all engines share.
 pub fn decode_into<O: OutputStream>(kind: CodecKind, comp: &[u8], out: &mut O) -> Result<()> {
-    let mut input = InputStream::new(comp);
-    match kind {
-        CodecKind::RleV1 => rle_v1::decode(&mut input, out),
-        CodecKind::RleV2 => rle_v2::decode(&mut input, out),
-        CodecKind::Deflate => deflate::decode(&mut input, out),
-    }
+    CodecRegistry::by_kind(kind)?.decompress_into(comp, out)
 }
 
 /// Decode an RLE chunk to run records (the PJRT expand path input).
@@ -343,10 +498,10 @@ pub fn decode_to_runs(kind: CodecKind, comp: &[u8]) -> Result<(Vec<RunRecord>, u
 
 /// Average compressed-symbol length (Table V's right columns): decoded
 /// *elements* produced per compressed symbol, where a symbol is a run
-/// header, a literal-group element, or a DEFLATE token. For byte-typed
-/// data (TPC/TPT/HRG) this is bytes per symbol, matching the paper (e.g.
-/// avg 1.00 for TPC under RLE v1 = no runs); for wider columns it is the
-/// average run length in elements.
+/// header, a literal-group element, or a DEFLATE/LZSS token. For
+/// byte-typed data (TPC/TPT/HRG) this is bytes per symbol, matching the
+/// paper (e.g. avg 1.00 for TPC under RLE v1 = no runs); for wider
+/// columns it is the average run length in elements.
 pub fn avg_symbol_len(kind: CodecKind, comp: &[u8]) -> Result<f64> {
     use crate::decomp::{CountingSink, SymbolKind};
 
@@ -436,11 +591,60 @@ mod tests {
     #[test]
     fn kind_roundtrip() {
         for k in CodecKind::all() {
-            assert_eq!(CodecKind::from_u32(k as u32), Some(k));
+            assert_eq!(CodecKind::from_u32(k.0), Some(k));
             assert_eq!(CodecKind::parse(k.name()), Some(k));
         }
         assert_eq!(CodecKind::from_u32(99), None);
         assert_eq!(CodecKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn registry_order_names_and_wire_ids_pinned() {
+        // The registry order IS the stats-slot and reporting order —
+        // append-only. Wire ids are forever.
+        let names: Vec<&str> = CodecRegistry::codecs().iter().map(|c| c.name()).collect();
+        assert_eq!(names, ["rlev1", "rlev2", "deflate", "lzss"]);
+        let ids: Vec<u32> = CodecRegistry::codecs().iter().map(|c| c.wire_id()).collect();
+        assert_eq!(ids, [1, 2, 3, 4]);
+        assert_eq!(CodecRegistry::names(), ["rlev1", "rlev2", "deflate", "lzss"]);
+        for (slot, kind) in CodecKind::all().iter().enumerate() {
+            assert_eq!(CodecRegistry::slot(*kind), Some(slot));
+        }
+        assert_eq!(CodecRegistry::slot(CodecKind(99)), None);
+    }
+
+    #[test]
+    fn registry_lookup_by_name_and_alias() {
+        for (name, kind) in [
+            ("rlev1", CodecKind::RleV1),
+            ("rle_v1", CodecKind::RleV1),
+            ("rle1", CodecKind::RleV1),
+            ("rlev2", CodecKind::RleV2),
+            ("rle_v2", CodecKind::RleV2),
+            ("rle2", CodecKind::RleV2),
+            ("deflate", CodecKind::Deflate),
+            ("zlib", CodecKind::Deflate),
+            ("lzss", CodecKind::Lzss),
+            ("lz", CodecKind::Lzss),
+            ("LZSS", CodecKind::Lzss),
+        ] {
+            assert_eq!(CodecKind::parse(name), Some(kind), "{name}");
+        }
+        assert!(CodecRegistry::by_name("gzip").is_none());
+    }
+
+    #[test]
+    fn unknown_codec_is_typed() {
+        match CodecRegistry::by_kind(CodecKind(0x7F)) {
+            Err(Error::UnknownCodec(0x7F)) => {}
+            other => panic!("expected UnknownCodec, got {other:?}"),
+        }
+        assert!(compress_chunk(CodecKind(0x7F), b"abc").is_err());
+        let mut sink = ByteSink::new();
+        assert_eq!(
+            decode_into(CodecKind(0x7F), b"abc", &mut sink),
+            Err(Error::UnknownCodec(0x7F))
+        );
     }
 
     #[test]
@@ -470,6 +674,7 @@ mod tests {
     #[test]
     fn decode_to_runs_rejects_deflate() {
         assert!(decode_to_runs(CodecKind::Deflate, &[]).is_err());
+        assert!(decode_to_runs(CodecKind::Lzss, &[]).is_err());
     }
 
     #[test]

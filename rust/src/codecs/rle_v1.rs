@@ -15,10 +15,63 @@
 //! Decoding maps directly onto the CODAG Table II primitives: a run is
 //! one `write_run(init, len, delta)`, a literal group is `len` unit runs.
 
-use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header, RestartPoint, RestartRec};
+use crate::codecs::{
+    bytes_to_elems, check_rle_chunk_header, decode_rle_sub_block, read_rle_header,
+    write_rle_header, Codec, RestartPoint, RestartRec,
+};
 use crate::decomp::{InputStream, OutputStream, SymbolKind};
 use crate::format::varint::{self, uvarint_len};
 use crate::{corrupt, Result};
+
+/// The registry entry for ORC RLE v1 (wire id 1).
+pub struct RleV1Codec;
+
+impl Codec for RleV1Codec {
+    fn name(&self) -> &'static str {
+        "rlev1"
+    }
+    fn wire_id(&self) -> u32 {
+        1
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["rle1", "rle_v1"]
+    }
+    fn is_rle(&self) -> bool {
+        true
+    }
+    fn block_width(&self) -> u32 {
+        1024
+    }
+    fn compress(&self, chunk: &[u8], width: u8) -> Result<Vec<u8>> {
+        compress(chunk, width)
+    }
+    fn compress_with_restarts(
+        &self,
+        chunk: &[u8],
+        width: u8,
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+        compress_with_restarts(chunk, width, interval)
+    }
+    fn decompress_into(&self, comp: &[u8], out: &mut dyn OutputStream) -> Result<()> {
+        let mut input = InputStream::new(comp);
+        decode(&mut input, out)
+    }
+    fn decode_sub_block(
+        &self,
+        comp: &[u8],
+        bit_pos: u64,
+        _terminal: bool,
+        out: &mut [u8],
+    ) -> Result<u64> {
+        decode_rle_sub_block(comp, bit_pos, out, |input, width, budget, sink| {
+            decode_elems(input, width, budget, sink)
+        })
+    }
+    fn check_chunk_header(&self, comp: &[u8], uncomp_len: u64) -> Result<()> {
+        check_rle_chunk_header(comp, uncomp_len)
+    }
+}
 
 /// Maximum run length (`control + 3` with a 7-bit control).
 pub const MAX_RUN: usize = 130;
@@ -152,7 +205,7 @@ fn flush_int_literals(
 }
 
 /// Decode an RLE v1 chunk into `out`.
-pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+pub fn decode<O: OutputStream + ?Sized>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     let (width, n_elems) = read_rle_header(input)?;
     decode_elems(input, width, n_elems, out)
 }
@@ -161,7 +214,7 @@ pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Resu
 /// of [`decode`], reused by the sub-block restart path
 /// ([`crate::codecs::decode_sub_block`]) which positions the cursor at a
 /// restart point and bounds the element budget to one sub-block.
-pub(crate) fn decode_elems<O: OutputStream>(
+pub(crate) fn decode_elems<O: OutputStream + ?Sized>(
     input: &mut InputStream<'_>,
     width: u8,
     n_elems: u64,

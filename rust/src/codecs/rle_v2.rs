@@ -20,11 +20,64 @@
 //! stores its base as a zigzag big-endian integer rather than ORC's
 //! sign-magnitude (round-trips identically; simplifies the bit path).
 
-use crate::codecs::{bytes_to_elems, read_rle_header, write_rle_header, RestartPoint, RestartRec};
+use crate::codecs::{
+    bytes_to_elems, check_rle_chunk_header, decode_rle_sub_block, read_rle_header,
+    write_rle_header, Codec, RestartPoint, RestartRec,
+};
 use crate::decomp::{InputStream, OutputStream, SymbolKind};
 use crate::format::bitio::MsbBitWriter;
 use crate::format::varint::{unzigzag, zigzag};
 use crate::{corrupt, Result};
+
+/// The registry entry for ORC RLE v2 (wire id 2).
+pub struct RleV2Codec;
+
+impl Codec for RleV2Codec {
+    fn name(&self) -> &'static str {
+        "rlev2"
+    }
+    fn wire_id(&self) -> u32 {
+        2
+    }
+    fn aliases(&self) -> &'static [&'static str] {
+        &["rle2", "rle_v2"]
+    }
+    fn is_rle(&self) -> bool {
+        true
+    }
+    fn block_width(&self) -> u32 {
+        1024
+    }
+    fn compress(&self, chunk: &[u8], width: u8) -> Result<Vec<u8>> {
+        compress(chunk, width)
+    }
+    fn compress_with_restarts(
+        &self,
+        chunk: &[u8],
+        width: u8,
+        interval: usize,
+    ) -> Result<(Vec<u8>, Vec<RestartPoint>)> {
+        compress_with_restarts(chunk, width, interval)
+    }
+    fn decompress_into(&self, comp: &[u8], out: &mut dyn OutputStream) -> Result<()> {
+        let mut input = InputStream::new(comp);
+        decode(&mut input, out)
+    }
+    fn decode_sub_block(
+        &self,
+        comp: &[u8],
+        bit_pos: u64,
+        _terminal: bool,
+        out: &mut [u8],
+    ) -> Result<u64> {
+        decode_rle_sub_block(comp, bit_pos, out, |input, width, budget, sink| {
+            decode_elems(input, width, budget, sink)
+        })
+    }
+    fn check_chunk_header(&self, comp: &[u8], uncomp_len: u64) -> Result<()> {
+        check_rle_chunk_header(comp, uncomp_len)
+    }
+}
 
 /// Maximum values per DIRECT/PATCHED/DELTA group.
 pub const MAX_GROUP: usize = 512;
@@ -397,7 +450,7 @@ fn bits_to_pos(bits: u64) -> u64 {
 }
 
 /// Decode an RLE v2 chunk into `out`.
-pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
+pub fn decode<O: OutputStream + ?Sized>(input: &mut InputStream<'_>, out: &mut O) -> Result<()> {
     let (width, n_elems) = read_rle_header(input)?;
     decode_elems(input, width, n_elems, out)
 }
@@ -406,7 +459,7 @@ pub fn decode<O: OutputStream>(input: &mut InputStream<'_>, out: &mut O) -> Resu
 /// of [`decode`], reused by the sub-block restart path
 /// ([`crate::codecs::decode_sub_block`]) which positions the cursor at a
 /// restart point and bounds the element budget to one sub-block.
-pub(crate) fn decode_elems<O: OutputStream>(
+pub(crate) fn decode_elems<O: OutputStream + ?Sized>(
     input: &mut InputStream<'_>,
     width: u8,
     n_elems: u64,
@@ -428,7 +481,7 @@ pub(crate) fn decode_elems<O: OutputStream>(
     Ok(())
 }
 
-fn decode_short_repeat<O: OutputStream>(
+fn decode_short_repeat<O: OutputStream + ?Sized>(
     first: u8,
     input: &mut InputStream<'_>,
     out: &mut O,
@@ -459,7 +512,7 @@ fn parse_header_tail(first: u8, input: &mut InputStream<'_>) -> Result<(u8, usiz
     Ok((wc, (len_hi << 8 | len_lo) + 1))
 }
 
-fn decode_direct<O: OutputStream>(
+fn decode_direct<O: OutputStream + ?Sized>(
     first: u8,
     input: &mut InputStream<'_>,
     out: &mut O,
@@ -496,7 +549,7 @@ fn decode_direct<O: OutputStream>(
     Ok(len as u64)
 }
 
-fn decode_patched<O: OutputStream>(
+fn decode_patched<O: OutputStream + ?Sized>(
     first: u8,
     input: &mut InputStream<'_>,
     out: &mut O,
@@ -562,7 +615,7 @@ fn decode_patched<O: OutputStream>(
     Ok(len as u64)
 }
 
-fn decode_delta<O: OutputStream>(
+fn decode_delta<O: OutputStream + ?Sized>(
     first: u8,
     input: &mut InputStream<'_>,
     out: &mut O,

@@ -44,7 +44,7 @@ pub fn decompress_hybrid(
     n_workers: usize,
     expander: &Expander<'_>,
 ) -> Result<Vec<u8>> {
-    if !container.codec.is_rle() {
+    if !container.codec.is_rle() || container.chunk_codecs.iter().any(|k| !k.is_rle()) {
         return Err(crate::invalid("hybrid path requires an RLE codec"));
     }
     run_pool(container, n_workers, Some(expander))
@@ -97,7 +97,7 @@ pub fn decode_one(
         None => container.decompress_chunk(i),
         Some(ex) => {
             let comp = container.chunk_bytes(i)?;
-            decode_chunk_hybrid(container.codec, comp, ex)
+            decode_chunk_hybrid(container.chunk_codec(i), comp, ex)
         }
     }
 }
@@ -285,7 +285,14 @@ pub fn decompress_chunk_split_obs_into(
     let comp = container.chunk_bytes(i)?;
     out.clear();
     out.resize(e.uncomp_len as usize, 0);
-    decode_chunk_parallel_obs(container.codec, comp, container.restart_table(i), out, n_workers, obs)
+    decode_chunk_parallel_obs(
+        container.chunk_codec(i),
+        comp,
+        container.restart_table(i),
+        out,
+        n_workers,
+        obs,
+    )
 }
 
 /// Decompress chunk `i` through the stitcher into a fresh buffer.
@@ -403,6 +410,54 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn mixed_container_parallel_and_split_match_serial() {
+        let data = Dataset::Mc0.generate(200 * 1024);
+        let kinds = CodecKind::all();
+        let chunk_size = 32 * 1024;
+        let mut index = Vec::new();
+        let mut restarts = Vec::new();
+        let mut chunk_codecs = Vec::new();
+        let mut payload = Vec::new();
+        for (i, chunk) in data.chunks(chunk_size).enumerate() {
+            let kind = kinds[i % kinds.len()];
+            let (comp, points) =
+                crate::codecs::compress_chunk_restarts(kind, chunk, 4096).unwrap();
+            index.push(crate::format::container::ChunkEntry {
+                comp_off: payload.len() as u64,
+                comp_len: comp.len() as u64,
+                uncomp_len: chunk.len() as u64,
+            });
+            restarts.push(points);
+            chunk_codecs.push(kind);
+            payload.extend_from_slice(&comp);
+        }
+        let c = Container {
+            codec: chunk_codecs[0],
+            chunk_size,
+            total_uncompressed: data.len() as u64,
+            index,
+            restarts,
+            chunk_codecs,
+            payload,
+        };
+        assert!(c.is_mixed());
+        assert_eq!(decompress_parallel(&c, 4).unwrap(), data);
+        for i in 0..c.n_chunks() {
+            let serial = c.decompress_chunk(i).unwrap();
+            for workers in [1, 4] {
+                assert_eq!(
+                    decompress_chunk_split(&c, i, workers).unwrap(),
+                    serial,
+                    "chunk {i} workers {workers}"
+                );
+            }
+        }
+        // A mixed container with any non-RLE chunk is off the hybrid path.
+        let ex = Expander::cpu_only();
+        assert!(decompress_hybrid(&c, 2, &ex).is_err());
     }
 
     #[test]

@@ -52,11 +52,21 @@ pub enum DatasetSource {
 }
 
 impl DatasetSource {
-    /// Codec every chunk was compressed with.
+    /// The header codec (for a mixed v3 source: chunk 0's codec — use
+    /// [`chunk_codec`](Self::chunk_codec) for per-chunk dispatch).
     pub fn codec(&self) -> CodecKind {
         match self {
             DatasetSource::Memory(c) => c.codec,
             DatasetSource::File(f) => f.codec(),
+        }
+    }
+
+    /// The codec chunk `i` was compressed with (`codec()` for uniform
+    /// sources).
+    pub fn chunk_codec(&self, i: usize) -> CodecKind {
+        match self {
+            DatasetSource::Memory(c) => c.chunk_codec(i),
+            DatasetSource::File(f) => f.chunk_codec(i),
         }
     }
 

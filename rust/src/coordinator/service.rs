@@ -422,7 +422,10 @@ impl<'a> Service<'a> {
             }
         }
         let c = self.registry.get(dataset)?;
-        let use_hybrid = self.config.hybrid && c.codec().is_rle() && self.expander.is_some();
+        // Per-chunk codec (mixed v3 containers): the hybrid gate and the
+        // decode dispatch both follow the chunk, not the header.
+        let chunk_kind = c.chunk_codec(w.chunk);
+        let use_hybrid = self.config.hybrid && chunk_kind.is_rle() && self.expander.is_some();
         if use_hybrid {
             // The expand path produces its own buffer (PJRT output);
             // compressed bytes borrow from the resident payload or a
@@ -432,7 +435,7 @@ impl<'a> Service<'a> {
             let mut comp_scratch = Vec::new();
             let t0 = now_if_enabled();
             let full = crate::coordinator::engine::decode_chunk_hybrid(
-                c.codec(),
+                chunk_kind,
                 c.chunk_bytes(w.chunk, &mut comp_scratch)?,
                 self.expander.expect("checked"),
             )?;

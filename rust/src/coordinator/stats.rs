@@ -1,6 +1,6 @@
 //! Latency/throughput statistics for the serving path.
 
-use crate::codecs::CodecKind;
+use crate::codecs::{CodecKind, CodecRegistry, N_CODECS};
 use crate::data::Rng;
 use std::time::Duration;
 
@@ -26,10 +26,12 @@ pub struct LatencyStats {
     total_bytes: u64,
     cache_hits: u64,
     cache_misses: u64,
-    /// Decoded bytes served per codec, indexed by
-    /// [`CodecKind::all`] order — cheap observability for the per-codec
-    /// hot paths (the `codag serve` shutdown summary prints these).
-    codec_bytes: [u64; 3],
+    /// Decoded bytes served per codec, indexed by registry slot
+    /// ([`CodecRegistry::slot`]) — cheap observability for the
+    /// per-codec hot paths (the `codag serve` shutdown summary prints
+    /// these). Registering a codec grows this automatically; no match
+    /// arm, no fixed-size array to forget.
+    codec_bytes: [u64; N_CODECS],
     /// Reservoir-replacement RNG (deterministic zero-seeded stream).
     rng: Rng,
 }
@@ -147,15 +149,12 @@ impl LatencyStats {
         self.cache_misses
     }
 
-    /// Counter slot for `kind`: its position in [`CodecKind::all`], so
-    /// the counters stay in lockstep with the enum (a codec missing
-    /// from `all()` panics here with a clear message instead of
-    /// silently mis-indexing; the array length is pinned by a test).
+    /// Counter slot for `kind`: its registry position, so the counters
+    /// stay in lockstep with the registration table (an unregistered
+    /// kind panics here with a clear message instead of silently
+    /// mis-indexing; the slot order is pinned by a registry test).
     fn codec_slot(kind: CodecKind) -> usize {
-        CodecKind::all()
-            .iter()
-            .position(|&k| k == kind)
-            .expect("CodecKind missing from CodecKind::all()")
+        CodecRegistry::slot(kind).expect("CodecKind missing from the codec registry")
     }
 
     /// Attribute `bytes` of decoded payload to `kind` (the daemon's
@@ -169,10 +168,10 @@ impl LatencyStats {
         self.codec_bytes[Self::codec_slot(kind)]
     }
 
-    /// `(codec name, decoded bytes)` rows in reporting order, for the
-    /// shutdown summary.
-    pub fn codec_bytes_all(&self) -> [(&'static str, u64); 3] {
-        let mut rows = [("", 0u64); 3];
+    /// `(codec name, decoded bytes)` rows in registry (reporting)
+    /// order, for the shutdown summary.
+    pub fn codec_bytes_all(&self) -> [(&'static str, u64); N_CODECS] {
+        let mut rows = [("", 0u64); N_CODECS];
         for (row, kind) in rows.iter_mut().zip(CodecKind::all()) {
             *row = (kind.name(), self.codec_bytes(kind));
         }
@@ -303,9 +302,9 @@ mod tests {
 
     #[test]
     fn codec_counter_array_covers_every_codec() {
-        // The [u64; 3] counter array must stay in lockstep with
-        // CodecKind::all(): growing the enum requires growing the
-        // array (and this pin), not silently truncating attribution.
+        // The counter array is sized by the registry (N_CODECS), so
+        // registering a codec grows attribution automatically — this
+        // pin catches the array and the registry ever drifting apart.
         let mut s = LatencyStats::new();
         assert_eq!(CodecKind::all().len(), s.codec_bytes.len());
         for kind in CodecKind::all() {
@@ -323,10 +322,15 @@ mod tests {
         let mut b = LatencyStats::new();
         b.add_codec_bytes(CodecKind::RleV1, 3);
         b.add_codec_bytes(CodecKind::RleV2, 1);
+        b.add_codec_bytes(CodecKind::Lzss, 9);
         a.merge(&b);
         assert_eq!(a.codec_bytes(CodecKind::RleV1), 3);
         assert_eq!(a.codec_bytes(CodecKind::RleV2), 121);
         assert_eq!(a.codec_bytes(CodecKind::Deflate), 7);
-        assert_eq!(a.codec_bytes_all(), [("rlev1", 3), ("rlev2", 121), ("deflate", 7)]);
+        assert_eq!(a.codec_bytes(CodecKind::Lzss), 9);
+        assert_eq!(
+            a.codec_bytes_all(),
+            [("rlev1", 3), ("rlev2", 121), ("deflate", 7), ("lzss", 9)]
+        );
     }
 }

@@ -10,19 +10,19 @@
 //! regenerate Figs 2/3/5/6.
 //!
 //! Block widths match the paper (§V-F): 1024 threads for RLE v1/v2,
-//! 128 for Deflate.
+//! 128 for Deflate (and the byte-match codecs that share its decode
+//! shape). Each codec declares its own width via
+//! [`Codec::block_width`](crate::codecs::Codec::block_width).
 
-use crate::codecs::{decode_into, CodecKind};
+use crate::codecs::{decode_into, CodecKind, CodecRegistry};
 use crate::decomp::output_stream::{ByteSink, CountingSink, OutputStream, TracingSink};
 use crate::decomp::trace::UnitTrace;
 use crate::Result;
 
 /// Threads per block the baseline provisions for a codec (§V-F).
+/// Unregistered ids fall back to the narrow DEFLATE-style unit.
 pub fn block_width(kind: CodecKind) -> u32 {
-    match kind {
-        CodecKind::RleV1 | CodecKind::RleV2 => 1024,
-        CodecKind::Deflate => 128,
-    }
+    CodecRegistry::get(kind).map_or(128, |c| c.block_width())
 }
 
 /// Warps one baseline decompression unit occupies (the prefetch warp is
@@ -103,7 +103,9 @@ mod tests {
         assert_eq!(block_width(CodecKind::RleV1), 1024);
         assert_eq!(block_width(CodecKind::RleV2), 1024);
         assert_eq!(block_width(CodecKind::Deflate), 128);
+        assert_eq!(block_width(CodecKind::Lzss), 128);
         assert_eq!(warps_per_unit(CodecKind::RleV1), 32);
         assert_eq!(warps_per_unit(CodecKind::Deflate), 4);
+        assert_eq!(warps_per_unit(CodecKind::Lzss), 4);
     }
 }

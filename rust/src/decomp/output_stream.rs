@@ -55,6 +55,10 @@ pub enum SymbolKind {
     DeflateMatch,
     /// DEFLATE block header (incl. dynamic Huffman table build) — descriptor.
     DeflateHeader,
+    /// LZSS literal run (one flag bit + uvarint + raw bytes).
+    LzLiteralRun,
+    /// LZSS (len, dist) match token.
+    LzMatch,
 }
 
 impl SymbolKind {

@@ -10,16 +10,20 @@
 //!
 //! ```text
 //! magic: u32 = 0xC0DA_6001
-//! version: u32           (1 or 2)
-//! codec: u32 (CodecKind discriminant)
+//! version: u32           (1, 2, or 3)
+//! codec: u32 (CodecKind wire id; v3: chunk 0's codec)
 //! chunk_size: u64        (uncompressed bytes per chunk, last may be short)
 //! total_uncompressed: u64
 //! n_chunks: u64
 //! index: n_chunks × { comp_off: u64, comp_len: u64, uncomp_len: u64 }
-//! -- v2 only: restart section --
+//! -- v2+ only: restart section --
 //! per chunk: { n_restarts: u32, n_restarts × { bit_pos: u64, out_off: u64 } }
 //! checksum: u64          (FNV-1a 64 over every restart-section byte above)
 //! -- end v2 section --
+//! -- v3 only: codec section --
+//! n_chunks × u32        (per-chunk CodecKind wire ids)
+//! checksum: u64          (FNV-1a 64 over the codec ids above)
+//! -- end v3 section --
 //! payload bytes
 //! ```
 //!
@@ -34,17 +38,34 @@
 //! table is detected at parse time rather than surfacing as a decode
 //! divergence. v1 files parse unchanged with empty restart tables.
 //!
+//! v3 lifts the one-codec-per-container assumption: `codag pack --codec
+//! auto` trial-compresses a bounded sample of every chunk through each
+//! registered codec and records the per-chunk winner. A container whose
+//! chunks all agree still serializes as plain v2 (byte-identical to a
+//! forced pack), so mixed files are the only ones paying the extra
+//! section; the header codec field holds chunk 0's codec for v3 so old
+//! tooling reading only the header sees a registered id. The codec
+//! section carries its own FNV-1a guard. Codec ids the registry does
+//! not know fail parse with the typed
+//! [`UnknownCodec`](crate::Error::UnknownCodec).
+//!
 //! The 128 KiB default matches the paper's evaluation (§V-B).
 
-use crate::codecs::{compress_chunk_restarts, CodecKind, RestartPoint};
-use crate::{corrupt, invalid, Result};
+use crate::codecs::{compress_chunk_restarts, CodecKind, CodecRegistry, RestartPoint};
+use crate::{corrupt, invalid, Error, Result};
 
 /// Container magic number ("C0DAG" v1).
 pub const MAGIC: u32 = 0xC0DA_6001;
-/// Current container version (written by [`Container::to_bytes`]).
+/// Current uniform container version (written by [`Container::to_bytes`]
+/// whenever every chunk shares one codec).
 pub const VERSION: u32 = 2;
 /// First container version, still readable (no restart section).
 pub const VERSION_V1: u32 = 1;
+/// Mixed-codec container version: v2 plus a per-chunk codec section.
+pub const VERSION_MIXED: u32 = 3;
+/// Bytes of each chunk sampled by [`Container::compress_auto`]'s codec
+/// trials (the whole chunk when it is smaller).
+pub const AUTO_SAMPLE_BYTES: usize = 16 * 1024;
 /// Default chunk size used throughout the paper's evaluation.
 pub const DEFAULT_CHUNK_SIZE: usize = 128 * 1024;
 /// Default restart interval: one sub-block boundary roughly every this
@@ -80,7 +101,8 @@ pub struct ChunkEntry {
 /// A parsed (or freshly built) container.
 #[derive(Debug, Clone)]
 pub struct Container {
-    /// Codec every chunk was compressed with.
+    /// Codec every chunk was compressed with (for a mixed v3 container:
+    /// chunk 0's codec — use [`Container::chunk_codec`] instead).
     pub codec: CodecKind,
     /// Nominal uncompressed chunk size.
     pub chunk_size: usize,
@@ -91,6 +113,9 @@ pub struct Container {
     /// Per-chunk restart tables (parallel to `index`; empty for v1
     /// files or chunks too small for a sub-block boundary).
     pub restarts: Vec<Vec<RestartPoint>>,
+    /// Per-chunk codecs (parallel to `index`) for mixed v3 containers;
+    /// empty for uniform containers, where every chunk uses `codec`.
+    pub chunk_codecs: Vec<CodecKind>,
     /// Concatenated compressed chunk payloads.
     pub payload: Vec<u8>,
 }
@@ -133,8 +158,72 @@ impl Container {
             total_uncompressed: data.len() as u64,
             index,
             restarts,
+            chunk_codecs: Vec::new(),
             payload,
         })
+    }
+
+    /// Compress `data` picking the best codec for every chunk (the
+    /// `codag pack --codec auto` path), recording restart points every
+    /// [`DEFAULT_RESTART_INTERVAL`] output bytes.
+    pub fn compress_auto(data: &[u8], chunk_size: usize) -> Result<Container> {
+        Self::compress_auto_with_restarts(data, chunk_size, DEFAULT_RESTART_INTERVAL)
+    }
+
+    /// Per-chunk codec selection with an explicit restart interval:
+    /// every registered codec trial-compresses the first
+    /// [`AUTO_SAMPLE_BYTES`] of each chunk and the strictly smallest
+    /// output wins (ties break toward registry order). When every chunk
+    /// picks the same winner the result is a plain uniform container —
+    /// byte-identical to a forced `--codec <winner>` pack.
+    pub fn compress_auto_with_restarts(
+        data: &[u8],
+        chunk_size: usize,
+        restart_interval: usize,
+    ) -> Result<Container> {
+        if chunk_size == 0 {
+            return Err(invalid("chunk_size must be > 0"));
+        }
+        let mut index = Vec::new();
+        let mut restarts = Vec::new();
+        let mut chunk_codecs = Vec::new();
+        let mut payload = Vec::new();
+        for chunk in data.chunks(chunk_size) {
+            let kind = select_codec(chunk)?;
+            let (comp, points) = compress_chunk_restarts(kind, chunk, restart_interval)?;
+            index.push(ChunkEntry {
+                comp_off: payload.len() as u64,
+                comp_len: comp.len() as u64,
+                uncomp_len: chunk.len() as u64,
+            });
+            restarts.push(points);
+            chunk_codecs.push(kind);
+            payload.extend_from_slice(&comp);
+        }
+        let codec = chunk_codecs.first().copied().unwrap_or(CodecKind::Deflate);
+        if chunk_codecs.iter().all(|&k| k == codec) {
+            chunk_codecs.clear();
+        }
+        Ok(Container {
+            codec,
+            chunk_size,
+            total_uncompressed: data.len() as u64,
+            index,
+            restarts,
+            chunk_codecs,
+            payload,
+        })
+    }
+
+    /// The codec chunk `i` was compressed with (`codec` for uniform
+    /// containers).
+    pub fn chunk_codec(&self, i: usize) -> CodecKind {
+        self.chunk_codecs.get(i).copied().unwrap_or(self.codec)
+    }
+
+    /// True when chunks disagree on codec (serializes as v3).
+    pub fn is_mixed(&self) -> bool {
+        self.chunk_codecs.iter().any(|&k| k != self.codec)
     }
 
     /// The restart table of chunk `i` (empty when the chunk has no
@@ -193,7 +282,7 @@ impl Container {
         out.clear();
         out.reserve(e.uncomp_len as usize);
         let mut sink = crate::decomp::ByteSink { out: std::mem::take(out) };
-        let decoded = crate::codecs::decode_into(self.codec, bytes, &mut sink);
+        let decoded = crate::codecs::decode_into(self.chunk_codec(i), bytes, &mut sink);
         *out = sink.into_bytes();
         decoded?;
         if out.len() != e.uncomp_len as usize {
@@ -216,12 +305,15 @@ impl Container {
         Ok(out)
     }
 
-    /// Serialize to bytes (always written as v2).
+    /// Serialize to bytes: v2 when every chunk shares one codec, v3
+    /// (extra codec section) when they don't.
     pub fn to_bytes(&self) -> Vec<u8> {
+        let mixed = self.is_mixed();
+        let version = if mixed { VERSION_MIXED } else { VERSION };
         let mut out = Vec::with_capacity(48 + self.index.len() * 24 + self.payload.len());
         out.extend_from_slice(&MAGIC.to_le_bytes());
-        out.extend_from_slice(&VERSION.to_le_bytes());
-        out.extend_from_slice(&(self.codec as u32).to_le_bytes());
+        out.extend_from_slice(&version.to_le_bytes());
+        out.extend_from_slice(&self.chunk_codec(0).0.to_le_bytes());
         out.extend_from_slice(&(self.chunk_size as u64).to_le_bytes());
         out.extend_from_slice(&self.total_uncompressed.to_le_bytes());
         out.extend_from_slice(&(self.index.len() as u64).to_le_bytes());
@@ -244,6 +336,16 @@ impl Container {
         }
         let sum = fnv1a64(FNV_OFFSET, &out[section_start..]);
         out.extend_from_slice(&sum.to_le_bytes());
+        // v3 codec section: one wire id per chunk, FNV-guarded like the
+        // restart section so a flipped id surfaces at parse time.
+        if mixed {
+            let codec_start = out.len();
+            for i in 0..self.index.len() {
+                out.extend_from_slice(&self.chunk_codec(i).0.to_le_bytes());
+            }
+            let sum = fnv1a64(FNV_OFFSET, &out[codec_start..]);
+            out.extend_from_slice(&sum.to_le_bytes());
+        }
         out.extend_from_slice(&self.payload);
         out
     }
@@ -261,12 +363,11 @@ impl Container {
             return Err(corrupt(format!("bad magic 0x{magic:08X}")));
         }
         let version = take_u32(data, &mut pos)?;
-        if version != VERSION && version != VERSION_V1 {
+        if version != VERSION && version != VERSION_V1 && version != VERSION_MIXED {
             return Err(corrupt(format!("unsupported version {version}")));
         }
         let codec_raw = take_u32(data, &mut pos)?;
-        let codec = CodecKind::from_u32(codec_raw)
-            .ok_or_else(|| corrupt(format!("unknown codec {codec_raw}")))?;
+        let codec = CodecKind::from_u32(codec_raw).ok_or(Error::UnknownCodec(codec_raw))?;
         let take_u64 = |data: &[u8], pos: &mut usize| -> Result<u64> {
             let b = data.get(*pos..*pos + 8).ok_or_else(|| corrupt("container: truncated header"))?;
             *pos += 8;
@@ -326,6 +427,40 @@ impl Container {
             }
             restarts
         };
+        // v3: per-chunk codec section, FNV-guarded. Checksum first, so
+        // bit rot reads as Corrupt; only a *cleanly stored* id the
+        // registry does not know becomes the typed UnknownCodec.
+        let chunk_codecs = if version == VERSION_MIXED {
+            let section_start = pos;
+            let mut ids = Vec::with_capacity(n_chunks);
+            for _ in 0..n_chunks {
+                ids.push(
+                    take_u32(data, &mut pos)
+                        .map_err(|_| corrupt("container: truncated codec section"))?,
+                );
+            }
+            let sum = fnv1a64(FNV_OFFSET, &data[section_start..pos]);
+            let stored = take_u64(data, &mut pos)
+                .map_err(|_| corrupt("container: truncated codec checksum"))?;
+            if sum != stored {
+                return Err(corrupt(format!(
+                    "container: codec section checksum mismatch \
+                     (computed {sum:016x}, stored {stored:016x})"
+                )));
+            }
+            let mut codecs = Vec::with_capacity(n_chunks);
+            for id in ids {
+                codecs.push(CodecKind::from_u32(id).ok_or(Error::UnknownCodec(id))?);
+            }
+            if codecs.first() != Some(&codec) {
+                return Err(corrupt(
+                    "container: header codec disagrees with chunk 0's codec",
+                ));
+            }
+            codecs
+        } else {
+            Vec::new()
+        };
         let payload = data[pos..].to_vec();
         // Validate index bounds against payload.
         for (i, e) in index.iter().enumerate() {
@@ -342,8 +477,24 @@ impl Container {
                 corrupt(format!("container: chunk {i} restart table invalid: {err}"))
             })?;
         }
-        Ok(Container { codec, chunk_size, total_uncompressed, index, restarts, payload })
+        Ok(Container { codec, chunk_size, total_uncompressed, index, restarts, chunk_codecs, payload })
     }
+}
+
+/// Pick the codec for one chunk: every registered codec trial-compresses
+/// the first [`AUTO_SAMPLE_BYTES`] of it and the strictly smallest
+/// output wins; a tie keeps the earlier registry slot. A codec that
+/// cannot encode the sample (none today) simply drops out of the trial.
+fn select_codec(chunk: &[u8]) -> Result<CodecKind> {
+    let sample = &chunk[..chunk.len().min(AUTO_SAMPLE_BYTES)];
+    let mut best: Option<(usize, CodecKind)> = None;
+    for c in CodecRegistry::codecs() {
+        let Ok(comp) = c.compress_auto(sample) else { continue };
+        if best.map_or(true, |(len, _)| comp.len() < len) {
+            best = Some((comp.len(), CodecKind(c.wire_id())));
+        }
+    }
+    best.map(|(_, kind)| kind).ok_or_else(|| invalid("no registered codec accepted the chunk"))
 }
 
 /// Check a restart table against its chunk's index entry: strictly
@@ -394,7 +545,7 @@ mod tests {
     #[test]
     fn roundtrip_all_codecs() {
         let data = sample_data();
-        for codec in [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate] {
+        for codec in CodecKind::all() {
             let c = Container::compress(&data, codec, 4096).unwrap();
             assert_eq!(c.decompress_all().unwrap(), data, "{codec:?}");
         }
@@ -457,7 +608,7 @@ mod tests {
     #[test]
     fn restart_tables_survive_serialization() {
         let data = sample_data();
-        for codec in [CodecKind::RleV1, CodecKind::RleV2, CodecKind::Deflate] {
+        for codec in CodecKind::all() {
             let c = Container::compress_with_restarts(&data, codec, 8192, 512).unwrap();
             assert!(
                 c.restarts.iter().any(|t| !t.is_empty()),
@@ -544,5 +695,139 @@ mod tests {
         assert!(break_table(&|t| t[0].out_off = 0).is_err());
         assert!(break_table(&|t| t[1].out_off = u64::MAX).is_err());
         assert!(break_table(&|t| t[1].bit_pos = u64::MAX).is_err());
+    }
+
+    /// Two chunks forced onto different codecs — the deterministic way
+    /// to exercise the mixed v3 path regardless of what `--codec auto`
+    /// would pick.
+    fn mixed_sample() -> (Vec<u8>, Container) {
+        let data = sample_data();
+        let chunk_size = 4096usize;
+        let kinds = [CodecKind::RleV1, CodecKind::Deflate];
+        let mut index = Vec::new();
+        let mut restarts = Vec::new();
+        let mut chunk_codecs = Vec::new();
+        let mut payload = Vec::new();
+        for (i, chunk) in data.chunks(chunk_size).enumerate() {
+            let kind = kinds[i % kinds.len()];
+            let (comp, points) = compress_chunk_restarts(kind, chunk, 512).unwrap();
+            index.push(ChunkEntry {
+                comp_off: payload.len() as u64,
+                comp_len: comp.len() as u64,
+                uncomp_len: chunk.len() as u64,
+            });
+            restarts.push(points);
+            chunk_codecs.push(kind);
+            payload.extend_from_slice(&comp);
+        }
+        let c = Container {
+            codec: chunk_codecs[0],
+            chunk_size,
+            total_uncompressed: data.len() as u64,
+            index,
+            restarts,
+            chunk_codecs,
+            payload,
+        };
+        (data, c)
+    }
+
+    #[test]
+    fn mixed_container_serializes_as_v3_and_roundtrips() {
+        let (data, c) = mixed_sample();
+        assert!(c.is_mixed());
+        let bytes = c.to_bytes();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION_MIXED);
+        // Header codec field carries chunk 0's codec.
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), c.chunk_codec(0).0);
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c2.chunk_codecs, c.chunk_codecs);
+        assert_eq!(c2.restarts, c.restarts);
+        assert_eq!(c2.decompress_all().unwrap(), data);
+    }
+
+    #[test]
+    fn codec_section_byte_flips_detected() {
+        let (_, c) = mixed_sample();
+        let bytes = c.to_bytes();
+        let restart_len: usize =
+            c.restarts.iter().map(|t| 4 + t.len() * RESTART_ENTRY_LEN).sum::<usize>() + 8;
+        let codec_start = 36 + c.index.len() * 24 + restart_len;
+        let codec_len = c.n_chunks() * 4 + 8;
+        for off in codec_start..codec_start + codec_len {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x01;
+            assert!(
+                Container::from_bytes(&bad).is_err(),
+                "flip at codec-section byte {off} went undetected"
+            );
+        }
+        for cut in [codec_start, codec_start + 2, codec_start + codec_len - 1] {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn unknown_codec_ids_are_typed() {
+        let data = sample_data();
+        let c = Container::compress(&data, CodecKind::RleV2, 4096).unwrap();
+        let mut bytes = c.to_bytes();
+        bytes[8..12].copy_from_slice(&0x7Fu32.to_le_bytes());
+        assert_eq!(Container::from_bytes(&bytes).err(), Some(Error::UnknownCodec(0x7F)));
+        // A cleanly checksummed v3 codec section with an unregistered id
+        // is also the typed error, not a generic parse failure.
+        let (_, mut mixed) = mixed_sample();
+        mixed.chunk_codecs[1] = CodecKind(0x7F);
+        assert_eq!(
+            Container::from_bytes(&mixed.to_bytes()).err(),
+            Some(Error::UnknownCodec(0x7F))
+        );
+    }
+
+    #[test]
+    fn auto_pack_roundtrips_and_never_loses_to_forced() {
+        let mut data = Vec::new();
+        // Chunk-sized stretches with very different character so the
+        // trial has real choices to make: long runs, structured text,
+        // incompressible noise.
+        data.extend(std::iter::repeat(7u8).take(4096));
+        data.extend("the quick brown fox jumps over the lazy dog. ".bytes().cycle().take(4096));
+        let mut x = 99u64;
+        data.extend((0..4096).map(|_| {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (x >> 56) as u8
+        }));
+        // Interval 0 so trial size == final size: the auto payload can
+        // then never exceed any forced single-codec payload.
+        let auto = Container::compress_auto_with_restarts(&data, 4096, 0).unwrap();
+        assert_eq!(auto.decompress_all().unwrap(), data);
+        let reparsed = Container::from_bytes(&auto.to_bytes()).unwrap();
+        assert_eq!(reparsed.decompress_all().unwrap(), data);
+        assert_eq!(reparsed.chunk_codecs, auto.chunk_codecs);
+        for kind in CodecKind::all() {
+            let forced = Container::compress_with_restarts(&data, kind, 4096, 0).unwrap();
+            assert!(
+                auto.compressed_len() <= forced.compressed_len(),
+                "auto {} > forced {} under {}",
+                auto.compressed_len(),
+                forced.compressed_len(),
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn uniform_auto_pack_stays_v2() {
+        // Every chunk is the same long run: one codec wins everywhere,
+        // so the container must collapse to a plain uniform v2 file,
+        // byte-identical to forcing that codec.
+        let data = vec![42u8; 16384];
+        let auto = Container::compress_auto(&data, 4096).unwrap();
+        assert!(auto.chunk_codecs.is_empty());
+        assert!(!auto.is_mixed());
+        let bytes = auto.to_bytes();
+        assert_eq!(u32::from_le_bytes(bytes[4..8].try_into().unwrap()), VERSION);
+        let forced = Container::compress(&data, auto.codec, 4096).unwrap();
+        assert_eq!(bytes, forced.to_bytes());
     }
 }

@@ -65,6 +65,9 @@ pub enum Error {
     Io(String),
     /// PJRT / XLA runtime failure.
     Runtime(String),
+    /// A container or request named a codec wire id the registry does
+    /// not know (carries the offending id).
+    UnknownCodec(u32),
 }
 
 impl std::fmt::Display for Error {
@@ -74,6 +77,7 @@ impl std::fmt::Display for Error {
             Error::Invalid(m) => write!(f, "invalid argument: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::UnknownCodec(id) => write!(f, "unknown codec wire id {id}"),
         }
     }
 }

@@ -5,7 +5,7 @@
 //! ```text
 //! codag gen        --dataset MC0 --size 16M --out mc0.bin
 //! codag compress   --codec rlev2 --input mc0.bin --out mc0.codag [--chunk 131072] [--width 8]
-//! codag pack       --data-dir DIR (--dataset MC0 [--size 16M] | --input raw.bin --name NAME) [--codec rlev2] [--chunk 131072]
+//! codag pack       --data-dir DIR (--dataset MC0 [--size 16M] | --input raw.bin --name NAME) [--codec rlev2|auto] [--chunk 131072]
 //! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
 //! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
@@ -22,7 +22,7 @@
 //! argument-parsing crates, and the surface is small.
 
 use codag::bench_harness::{all_workloads, report::Experiment, Scale};
-use codag::codecs::CodecKind;
+use codag::codecs::{CodecKind, CodecRegistry};
 use codag::coordinator::{
     decompress_hybrid, decompress_parallel, DatasetSource, Registry, Request, Service,
     ServiceConfig,
@@ -107,6 +107,15 @@ fn get<'a>(f: &'a HashMap<String, String>, k: &str) -> Result<&'a str, String> {
     f.get(k).map(|s| s.as_str()).ok_or_else(|| format!("missing --{k}"))
 }
 
+/// Resolve a codec name (or alias) through the registry. The error
+/// lists whatever is actually registered, so a new codec shows up here
+/// without touching the CLI.
+fn parse_codec(s: &str) -> Result<CodecKind, String> {
+    CodecRegistry::by_name(s).map(|c| CodecKind(c.wire_id())).ok_or_else(|| {
+        format!("unknown codec '{s}' (registered: {})", CodecRegistry::names().join(", "))
+    })
+}
+
 fn cmd_gen(f: &HashMap<String, String>) -> Result<(), String> {
     let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
     let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
@@ -118,7 +127,7 @@ fn cmd_gen(f: &HashMap<String, String>) -> Result<(), String> {
 }
 
 fn cmd_compress(f: &HashMap<String, String>) -> Result<(), String> {
-    let codec = CodecKind::parse(get(f, "codec")?).ok_or("unknown codec")?;
+    let codec = parse_codec(get(f, "codec")?)?;
     let input = get(f, "input")?;
     let out = get(f, "out")?;
     let chunk = parse_size(f.get("chunk").map(String::as_str).unwrap_or("131072"))?;
@@ -147,10 +156,12 @@ fn cmd_compress(f: &HashMap<String, String>) -> Result<(), String> {
 /// `codag serve --data-dir` then serves file-backed (DESIGN.md §9).
 /// The payload comes from `--input` (raw bytes on disk, named with
 /// `--name`) or a generated paper dataset (`--dataset`, deterministic).
+/// `--codec auto` trial-compresses a sample of each chunk through every
+/// registered codec and keeps the per-chunk winner (container v3 when
+/// the winners differ).
 fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
     let dir = std::path::Path::new(get(f, "data-dir")?);
-    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
-        .ok_or("unknown codec")?;
+    let codec_arg = f.get("codec").map(String::as_str).unwrap_or("rlev2");
     let chunk = parse_size(f.get("chunk").map(String::as_str).unwrap_or("131072"))?;
     // Restart points are on by default (container v2, DESIGN.md §8);
     // `--restart-interval 0` packs without sub-block boundaries.
@@ -166,8 +177,13 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
         let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
         (d.name().to_string(), d.generate(size))
     };
-    let container = Container::compress_with_restarts(&data, codec, chunk, restart_interval)
-        .map_err(|e| e.to_string())?;
+    let container = if codec_arg.eq_ignore_ascii_case("auto") {
+        Container::compress_auto_with_restarts(&data, chunk, restart_interval)
+    } else {
+        let codec = parse_codec(codec_arg)?;
+        Container::compress_with_restarts(&data, codec, chunk, restart_interval)
+    }
+    .map_err(|e| e.to_string())?;
     std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
     let path = dir.join(format!("{name}.codag"));
     std::fs::write(&path, container.to_bytes()).map_err(|e| e.to_string())?;
@@ -176,11 +192,32 @@ fn cmd_pack(f: &HashMap<String, String>) -> Result<(), String> {
         "packed {name}: {} -> {} bytes ({}, {} chunks, {n_restarts} restart points) into {}",
         data.len(),
         container.compressed_len(),
-        codec.name(),
+        codec_label(&container),
         container.n_chunks(),
         path.display()
     );
     Ok(())
+}
+
+/// Human label for a container's codec: the single codec name, or a
+/// per-codec chunk tally for mixed (auto-packed) containers.
+fn codec_label(container: &Container) -> String {
+    if !container.is_mixed() {
+        return container.codec.name().to_string();
+    }
+    let mut counts = vec![0usize; codag::codecs::N_CODECS];
+    for i in 0..container.n_chunks() {
+        if let Some(slot) = CodecRegistry::slot(container.chunk_codec(i)) {
+            counts[slot] += 1;
+        }
+    }
+    let parts: Vec<String> = CodecRegistry::names()
+        .iter()
+        .zip(&counts)
+        .filter(|&(_, &n)| n > 0)
+        .map(|(name, n)| format!("{name}x{n}"))
+        .collect();
+    format!("mixed[{}]", parts.join(" "))
 }
 
 /// Compress with a pinned RLE element width (restart points recorded at
@@ -212,6 +249,7 @@ fn compress_with_width(
     }
     Ok(Container {
         codec,
+        chunk_codecs: Vec::new(),
         chunk_size: chunk,
         total_uncompressed: data.len() as u64,
         index,
@@ -274,7 +312,7 @@ fn cmd_decompress(f: &HashMap<String, String>) -> Result<(), String> {
 
 fn cmd_simulate(f: &HashMap<String, String>) -> Result<(), String> {
     let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
-    let codec = CodecKind::parse(get(f, "codec")?).ok_or("unknown codec")?;
+    let codec = parse_codec(get(f, "codec")?)?;
     let gpu = GpuConfig::by_name(f.get("gpu").map(String::as_str).unwrap_or("a100"))
         .ok_or("unknown gpu (a100|v100)")?;
     let size = parse_size(f.get("size").map(String::as_str).unwrap_or("4M"))?;
@@ -332,8 +370,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
         return cmd_serve_daemon(f);
     }
     let d = Dataset::parse(get(f, "dataset")?).ok_or("unknown dataset")?;
-    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
-        .ok_or("unknown codec")?;
+    let codec = parse_codec(f.get("codec").map(String::as_str).unwrap_or("rlev2"))?;
     let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
     let workers: usize = f.get("workers").map(|s| s.parse().unwrap_or(8)).unwrap_or(8);
     let data = d.generate(size);
@@ -381,8 +418,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
 /// `codag serve --port …`: the long-lived TCP daemon (server::daemon).
 fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
     let port: u16 = get(f, "port")?.parse().map_err(|_| "bad --port")?;
-    let codec = CodecKind::parse(f.get("codec").map(String::as_str).unwrap_or("rlev2"))
-        .ok_or("unknown codec")?;
+    let codec = parse_codec(f.get("codec").map(String::as_str).unwrap_or("rlev2"))?;
     let size = parse_size(f.get("size").map(String::as_str).unwrap_or("16M"))?;
     let mut registry = Registry::new();
     // File-backed datasets: every <name>.codag in --data-dir is opened

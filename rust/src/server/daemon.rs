@@ -1105,7 +1105,10 @@ fn handle_request(
 /// Map a decode error onto a wire status.
 fn status_for(e: &Error) -> Status {
     match e {
-        Error::Corrupt(_) => Status::Corrupt,
+        // An unregistered codec id in a container is indistinguishable
+        // from corruption to the client: same wire status, the typed
+        // error only matters server-side.
+        Error::Corrupt(_) | Error::UnknownCodec(_) => Status::Corrupt,
         Error::Invalid(_) => Status::BadRequest,
         Error::Io(_) | Error::Runtime(_) => Status::Internal,
     }
@@ -1200,7 +1203,18 @@ fn shard_loop(
         let mut deadlines = Vec::with_capacity(live.len());
         let mut codecs = Vec::with_capacity(live.len());
         for (j, wait_us) in live {
-            codecs.push(registry.get(&j.req.dataset).map(|s| s.codec()).ok());
+            // Attribute by the first chunk the request touches: for
+            // mixed v3 containers the header codec may not be the codec
+            // that actually decodes this range.
+            codecs.push(
+                registry
+                    .get(&j.req.dataset)
+                    .map(|s| {
+                        let cs = s.chunk_size().max(1) as u64;
+                        s.chunk_codec((j.req.offset / cs) as usize)
+                    })
+                    .ok(),
+            );
             requests.push(j.req);
             deadlines.push(j.deadline);
             replies.push(ReplyMeta {

@@ -13,16 +13,17 @@
 //! entries.
 //!
 //! Error taxonomy (pinned by the unit suite): a malformed file —
-//! truncated header/index, bad magic/version/codec, an index entry
+//! truncated header/index, bad magic/version, an index entry
 //! pointing outside the payload, inconsistent uncompressed sizes —
-//! is `Error::Corrupt`; an out-of-range chunk request is
-//! `Error::Invalid`; filesystem failures are `Error::Io`. Nothing
-//! panics on hostile files.
+//! is `Error::Corrupt`; a cleanly stored codec id the registry does
+//! not know is the typed `Error::UnknownCodec`; an out-of-range chunk
+//! request is `Error::Invalid`; filesystem failures are `Error::Io`.
+//! Nothing panics on hostile files.
 
 use crate::codecs::{CodecKind, RestartPoint};
 use crate::format::container::{
     fnv1a64, validate_restart_table, ChunkEntry, FNV_OFFSET, MAGIC, RESTART_ENTRY_LEN, VERSION,
-    VERSION_V1,
+    VERSION_MIXED, VERSION_V1,
 };
 use crate::obs::{now_if_enabled, DatasetMetrics, Stage, StitchTimers};
 use crate::{corrupt, invalid, Error, Result};
@@ -55,6 +56,9 @@ pub struct FileDataset {
     /// and checksum-verified eagerly at open, like the index: the
     /// serving path never re-reads them per request.
     restarts: Vec<Vec<RestartPoint>>,
+    /// Per-chunk codecs for mixed v3 files; empty for uniform files,
+    /// where every chunk uses `codec`.
+    chunk_codecs: Vec<CodecKind>,
     /// File offset where the payload section starts.
     payload_off: u64,
     /// Payload section length (file length minus header and index).
@@ -87,15 +91,14 @@ impl FileDataset {
             return Err(corrupt(format!("{}: bad magic 0x{magic:08X}", path.display())));
         }
         let version = u32::from_le_bytes(head[4..8].try_into().unwrap());
-        if version != VERSION && version != VERSION_V1 {
+        if version != VERSION && version != VERSION_V1 && version != VERSION_MIXED {
             return Err(corrupt(format!(
                 "{}: unsupported container version {version}",
                 path.display()
             )));
         }
         let codec_raw = u32::from_le_bytes(head[8..12].try_into().unwrap());
-        let codec = CodecKind::from_u32(codec_raw)
-            .ok_or_else(|| corrupt(format!("{}: unknown codec {codec_raw}", path.display())))?;
+        let codec = CodecKind::from_u32(codec_raw).ok_or(Error::UnknownCodec(codec_raw))?;
         let chunk_size = u64::from_le_bytes(head[12..20].try_into().unwrap());
         let total_uncompressed = u64::from_le_bytes(head[20..28].try_into().unwrap());
         let n_chunks = u64::from_le_bytes(head[28..36].try_into().unwrap());
@@ -116,7 +119,7 @@ impl FileDataset {
         // checksum so hostile counts never force a large allocation.
         let mut restarts = Vec::with_capacity(n_chunks as usize);
         let mut section_len = 0u64;
-        if version == VERSION {
+        if version != VERSION_V1 {
             let mut sum = FNV_OFFSET;
             for i in 0..n_chunks {
                 let mut cnt = [0u8; 4];
@@ -160,6 +163,39 @@ impl FileDataset {
             section_len += 8;
         } else {
             restarts.resize_with(n_chunks as usize, Vec::new);
+        }
+        // v3: per-chunk codec section (FNV-guarded, like the restart
+        // section). The allocation is bounded by the index cap above
+        // (4 bytes per chunk < 24). Checksum verifies first so bit rot
+        // is Corrupt; only a cleanly stored unregistered id becomes the
+        // typed UnknownCodec.
+        let mut chunk_codecs = Vec::new();
+        if version == VERSION_MIXED {
+            let mut id_bytes = vec![0u8; n_chunks as usize * 4];
+            read_exact_or_corrupt(&mut file, &mut id_bytes, "codec section")?;
+            let sum = fnv1a64(FNV_OFFSET, &id_bytes);
+            let mut stored = [0u8; 8];
+            read_exact_or_corrupt(&mut file, &mut stored, "codec checksum")?;
+            let stored = u64::from_le_bytes(stored);
+            if sum != stored {
+                return Err(corrupt(format!(
+                    "{}: codec section checksum mismatch \
+                     (computed {sum:016x}, stored {stored:016x})",
+                    path.display()
+                )));
+            }
+            chunk_codecs.reserve(n_chunks as usize);
+            for e in id_bytes.chunks_exact(4) {
+                let id = u32::from_le_bytes(e.try_into().unwrap());
+                chunk_codecs.push(CodecKind::from_u32(id).ok_or(Error::UnknownCodec(id))?);
+            }
+            if chunk_codecs.first() != Some(&codec) {
+                return Err(corrupt(format!(
+                    "{}: header codec disagrees with chunk 0's codec",
+                    path.display()
+                )));
+            }
+            section_len += n_chunks * 4 + 8;
         }
         let payload_off = HEADER_LEN + index_len + section_len;
         let payload_len = file_len.checked_sub(payload_off).ok_or_else(|| {
@@ -215,6 +251,7 @@ impl FileDataset {
             total_uncompressed,
             index,
             restarts,
+            chunk_codecs,
             payload_off,
             payload_len,
             comp_pool: Mutex::new(Vec::new()),
@@ -233,9 +270,16 @@ impl FileDataset {
         &self.path
     }
 
-    /// Codec every chunk was compressed with.
+    /// The header codec (for a mixed v3 file: chunk 0's codec — use
+    /// [`chunk_codec`](Self::chunk_codec) for per-chunk dispatch).
     pub fn codec(&self) -> CodecKind {
         self.codec
+    }
+
+    /// The codec chunk `i` was compressed with (`codec()` for uniform
+    /// files).
+    pub fn chunk_codec(&self, i: usize) -> CodecKind {
+        self.chunk_codecs.get(i).copied().unwrap_or(self.codec)
     }
 
     /// Nominal uncompressed chunk size.
@@ -334,7 +378,7 @@ impl FileDataset {
             out.clear();
             out.resize(self.index[i].uncomp_len as usize, 0);
             crate::coordinator::engine::decode_chunk_parallel_obs(
-                self.codec,
+                self.chunk_codec(i),
                 &comp,
                 self.restart_table(i),
                 out,
@@ -356,7 +400,7 @@ impl FileDataset {
         out.clear();
         out.reserve(want);
         let mut sink = crate::decomp::ByteSink { out: std::mem::take(out) };
-        let decoded = crate::codecs::decode_into(self.codec, &comp[..], &mut sink);
+        let decoded = crate::codecs::decode_into(self.chunk_codec(i), &comp[..], &mut sink);
         *out = sink.into_bytes();
         decoded?;
         if out.len() != want {
@@ -503,9 +547,6 @@ mod tests {
         m[4] = 0xEE; // version
         cases.push(m);
         let mut m = good.clone();
-        m[8] = 0x7F; // codec
-        cases.push(m);
-        let mut m = good.clone();
         m[28..36].copy_from_slice(&u64::MAX.to_le_bytes()); // n_chunks
         cases.push(m);
         let mut m = good.clone();
@@ -518,6 +559,78 @@ mod tests {
             std::fs::write(&path, &bad).unwrap();
             let err = FileDataset::open(&path).unwrap_err();
             assert!(matches!(err, Error::Corrupt(_)), "case {i}: {err}");
+        }
+        // An unregistered codec id is the typed error, not Corrupt.
+        let mut m = good.clone();
+        m[8] = 0x7F;
+        std::fs::write(&path, &m).unwrap();
+        let err = FileDataset::open(&path).unwrap_err();
+        assert!(matches!(err, Error::UnknownCodec(0x7F)), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mixed_v3_file_serves_per_chunk_codecs() {
+        // Build a mixed container by hand (chunk 0 RLE v1, chunk 1
+        // DEFLATE, ...) and serve it from disk: the lazy store must
+        // dispatch each chunk through its own codec, serially and via
+        // the parallel stitch path.
+        let data = sample_data();
+        let chunk_size = 4096usize;
+        let kinds = [CodecKind::RleV1, CodecKind::Deflate, CodecKind::Lzss];
+        let mut index = Vec::new();
+        let mut restarts = Vec::new();
+        let mut chunk_codecs = Vec::new();
+        let mut payload = Vec::new();
+        for (i, chunk) in data.chunks(chunk_size).enumerate() {
+            let kind = kinds[i % kinds.len()];
+            let (comp, points) =
+                crate::codecs::compress_chunk_restarts(kind, chunk, 512).unwrap();
+            index.push(ChunkEntry {
+                comp_off: payload.len() as u64,
+                comp_len: comp.len() as u64,
+                uncomp_len: chunk.len() as u64,
+            });
+            restarts.push(points);
+            chunk_codecs.push(kind);
+            payload.extend_from_slice(&comp);
+        }
+        let c = Container {
+            codec: chunk_codecs[0],
+            chunk_size,
+            total_uncompressed: data.len() as u64,
+            index,
+            restarts,
+            chunk_codecs: chunk_codecs.clone(),
+            payload,
+        };
+        let path = tmp_path("mixed-v3").with_extension("codag");
+        std::fs::write(&path, c.to_bytes()).unwrap();
+        let fd = FileDataset::open(&path).unwrap();
+        let mut out = Vec::new();
+        let mut all = Vec::new();
+        for i in 0..fd.n_chunks() {
+            assert_eq!(fd.chunk_codec(i), chunk_codecs[i], "chunk {i}");
+            fd.decompress_chunk_into(i, &mut out).unwrap();
+            all.extend_from_slice(&out);
+        }
+        assert_eq!(all, data);
+        let mut split = Vec::new();
+        for i in 0..fd.n_chunks() {
+            fd.decompress_chunk_into(i, &mut out).unwrap();
+            fd.decompress_chunk_split_into(i, 4, &mut split).unwrap();
+            assert_eq!(split, out, "chunk {i} split decode diverged");
+        }
+        // Codec-section corruption is caught at open.
+        let bytes = c.to_bytes();
+        let restart_len: usize =
+            c.restarts.iter().map(|t| 4 + t.len() * RESTART_ENTRY_LEN).sum::<usize>() + 8;
+        let codec_start = HEADER_LEN as usize + ENTRY_LEN as usize * c.n_chunks() + restart_len;
+        for off in (codec_start..codec_start + c.n_chunks() * 4 + 8).step_by(3) {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x01;
+            std::fs::write(&path, &bad).unwrap();
+            assert!(FileDataset::open(&path).is_err(), "flip at {off} went undetected");
         }
         std::fs::remove_file(&path).ok();
     }

@@ -47,8 +47,14 @@ macro_rules! golden {
 }
 
 /// Every golden vector, in fixture order.
+#[allow(non_upper_case_globals)]
 pub fn vectors() -> Vec<GoldenVector> {
-    use CodecKind::{Deflate, RleV1, RleV2};
+    // Associated consts can't be `use`-imported; local aliases keep the
+    // vector list readable.
+    const RleV1: CodecKind = CodecKind::RleV1;
+    const RleV2: CodecKind = CodecKind::RleV2;
+    const Deflate: CodecKind = CodecKind::Deflate;
+    const Lzss: CodecKind = CodecKind::Lzss;
     vec![
         // ORC RLE v1: byte RLE (width 1) and integer RLE (widths 2/4/8).
         golden!("v1_byte_runs_w1", RleV1, 1, true, &[]),
@@ -107,5 +113,15 @@ pub fn vectors() -> Vec<GoldenVector> {
             false,
             &[(21, 0xE0), (22, 0x01), (222, 0xFE)]
         ),
+        // LZSS (wire id 4): all encoder-pinned — gen_golden.py carries a
+        // line-for-line port of the greedy single-probe encoder. No dead
+        // bits: the uvarint header, flag-group zero-padding check, and
+        // strict segment accounting make every single-bit flip either a
+        // decode error or a payload change (measured exhaustively
+        // against the Python lzss_decode port, like the sets above).
+        golden!("lz_literal_only", Lzss, 1, true, &[]),
+        golden!("lz_match_heavy", Lzss, 1, true, &[]),
+        golden!("lz_overlap_match", Lzss, 1, true, &[]),
+        golden!("lz_max_offset", Lzss, 1, true, &[]),
     ]
 }

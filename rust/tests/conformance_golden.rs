@@ -1,5 +1,5 @@
 //! Golden-vector conformance suite: pins the exact wire format of all
-//! three codecs and of the chunked container.
+//! four codecs and of the chunked container.
 //!
 //! Fixtures live in `tests/golden/` (generated and cross-verified by
 //! `tests/golden/gen_golden.py`, which checks every stream against a

@@ -8,7 +8,9 @@
 //!   `Expired` without consuming a decode slot (stats count only the
 //!   decoded requests),
 //! * hand-built protocol-v1 frames (no deadline field) are still
-//!   accepted and served.
+//!   accepted and served,
+//! * an auto-packed mixed (v3) container serves byte-identically to
+//!   every forced-codec container, from disk and from memory.
 
 use codag::codecs::CodecKind;
 use codag::coordinator::{DatasetSource, Registry};
@@ -180,6 +182,72 @@ fn expired_deadline_returns_expired_without_decode_slot() {
     // requests are recorded.
     let stats = handle.join().expect("clean join");
     assert_eq!(stats.count() as u64, HEAD + 1);
+}
+
+#[test]
+fn auto_packed_mixed_container_serves_identically_to_forced() {
+    // `codag pack --codec auto` shape: chunks engineered so per-chunk
+    // selection disagrees — an arithmetic u64 sequence (RLE v2 delta
+    // territory: ~13 B vs kilobytes for the LZ codecs, measured via the
+    // gen_golden.py ports), repeated text (LZ territory), and
+    // near-random bytes — giving a mixed v3 file. Served responses must
+    // be byte-identical to every forced-codec container over the same
+    // data, from disk and from memory alike.
+    const CHUNK: usize = 8 * 1024;
+    let mut data = Vec::with_capacity(3 * CHUNK);
+    for i in 0..(CHUNK / 8) as u64 {
+        data.extend_from_slice(&i.to_le_bytes());
+    }
+    let motif = b"the quick brown fox jumps over the lazy dog. ";
+    while data.len() < 2 * CHUNK {
+        data.extend_from_slice(motif);
+    }
+    data.truncate(2 * CHUNK);
+    let mut rng = Rng::new(0xA070);
+    while data.len() < 3 * CHUNK {
+        data.push(rng.next_u64() as u8);
+    }
+    let auto = Container::compress_auto(&data, CHUNK).unwrap();
+    assert!(
+        auto.is_mixed(),
+        "auto pack chose one codec for all chunks — differential is vacuous"
+    );
+    let path = tmp_path("auto").with_extension("codag");
+    std::fs::write(&path, auto.to_bytes()).unwrap();
+    let fd = FileDataset::open(&path).unwrap();
+    let mut reg = Registry::new();
+    reg.insert_source("auto-file", DatasetSource::File(fd));
+    reg.insert("auto-mem", auto);
+    for (i, kind) in CodecKind::all().into_iter().enumerate() {
+        let forced = Container::compress(&data, kind, CHUNK).unwrap();
+        reg.insert(format!("forced-{i}"), forced);
+    }
+    let handle = start(Arc::new(reg), DaemonConfig::default(), "127.0.0.1:0").expect("bind");
+    let mut conn = Client::connect(handle.addr());
+    let mut rng = Rng::new(0xA071);
+    let names: Vec<String> = ["auto-file".to_string(), "auto-mem".to_string()]
+        .into_iter()
+        .chain((0..CodecKind::all().len()).map(|i| format!("forced-{i}")))
+        .collect();
+    for r in 0..24u64 {
+        let total = data.len() as u64;
+        let offset = rng.below(total);
+        let len = 1 + rng.below((total - offset).min(20_000));
+        let want = &data[offset as usize..(offset + len) as usize];
+        for (b, name) in names.iter().enumerate() {
+            let resp = conn.rpc(&WireRequest::Get {
+                id: (b as u64) << 32 | r,
+                dataset: name.clone(),
+                offset,
+                len,
+                deadline_ms: 0,
+            });
+            assert_eq!(resp.status, Status::Ok, "{}", String::from_utf8_lossy(&resp.payload));
+            assert_eq!(resp.payload, want, "{name} [{offset}+{len}]");
+        }
+    }
+    handle.join().expect("clean join");
+    std::fs::remove_file(&path).ok();
 }
 
 /// Hand-build a v1 request body (32-byte header, no deadline field;
