@@ -148,6 +148,16 @@ rlev2           4.105        4.071     0.83
 deflate         1.010        1.004     0.59
 ```
 
+## crc overhead
+
+```text
+codec      plain GB/s    crc GB/s  delta %
+rlev1          11.820       11.503     2.68
+rlev2           4.105        4.010     2.31
+deflate         1.010        1.001     0.89
+lzss            2.412        2.366     1.91
+```
+
 ## fig7_throughput
 
 ```text
@@ -229,6 +239,16 @@ def test_bench_to_json_parses_all_sections():
     assert m["obs_overhead/rlev2/delta_pct"]["value"] == 0.83
     assert m["obs_overhead/rlev2/delta_pct"]["kind"] == "info"
     assert m["obs_overhead/deflate/instr_gbps"]["value"] == 1.004
+    # Content-checksum overhead rows (v4 verified vs stripped decode,
+    # DESIGN.md §13 — the <5% CRC budget).
+    assert m["crc_overhead/rlev1/plain_gbps"]["value"] == 11.820
+    assert m["crc_overhead/rlev1/plain_gbps"]["kind"] == "throughput"
+    assert m["crc_overhead/rlev1/crc_gbps"]["value"] == 11.503
+    assert m["crc_overhead/rlev2/delta_pct"]["value"] == 2.31
+    assert m["crc_overhead/rlev2/delta_pct"]["kind"] == "info"
+    assert m["crc_overhead/lzss/crc_gbps"]["value"] == 2.366
+    assert all(m[f"crc_overhead/{c}/delta_pct"]["value"] < 5.0
+               for c in ("rlev1", "rlev2", "deflate", "lzss"))
     # Connection-scaling sweep rows (evented net front, DESIGN.md §11):
     # `conns=N` markers scope each LoadgenReport block to its row.
     assert m["conn_scaling/c16/ok"]["value"] == 512

@@ -1,12 +1,19 @@
 """Independent Python parser for the pinned `.codag` container fixtures.
 
-The v2 restart table is cross-checked from outside the Rust codebase:
-this module re-implements the on-disk layout (DESIGN.md §8) from the
-spec alone — header, chunk index, restart section with its FNV-1a
-guard — and validates the four checked-in container fixtures against
-it, including a *semantic* check that every recorded restart point
-really is a resumable decode position (re-decoding the RLE sub-stream
-from the recorded bit offset reproduces the chunk's tail bytes).
+The container layout is cross-checked from outside the Rust codebase:
+this module re-implements the on-disk layout (DESIGN.md §8/§13) from
+the spec alone — header, chunk index, restart section with its FNV-1a
+guard, and the v4 integrity tier (codec section, per-chunk content
+CRC-32C, whole-meta CRC) — and validates the five checked-in container
+fixtures against it, including a *semantic* check that every recorded
+restart point really is a resumable decode position (re-decoding the
+RLE sub-stream from the recorded bit offset reproduces the chunk's
+tail bytes).
+
+The CRC-32C here is a deliberately naive bitwise implementation:
+independent of both the Rust slice-by-8 tables and the generator's
+table-driven port, so the three agree only if all three are actually
+CRC-32C.
 
 rust/tests/prop_parallel.rs pins the same files from the Rust side;
 together the two suites keep the Rust packer, the Python generator,
@@ -35,6 +42,7 @@ FIXTURES = [
     ("container_v2_deflate", "container_df", 2, 3, 512),
     ("container_v1_rlev1", "container_rle", 1, 1, 1024),
     ("container_v1_deflate", "container_df", 1, 3, 512),
+    ("container_v4_rlev2", "container_rle", 4, 2, 1024),
 ]
 
 
@@ -45,13 +53,24 @@ def fnv1a64(data: bytes) -> int:
     return state
 
 
+def crc32c(data: bytes) -> int:
+    """Naive bitwise CRC-32C (Castagnoli, reflected 0x82F63B78)."""
+    crc = 0xFFFFFFFF
+    for b in data:
+        crc ^= b
+        for _ in range(8):
+            crc = (crc >> 1) ^ (0x82F63B78 if crc & 1 else 0)
+    return crc ^ 0xFFFFFFFF
+
+
 def parse_container(blob: bytes):
-    """Spec-driven parser (written against DESIGN.md §8, not the Rust or
-    generator source). Returns (header dict, index, restart tables,
-    payload)."""
+    """Spec-driven parser (written against DESIGN.md §8/§13, not the
+    Rust or generator source). Returns (header dict, index, restart
+    tables, payload); v4 metadata lands in header["sums"] /
+    header["chunk_codecs"]."""
     magic, version, codec = struct.unpack_from("<III", blob, 0)
     assert magic == MAGIC, f"bad magic {magic:#x}"
-    assert version in (1, 2), version
+    assert version in (1, 2, 3, 4), version
     chunk_size, total, n_chunks = struct.unpack_from("<QQQ", blob, 12)
     pos = 36
     index = []
@@ -59,7 +78,9 @@ def parse_container(blob: bytes):
         index.append(struct.unpack_from("<QQQ", blob, pos))
         pos += 24
     restarts = []
-    if version == 2:
+    chunk_codecs = None
+    sums = None
+    if version >= 2:
         section_start = pos
         for _ in range(n_chunks):
             (count,) = struct.unpack_from("<I", blob, pos)
@@ -75,12 +96,31 @@ def parse_container(blob: bytes):
         assert computed == stored, "restart section checksum mismatch"
     else:
         restarts = [[] for _ in range(n_chunks)]
+    if version >= 3:
+        section_start = pos
+        chunk_codecs = list(struct.unpack_from(f"<{n_chunks}I", blob, pos))
+        pos += 4 * n_chunks
+        (stored,) = struct.unpack_from("<Q", blob, pos)
+        pos += 8
+        assert fnv1a64(blob[section_start:pos - 8]) == stored, "codec section checksum mismatch"
+    if version >= 4:
+        section_start = pos
+        sums = list(struct.unpack_from(f"<{n_chunks}I", blob, pos))
+        pos += 4 * n_chunks
+        (stored,) = struct.unpack_from("<Q", blob, pos)
+        pos += 8
+        assert fnv1a64(blob[section_start:pos - 8]) == stored, "content-sum section checksum mismatch"
+        (meta,) = struct.unpack_from("<I", blob, pos)
+        assert crc32c(blob[:pos]) == meta, "whole-meta CRC mismatch"
+        pos += 4
     header = {
         "version": version,
         "codec": codec,
         "chunk_size": chunk_size,
         "total": total,
         "n_chunks": n_chunks,
+        "chunk_codecs": chunk_codecs,
+        "sums": sums,
     }
     return header, index, restarts, blob[pos:]
 
@@ -170,6 +210,37 @@ def test_v2_deflate_restart_points_sit_on_block_boundaries():
         assert comp == payload[comp_off : comp_off + comp_len], f"chunk {ci} drifted"
         assert points == [tuple(p) for p in table], f"chunk {ci} table drifted"
         assert zlib.decompress(comp, -15) == chunk
+
+
+def test_v4_content_checksums_match_decoded_chunks():
+    # The integrity tier's core claim, checked from the spec side: the
+    # per-chunk CRC-32C section holds the checksum of each chunk's
+    # *uncompressed* bytes, and the uniform codec section repeats the
+    # header codec.
+    blob = (GOLDEN / "container_v4_rlev2.codag").read_bytes()
+    data = (GOLDEN / "container_rle.input.bin").read_bytes()
+    header, index, _restarts, payload = parse_container(blob)
+    assert header["chunk_codecs"] == [header["codec"]] * header["n_chunks"]
+    assert len(header["sums"]) == header["n_chunks"]
+    for ci, (comp_off, comp_len, uncomp_len) in enumerate(index):
+        decoded = decode_chunk(header["codec"], payload[comp_off : comp_off + comp_len])
+        assert decoded == data[ci * header["chunk_size"] : ci * header["chunk_size"] + uncomp_len]
+        assert crc32c(decoded) == header["sums"][ci], f"chunk {ci} content CRC"
+
+
+def test_v4_meta_crc_rejects_every_metadata_flip():
+    # Flip one bit in every metadata byte (everything before the
+    # payload): the spec parser must refuse each mutant — the whole-meta
+    # CRC (or an earlier guard it protects) has no blind spots.
+    blob = bytearray((GOLDEN / "container_v4_rlev2.codag").read_bytes())
+    payload_len = sum(e[1] for e in parse_container(bytes(blob))[1])
+    meta_len = len(blob) - payload_len
+    for i in range(meta_len):
+        blob[i] ^= 0x01
+        with pytest.raises((AssertionError, struct.error, IndexError, ValueError)):
+            parse_container(bytes(blob))
+        blob[i] ^= 0x01
+    parse_container(bytes(blob))  # restored original still parses
 
 
 def test_generator_reproduces_pinned_container_bytes():

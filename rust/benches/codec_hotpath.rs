@@ -13,6 +13,11 @@
 //! 1/2/4/8 stitch workers (`decompress_chunk_split`, DESIGN.md §7.5) —
 //! the single-hot-chunk case chunk-level parallelism can't touch.
 //! Recorded by `record_baselines.sh`, parsed into `subblock/...`.
+//!
+//! With `CODAG_CRC_OVERHEAD` set, prints the content-checksum overhead
+//! table instead (decode with the v4 per-chunk CRC-32C verified vs a
+//! checksum-stripped clone, DESIGN.md §13) — recorded as its own
+//! section, parsed into `crc_overhead/...`, budgeted at <5%.
 
 use codag::bench_harness::compress_dataset;
 use codag::codecs::{compress_chunk_with, CodecKind};
@@ -218,6 +223,50 @@ fn obs_overhead(total: usize) {
     }
 }
 
+/// Content-checksum overhead (`CODAG_CRC_OVERHEAD`): the same serial
+/// chunk-decode loop over the same compressed streams, once against the
+/// v4 container (every cache-miss decode CRC-32C-verifies its output,
+/// DESIGN.md §13) and once against a checksum-stripped clone (the
+/// pre-v4 behavior). Both run in one binary so the delta isolates the
+/// checksum pass itself. EXPERIMENTS.md gates the delta column at <5%,
+/// the same budget the obs gate gets.
+/// Columns `codec plain GB/s crc GB/s delta %`.
+fn crc_overhead(total: usize) {
+    println!("{:8} {:>12} {:>12} {:>8}", "codec", "plain GB/s", "crc GB/s", "delta %");
+    let data = Dataset::Mc0.generate(total);
+    for kind in CodecKind::all() {
+        let verified = Container::compress(&data, kind, 128 * 1024).expect("crc compress");
+        assert_eq!(verified.checksums.len(), verified.n_chunks());
+        let mut stripped = verified.clone();
+        stripped.checksums.clear();
+        let n = verified.n_chunks();
+        let mut out = Vec::new();
+        let mut run = |c: &Container| {
+            best_of(3, || {
+                let mut sum = 0;
+                for i in 0..n {
+                    c.decompress_chunk_into(i, &mut out).expect("crc-sweep decode");
+                    sum += out.len();
+                }
+                sum
+            })
+        };
+        let (t_plain, b_plain) = run(&stripped);
+        let (t_crc, b_crc) = run(&verified);
+        assert_eq!(b_plain, data.len());
+        assert_eq!(b_crc, b_plain);
+        let plain = b_plain as f64 / t_plain / 1e9;
+        let crc = b_crc as f64 / t_crc / 1e9;
+        println!(
+            "{:8} {:>12.3} {:>12.3} {:>8.2}",
+            kind.name(),
+            plain,
+            crc,
+            (plain - crc) / plain * 100.0,
+        );
+    }
+}
+
 fn main() {
     let size = size();
     if std::env::var("CODAG_RLE_WIDTH_SWEEP").is_ok() {
@@ -230,6 +279,10 @@ fn main() {
     }
     if std::env::var("CODAG_OBS_OVERHEAD").is_ok() {
         obs_overhead(size);
+        return;
+    }
+    if std::env::var("CODAG_CRC_OVERHEAD").is_ok() {
+        crc_overhead(size);
         return;
     }
     println!(

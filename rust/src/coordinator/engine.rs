@@ -292,7 +292,11 @@ pub fn decompress_chunk_split_obs_into(
         out,
         n_workers,
         obs,
-    )
+    )?;
+    // Content verification happens once at the join, over the stitched
+    // extent: each sub-block wrote its disjoint slice, so one CRC over
+    // `out` covers every worker's output (DESIGN.md §13).
+    Container::verify_chunk_content(&container.checksums, i, out)
 }
 
 /// Decompress chunk `i` through the stitcher into a fresh buffer.
@@ -398,6 +402,23 @@ mod tests {
     }
 
     #[test]
+    fn split_decode_verifies_content_checksum_at_join() {
+        let data = Dataset::Mc0.generate(128 * 1024);
+        let mut c =
+            Container::compress_with_restarts(&data, CodecKind::RleV2, 128 * 1024, 4096).unwrap();
+        assert!(!c.restart_table(0).is_empty());
+        // Lie about the content checksum: every sub-block decodes fine,
+        // but the join-time CRC over the stitched extent must fail typed.
+        c.checksums[0] ^= 1;
+        for workers in [1, 4] {
+            match decompress_chunk_split(&c, 0, workers) {
+                Err(Error::ChecksumMismatch(_)) => {}
+                other => panic!("workers {workers}: expected ChecksumMismatch, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
     fn split_decode_without_restarts_matches_serial() {
         let data = Dataset::Mc0.generate(64 * 1024);
         for kind in CodecKind::all() {
@@ -420,6 +441,7 @@ mod tests {
         let mut index = Vec::new();
         let mut restarts = Vec::new();
         let mut chunk_codecs = Vec::new();
+        let mut checksums = Vec::new();
         let mut payload = Vec::new();
         for (i, chunk) in data.chunks(chunk_size).enumerate() {
             let kind = kinds[i % kinds.len()];
@@ -432,6 +454,7 @@ mod tests {
             });
             restarts.push(points);
             chunk_codecs.push(kind);
+            checksums.push(crate::format::hash::crc32c(chunk));
             payload.extend_from_slice(&comp);
         }
         let c = Container {
@@ -441,6 +464,7 @@ mod tests {
             index,
             restarts,
             chunk_codecs,
+            checksums,
             payload,
         };
         assert!(c.is_mixed());

@@ -135,6 +135,16 @@ impl DatasetSource {
         }
     }
 
+    /// The packed CRC-32C of chunk `i`'s uncompressed bytes (`None` for
+    /// pre-v4 sources without content checksums). The service's
+    /// `--paranoid` path re-verifies cache hits against this.
+    pub fn chunk_checksum(&self, i: usize) -> Option<u32> {
+        match self {
+            DatasetSource::Memory(c) => c.chunk_checksum(i),
+            DatasetSource::File(f) => f.chunk_checksum(i),
+        }
+    }
+
     /// Decompress chunk `i` by splitting its restart table across
     /// `n_workers` threads (DESIGN.md §7.5); byte-identical to
     /// [`decompress_chunk_into`](Self::decompress_chunk_into), and

@@ -136,11 +136,17 @@ pub struct ServiceConfig {
     /// Use the hybrid PJRT path for RLE containers when an expander is
     /// available.
     pub hybrid: bool,
+    /// Re-verify content checksums on cache *hits* too (`--paranoid`):
+    /// every Get re-CRCs the cached chunk against the checksum recorded
+    /// at pack time, catching in-memory corruption after the fill-time
+    /// verification that cache misses always get. Off by default — the
+    /// hit path stays zero-cost and trusts the verified fill.
+    pub paranoid: bool,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { workers: 4, hybrid: false }
+        ServiceConfig { workers: 4, hybrid: false, paranoid: false }
     }
 }
 
@@ -415,6 +421,10 @@ impl<'a> Service<'a> {
                 if let Some(m) = &dm {
                     m.cache_hits.inc();
                 }
+                if self.config.paranoid {
+                    let want = self.registry.get(dataset)?.chunk_checksum(w.chunk);
+                    verify_full_chunk(want, w.chunk, &full, dm.as_deref())?;
+                }
                 return shared_slice(&full, w);
             }
             if let Some(m) = &dm {
@@ -442,6 +452,9 @@ impl<'a> Service<'a> {
             if let (Some(t0), Some(m)) = (t0, &dm) {
                 m.stage(Stage::DecodeSerial).record(t0.elapsed());
             }
+            // The expand path bypasses Container::decompress_chunk_into,
+            // so it carries its own content verification.
+            verify_full_chunk(c.chunk_checksum(w.chunk), w.chunk, &full, dm.as_deref())?;
             if let Some(m) = &dm {
                 m.decoded_bytes.add(full.len() as u64);
             }
@@ -454,20 +467,27 @@ impl<'a> Service<'a> {
                 slice_chunk(&full, w)
             };
         }
-        if split_workers > 1 && !c.restart_table(w.chunk).is_empty() {
+        let decoded = if split_workers > 1 && !c.restart_table(w.chunk).is_empty() {
             c.decompress_chunk_split_obs_into(
                 w.chunk,
                 split_workers,
                 scratch,
                 dm.as_ref().map(|m| m.stitch_timers()),
-            )?;
+            )
         } else {
             let t0 = now_if_enabled();
-            c.decompress_chunk_into(w.chunk, scratch)?;
+            let r = c.decompress_chunk_into(w.chunk, scratch);
             if let (Some(t0), Some(m)) = (t0, &dm) {
                 m.stage(Stage::DecodeSerial).record(t0.elapsed());
             }
+            r
+        };
+        if let Err(Error::ChecksumMismatch(_)) = &decoded {
+            if let Some(m) = &dm {
+                m.integrity_failures.inc();
+            }
         }
+        decoded?;
         if let Some(m) = &dm {
             m.decoded_bytes.add(scratch.len() as u64);
         }
@@ -506,6 +526,29 @@ impl<'a> Service<'a> {
         }
         Some(shared_slice(&shared, w))
     }
+}
+
+/// Re-verify a full decoded chunk against the checksum recorded at pack
+/// time (`--paranoid` cache-hit re-checks and the hybrid expand path,
+/// which bypasses the container's own fill-time verification). `None`
+/// means the container predates v4 — nothing to check.
+fn verify_full_chunk(
+    want: Option<u32>,
+    chunk: usize,
+    full: &[u8],
+    dm: Option<&DatasetMetrics>,
+) -> Result<()> {
+    let Some(want) = want else { return Ok(()) };
+    let got = crate::format::hash::crc32c(full);
+    if got == want {
+        return Ok(());
+    }
+    if let Some(m) = dm {
+        m.integrity_failures.inc();
+    }
+    Err(Error::ChecksumMismatch(format!(
+        "chunk {chunk}: content crc32c {got:08x}, packed {want:08x}"
+    )))
 }
 
 /// Copy the requested sub-range out of a decoded chunk.
@@ -572,7 +615,7 @@ mod tests {
     #[test]
     fn serve_full_and_ranged_requests() {
         let (data, reg) = registry();
-        let svc = Service::new(&reg, None, ServiceConfig { workers: 4, hybrid: false });
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 4, hybrid: false, paranoid: false });
         let reqs = vec![
             Request { id: 1, dataset: "tpc".into(), offset: 0, len: 0 },
             Request { id: 2, dataset: "tpc".into(), offset: 100_000, len: 5000 },
@@ -590,7 +633,7 @@ mod tests {
     fn hybrid_service_matches_cpu() {
         let (data, reg) = registry();
         let ex = Expander::cpu_only();
-        let svc = Service::new(&reg, Some(&ex), ServiceConfig { workers: 2, hybrid: true });
+        let svc = Service::new(&reg, Some(&ex), ServiceConfig { workers: 2, hybrid: true, paranoid: false });
         let reqs =
             vec![Request { id: 9, dataset: "tpc".into(), offset: 65_000, len: 70_000 }];
         let (resp, _) = svc.serve_batch(&reqs);
@@ -601,7 +644,7 @@ mod tests {
     fn cached_service_matches_and_hits() {
         let (data, reg) = registry();
         let cache = ChunkCache::new(8 << 20, 2);
-        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false })
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false, paranoid: false })
             .with_cache(&cache);
         let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
         // Ghost-LRU admission: the first touch of a chunk key is
@@ -629,7 +672,7 @@ mod tests {
         // admit, hit (ghost-LRU).
         let (data, reg) = registry();
         let cache = ChunkCache::new(8 << 20, 2);
-        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false })
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false, paranoid: false })
             .with_cache(&cache);
         let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
         for _ in 0..2 {
@@ -654,9 +697,49 @@ mod tests {
     }
 
     #[test]
+    fn paranoid_mode_recrcs_cache_hits_and_catches_poisoned_chunks() {
+        let (data, reg) = registry();
+        let cache = ChunkCache::new(8 << 20, 2);
+        let svc = Service::new(
+            &reg,
+            None,
+            ServiceConfig { workers: 2, hybrid: false, paranoid: true },
+        )
+        .with_cache(&cache);
+        let req = Request { id: 1, dataset: "tpc".into(), offset: 40_000, len: 8_000 };
+        // Ghost-LRU warm-up: decline, admit, hit — every read must still
+        // serve correct bytes with the paranoid re-check on.
+        for _ in 0..3 {
+            let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+            assert_eq!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
+        }
+        // Poison the cached chunk in place (simulated memory corruption
+        // after a verified fill). A default service trusts the cache and
+        // serves the wrong bytes; paranoid must refuse.
+        let mut bad = cache.get("tpc", 1).expect("chunk 1 cached").to_vec();
+        bad[100] ^= 0x01;
+        cache.insert("tpc", 1, bad.into());
+        let trusting = Service::new(
+            &reg,
+            None,
+            ServiceConfig { workers: 2, hybrid: false, paranoid: false },
+        )
+        .with_cache(&cache);
+        let (resp, _) = trusting.serve_batch(std::slice::from_ref(&req));
+        assert!(resp[0].data.is_ok(), "default hit path trusts the fill-time check");
+        assert_ne!(resp[0].data.as_ref().unwrap(), &data[40_000..48_000]);
+        let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
+        assert!(
+            matches!(resp[0].data, Err(Error::ChecksumMismatch(_))),
+            "paranoid hit must fail typed, got {:?}",
+            resp[0].data
+        );
+    }
+
+    #[test]
     fn serve_batch_with_cancels_expired_requests() {
         let (data, reg) = registry();
-        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false });
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 2, hybrid: false, paranoid: false });
         let reqs = vec![
             Request { id: 1, dataset: "tpc".into(), offset: 0, len: 1000 },
             Request { id: 2, dataset: "tpc".into(), offset: 0, len: 1000 },
@@ -672,7 +755,7 @@ mod tests {
     #[test]
     fn scratch_pool_reuses_buffers_across_batches() {
         let (data, reg) = registry();
-        let svc = Service::new(&reg, None, ServiceConfig { workers: 1, hybrid: false });
+        let svc = Service::new(&reg, None, ServiceConfig { workers: 1, hybrid: false, paranoid: false });
         let req = Request { id: 1, dataset: "tpc".into(), offset: 10, len: 100 };
         for _ in 0..3 {
             let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
@@ -699,7 +782,7 @@ mod tests {
             assert!(!c.restart_table(0).is_empty(), "{codec:?}");
             let mut reg = Registry::new();
             reg.insert("big", c);
-            let svc = Service::new(&reg, None, ServiceConfig { workers: 8, hybrid: false });
+            let svc = Service::new(&reg, None, ServiceConfig { workers: 8, hybrid: false, paranoid: false });
             let req = Request { id: 1, dataset: "big".into(), offset: 0, len: 0 };
             let (resp, _) = svc.serve_batch(std::slice::from_ref(&req));
             assert_eq!(resp[0].data.as_ref().unwrap(), &data, "{codec:?}");

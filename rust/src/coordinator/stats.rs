@@ -26,6 +26,10 @@ pub struct LatencyStats {
     total_bytes: u64,
     cache_hits: u64,
     cache_misses: u64,
+    /// Requests refused with `Error::ChecksumMismatch` (decoded bytes
+    /// failed content verification). Zero on a healthy daemon; the
+    /// shutdown summary prints it when non-zero.
+    integrity_failures: u64,
     /// Decoded bytes served per codec, indexed by registry slot
     /// ([`CodecRegistry::slot`]) — cheap observability for the
     /// per-codec hot paths (the `codag serve` shutdown summary prints
@@ -73,6 +77,7 @@ impl LatencyStats {
         self.total_bytes += other.total_bytes;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        self.integrity_failures += other.integrity_failures;
         for (a, b) in self.codec_bytes.iter_mut().zip(other.codec_bytes.iter()) {
             *a += b;
         }
@@ -147,6 +152,17 @@ impl LatencyStats {
     /// Chunk-cache misses attributed to this recorder.
     pub fn cache_misses(&self) -> u64 {
         self.cache_misses
+    }
+
+    /// Count one checksum-mismatch refusal (the daemon's shard loops
+    /// call this when a decode fails content verification).
+    pub fn add_integrity_failures(&mut self, n: u64) {
+        self.integrity_failures += n;
+    }
+
+    /// Checksum-mismatch refusals attributed to this recorder.
+    pub fn integrity_failures(&self) -> u64 {
+        self.integrity_failures
     }
 
     /// Counter slot for `kind`: its registry position, so the counters
@@ -298,6 +314,17 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.cache_hits(), 5);
         assert_eq!(a.cache_misses(), 6);
+    }
+
+    #[test]
+    fn integrity_counter_records_and_merges() {
+        let mut a = LatencyStats::new();
+        a.add_integrity_failures(2);
+        let mut b = LatencyStats::new();
+        b.add_integrity_failures(1);
+        a.merge(&b);
+        assert_eq!(a.integrity_failures(), 3);
+        assert_eq!(LatencyStats::new().integrity_failures(), 0);
     }
 
     #[test]

@@ -10,7 +10,12 @@
 //!   uncompressed chunks (128 KiB by default), independently compressed,
 //!   with an index of compressed offsets so chunks can be decompressed in
 //!   parallel — the property both CODAG and the RAPIDS baseline exploit.
+//! * [`hash`] — CRC-32C content checksums for the integrity tier
+//!   (per-chunk uncompressed-payload checksums in container v4, the
+//!   whole-meta checksum `FileDataset::open` verifies, and the proto v3
+//!   response frame checksum).
 
 pub mod bitio;
 pub mod container;
+pub mod hash;
 pub mod varint;

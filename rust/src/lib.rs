@@ -68,6 +68,9 @@ pub enum Error {
     /// A container or request named a codec wire id the registry does
     /// not know (carries the offending id).
     UnknownCodec(u32),
+    /// Decoded bytes do not match the content checksum recorded at pack
+    /// time — the stream parsed, but the payload is provably corrupt.
+    ChecksumMismatch(String),
 }
 
 impl std::fmt::Display for Error {
@@ -78,6 +81,7 @@ impl std::fmt::Display for Error {
             Error::Io(m) => write!(f, "io error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::UnknownCodec(id) => write!(f, "unknown codec wire id {id}"),
+            Error::ChecksumMismatch(m) => write!(f, "checksum mismatch: {m}"),
         }
     }
 }

@@ -7,11 +7,12 @@
 //! codag compress   --codec rlev2 --input mc0.bin --out mc0.codag [--chunk 131072] [--width 8]
 //! codag pack       --data-dir DIR (--dataset MC0 [--size 16M] | --input raw.bin --name NAME) [--codec rlev2|auto] [--chunk 131072]
 //! codag decompress --input mc0.codag --out mc0.bin [--workers 8] [--hybrid]
+//! codag verify     <file.codag>   (offline integrity scrub: header, restart tables, per-chunk decode + checksum)
 //! codag simulate   --dataset MC0 --codec rlev1 [--gpu a100] [--arch codag|baseline|prefetch|single|regbuf] [--size 4M]
 //! codag report     <table3|table4|table5|fig2..fig8|ubench|ablation_decode|all> [--size 4M]
-//! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M] [--net-model evented|threads]
+//! codag serve      --port 7311 [--data-dir DIR] [--datasets MC0,TPC] [--bind 127.0.0.1] [--codec rlev2] [--size 16M] [--shards 4] [--depth 64] [--workers 2] [--cache 64M] [--net-model evented|threads] [--paranoid]
 //! codag serve      --dataset MC0 --codec rlev2 [--workers 8]   (legacy stdin mode: "<id> <offset> <len>" per line)
-//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0] [--scrape]
+//! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 [--connections 4] [--requests 64] [--maxlen 256K] [--seed N] [--pipeline 1] [--deadline-ms 0] [--scrape] [--verify-frames]
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --ablate-batch   (§V-F batching sweep, pipeline depths 1/8/32)
 //! codag loadgen    --addr 127.0.0.1:7311 --dataset MC0 --probe-expired  (deadline-expiry smoke probe)
 //! codag loadgen    --addr 127.0.0.1:7311 --shutdown   (drain the daemon and exit)
@@ -84,7 +85,7 @@ fn parse_size(s: &str) -> Result<usize, String> {
 fn run(args: &[String]) -> Result<(), String> {
     let Some(cmd) = args.first() else {
         return Err(
-            "usage: codag <gen|compress|pack|decompress|simulate|report|serve|loadgen|stat> [flags]"
+            "usage: codag <gen|compress|pack|decompress|verify|simulate|report|serve|loadgen|stat> [flags]"
                 .into(),
         );
     };
@@ -94,6 +95,7 @@ fn run(args: &[String]) -> Result<(), String> {
         "compress" => cmd_compress(&f),
         "pack" => cmd_pack(&f),
         "decompress" => cmd_decompress(&f),
+        "verify" => cmd_verify(args.get(1).map(|s| s.as_str()), &f),
         "simulate" => cmd_simulate(&f),
         "report" => cmd_report(args.get(1).map(|s| s.as_str()).unwrap_or("all"), &f),
         "serve" => cmd_serve(&f),
@@ -231,6 +233,7 @@ fn compress_with_width(
     use codag::format::container::{ChunkEntry, DEFAULT_RESTART_INTERVAL};
     let mut index = Vec::new();
     let mut restarts = Vec::new();
+    let mut checksums = Vec::new();
     let mut payload = Vec::new();
     for chunk_bytes in data.chunks(chunk) {
         let (comp, points) = codag::codecs::compress_chunk_with_restarts(
@@ -245,6 +248,7 @@ fn compress_with_width(
             uncomp_len: chunk_bytes.len() as u64,
         });
         restarts.push(points);
+        checksums.push(codag::format::hash::crc32c(chunk_bytes));
         payload.extend_from_slice(&comp);
     }
     Ok(Container {
@@ -254,6 +258,7 @@ fn compress_with_width(
         total_uncompressed: data.len() as u64,
         index,
         restarts,
+        checksums,
         payload,
     })
 }
@@ -306,6 +311,63 @@ fn cmd_decompress(f: &HashMap<String, String>) -> Result<(), String> {
         data.len(),
         secs,
         data.len() as f64 / secs / 1e9
+    );
+    Ok(())
+}
+
+/// `codag verify <file.codag>`: offline integrity scrub. Parses the
+/// container (structural guards + the v4 whole-header CRC), then
+/// decodes every chunk — serially, and through the restart-point
+/// stitcher when the chunk has a restart table — verifying each
+/// decoded chunk against its packed content checksum. Mismatches are
+/// reported per chunk and the command exits nonzero, so a cron job or
+/// CI step can scrub packed data at rest.
+fn cmd_verify(pos: Option<&str>, f: &HashMap<String, String>) -> Result<(), String> {
+    let path = pos
+        .filter(|p| !p.starts_with("--"))
+        .map(str::to_string)
+        .or_else(|| f.get("input").cloned())
+        .ok_or("usage: codag verify <file.codag>")?;
+    let bytes = std::fs::read(&path).map_err(|e| format!("{path}: {e}"))?;
+    // Structural tier: header, index, restart/codec/checksum section
+    // guards, and (v4) the whole-header CRC all run inside from_bytes.
+    let container = Container::from_bytes(&bytes).map_err(|e| format!("{path}: {e}"))?;
+    let with_checksums = container.chunk_checksum(0).is_some();
+    if !with_checksums {
+        eprintln!(
+            "warning: {path} carries no content checksums (pre-v4 container) — \
+             structural checks only"
+        );
+    }
+    let mut bad = 0usize;
+    let mut scratch = Vec::new();
+    for i in 0..container.n_chunks() {
+        // Serial decode verifies the content checksum internally.
+        if let Err(e) = container.decompress_chunk_into(i, &mut scratch) {
+            eprintln!("chunk {i}: serial decode: {e}");
+            bad += 1;
+            continue;
+        }
+        // Restart-table tier: the split path exercises every sub-block
+        // boundary and re-verifies once at the stitch join.
+        if !container.restart_table(i).is_empty() {
+            if let Err(e) =
+                codag::coordinator::decompress_chunk_split_into(&container, i, 2, &mut scratch)
+            {
+                eprintln!("chunk {i}: split decode: {e}");
+                bad += 1;
+            }
+        }
+    }
+    if bad > 0 {
+        return Err(format!("{path}: {bad} of {} chunks FAILED verification", container.n_chunks()));
+    }
+    println!(
+        "{path}: OK — {} chunks verified ({}, {} bytes uncompressed{})",
+        container.n_chunks(),
+        codec_label(&container),
+        container.total_uncompressed,
+        if with_checksums { ", content checksums checked" } else { ", no content checksums" }
     );
     Ok(())
 }
@@ -378,7 +440,7 @@ fn cmd_serve(f: &HashMap<String, String>) -> Result<(), String> {
         codag::bench_harness::compress_dataset(&data, d, codec).map_err(|e| e.to_string())?;
     let mut registry = Registry::new();
     registry.insert(d.name(), container);
-    let svc = Service::new(&registry, None, ServiceConfig { workers, hybrid: false });
+    let svc = Service::new(&registry, None, ServiceConfig { workers, hybrid: false, paranoid: false });
     eprintln!(
         "serving {} ({} bytes, {}): '<id> <offset> <len>' per line on stdin",
         d.name(),
@@ -485,6 +547,9 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
         config.net_model = daemon::NetModel::parse(s)
             .ok_or_else(|| format!("bad --net-model '{s}' (want evented|threads)"))?;
     }
+    // Re-verify content checksums even on cache hits (defends against
+    // in-memory corruption at the cost of one CRC pass per hit).
+    config.paranoid = f.contains_key("paranoid");
     // Loopback by default: the wire protocol has no auth (Shutdown is a
     // single unauthenticated frame), so exposing it wider is opt-in.
     let bind = f.get("bind").map(String::as_str).unwrap_or("127.0.0.1");
@@ -547,14 +612,15 @@ fn cmd_serve_daemon(f: &HashMap<String, String>) -> Result<(), String> {
     };
     eprintln!(
         "served {} requests, {} bytes: p50={p50}us p99={p99}us cache hits={} misses={} \
-         evictions={} admit-declines={} ghost-hits={}",
+         evictions={} admit-declines={} ghost-hits={} checksum-mismatches={}",
         stats.count(),
         stats.total_bytes(),
         stats.cache_hits(),
         stats.cache_misses(),
         cache.evictions(),
         cache.admit_declines(),
-        cache.ghost_hits()
+        cache.ghost_hits(),
+        stats.integrity_failures()
     );
     let per_codec = stats
         .codec_bytes_all()
@@ -618,6 +684,7 @@ fn cmd_loadgen(f: &HashMap<String, String>) -> Result<(), String> {
         cfg.deadline_ms = s.parse().map_err(|_| "bad --deadline-ms")?;
     }
     cfg.scrape = f.contains_key("scrape");
+    cfg.verify_frames = f.contains_key("verify-frames");
     if f.contains_key("ablate-batch") {
         // §V-F through the daemon: sweep pipeline depths {1, 8, 32}
         // (the shard workers' effective batch size) and emit the

@@ -46,6 +46,11 @@ pub fn render(reg: &MetricsRegistry, slow: &SlowLog) -> String {
         let _ = writeln!(out, "codag_cache_misses_total{{dataset=\"{d}\"}} {misses}");
         let _ = writeln!(out, "codag_cache_gets_total{{dataset=\"{d}\"}} {}", hits + misses);
         let _ = writeln!(out, "codag_decoded_bytes_total{{dataset=\"{d}\"}} {decoded}");
+        let _ = writeln!(
+            out,
+            "codag_integrity_failures_total{{dataset=\"{d}\"}} {}",
+            m.integrity_failures.get()
+        );
         for s in Stage::all() {
             let h = m.stage(s);
             let sn = s.name();
@@ -146,6 +151,7 @@ mod tests {
         m.cache_hits.add(7);
         m.cache_misses.add(3);
         m.decoded_bytes.add(4096);
+        m.integrity_failures.add(2);
         m.stage(Stage::QueueWait).record_us(12);
         m.stage(Stage::DecodeSerial).record_us(200);
         let b = reg.dataset("beta");
@@ -177,6 +183,9 @@ mod tests {
         assert_eq!(get_dataset(&map, "codag_cache_gets_total", "alpha"), Some(10));
         // Derived: daemon-wide decoded bytes == sum of per-dataset.
         assert_eq!(map["codag_daemon_decoded_bytes_total"], 4096 + 1024);
+        // Integrity counter renders for every dataset (zero when clean).
+        assert_eq!(get_dataset(&map, "codag_integrity_failures_total", "alpha"), Some(2));
+        assert_eq!(get_dataset(&map, "codag_integrity_failures_total", "beta"), Some(0));
         assert_eq!(get_dataset(&map, "codag_decoded_bytes_total", "beta"), Some(1024));
         assert_eq!(
             get_stage(&map, "codag_stage_count", "alpha", Stage::DecodeSerial),

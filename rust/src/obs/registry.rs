@@ -89,6 +89,11 @@ pub struct DatasetMetrics {
     pub cache_misses: Counter,
     /// Uncompressed bytes produced by cache-miss decodes.
     pub decoded_bytes: Counter,
+    /// Decodes whose output failed content-checksum verification
+    /// (`Error::ChecksumMismatch`), including `--paranoid` re-checks of
+    /// cache hits. Zero on a healthy daemon — the conservation tests
+    /// pin that.
+    pub integrity_failures: Counter,
     /// Requests admitted but not yet replied to.
     pub inflight: Gauge,
 }

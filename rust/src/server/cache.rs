@@ -186,6 +186,13 @@ impl ChunkCache {
 
     /// Look up a decompressed chunk, refreshing its recency. Counts a
     /// hit or a miss.
+    ///
+    /// Integrity note (DESIGN.md §13): entries were content-verified at
+    /// fill time (every cache miss decodes through a checksum-checking
+    /// path), so hits are served without re-hashing. A daemon started
+    /// with `--paranoid` re-verifies each hit against the packed
+    /// checksum in the service layer, catching in-memory corruption of
+    /// resident entries.
     pub fn get(&self, dataset: &str, chunk: usize) -> Option<Arc<[u8]>> {
         let si = self.shard_for(dataset, chunk);
         let mut shard = self.shards[si].lock().unwrap();

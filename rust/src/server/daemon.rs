@@ -54,8 +54,8 @@ use crate::server::net::{
     Waker,
 };
 use crate::server::proto::{
-    decode_request_versioned, write_response_parts, FrameReader, ReadEvent, Status, WireRequest,
-    WIRE_VERSION,
+    decode_request_versioned, write_response_parts_crc, FrameReader, ReadEvent, Status,
+    WireRequest, FLAG_FRAME_CRC, WIRE_VERSION,
 };
 use crate::{Error, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -124,6 +124,10 @@ pub struct DaemonConfig {
     pub write_timeout: Duration,
     /// Network front (see [`NetModel`]).
     pub net_model: NetModel,
+    /// Re-verify content checksums on chunk-cache hits too
+    /// (`--paranoid`): guards against in-memory corruption at the cost
+    /// of a CRC pass per hit. Misses are always verified at decode.
+    pub paranoid: bool,
 }
 
 impl Default for DaemonConfig {
@@ -140,6 +144,7 @@ impl Default for DaemonConfig {
             poll_interval: Duration::from_millis(50),
             write_timeout: Duration::from_secs(5),
             net_model: NetModel::default(),
+            paranoid: false,
         }
     }
 }
@@ -158,6 +163,9 @@ pub(crate) struct Outbound {
     pub(crate) version: u16,
     pub(crate) payload: Payload,
     pub(crate) charge: u64,
+    /// The originating request set [`FLAG_FRAME_CRC`]: append a CRC32C
+    /// trailer over header + payload to the response frame (v3 only).
+    pub(crate) frame_crc: bool,
     /// Per-dataset metrics for shard-produced replies: the write side
     /// times the socket write into the `response_write` stage and
     /// decrements the in-flight gauge charged at admission. `None` for
@@ -167,13 +175,21 @@ pub(crate) struct Outbound {
 
 /// Send a reader-generated response (no byte charge) down the threaded
 /// writer channel.
-fn send_reply(tx: &mpsc::Sender<Outbound>, version: u16, id: u64, status: Status, payload: Vec<u8>) {
+fn send_reply(
+    tx: &mpsc::Sender<Outbound>,
+    version: u16,
+    frame_crc: bool,
+    id: u64,
+    status: Status,
+    payload: Vec<u8>,
+) {
     let _ = tx.send(Outbound {
         id,
         status,
         version,
         payload: Payload::Owned(payload),
         charge: 0,
+        frame_crc,
         obs: None,
     });
 }
@@ -261,6 +277,8 @@ pub(crate) struct Job {
     pub(crate) deadline: Option<Instant>,
     /// Protocol version of the originating frame (echoed in the reply).
     pub(crate) version: u16,
+    /// The request opted into a response frame-CRC trailer (v3).
+    pub(crate) frame_crc: bool,
     /// Dataset metrics handle, resolved once at admission (`None` when
     /// recording is compiled out).
     pub(crate) dm: Option<Arc<DatasetMetrics>>,
@@ -714,12 +732,13 @@ fn connection_loop(
         thread::Builder::new().name("codag-conn-writer".into()).spawn(move || {
             while let Ok(out) = rx.recv() {
                 let t0 = now_if_enabled().filter(|_| out.obs.is_some());
-                let ok = write_response_parts(
+                let ok = write_response_parts_crc(
                     &mut wstream,
                     out.version,
                     out.status,
                     out.id,
                     out.payload.as_slice(),
+                    out.frame_crc,
                 )
                 .is_ok();
                 if let Some(dm) = &out.obs {
@@ -757,7 +776,7 @@ fn connection_loop(
             Ok(ReadEvent::WouldBlock) => {}
             Ok(ReadEvent::Eof) => break,
             Ok(ReadEvent::Frame(body)) => match decode_request_versioned(&body) {
-                Ok((req, version)) => {
+                Ok((req, version, flags)) => {
                     // Charge this request's (single) response up front.
                     let outstanding = inflight.fetch_add(1, Ordering::SeqCst);
                     if outstanding >= conn_hard_cap(&config)
@@ -772,6 +791,7 @@ fn connection_loop(
                     if !handle_request(
                         req,
                         version,
+                        flags,
                         registry,
                         cache,
                         senders,
@@ -793,7 +813,14 @@ fn connection_loop(
                     inflight.fetch_add(1, Ordering::SeqCst);
                     let id = crate::server::proto::request_id_hint(&body);
                     let version = crate::server::proto::request_version_hint(&body);
-                    send_reply(&tx, version, id, Status::BadRequest, e.to_string().into_bytes());
+                    send_reply(
+                        &tx,
+                        version,
+                        false,
+                        id,
+                        Status::BadRequest,
+                        e.to_string().into_bytes(),
+                    );
                     break;
                 }
             },
@@ -806,7 +833,7 @@ fn connection_loop(
                     _ => Status::Internal,
                 };
                 inflight.fetch_add(1, Ordering::SeqCst);
-                send_reply(&tx, WIRE_VERSION, 0, status, e.to_string().into_bytes());
+                send_reply(&tx, WIRE_VERSION, false, 0, status, e.to_string().into_bytes());
                 break;
             }
         }
@@ -824,6 +851,8 @@ pub(crate) struct JobSpec {
     pub(crate) charge: u64,
     pub(crate) deadline: Option<Instant>,
     pub(crate) version: u16,
+    /// The request opted into a response frame-CRC trailer (v3).
+    pub(crate) frame_crc: bool,
     pub(crate) dm: Option<Arc<DatasetMetrics>>,
     /// Admission-stage clock start (recorded by the caller once the
     /// queue push succeeds, so the stage covers the push too).
@@ -845,6 +874,7 @@ pub(crate) struct JobSpec {
 pub(crate) fn admit(
     req: WireRequest,
     version: u16,
+    flags: u64,
     registry: &Registry,
     cache: &ChunkCache,
     n_shards: usize,
@@ -990,6 +1020,7 @@ pub(crate) fn admit(
                 charge: span,
                 deadline,
                 version,
+                frame_crc: flags & FLAG_FRAME_CRC != 0,
                 dm,
                 t_adm,
                 si,
@@ -1017,6 +1048,7 @@ pub(crate) enum Admit {
 fn handle_request(
     req: WireRequest,
     version: u16,
+    flags: u64,
     registry: &Registry,
     cache: &ChunkCache,
     senders: &[SyncSender<Job>],
@@ -1028,9 +1060,13 @@ fn handle_request(
     obs: &Obs,
 ) -> bool {
     let bytes_now = inflight_bytes.load(Ordering::SeqCst);
+    // Reader-generated replies honour the frame-CRC opt-in too: the
+    // client asked for wire integrity on everything it gets back.
+    let frame_crc = flags & FLAG_FRAME_CRC != 0;
     match admit(
         req,
         version,
+        flags,
         registry,
         cache,
         senders.len(),
@@ -1041,12 +1077,12 @@ fn handle_request(
         obs,
     ) {
         Admit::Shutdown { id, payload } => {
-            send_reply(tx, version, id, Status::Ok, payload);
+            send_reply(tx, version, frame_crc, id, Status::Ok, payload);
             shutdown.store(true, Ordering::SeqCst);
             false
         }
         Admit::Reply { id, status, payload } => {
-            send_reply(tx, version, id, status, payload);
+            send_reply(tx, version, frame_crc, id, status, payload);
             true
         }
         Admit::Enqueue(spec) => {
@@ -1061,6 +1097,7 @@ fn handle_request(
                 charge: spec.charge,
                 deadline: spec.deadline,
                 version: spec.version,
+                frame_crc: spec.frame_crc,
                 dm: spec.dm,
             };
             match senders[si].try_send(job) {
@@ -1081,6 +1118,7 @@ fn handle_request(
                     send_reply(
                         tx,
                         job.version,
+                        job.frame_crc,
                         job.req.id,
                         Status::Busy,
                         format!("shard {si} queue at admission limit").into_bytes(),
@@ -1091,6 +1129,7 @@ fn handle_request(
                     send_reply(
                         tx,
                         job.version,
+                        job.frame_crc,
                         job.req.id,
                         Status::ShuttingDown,
                         b"daemon is shutting down".to_vec(),
@@ -1109,6 +1148,11 @@ fn status_for(e: &Error) -> Status {
         // from corruption to the client: same wire status, the typed
         // error only matters server-side.
         Error::Corrupt(_) | Error::UnknownCodec(_) => Status::Corrupt,
+        // Content-checksum failure gets its own status: the stream
+        // parsed but the decoded bytes are provably wrong, which is
+        // actionable (re-pack / restore from replica) in a way generic
+        // corruption is not.
+        Error::ChecksumMismatch(_) => Status::ChecksumMismatch,
         Error::Invalid(_) => Status::BadRequest,
         Error::Io(_) | Error::Runtime(_) => Status::Internal,
     }
@@ -1121,6 +1165,7 @@ struct ReplyMeta {
     received: Instant,
     charge: u64,
     version: u16,
+    frame_crc: bool,
     dm: Option<Arc<DatasetMetrics>>,
     /// Queue wait in µs (admission → dequeue), kept so the slowlog
     /// entry's stage offsets are cumulative from `received`.
@@ -1141,7 +1186,11 @@ fn shard_loop(
     // single-item batches decode inline with no spawn at all). A zero
     // cache budget means no cache: don't pay per-chunk lock+miss
     // traffic for a disabled cache.
-    let svc_cfg = ServiceConfig { workers: config.workers_per_shard.max(1), hybrid: false };
+    let svc_cfg = ServiceConfig {
+        workers: config.workers_per_shard.max(1),
+        hybrid: false,
+        paranoid: config.paranoid,
+    };
     let service = Service::new(registry, None, svc_cfg).with_metrics(obs.metrics.clone());
     let service = if config.cache_bytes > 0 { service.with_cache(cache) } else { service };
     loop {
@@ -1184,6 +1233,7 @@ fn shard_loop(
                     version: j.version,
                     payload: Payload::Owned(b"deadline expired while queued".to_vec()),
                     charge: j.charge,
+                    frame_crc: j.frame_crc,
                     obs: j.dm,
                 };
                 j.reply.send(out, obs);
@@ -1222,6 +1272,7 @@ fn shard_loop(
                 received: j.received,
                 charge: j.charge,
                 version: j.version,
+                frame_crc: j.frame_crc,
                 dm: j.dm,
                 wait_us,
             });
@@ -1279,6 +1330,7 @@ fn shard_loop(
                         version: meta.version,
                         payload,
                         charge: meta.charge,
+                        frame_crc: meta.frame_crc,
                         obs: meta.dm,
                     }
                 }
@@ -1294,21 +1346,31 @@ fn shard_loop(
                         version: meta.version,
                         payload: Payload::Owned(msg.into_bytes()),
                         charge: meta.charge,
+                        frame_crc: meta.frame_crc,
                         obs: meta.dm,
                     }
                 }
-                Err(e) => Outbound {
-                    id: resp.id,
-                    status: status_for(&e),
-                    version: meta.version,
-                    payload: Payload::Owned(e.to_string().into_bytes()),
-                    charge: meta.charge,
-                    obs: meta.dm,
-                },
+                Err(e) => {
+                    // Content-checksum failures feed the shutdown
+                    // summary's integrity line alongside the per-dataset
+                    // obs counter (which the service layer bumps).
+                    if matches!(&e, Error::ChecksumMismatch(_)) {
+                        batch_stats.add_integrity_failures(1);
+                    }
+                    Outbound {
+                        id: resp.id,
+                        status: status_for(&e),
+                        version: meta.version,
+                        payload: Payload::Owned(e.to_string().into_bytes()),
+                        charge: meta.charge,
+                        frame_crc: meta.frame_crc,
+                        obs: meta.dm,
+                    }
+                }
             };
             meta.reply.send(out, obs);
         }
-        if batch_stats.count() > 0 {
+        if batch_stats.count() > 0 || batch_stats.integrity_failures() > 0 {
             stats.lock().unwrap().merge(&batch_stats);
         }
     }

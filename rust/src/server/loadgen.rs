@@ -29,8 +29,9 @@
 use crate::coordinator::stats::LatencyStats;
 use crate::data::Rng;
 use crate::server::proto::{
-    decode_response, encode_request, read_frame_blocking, write_frame, FrameReader, Status,
-    WireRequest, WireResponse,
+    decode_response, decode_response_ext, encode_request, encode_request_flags,
+    read_frame_blocking, write_frame, FrameReader, Status, WireRequest, WireResponse,
+    FLAG_FRAME_CRC,
 };
 use crate::{corrupt, invalid, Error, Result};
 use std::collections::HashMap;
@@ -69,6 +70,10 @@ pub struct LoadgenConfig {
     /// `Metrics` request) and carry the last sample in the report —
     /// proves the scrape path is non-disruptive under load.
     pub scrape: bool,
+    /// Request the v3 frame-CRC trailer on every Get and verify it on
+    /// every response: a response without a valid trailer counts as a
+    /// failure. End-to-end wire-integrity proof (`--verify-frames`).
+    pub verify_frames: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -83,6 +88,7 @@ impl Default for LoadgenConfig {
             pipeline: 1,
             deadline_ms: 0,
             scrape: false,
+            verify_frames: false,
         }
     }
 }
@@ -106,6 +112,9 @@ pub struct LoadgenReport {
     /// Connections that died mid-run (their remaining requests were
     /// never attempted; completed measurements are kept).
     pub conn_failures: u64,
+    /// Responses whose v3 frame-CRC trailer was present and valid
+    /// (`LoadgenConfig::verify_frames`; 0 when verification was off).
+    pub frames_verified: u64,
     /// Wall-clock for the whole run.
     pub wall: Duration,
     /// Last metrics exposition sampled while load was in flight
@@ -121,6 +130,9 @@ impl std::fmt::Display for LoadgenReport {
             "requests: sent={} ok={} busy={} expired={} failed={} conn-failures={}",
             self.sent, self.ok, self.busy, self.expired, self.failed, self.conn_failures
         )?;
+        if self.frames_verified > 0 {
+            writeln!(f, "integrity: {} response frame CRCs verified", self.frames_verified)?;
+        }
         writeln!(
             f,
             "latency:  p50={}us p90={}us p99={}us mean={:.0}us",
@@ -274,6 +286,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         expired: 0,
         failed: 0,
         conn_failures: 0,
+        frames_verified: 0,
         wall: Duration::ZERO,
         mid_run_metrics: None,
     };
@@ -347,6 +360,7 @@ pub fn run(cfg: &LoadgenConfig) -> Result<LoadgenReport> {
         report.failed += r.failed;
         report.sent += r.ok + r.busy + r.expired + r.failed;
         report.conn_failures += u64::from(r.died);
+        report.frames_verified += r.frames_verified;
     }
     report.wall = t0.elapsed();
     report.mid_run_metrics = mid_metrics.into_inner().unwrap();
@@ -364,7 +378,37 @@ struct ConnOutcome {
     busy: u64,
     expired: u64,
     failed: u64,
+    frames_verified: u64,
     died: bool,
+}
+
+/// Encode one Get, requesting the frame-CRC trailer when the run
+/// verifies frames.
+fn encode_for(cfg: &LoadgenConfig, req: &WireRequest) -> Result<Vec<u8>> {
+    if cfg.verify_frames {
+        encode_request_flags(req, FLAG_FRAME_CRC)
+    } else {
+        encode_request(req)
+    }
+}
+
+/// Decode one response frame, enforcing the CRC trailer when the run
+/// verifies frames: a missing trailer (daemon ignored the opt-in) or a
+/// mismatching one (`decode_response_ext` errors) kills the exchange.
+fn decode_for(
+    cfg: &LoadgenConfig,
+    frame: &[u8],
+    frames_verified: &mut u64,
+) -> Result<WireResponse> {
+    if !cfg.verify_frames {
+        return decode_response(frame);
+    }
+    let (resp, crc) = decode_response_ext(frame)?;
+    if crc.is_none() {
+        return Err(corrupt(format!("response {} is missing the requested frame CRC", resp.id)));
+    }
+    *frames_verified += 1;
+    Ok(resp)
 }
 
 /// Drive one connection, keeping up to `cfg.pipeline` requests in
@@ -402,7 +446,7 @@ fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome
                 len,
                 deadline_ms: cfg.deadline_ms,
             };
-            let sent = encode_request(&req)
+            let sent = encode_for(cfg, &req)
                 .and_then(|body| write_frame(&mut conn.stream, &body))
                 .is_ok();
             if !sent {
@@ -421,7 +465,7 @@ fn connection_run(cfg: &LoadgenConfig, conn_idx: u64, total: u64) -> ConnOutcome
             .and_then(|f| {
                 f.ok_or_else(|| corrupt("daemon closed the connection mid-exchange"))
             })
-            .and_then(|frame| decode_response(&frame))
+            .and_then(|frame| decode_for(cfg, &frame, &mut out.frames_verified))
         {
             Ok(resp) => resp,
             Err(e) => {
@@ -561,7 +605,7 @@ fn mux_drive(cfg: &LoadgenConfig, di: usize, drivers: usize, total: u64) -> Vec<
                         len,
                         deadline_ms: cfg.deadline_ms,
                     };
-                    match encode_request(&req) {
+                    match encode_for(cfg, &req) {
                         Ok(body) => {
                             c.outbuf.extend_from_slice(&(body.len() as u32).to_le_bytes());
                             c.outbuf.extend_from_slice(&body);
@@ -590,7 +634,11 @@ fn mux_drive(cfg: &LoadgenConfig, di: usize, drivers: usize, total: u64) -> Vec<
                     Ok(ReadEvent::Eof) => {
                         dead = Some("daemon closed the connection mid-exchange".into());
                     }
-                    Ok(ReadEvent::Frame(frame)) => match decode_response(&frame) {
+                    Ok(ReadEvent::Frame(frame)) => match decode_for(
+                        cfg,
+                        &frame,
+                        &mut c.out.frames_verified,
+                    ) {
                         Ok(resp) => {
                             let Some(started) = c.outstanding.remove(&resp.id) else {
                                 c.out.failed += 1;

@@ -44,8 +44,8 @@ use crate::server::daemon::{
 use crate::server::net::ring::{PushError, Ring};
 use crate::server::net::sys::{self, PollFd};
 use crate::server::proto::{
-    decode_request_versioned, request_id_hint, request_version_hint, response_head, FrameReader,
-    ReadEvent, Status, WireRequest, WIRE_VERSION,
+    decode_request_versioned, request_id_hint, request_version_hint, response_frame_crc,
+    response_head_ext, FrameReader, ReadEvent, Status, WireRequest, FLAG_FRAME_CRC, WIRE_VERSION,
 };
 use crate::Error;
 use std::collections::VecDeque;
@@ -104,6 +104,10 @@ impl Waker {
 struct PendingWrite {
     head: [u8; HEAD_LEN],
     payload: Payload,
+    /// v3 frame-CRC trailer (requested via [`FLAG_FRAME_CRC`]): 4 LE
+    /// CRC32C bytes over body header + payload, written after the
+    /// payload. `None` when the requester didn't opt in.
+    trailer: Option<[u8; 4]>,
     /// Byte-budget charge taken at admission, returned once the frame
     /// is fully written (0 for error/metadata replies).
     charge: u64,
@@ -153,8 +157,15 @@ impl Conn {
     /// here is an internal inconsistency and kills the connection
     /// rather than desyncing its stream.
     fn enqueue(&mut self, out: Outbound) {
-        match response_head(out.version, out.status, out.id, out.payload.len() as u64) {
+        let trailer_len = if out.frame_crc { 4 } else { 0 };
+        match response_head_ext(out.version, out.status, out.id, out.payload.len() as u64, trailer_len)
+        {
             Ok(head) => {
+                // Computed once here on the loop thread; the CRC spans
+                // body header + payload, exactly what the threaded
+                // writer's `write_response_parts_crc` emits.
+                let trailer =
+                    out.frame_crc.then(|| response_frame_crc(&head, out.payload.as_slice()));
                 if self.wq.is_empty() {
                     // The stall guard measures from when the queue
                     // became non-empty, not from the last frame ages
@@ -164,6 +175,7 @@ impl Conn {
                 self.wq.push_back(PendingWrite {
                     head,
                     payload: out.payload,
+                    trailer,
                     charge: out.charge,
                     dm: out.obs,
                     t0: None,
@@ -178,13 +190,21 @@ impl Conn {
         }
     }
 
-    fn enqueue_reply(&mut self, version: u16, id: u64, status: Status, payload: Vec<u8>) {
+    fn enqueue_reply(
+        &mut self,
+        version: u16,
+        frame_crc: bool,
+        id: u64,
+        status: Status,
+        payload: Vec<u8>,
+    ) {
         self.enqueue(Outbound {
             id,
             status,
             version,
             payload: Payload::Owned(payload),
             charge: 0,
+            frame_crc,
             obs: None,
         });
     }
@@ -419,7 +439,7 @@ fn read_conn(nl: &NetLoop, conn: &mut Conn, idx: usize) {
                     _ => Status::Internal,
                 };
                 conn.outstanding += 1;
-                conn.enqueue_reply(WIRE_VERSION, 0, status, e.to_string().into_bytes());
+                conn.enqueue_reply(WIRE_VERSION, false, 0, status, e.to_string().into_bytes());
                 conn.draining = true;
                 break;
             }
@@ -431,16 +451,19 @@ fn read_conn(nl: &NetLoop, conn: &mut Conn, idx: usize) {
 /// when the connection must start draining (shutdown frame, hard cap,
 /// or protocol error).
 fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> bool {
-    let (req, version) = match decode_request_versioned(&body) {
+    let (req, version, flags) = match decode_request_versioned(&body) {
         Ok(rv) => rv,
         Err(e) => {
             conn.outstanding += 1;
             let id = request_id_hint(&body);
             let version = request_version_hint(&body);
-            conn.enqueue_reply(version, id, Status::BadRequest, e.to_string().into_bytes());
+            conn.enqueue_reply(version, false, id, Status::BadRequest, e.to_string().into_bytes());
             return false;
         }
     };
+    // Reader-generated replies honour the frame-CRC opt-in too, so a
+    // `--verify-frames` client can trust Stat/Metrics/Busy responses.
+    let frame_crc = flags & FLAG_FRAME_CRC != 0;
     // Charge the (single) response up front, exactly like the threaded
     // reader's `inflight.fetch_add`.
     let outstanding = conn.outstanding;
@@ -454,6 +477,7 @@ fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> boo
     match admit(
         req,
         version,
+        flags,
         &nl.registry,
         &nl.cache,
         nl.submission.len(),
@@ -464,12 +488,12 @@ fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> boo
         &nl.obs,
     ) {
         Admit::Shutdown { id, payload } => {
-            conn.enqueue_reply(version, id, Status::Ok, payload);
+            conn.enqueue_reply(version, frame_crc, id, Status::Ok, payload);
             nl.shutdown.store(true, Ordering::SeqCst);
             false
         }
         Admit::Reply { id, status, payload } => {
-            conn.enqueue_reply(version, id, status, payload);
+            conn.enqueue_reply(version, frame_crc, id, status, payload);
             true
         }
         Admit::Enqueue(spec) => {
@@ -488,6 +512,7 @@ fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> boo
                 charge: spec.charge,
                 deadline: spec.deadline,
                 version: spec.version,
+                frame_crc: spec.frame_crc,
                 dm: spec.dm,
             };
             // Gauge before push: `Gauge::dec` saturates at zero, so the
@@ -512,6 +537,7 @@ fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> boo
                     }
                     conn.enqueue_reply(
                         job.version,
+                        job.frame_crc,
                         job.req.id,
                         Status::Busy,
                         format!("shard {si} queue at admission limit").into_bytes(),
@@ -522,6 +548,7 @@ fn handle_frame(nl: &NetLoop, conn: &mut Conn, idx: usize, body: Vec<u8>) -> boo
                     conn.bytes = conn.bytes.saturating_sub(job.charge);
                     conn.enqueue_reply(
                         job.version,
+                        job.frame_crc,
                         job.req.id,
                         Status::ShuttingDown,
                         b"daemon is shutting down".to_vec(),
@@ -555,29 +582,41 @@ fn drain_completions(nl: &NetLoop, slots: &mut [Option<Conn>]) {
 }
 
 /// Write queued frames until the socket would block. The front frame's
-/// progress lives in `conn.written`, a cursor across the 28-byte head
-/// plus the payload: while any head bytes remain, head tail + payload
-/// go out as one vectored write; once the head is down, the payload
-/// remainder is written directly from the (possibly shared) buffer.
+/// progress lives in `conn.written`, a cursor across the 28-byte head,
+/// the payload, and the optional 4-byte CRC trailer: while any head
+/// bytes remain, head tail + payload + trailer go out as one vectored
+/// write; once the head is down, the remainder resumes from whichever
+/// region the cursor sits in.
 fn flush_conn(conn: &mut Conn) -> io::Result<()> {
     loop {
-        let total = {
+        let (total, plen) = {
             let Some(front) = conn.wq.front_mut() else { return Ok(()) };
             if front.t0.is_none() && front.dm.is_some() {
                 front.t0 = now_if_enabled();
             }
-            HEAD_LEN + front.payload.len()
+            let plen = front.payload.len();
+            (HEAD_LEN + plen + front.trailer.map_or(0, |t| t.len()), plen)
         };
         while conn.written < total {
             let res = {
                 let front = conn.wq.front().expect("checked above");
                 let payload = front.payload.as_slice();
+                let trailer: &[u8] = front.trailer.as_ref().map_or(&[], |t| &t[..]);
                 if conn.written < HEAD_LEN {
-                    let bufs =
-                        [IoSlice::new(&front.head[conn.written..]), IoSlice::new(payload)];
+                    let bufs = [
+                        IoSlice::new(&front.head[conn.written..]),
+                        IoSlice::new(payload),
+                        IoSlice::new(trailer),
+                    ];
+                    conn.stream.write_vectored(&bufs)
+                } else if conn.written < HEAD_LEN + plen {
+                    let bufs = [
+                        IoSlice::new(&payload[conn.written - HEAD_LEN..]),
+                        IoSlice::new(trailer),
+                    ];
                     conn.stream.write_vectored(&bufs)
                 } else {
-                    conn.stream.write(&payload[conn.written - HEAD_LEN..])
+                    conn.stream.write(&trailer[conn.written - HEAD_LEN - plen..])
                 }
             };
             match res {

@@ -7,33 +7,42 @@
 //! byte layouts below are frozen in DESIGN.md §6 and pinned by the unit
 //! suite in this module.
 //!
-//! Request body (v2; a v1 body is identical minus the `deadline_ms`
-//! field and is still accepted — see [`decode_request`]):
+//! Request body (v3; a v2 body is identical minus the trailing `flags`
+//! field, a v1 body additionally drops `deadline_ms` — both are still
+//! accepted — see [`decode_request`]):
 //!
 //! ```text
 //! magic:       u32 = 0xC0DA_5E01
-//! version:     u16 = 2
+//! version:     u16 = 3
 //! kind:        u8          (1 = Get, 2 = Stat, 3 = Shutdown, 4 = Metrics)
 //! name_len:    u8          (dataset name bytes; 0 for Shutdown)
 //! id:          u64         (caller-assigned, echoed in the response)
 //! offset:      u64         (uncompressed byte offset; Get only, else 0)
 //! len:         u64         (uncompressed byte length, 0 = to end; Get only)
 //! deadline_ms: u64         (relative deadline in ms, 0 = none; Get only)
+//! flags:       u64         (v3+; bit 0 = FLAG_FRAME_CRC, rest reserved 0)
 //! name:        name_len bytes of UTF-8
 //! ```
 //!
 //! Response body (layout unchanged since v1 apart from the version
-//! field and the v2-only `Expired` status):
+//! field, the v2-only `Expired` and v3-only `ChecksumMismatch`
+//! statuses, and the v3 opt-in frame-CRC trailer):
 //!
 //! ```text
 //! magic:       u32 = 0xC0DA_5E01
-//! version:     u16 = 2
+//! version:     u16 = 3
 //! status:      u8       (see `Status`)
 //! reserved:    u8 = 0
 //! id:          u64      (echoed request id)
-//! payload_len: u64      (== remaining bytes)
+//! payload_len: u64      (== payload bytes, trailer excluded)
 //! payload:     data on Ok, UTF-8 error text otherwise
+//! frame_crc:   u32      (only when the request set FLAG_FRAME_CRC:
+//!                        CRC32C over the 24-byte header + payload)
 //! ```
+//!
+//! The trailer is covered by the frame length prefix (body length is
+//! `24 + payload_len + 4` when present) but *not* by `payload_len`, so
+//! the header layout stays frozen; v1/v2 requesters never receive one.
 //!
 //! A v2 `Stat` response payload is 64 bytes: `total_uncompressed: u64`,
 //! `chunk_size: u64`, `n_chunks: u64`, then the daemon-wide chunk-cache
@@ -43,6 +52,7 @@
 //! both the version stamp and the payload shape of the request's
 //! protocol version).
 
+use crate::format::hash::crc32c_extend;
 use crate::{corrupt, invalid, Error, Result};
 use std::io::{ErrorKind, Read, Write};
 
@@ -50,15 +60,22 @@ use std::io::{ErrorKind, Read, Write};
 pub const WIRE_MAGIC: u32 = 0xC0DA_5E01;
 /// Protocol version; bumped on any layout change (see DESIGN.md §6).
 /// v2 added the `deadline_ms` request field, the `Expired` status, and
-/// the extended `Stat` payload; v1 frames are still accepted.
-pub const WIRE_VERSION: u16 = 2;
+/// the extended `Stat` payload; v3 added the request `flags` field
+/// (opt-in response frame CRC) and the `ChecksumMismatch` status. v1
+/// and v2 frames are still accepted.
+pub const WIRE_VERSION: u16 = 3;
 /// Oldest protocol version [`decode_request`]/[`decode_response`]
 /// still accept.
 pub const WIRE_VERSION_MIN: u16 = 1;
+/// Request flag (v3+): the client asks for a CRC32C trailer on every
+/// response frame to this request, covering the 24-byte response
+/// header and the payload (`loadgen --verify-frames` end-to-end wire
+/// integrity). All other flag bits are reserved and must be 0.
+pub const FLAG_FRAME_CRC: u64 = 1;
 /// Upper bound on one frame body (guards allocation on decode).
 pub const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
 /// Server-side bound on *inbound request* frames. Requests are at most
-/// 40 + 255 bytes, so the daemon reads with this cap instead of
+/// 48 + 255 bytes, so the daemon reads with this cap instead of
 /// [`MAX_FRAME_LEN`] — a hostile length prefix must not make the
 /// server pre-allocate a response-sized buffer.
 pub const MAX_REQUEST_FRAME_LEN: u32 = 4096;
@@ -89,6 +106,11 @@ pub enum Status {
     /// never sent in reply to a v1 frame, which cannot carry a
     /// deadline).
     Expired,
+    /// The chunk decoded cleanly but its bytes failed content-checksum
+    /// verification against the checksum recorded at pack time (v3;
+    /// maps from `Error::ChecksumMismatch`). Distinct from `Corrupt`:
+    /// the stream parsed, the *content* is provably wrong.
+    ChecksumMismatch,
 }
 
 impl Status {
@@ -103,6 +125,7 @@ impl Status {
             Status::Internal => 5,
             Status::ShuttingDown => 6,
             Status::Expired => 7,
+            Status::ChecksumMismatch => 8,
         }
     }
 
@@ -117,6 +140,7 @@ impl Status {
             5 => Status::Internal,
             6 => Status::ShuttingDown,
             7 => Status::Expired,
+            8 => Status::ChecksumMismatch,
             _ => return None,
         })
     }
@@ -132,6 +156,7 @@ impl Status {
             Status::Internal => "internal",
             Status::ShuttingDown => "shutting-down",
             Status::Expired => "expired",
+            Status::ChecksumMismatch => "checksum-mismatch",
         }
     }
 }
@@ -200,9 +225,15 @@ const REQ_KIND_STAT: u8 = 2;
 const REQ_KIND_SHUTDOWN: u8 = 3;
 const REQ_KIND_METRICS: u8 = 4;
 
-/// Encode a request into a v2 frame body (no length prefix; pair with
-/// [`write_frame`]).
+/// Encode a request into a v3 frame body with no flags set (no length
+/// prefix; pair with [`write_frame`]).
 pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
+    encode_request_flags(req, 0)
+}
+
+/// [`encode_request`] with explicit v3 request flags (bit 0 =
+/// [`FLAG_FRAME_CRC`]; all other bits reserved, must be 0).
+pub fn encode_request_flags(req: &WireRequest, flags: u64) -> Result<Vec<u8>> {
     let (kind, id, dataset, offset, len, deadline_ms) = match req {
         WireRequest::Get { id, dataset, offset, len, deadline_ms } => {
             (REQ_KIND_GET, *id, dataset.as_str(), *offset, *len, *deadline_ms)
@@ -215,7 +246,7 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
     if name.len() > MAX_NAME_LEN {
         return Err(invalid(format!("dataset name too long ({} bytes)", name.len())));
     }
-    let mut out = Vec::with_capacity(40 + name.len());
+    let mut out = Vec::with_capacity(48 + name.len());
     out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
     out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
     out.push(kind);
@@ -224,21 +255,24 @@ pub fn encode_request(req: &WireRequest) -> Result<Vec<u8>> {
     out.extend_from_slice(&offset.to_le_bytes());
     out.extend_from_slice(&len.to_le_bytes());
     out.extend_from_slice(&deadline_ms.to_le_bytes());
+    out.extend_from_slice(&flags.to_le_bytes());
     out.extend_from_slice(name);
     Ok(out)
 }
 
-/// Decode a request frame body. Accepts protocol v2 (40-byte header
-/// with `deadline_ms`) and the v1 compat layout (32-byte header; the
-/// deadline defaults to 0 = none).
+/// Decode a request frame body. Accepts protocol v3 (48-byte header
+/// with `flags`), v2 (40-byte header with `deadline_ms`; flags default
+/// to 0) and the v1 compat layout (32-byte header; the deadline
+/// defaults to 0 = none).
 pub fn decode_request(body: &[u8]) -> Result<WireRequest> {
-    decode_request_versioned(body).map(|(req, _)| req)
+    decode_request_versioned(body).map(|(req, _, _)| req)
 }
 
-/// [`decode_request`] plus the frame's protocol version, so the daemon
-/// can stamp each response with the version its requester actually
-/// speaks (a v1 client rejects v2-stamped replies).
-pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16)> {
+/// [`decode_request`] plus the frame's protocol version and v3 flags,
+/// so the daemon can stamp each response with the version its requester
+/// actually speaks (a v1 client rejects v2-stamped replies) and honour
+/// the frame-CRC opt-in.
+pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16, u64)> {
     let mut rd = Rd::new(body);
     let magic = rd.u32()?;
     if magic != WIRE_MAGIC {
@@ -254,6 +288,7 @@ pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16)> {
     let offset = rd.u64()?;
     let len = rd.u64()?;
     let deadline_ms = if version >= 2 { rd.u64()? } else { 0 };
+    let flags = if version >= 3 { rd.u64()? } else { 0 };
     let name = rd.bytes(name_len)?;
     let dataset = std::str::from_utf8(name)
         .map_err(|_| corrupt("dataset name is not UTF-8"))?
@@ -266,7 +301,7 @@ pub fn decode_request_versioned(body: &[u8]) -> Result<(WireRequest, u16)> {
         REQ_KIND_METRICS => WireRequest::Metrics { id },
         other => return Err(corrupt(format!("unknown request kind {other}"))),
     };
-    Ok((req, version))
+    Ok((req, version, flags))
 }
 
 /// Encode a response into a frame body (no length prefix).
@@ -282,8 +317,17 @@ pub fn encode_response(resp: &WireResponse) -> Vec<u8> {
     out
 }
 
-/// Decode a response frame body.
+/// Decode a response frame body (verifying and stripping a v3 frame-CRC
+/// trailer when present — a bad trailer is [`Error::ChecksumMismatch`]).
 pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
+    decode_response_ext(body).map(|(resp, _)| resp)
+}
+
+/// [`decode_response`] plus the verified frame CRC when the body
+/// carried a v3 trailer (`None` otherwise) — `loadgen --verify-frames`
+/// uses the presence bit to prove the daemon actually honoured
+/// [`FLAG_FRAME_CRC`] rather than silently ignoring it.
+pub fn decode_response_ext(body: &[u8]) -> Result<(WireResponse, Option<u32>)> {
     let mut rd = Rd::new(body);
     let magic = rd.u32()?;
     if magic != WIRE_MAGIC {
@@ -300,8 +344,23 @@ pub fn decode_response(body: &[u8]) -> Result<WireResponse> {
     let id = rd.u64()?;
     let payload_len = rd.u64()? as usize;
     let payload = rd.bytes(payload_len)?.to_vec();
+    // Exactly 4 bytes past the payload on a v3 frame is the opt-in
+    // frame-CRC trailer; anything else still errors as trailing bytes.
+    let frame_crc = if version >= 3 && rd.remaining() == 4 {
+        let covered = &body[..24 + payload_len];
+        let want = rd.u32()?;
+        let got = crc32c_extend(0, covered);
+        if got != want {
+            return Err(Error::ChecksumMismatch(format!(
+                "response frame id {id}: crc32c {got:08x}, trailer {want:08x}"
+            )));
+        }
+        Some(want)
+    } else {
+        None
+    };
     rd.done()?;
-    Ok(WireResponse { id, status, payload })
+    Ok((WireResponse { id, status, payload }, frame_crc))
 }
 
 /// Write a response as one frame *without copying the payload*: length
@@ -334,7 +393,21 @@ pub fn write_response_versioned(
 /// byte-identical frames. Errors when the frame would exceed
 /// [`MAX_FRAME_LEN`].
 pub fn response_head(version: u16, status: Status, id: u64, payload_len: u64) -> Result<[u8; 28]> {
-    let body_len = 24u64 + payload_len;
+    response_head_ext(version, status, id, payload_len, 0)
+}
+
+/// [`response_head`] with `trailer_len` extra body bytes budgeted into
+/// the length prefix (4 when the frame carries a v3 CRC trailer, 0
+/// otherwise). `payload_len` in the frozen header never includes the
+/// trailer.
+pub fn response_head_ext(
+    version: u16,
+    status: Status,
+    id: u64,
+    payload_len: u64,
+    trailer_len: u64,
+) -> Result<[u8; 28]> {
+    let body_len = 24u64 + payload_len + trailer_len;
     if body_len > MAX_FRAME_LEN as u64 {
         return Err(invalid(format!("response frame too large ({body_len} bytes)")));
     }
@@ -349,6 +422,15 @@ pub fn response_head(version: u16, status: Status, id: u64, payload_len: u64) ->
     Ok(head)
 }
 
+/// The v3 frame-CRC trailer for a response whose stack head was built
+/// by [`response_head_ext`]: CRC32C over the 24-byte body header
+/// (`head[4..]` — the length prefix is not body) chained over the
+/// payload, as little-endian bytes ready to append to the frame.
+pub fn response_frame_crc(head: &[u8; 28], payload: &[u8]) -> [u8; 4] {
+    let crc = crc32c_extend(crc32c_extend(0, &head[4..]), payload);
+    crc.to_le_bytes()
+}
+
 /// Write one response frame from borrowed parts (head + payload, no
 /// intermediate copy). This is [`write_response_versioned`] without
 /// requiring the payload to live in a `WireResponse`-owned `Vec` — the
@@ -361,9 +443,28 @@ pub fn write_response_parts(
     id: u64,
     payload: &[u8],
 ) -> Result<()> {
-    let head = response_head(version, status, id, payload.len() as u64)?;
+    write_response_parts_crc(w, version, status, id, payload, false)
+}
+
+/// [`write_response_parts`] with an optional v3 frame-CRC trailer: when
+/// `with_crc` is set the length prefix budgets 4 extra bytes and the
+/// CRC32C of (header + payload) follows the payload — the threaded
+/// writer's half of the [`FLAG_FRAME_CRC`] contract.
+pub fn write_response_parts_crc(
+    w: &mut impl Write,
+    version: u16,
+    status: Status,
+    id: u64,
+    payload: &[u8],
+    with_crc: bool,
+) -> Result<()> {
+    let trailer_len = if with_crc { 4 } else { 0 };
+    let head = response_head_ext(version, status, id, payload.len() as u64, trailer_len)?;
     w.write_all(&head)?;
     w.write_all(payload)?;
+    if with_crc {
+        w.write_all(&response_frame_crc(&head, payload))?;
+    }
     Ok(())
 }
 
@@ -580,6 +681,10 @@ impl<'a> Rd<'a> {
         Ok(u64::from_le_bytes([s[0], s[1], s[2], s[3], s[4], s[5], s[6], s[7]]))
     }
 
+    fn remaining(&self) -> usize {
+        self.b.len() - self.off
+    }
+
     fn done(&self) -> Result<()> {
         if self.off == self.b.len() {
             Ok(())
@@ -622,38 +727,46 @@ mod tests {
 
     #[test]
     fn response_roundtrip_all_statuses() {
-        for v in 0..=7u8 {
+        for v in 0..=8u8 {
             let status = Status::from_u8(v).unwrap();
             assert_eq!(status.as_u8(), v);
             let resp = WireResponse { id: 42, status, payload: vec![1, 2, 3, v] };
             let body = encode_response(&resp);
             assert_eq!(decode_response(&body).unwrap(), resp);
         }
-        assert!(Status::from_u8(8).is_none());
+        assert!(Status::from_u8(9).is_none());
         assert_eq!(Status::Expired.as_u8(), 7);
+        assert_eq!(Status::ChecksumMismatch.as_u8(), 8);
     }
 
     #[test]
     fn request_header_layout_pinned() {
-        // Byte-layout pin: DESIGN.md §6 freezes these offsets (v2).
-        let body = encode_request(&WireRequest::Get {
+        // Byte-layout pin: DESIGN.md §6 freezes these offsets (v3).
+        let req = WireRequest::Get {
             id: 0x1122_3344_5566_7788,
             dataset: "ab".into(),
             offset: 0x0102_0304_0506_0708,
             len: 0x1112_1314_1516_1718,
             deadline_ms: 0x2122_2324_2526_2728,
-        })
-        .unwrap();
-        assert_eq!(body.len(), 40 + 2);
+        };
+        let body = encode_request_flags(&req, FLAG_FRAME_CRC).unwrap();
+        assert_eq!(body.len(), 48 + 2);
         assert_eq!(&body[0..4], &WIRE_MAGIC.to_le_bytes());
-        assert_eq!(&body[4..6], &2u16.to_le_bytes());
+        assert_eq!(&body[4..6], &3u16.to_le_bytes());
         assert_eq!(body[6], 1); // kind = Get
         assert_eq!(body[7], 2); // name_len
         assert_eq!(&body[8..16], &0x1122_3344_5566_7788u64.to_le_bytes());
         assert_eq!(&body[16..24], &0x0102_0304_0506_0708u64.to_le_bytes());
         assert_eq!(&body[24..32], &0x1112_1314_1516_1718u64.to_le_bytes());
         assert_eq!(&body[32..40], &0x2122_2324_2526_2728u64.to_le_bytes());
-        assert_eq!(&body[40..], b"ab");
+        assert_eq!(&body[40..48], &FLAG_FRAME_CRC.to_le_bytes());
+        assert_eq!(&body[48..], b"ab");
+        // The default encoder emits the same layout with flags 0, and
+        // the versioned decoder surfaces both flag words.
+        let plain = encode_request(&req).unwrap();
+        assert_eq!(&plain[40..48], &0u64.to_le_bytes());
+        assert_eq!(decode_request_versioned(&body).unwrap(), (req.clone(), 3, FLAG_FRAME_CRC));
+        assert_eq!(decode_request_versioned(&plain).unwrap(), (req, 3, 0));
     }
 
     /// Hand-build a v1 request body (32-byte header, no deadline).
@@ -697,8 +810,57 @@ mod tests {
         let mut bad = encode_request_v1(1, 9, "MC0", 128, 256);
         bad[4] = 0;
         assert!(decode_request(&bad).is_err());
-        bad[4] = 3;
+        bad[4] = 4;
         assert!(decode_request(&bad).is_err());
+    }
+
+    /// Hand-build a v2 request body (40-byte header, no flags) — the
+    /// layout-pinned interop frame a pre-v3 client still emits.
+    fn encode_request_v2(
+        kind: u8,
+        id: u64,
+        dataset: &str,
+        offset: u64,
+        len: u64,
+        deadline_ms: u64,
+    ) -> Vec<u8> {
+        let name = dataset.as_bytes();
+        let mut out = Vec::with_capacity(40 + name.len());
+        out.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+        out.extend_from_slice(&2u16.to_le_bytes());
+        out.push(kind);
+        out.push(name.len() as u8);
+        out.extend_from_slice(&id.to_le_bytes());
+        out.extend_from_slice(&offset.to_le_bytes());
+        out.extend_from_slice(&len.to_le_bytes());
+        out.extend_from_slice(&deadline_ms.to_le_bytes());
+        out.extend_from_slice(name);
+        out
+    }
+
+    #[test]
+    fn v2_request_frames_still_accepted() {
+        // The v2 compat path: a 40-byte-header Get keeps its deadline
+        // and decodes with flags 0 (no frame CRC can be requested).
+        let body = encode_request_v2(1, 9, "MC0", 128, 256, 750);
+        assert_eq!(
+            decode_request_versioned(&body).unwrap(),
+            (
+                WireRequest::Get {
+                    id: 9,
+                    dataset: "MC0".into(),
+                    offset: 128,
+                    len: 256,
+                    deadline_ms: 750
+                },
+                2,
+                0
+            )
+        );
+        // v2 truncations still all error.
+        for cut in 0..body.len() {
+            assert!(decode_request(&body[..cut]).is_err(), "v2 cut at {cut}");
+        }
     }
 
     #[test]
@@ -777,7 +939,7 @@ mod tests {
         // The daemon echoes the requester's version; both stamps must
         // decode, differing only in the version field.
         let resp = WireResponse { id: 5, status: Status::Ok, payload: vec![9; 16] };
-        for version in [1u16, 2] {
+        for version in [1u16, 2, 3] {
             let mut wire = Vec::new();
             write_response_versioned(&mut wire, &resp, version).unwrap();
             // Skip the u32 length prefix; version lives at body[4..6].
@@ -792,9 +954,9 @@ mod tests {
         // bytes of the classic framed encoding for every status and
         // both protocol stamps — the evented path reuses frozen bytes,
         // it does not define new ones.
-        for v in 0..=7u8 {
+        for v in 0..=8u8 {
             let status = Status::from_u8(v).unwrap();
-            for version in [1u16, 2] {
+            for version in [1u16, 2, 3] {
                 let resp = WireResponse { id: 77, status, payload: vec![v; 13] };
                 let mut framed = Vec::new();
                 framed.extend_from_slice(&(24u32 + 13).to_le_bytes());
@@ -814,10 +976,52 @@ mod tests {
 
     #[test]
     fn decode_request_versioned_reports_the_frame_version() {
-        let v2 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        let v3 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        assert_eq!(decode_request_versioned(&v3).unwrap().1, 3);
+        let v2 = encode_request_v2(3, 1, "", 0, 0, 0);
         assert_eq!(decode_request_versioned(&v2).unwrap().1, 2);
         let v1 = encode_request_v1(3, 1, "", 0, 0);
         assert_eq!(decode_request_versioned(&v1).unwrap().1, 1);
+    }
+
+    #[test]
+    fn response_frame_crc_roundtrips_and_catches_corruption() {
+        let payload = vec![0xA5u8; 64];
+        let mut framed = Vec::new();
+        write_response_parts_crc(&mut framed, 3, Status::Ok, 21, &payload, true).unwrap();
+        // Length prefix budgets the 4-byte trailer; payload_len does not.
+        assert_eq!(&framed[0..4], &(24u32 + 64 + 4).to_le_bytes());
+        assert_eq!(&framed[20..28], &64u64.to_le_bytes());
+        let (resp, crc) = decode_response_ext(&framed[4..]).unwrap();
+        assert_eq!(resp, WireResponse { id: 21, status: Status::Ok, payload: payload.clone() });
+        assert!(crc.is_some(), "verified trailer must be surfaced");
+        // decode_response strips the trailer transparently.
+        assert_eq!(decode_response(&framed[4..]).unwrap().payload, payload);
+        // Any flipped bit in header or payload must fail typed.
+        for at in [4usize, 12, 30, 60] {
+            let mut bad = framed.clone();
+            bad[4 + at] ^= 0x01;
+            match decode_response_ext(&bad[4..]) {
+                Err(Error::ChecksumMismatch(_)) => {}
+                Err(_) => {} // header flips may fail magic/status first
+                Ok(_) => panic!("flip at body offset {at} went undetected"),
+            }
+        }
+        // A flipped payload byte specifically is a ChecksumMismatch.
+        let mut bad = framed.clone();
+        bad[4 + 24] ^= 0x01;
+        assert!(matches!(decode_response_ext(&bad[4..]), Err(Error::ChecksumMismatch(_))));
+        // Without the trailer the same frame decodes with crc None.
+        let mut plain = Vec::new();
+        write_response_parts_crc(&mut plain, 3, Status::Ok, 21, &payload, false).unwrap();
+        assert_eq!(decode_response_ext(&plain[4..]).unwrap().1, None);
+        // A v2-stamped body must never grow a trailer: 4 extra bytes on
+        // a v2 frame are trailing garbage, not a CRC.
+        let mut v2 = Vec::new();
+        write_response_parts_crc(&mut v2, 2, Status::Ok, 21, &payload, false).unwrap();
+        let mut v2_body = v2[4..].to_vec();
+        v2_body.extend_from_slice(&[0u8; 4]);
+        assert!(matches!(decode_response_ext(&v2_body), Err(Error::Corrupt(_))));
     }
 
     #[test]
@@ -837,8 +1041,10 @@ mod tests {
         let mut v1 = encode_request_v1(1, 1, "d", 0, 0);
         v1[6] = 99; // malformed kind; version field intact
         assert_eq!(request_version_hint(&v1), 1);
-        let v2 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        let v2 = encode_request_v2(3, 1, "", 0, 0, 0);
         assert_eq!(request_version_hint(&v2), 2);
+        let v3 = encode_request(&WireRequest::Shutdown { id: 1 }).unwrap();
+        assert_eq!(request_version_hint(&v3), 3);
         // Garbage or unsupported versions fall back to the current one.
         let mut bad = v1.clone();
         bad[4] = 0x7F;

@@ -267,6 +267,53 @@ fn prop_every_flip_on_own_encoder_output_is_bounded() {
     }
 }
 
+/// Container-level fault injection (DESIGN.md §13): under container v4
+/// every chunk carries a CRC32C of its uncompressed content, so the
+/// per-codec dead-bit bookkeeping the golden sweeps above need
+/// disappears at this level — the dead set is pinned EMPTY. A payload
+/// flip either errors (typically `Error::ChecksumMismatch`) or decodes
+/// back to the exact original bytes (format slack re-encoding the same
+/// content); `Ok` with wrong bytes is the one impossible outcome.
+#[test]
+fn prop_container_v4_payload_flips_are_never_silently_wrong() {
+    use codag::format::container::Container;
+    let mut rng = Rng::new(9200);
+    // Compressible run-structured data keeps the payload small enough
+    // for the full 8-flip-per-byte sweep across all four codecs.
+    let mut data: Vec<u8> = Vec::new();
+    while data.len() < 4_096 {
+        let b = rng.below(7) as u8;
+        let n = 1 + rng.below(60) as usize;
+        data.extend(std::iter::repeat(b).take(n));
+    }
+    for kind in CodecKind::all() {
+        let c = Container::compress(&data, kind, 1024).unwrap();
+        let bytes = c.to_bytes();
+        // The payload is the serialization's tail, after the v4
+        // metadata sections.
+        let payload_at = bytes.len() - c.payload.len();
+        for idx in payload_at..bytes.len() {
+            for bit in 0..8u8 {
+                let mut bad = bytes.clone();
+                bad[idx] ^= 1 << bit;
+                // Payload flips never touch header metadata, so parsing
+                // must still succeed — detection belongs to decode.
+                let parsed = Container::from_bytes(&bad)
+                    .expect("payload flips keep the container parseable");
+                match parsed.decompress_all() {
+                    Err(_) => {}
+                    Ok(out) => assert_eq!(
+                        out,
+                        data,
+                        "{kind:?}: flip bit {bit} of payload byte {} yielded wrong bytes",
+                        idx - payload_at
+                    ),
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn prop_run_records_reexpand_exactly() {
     use codag::codecs::decode_to_runs;

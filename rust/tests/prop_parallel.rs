@@ -302,6 +302,7 @@ fn container_fixtures() -> Vec<ContainerFixture> {
         fixture!("container_v2_deflate", "container_df", true),
         fixture!("container_v1_rlev1", "container_rle", false),
         fixture!("container_v1_deflate", "container_df", false),
+        fixture!("container_v4_rlev2", "container_rle", true),
     ]
 }
 
@@ -346,19 +347,51 @@ fn pinned_container_fixtures_split_decode_to_pinned_payloads() {
 }
 
 #[test]
-fn pinned_v2_rle_container_fixture_is_encoder_pinned() {
-    // The v2 RLE fixture was generated by the Python encoder port with
-    // decode-walk restart derivation; the Rust packer must reproduce it
-    // byte-for-byte (header, index, restart section, checksum, payload).
-    // Regenerate via tests/golden/gen_golden.py --force on an
+fn pinned_v4_rle_container_fixture_is_encoder_pinned() {
+    // The v4 RLE fixture was generated by the Python encoder port
+    // (decode-walk restart derivation + content CRC32C checksums); the
+    // Rust packer must reproduce it byte-for-byte (header, index,
+    // restart section, codec + checksum sections, meta CRC, payload).
+    // The v2 fixture above stays DECODE-pinned only — the packer now
+    // emits v4. Regenerate via tests/golden/gen_golden.py --force on an
     // intentional wire-format change and document it in DESIGN.md.
-    let f = &container_fixtures()[0];
+    let f = container_fixtures().pop().unwrap();
+    assert_eq!(f.name, "container_v4_rlev2");
     let c = Container::compress_with_restarts(f.input, CodecKind::RleV2, 1024, 128).unwrap();
     let got = c.to_bytes();
     assert_eq!(
         got.len(),
         f.bytes.len(),
-        "container_v2_rlev2: serialized length diverged from fixture"
+        "container_v4_rlev2: serialized length diverged from fixture"
     );
-    assert_eq!(got, f.bytes, "container_v2_rlev2: packer output diverged from fixture");
+    assert_eq!(got, f.bytes, "container_v4_rlev2: packer output diverged from fixture");
+}
+
+#[test]
+fn v4_payload_flips_are_never_silently_wrong_through_split_decode() {
+    // The split-stitch analogue of the container-level sweep in
+    // prop_codecs: one content CRC at the stitch join covers every
+    // worker's disjoint slice, so a payload flip yields a typed error
+    // or byte-identical output — never silent divergence.
+    let (data, c) = sweep_container(CodecKind::RleV2);
+    let bytes = c.to_bytes();
+    let payload_at = bytes.len() - c.payload.len();
+    for i in payload_at..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[i] ^= 0x01;
+        let parsed = Container::from_bytes(&bad)
+            .expect("payload flips keep the container parseable");
+        for chunk in 0..parsed.n_chunks() {
+            let lo = chunk * 1024;
+            let hi = (lo + 1024).min(data.len());
+            match decompress_chunk_split(&parsed, chunk, 2) {
+                Err(_) => {}
+                Ok(out) => assert_eq!(
+                    out,
+                    &data[lo..hi],
+                    "payload byte {i} flip: split decode returned wrong bytes for chunk {chunk}"
+                ),
+            }
+        }
+    }
 }

@@ -512,6 +512,14 @@ mod obs_conservation {
                 expo::get_dataset(&map, "codag_cache_hits_total", ds).unwrap() > 0,
                 "{ds}: repeated fixed range must produce cache hits"
             );
+            // Integrity tier (§13): the per-dataset failure counter must
+            // render even when zero, and a healthy daemon must never
+            // count a mismatch.
+            assert_eq!(
+                expo::get_dataset(&map, "codag_integrity_failures_total", ds).unwrap(),
+                0,
+                "{ds}: healthy daemon must report zero integrity failures"
+            );
         }
         // The two cache-miss decode paths: alpha (no restarts) decodes
         // serially; gamma (dense restarts) fans out across sub-blocks.

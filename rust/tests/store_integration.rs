@@ -266,6 +266,31 @@ fn encode_request_v1(kind: u8, id: u64, dataset: &str, offset: u64, len: u64) ->
     out
 }
 
+/// Hand-build a v2 request body (40-byte header: v1 + deadline_ms, no
+/// flags field). The library encoder now emits v3, so keeping real v2
+/// clients served requires this independent layout pin.
+fn encode_request_v2(
+    kind: u8,
+    id: u64,
+    dataset: &str,
+    offset: u64,
+    len: u64,
+    deadline_ms: u64,
+) -> Vec<u8> {
+    let name = dataset.as_bytes();
+    let mut out = Vec::with_capacity(40 + name.len());
+    out.extend_from_slice(&0xC0DA_5E01u32.to_le_bytes());
+    out.extend_from_slice(&2u16.to_le_bytes());
+    out.push(kind);
+    out.push(name.len() as u8);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&offset.to_le_bytes());
+    out.extend_from_slice(&len.to_le_bytes());
+    out.extend_from_slice(&deadline_ms.to_le_bytes());
+    out.extend_from_slice(name);
+    out
+}
+
 #[test]
 fn v1_clients_are_still_served() {
     let data = payload(96 * 1024, 13);
@@ -293,10 +318,20 @@ fn v1_clients_are_still_served() {
     assert_eq!(resp.status, Status::Ok);
     assert_eq!(resp.payload.len(), 24);
     assert_eq!(&resp.payload[0..8], &(data.len() as u64).to_le_bytes());
-    // Interleaving v2 frames on the same connection keeps working, and
-    // gets a v2-stamped reply.
+    // Interleaving a hand-built v2 frame (no flags field) on the same
+    // connection keeps working, and gets a v2-stamped reply.
+    conn.send_raw(&encode_request_v2(1, 23, "d", 0, 64, 0));
+    let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)
+        .expect("read frame")
+        .expect("connection open");
+    assert_eq!(&frame[4..6], &2u16.to_le_bytes(), "v2 request must get a v2-stamped reply");
+    let resp = decode_response(&frame).expect("decode response");
+    assert_eq!(resp.status, Status::Ok);
+    assert_eq!(resp.payload, &data[..64]);
+    // The library encoder emits v3 (flags = 0): same connection, served
+    // normally, v3-stamped reply with no CRC trailer.
     conn.send(&WireRequest::Get {
-        id: 23,
+        id: 24,
         dataset: "d".into(),
         offset: 0,
         len: 64,
@@ -305,9 +340,102 @@ fn v1_clients_are_still_served() {
     let frame = read_frame_blocking(&mut conn.reader, &mut conn.stream)
         .expect("read frame")
         .expect("connection open");
-    assert_eq!(&frame[4..6], &2u16.to_le_bytes(), "v2 request must get a v2-stamped reply");
+    assert_eq!(&frame[4..6], &3u16.to_le_bytes(), "v3 request must get a v3-stamped reply");
     let resp = decode_response(&frame).expect("decode response");
     assert_eq!(resp.status, Status::Ok);
     assert_eq!(resp.payload, &data[..64]);
     handle.join().expect("clean join");
+}
+
+/// The pack→flip→serve acceptance gate (DESIGN.md §13): for every
+/// codec, flip a payload byte that provably corrupts decoded content
+/// and require `Status::ChecksumMismatch` over the wire — from the
+/// file-backed store and the in-memory source, through the serial
+/// (1 worker/shard) and split-stitch (4 workers/shard) decode paths.
+/// Wrong bytes with `Ok` would fail the assertions outright; healthy
+/// chunks in the same corrupted file keep serving.
+#[test]
+fn payload_corruption_surfaces_checksum_mismatch_on_every_decode_path() {
+    const CHUNK: usize = 32 * 1024;
+    for kind in CodecKind::all() {
+        let data = payload(160 * 1024, 14);
+        let c = Container::compress_with_restarts(&data, kind, CHUNK, 128).unwrap();
+        assert!(
+            (0..c.n_chunks()).all(|i| !c.restart_table(i).is_empty()),
+            "{}: sweep needs restart tables so 4 workers take the split path",
+            kind.name()
+        );
+        let bytes = c.to_bytes();
+        let payload_at = bytes.len() - c.payload.len();
+        // Find a flip that provably corrupts content (skip format-slack
+        // flips that decode back to identical bytes).
+        let mut corrupted: Option<(Vec<u8>, usize)> = None;
+        'search: for i in 0..c.payload.len() {
+            let chunk = c
+                .index
+                .iter()
+                .position(|e| (i as u64) >= e.comp_off && (i as u64) < e.comp_off + e.comp_len)
+                .unwrap();
+            for mask in [0x01u8, 0x80] {
+                let mut bad = bytes.clone();
+                bad[payload_at + i] ^= mask;
+                let parsed = Container::from_bytes(&bad).unwrap();
+                if matches!(
+                    parsed.decompress_chunk(chunk),
+                    Err(codag::Error::ChecksumMismatch(_))
+                ) {
+                    corrupted = Some((bad, chunk));
+                    break 'search;
+                }
+            }
+        }
+        let (bad, chunk) = corrupted
+            .unwrap_or_else(|| panic!("{}: no payload flip corrupts content?", kind.name()));
+        let healthy = (0..c.n_chunks()).find(|&i| i != chunk).unwrap();
+        let path = tmp_path(&format!("crcflip-{}", kind.name())).with_extension("codag");
+        std::fs::write(&path, &bad).unwrap();
+        for workers in [1usize, 4] {
+            let mut reg = Registry::new();
+            reg.insert_source("file", DatasetSource::File(FileDataset::open(&path).unwrap()));
+            reg.insert("mem", Container::from_bytes(&bad).unwrap());
+            let cfg = DaemonConfig {
+                shards: 1,
+                workers_per_shard: workers,
+                ..DaemonConfig::default()
+            };
+            let handle = start(Arc::new(reg), cfg, "127.0.0.1:0").expect("bind");
+            let mut conn = Client::connect(handle.addr());
+            for (b, name) in ["file", "mem"].iter().enumerate() {
+                let resp = conn.rpc(&WireRequest::Get {
+                    id: (b as u64) << 32 | workers as u64,
+                    dataset: (*name).into(),
+                    offset: (chunk * CHUNK) as u64,
+                    len: 1024,
+                    deadline_ms: 0,
+                });
+                assert_eq!(
+                    resp.status,
+                    Status::ChecksumMismatch,
+                    "{} {name} ({workers} workers): corrupted chunk {chunk} returned {:?}: {}",
+                    kind.name(),
+                    resp.status,
+                    String::from_utf8_lossy(&resp.payload)
+                );
+                // The healthy chunk still serves byte-identically on the
+                // same connection.
+                let lo = healthy * CHUNK;
+                let resp = conn.rpc(&WireRequest::Get {
+                    id: (b as u64) << 32 | 0xFF00 | workers as u64,
+                    dataset: (*name).into(),
+                    offset: lo as u64,
+                    len: 1024,
+                    deadline_ms: 0,
+                });
+                assert_eq!(resp.status, Status::Ok, "{} {name}: healthy chunk", kind.name());
+                assert_eq!(resp.payload, &data[lo..lo + 1024]);
+            }
+            handle.join().expect("clean join");
+        }
+        std::fs::remove_file(&path).ok();
+    }
 }

@@ -97,6 +97,24 @@ def parse_obs_overhead(lines, metrics):
         metrics[f"{base}/delta_pct"] = _metric(delta, "%", "info")
 
 
+def parse_crc_overhead(lines, metrics):
+    """Rows: codec plain-GB/s crc-GB/s delta-% (the content-checksum
+    overhead table from `CODAG_CRC_OVERHEAD=1 cargo bench --bench
+    codec_hotpath` — v4 verified decode vs a checksum-stripped clone)."""
+    for ln in lines:
+        parts = ln.split()
+        if len(parts) != 4 or parts[0] == "codec":
+            continue
+        try:
+            plain, crc, delta = (float(x) for x in parts[1:4])
+        except ValueError:
+            continue
+        base = f"crc_overhead/{parts[0]}"
+        metrics[f"{base}/plain_gbps"] = _metric(plain, "GB/s", "throughput")
+        metrics[f"{base}/crc_gbps"] = _metric(crc, "GB/s", "throughput")
+        metrics[f"{base}/delta_pct"] = _metric(delta, "%", "info")
+
+
 def parse_fig7(lines, scale, metrics):
     """Rows: codec dataset codag rapids speedup-x (incl. geomean rows)."""
     for ln in lines:
@@ -193,6 +211,7 @@ SECTION_PARSERS = [
     ("## rle_v2 width sweep", lambda ls, m: parse_rle_width_sweep(ls, m)),
     ("## sub-block scaling", lambda ls, m: parse_subblock_sweep(ls, m)),
     ("## obs overhead", lambda ls, m: parse_obs_overhead(ls, m)),
+    ("## crc overhead", lambda ls, m: parse_crc_overhead(ls, m)),
     ("## fig7_throughput (paper scale", lambda ls, m: parse_fig7(ls, "paper", m)),
     ("## fig7_throughput", lambda ls, m: parse_fig7(ls, "default", m)),
     ("## loadgen batching ablation", lambda ls, m: parse_ablation(ls, m)),

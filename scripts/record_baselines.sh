@@ -68,6 +68,16 @@ cargo build --release --benches >&2
   CODAG_OBS_OVERHEAD=1 cargo bench --bench codec_hotpath 2>/dev/null
   echo '```'
   echo
+  echo '## crc overhead'
+  echo
+  echo '```text'
+  # Content-checksum overhead (DESIGN.md §13): serial chunk decode with
+  # the v4 per-chunk CRC-32C verified vs a checksum-stripped clone of
+  # the same container. The verified pass IS the baseline —
+  # EXPERIMENTS.md gates the delta column at <5%, like the obs gate.
+  CODAG_CRC_OVERHEAD=1 cargo bench --bench codec_hotpath 2>/dev/null
+  echo '```'
+  echo
   echo '## fig7_throughput'
   echo
   echo '```text'
